@@ -1,0 +1,136 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): all three layers compose.
+//!
+//! 1. Loads the AOT-compiled JAX+Pallas attention artifact via the
+//!    PJRT runtime (Python was only involved at build time).
+//! 2. Starts the serving coordinator and pushes batched inference
+//!    requests through it; a sample of served outputs is re-executed
+//!    on the PJRT engine and must match bit-for-bit.
+//! 3. Runs a full multi-layer quantized encoder on the simulated
+//!    accelerator and reports the paper's headline metric
+//!    (TOPS, TOPS/W) for the whole model, plus serving latency and
+//!    throughput percentiles.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_encoder
+//! ```
+
+use ita::attention::encoder::{run_encoder, EncoderModel};
+use ita::attention::{gen_input, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::Server;
+use ita::ita::datapath::TileEngine;
+use ita::ita::energy::{tops_per_watt, EnergyBreakdown};
+use ita::ita::ItaConfig;
+use ita::runtime::{ArtifactManifest, Runtime};
+use std::time::Instant;
+
+fn main() {
+    let acc = ItaConfig::paper();
+
+    // ------------------------------------------------------------------
+    // 1. PJRT: load the AOT artifact (the "small real model").
+    // ------------------------------------------------------------------
+    let manifest = match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
+    let meta = manifest
+        .artifacts
+        .iter()
+        .max_by_key(|a| a.dims.s * a.dims.e)
+        .expect("manifest has artifacts")
+        .clone();
+    let dims = meta.dims;
+    println!("[1/3] PJRT artifact: {} (S={} E={} P={} H={})", meta.name, dims.s, dims.e, dims.p, dims.h);
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let engine = rt.load(&manifest, &meta.name).expect("compile artifact");
+
+    // ------------------------------------------------------------------
+    // 2. Serve batched requests; verify a sample against PJRT.
+    // ------------------------------------------------------------------
+    // FFN depth capped at 256: D=24-bit accumulators support dot
+    // products up to 256 elements (paper §V-A).
+    let ffn = (2 * dims.e).min(256);
+    let cfg = SystemConfig {
+        accelerator: acc,
+        model: ModelConfig { dims, ffn, layers: 2, seed: meta.seed },
+        server: ServerConfig { workers: 4, max_batch: 8, max_wait_us: 200, queue_depth: 256 },
+    };
+    let server = Server::start(cfg);
+    let n_requests = 256usize;
+    let inputs: Vec<_> = (0..8u64).map(|i| gen_input(1000 + i, &dims)).collect();
+
+    println!("[2/3] serving {n_requests} batched attention requests ...");
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let x = inputs[i % inputs.len()].clone();
+        loop {
+            match server.submit(x.clone()) {
+                Ok(rx) => {
+                    handles.push((i % inputs.len(), rx));
+                    break;
+                }
+                Err(ita::coordinator::SubmitError::QueueFull) => std::thread::yield_now(),
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    let responses: Vec<_> =
+        handles.into_iter().map(|(idx, rx)| (idx, rx.recv().expect("response"))).collect();
+    let wall = t0.elapsed();
+
+    // Verify every distinct input's served output against the PJRT
+    // engine (bit-exact三-layer composition).
+    for (i, x) in inputs.iter().enumerate() {
+        let want = engine.run_mat_i8(x).expect("PJRT executes");
+        let served = &responses.iter().find(|(idx, _)| *idx == i).unwrap().1.output;
+        assert_eq!(served, &want, "served output diverges from AOT artifact for input {i}");
+    }
+    println!("      all served outputs bit-exact vs the AOT-compiled JAX model ✓");
+    println!("      wall {:.1} ms  => {:.0} req/s", wall.as_secs_f64() * 1e3, n_requests as f64 / wall.as_secs_f64());
+    println!("{}", indent(&server.metrics.report(), "      "));
+    let sim_cycles: u64 = responses.iter().map(|(_, r)| r.sim_cycles).sum();
+    let sim_energy: f64 = responses.iter().map(|(_, r)| r.sim_energy_j).sum();
+    println!(
+        "      simulated accelerator: {:.2} ms busy, {:.1} uJ total",
+        sim_cycles as f64 / acc.freq_hz * 1e3,
+        sim_energy * 1e6
+    );
+    server.shutdown();
+
+    // ------------------------------------------------------------------
+    // 3. Full encoder on the simulated accelerator.
+    // ------------------------------------------------------------------
+    let model = EncoderModel::generate(dims, ffn, 4, 42);
+    println!(
+        "[3/3] {}-layer encoder (FFN {}): {:.1} M MACs/inference",
+        model.layers.len(),
+        model.f,
+        model.total_macs() as f64 / 1e6
+    );
+    let mut engine3 = TileEngine::new(acc);
+    let x = gen_input(9, &dims);
+    let t1 = Instant::now();
+    let y = run_encoder(&mut engine3, &model, &x);
+    let host = t1.elapsed();
+    let a = engine3.activity;
+    let e = EnergyBreakdown::for_activity(&acc, &a);
+    println!("      output {}x{} (host compute {:.1} ms)", y.rows(), y.cols(), host.as_secs_f64() * 1e3);
+    println!(
+        "      simulated: {} cycles = {:.1} us/inference, {:.3} uJ, {:.2} TOPS, {:.1} TOPS/W",
+        a.cycles,
+        a.cycles as f64 / acc.freq_hz * 1e6,
+        e.total() * 1e6,
+        a.ops() as f64 / (a.cycles as f64 / acc.freq_hz) / 1e12,
+        tops_per_watt(&acc, &a, false),
+    );
+    println!("\nE2E OK — record this run in EXPERIMENTS.md §E2E");
+}
+
+fn indent(s: &str, pad: &str) -> String {
+    s.lines().map(|l| format!("{pad}{l}")).collect::<Vec<_>>().join("\n")
+}

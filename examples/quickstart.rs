@@ -1,0 +1,60 @@
+//! Quickstart: simulate one multi-head attention inference on ITA and
+//! print the numbers the paper leads with.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ita::attention::{gen_input, AttentionExecutor, ModelDims};
+use ita::ita::area::AreaBreakdown;
+use ita::ita::energy::{tops_per_watt, EnergyBreakdown};
+use ita::ita::simulator::Simulator;
+use ita::ita::ItaConfig;
+
+fn main() {
+    // The paper's design point: N=16 PEs × M=64 MACs, D=24-bit, 22FDX.
+    let cfg = ItaConfig::paper();
+    let dims = ModelDims::compact(); // S=64, E=128, P=64, H=2
+
+    println!("ITA quickstart — {dims:?}\n");
+
+    // 1. Bit-exact functional execution (the golden datapath).
+    let mut exec = AttentionExecutor::new(cfg, dims, /*seed=*/ 42);
+    let x = gen_input(7, &dims);
+    let out = exec.run(&x);
+    println!(
+        "functional: output {}x{}, attention rows sum ≈ 1.0:",
+        out.out.rows(),
+        out.out.cols()
+    );
+    let mass: f64 = out.attn[0].row(0).iter().map(|&v| v as f64 / 256.0).sum();
+    println!("  head 0 / row 0 probability mass = {mass:.3}");
+
+    // 2. Cycle/energy simulation of the same workload.
+    let rep = Simulator::new(cfg).simulate_attention(dims.shape());
+    let e = EnergyBreakdown::for_activity(&cfg, &rep.activity);
+    println!("\nsimulated on {} MACs @ {:.0} MHz:", cfg.mac_units(), cfg.freq_hz / 1e6);
+    println!(
+        "  cycles       {:>10}  (+{} stalls)",
+        rep.activity.cycles, rep.activity.stall_cycles
+    );
+    println!("  runtime      {:>10.2} us", rep.runtime_s() * 1e6);
+    println!("  utilization  {:>10.1} %", rep.utilization() * 100.0);
+    println!("  energy       {:>10.3} uJ", e.total() * 1e6);
+    println!(
+        "  avg power    {:>10.1} mW   (paper: 60.5 mW at full tilt)",
+        e.avg_power_w(rep.total_cycles(), cfg.freq_hz) * 1e3
+    );
+
+    // 3. The paper's headline metrics.
+    let area = AreaBreakdown::for_config(&cfg);
+    let tops = rep.achieved_ops() / 1e12;
+    println!("\nheadline metrics (paper → simulated):");
+    println!("  throughput        1.02 → {tops:.2} TOPS");
+    println!(
+        "  energy efficiency 16.9 → {:.1} TOPS/W",
+        tops_per_watt(&cfg, &rep.activity, false)
+    );
+    println!("  area efficiency   5.93 → {:.2} TOPS/mm2", tops / area.total_mm2());
+    println!("  area              0.173 → {:.3} mm2", area.total_mm2());
+}

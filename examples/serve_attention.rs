@@ -1,0 +1,70 @@
+//! Serving demo: open-loop load against the coordinator with a mixed
+//! burst pattern, reporting batching behaviour, backpressure and
+//! latency percentiles — the serving-level view of ITA's
+//! weight-stationary design.
+//!
+//! ```sh
+//! cargo run --release --example serve_attention [requests] [workers]
+//! ```
+
+use ita::attention::{gen_input, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{Server, SubmitError};
+use ita::ita::ItaConfig;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(512);
+    let workers: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let dims = ModelDims::compact();
+    let cfg = SystemConfig {
+        accelerator: ItaConfig::paper(),
+        model: ModelConfig { dims, ffn: 4 * dims.e, layers: 1, seed: 42 },
+        server: ServerConfig { workers, max_batch: 8, max_wait_us: 150, queue_depth: 64 },
+    };
+    println!(
+        "serving S={} E={} attention on {workers} simulated ITA instances, {n} requests",
+        dims.s, dims.e
+    );
+
+    let server = Server::start(cfg);
+    let inputs: Vec<_> = (0..16u64).map(|i| gen_input(i, &dims)).collect();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..n {
+        // Bursty arrivals: 8-request bursts, short gaps.
+        if i % 8 == 0 && i > 0 {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        match server.submit(inputs[i % inputs.len()].clone()) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::QueueFull) => {
+                rejected += 1; // backpressure: drop (an open-loop client)
+            }
+            Err(e) => panic!("{e}"),
+        }
+    }
+    let mut batch_hist = std::collections::BTreeMap::<usize, u64>::new();
+    for rx in pending {
+        let resp = rx.recv().expect("response");
+        *batch_hist.entry(resp.batch_size).or_default() += 1;
+    }
+    let wall = t0.elapsed();
+
+    println!("\n{}", server.metrics.report());
+    println!("rejected by backpressure: {rejected}");
+    println!("batch-size distribution:");
+    for (size, count) in &batch_hist {
+        println!("  {size:>3}: {count:>5}  {}", "#".repeat((*count as usize).min(60)));
+    }
+    println!(
+        "\nwall {:.1} ms  => {:.0} req/s sustained",
+        wall.as_secs_f64() * 1e3,
+        (n as u64 - rejected) as f64 / wall.as_secs_f64()
+    );
+    server.shutdown();
+}

@@ -1,0 +1,57 @@
+//! Design-space exploration: sweep the architecture parameters the
+//! paper fixes at design time (N, M, D, dividers, FIFO) and print how
+//! area, power, efficiency and stalls respond — the co-design loop a
+//! downstream user runs before taping out their own configuration.
+//!
+//! ```sh
+//! cargo run --release --example sweep_design_space
+//! ```
+
+use ita::experiments;
+use ita::ita::area::AreaBreakdown;
+use ita::ita::energy::{tops_per_watt, EnergyBreakdown};
+use ita::ita::simulator::Simulator;
+use ita::ita::ItaConfig;
+use ita::util::table::Table;
+
+fn main() {
+    // The two built-in sweeps shared with the bench targets:
+    print!("{}", experiments::ablation_scale().render());
+    print!("{}", experiments::ablation_dataflow().render());
+    print!("{}", experiments::ablation_dividers(&ItaConfig::paper()).render());
+
+    // Accumulator-width study: D trades area/power against the deepest
+    // supported dot product (paper: D=24 ⇒ 256-element dots).
+    let mut t = Table::new("Accumulator width D vs capability and cost")
+        .header(&["D", "max dot len", "area [mm2]", "power [mW]", "TOPS/W"]);
+    for d in [16u32, 20, 24, 28, 32] {
+        let mut cfg = ItaConfig::paper();
+        cfg.d = d;
+        let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+        let e = EnergyBreakdown::for_activity(&cfg, &rep.activity);
+        let area = AreaBreakdown::for_config(&cfg);
+        t.row(&[
+            d.to_string(),
+            cfg.pe_config().max_dot_len().to_string(),
+            format!("{:.3}", area.total_mm2()),
+            format!("{:.1}", e.avg_power_w(rep.total_cycles(), cfg.freq_hz) * 1e3),
+            format!("{:.1}", tops_per_watt(&cfg, &rep.activity, false)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Voltage/frequency scaling (§V-E): Vdd² energy scaling.
+    let mut t = Table::new("Voltage scaling (Vdd^2, §V-E)")
+        .header(&["Vdd [V]", "TOPS/W standalone", "TOPS/W system"]);
+    for vdd in [0.46, 0.6, 0.7, 0.8, 0.9] {
+        let mut cfg = ItaConfig::paper();
+        cfg.vdd = vdd;
+        let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+        t.row(&[
+            format!("{vdd:.2}"),
+            format!("{:.1}", tops_per_watt(&cfg, &rep.activity, false)),
+            format!("{:.2}", tops_per_watt(&cfg, &rep.activity, true)),
+        ]);
+    }
+    print!("{}", t.render());
+}

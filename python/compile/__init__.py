@@ -1,0 +1,10 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX model + AOT.
+
+Python runs ONCE (``make artifacts``) and never on the request path.
+int64 is enabled globally because the bit-exact requantization needs
+64-bit intermediates (mirroring the Rust datapath's i64 multiply).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,75 @@
+"""AOT pipeline: lower the L2 model to HLO **text** artifacts + manifest.
+
+HLO text, NOT ``lowered.compiler_ir("hlo")``/``.serialize()``: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla-crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDims, build_attention_fn
+
+# Artifact variants: the serving default plus a tiny cross-layer-test
+# model. Keep in sync with rust/tests/cross_layer.rs expectations.
+VARIANTS = [
+    (ModelDims(s=16, e=16, p=8, h=2), 42),
+    (ModelDims(s=64, e=128, p=64, h=2), 42),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weight tensors MUST survive
+    # the text round trip (the default elides them as `constant({...})`,
+    # which the rust-side parser would reload as garbage).
+    return comp.as_hlo_text(True)
+
+
+def build_artifact(d: ModelDims, seed: int, out_dir: pathlib.Path) -> dict:
+    fn = build_attention_fn(d, seed)
+    spec = jax.ShapeDtypeStruct((d.s, d.e), jax.numpy.int32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    fname = f"{d.name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {
+        "name": d.name,
+        "file": fname,
+        "inputs": [[d.s, d.e]],
+        "output": [d.s, d.e],
+        "dims": {"s": d.s, "e": d.e, "p": d.p, "h": d.h},
+        "seed": seed,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"generated_by": "python -m compile.aot", "artifacts": []}
+    for dims, seed in VARIANTS:
+        print(f"lowering {dims.name} (seed {seed}) ...")
+        manifest["artifacts"].append(build_artifact(dims, seed, out_dir))
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for ITA's compute hot-spots.
+
+* ``ita_softmax`` — the integer streaming softmax (paper §IV).
+* ``ita_attention`` — the fused int8 attention core
+  (requant(Q·Kᵀ) → streaming softmax → requant(A·V + bias)).
+
+All kernels run with ``interpret=True`` (CPU-PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the TPU mapping.
+"""
+
+from .ita_attention import ita_attention  # noqa: F401
+from .ita_softmax import ita_softmax  # noqa: F401

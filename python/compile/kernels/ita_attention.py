@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: the fused int8 attention core —
+``requant(Q·Kᵀ) → streaming integer softmax → requant(A·V + bias)``.
+
+This is the paper's Fig. 3 fused QKᵀ/AV pipeline for one head: the
+grid walks row blocks of Q (the hardware's M-row tiles); K and V stay
+resident (weight-stationary: they are the "weights" of the two fused
+matmuls); the softmax's MAX/Σ state lives in registers between the two
+matmuls exactly like the latch buffers sit between the PE array passes.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the two ``jnp.dot`` calls
+map to the MXU with int32 accumulation (exact — the D=24-bit bound of
+the paper guarantees no overflow for ≤256-deep dots); the softmax is
+VPU shift arithmetic; VMEM per grid step is
+``block_rows·P + 2·S·P + block_rows·S`` int32 words.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DIV_NUM_LOG2, PROB_BITS, SHIFT, TERM_SCALE
+
+
+def _requant(acc, mult: int, shift: int, bias=None):
+    """Bit-exact requant (see ref.requant_ref) on int32/int64 lanes."""
+    a = acc.astype(jnp.int64)
+    if bias is not None:
+        a = a + bias.astype(jnp.int64)
+    prod = a * jnp.int64(mult)
+    if shift > 0:
+        prod = (prod + jnp.int64(1 << (shift - 1))) >> jnp.int64(shift)
+    return jnp.clip(prod, -128, 127).astype(jnp.int32)
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    bav_ref,
+    o_ref,
+    a_ref,
+    *,
+    rq_qk: tuple[int, int],
+    rq_av: tuple[int, int],
+    m_chunk: int,
+    block_rows: int,
+    causal: bool,
+):
+    q = q_ref[...].astype(jnp.int32)  # (br, P)
+    k = k_ref[...].astype(jnp.int32)  # (S, P)
+    v = v_ref[...].astype(jnp.int32)  # (S, P)
+    bav = bav_ref[...].astype(jnp.int32)  # (1, P)
+
+    # Q·Kᵀ with exact int32 accumulation (PE array, D-bit partial sums).
+    logits = _requant(jnp.dot(q, k.T, preferred_element_type=jnp.int32), *rq_qk)
+    n = logits.shape[-1]
+
+    if causal:
+        # Absolute row indices of this grid block (decoder masking).
+        row0 = pl.program_id(0) * block_rows
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = cols <= rows
+        xm = jnp.where(mask, logits, jnp.int32(-128))
+    else:
+        mask = None
+        xm = logits
+
+    # Streaming softmax: DA over m_chunk column stripes, DI, EN.
+    mx = jnp.full(logits.shape[:-1] + (1,), -128, dtype=jnp.int32)
+    sm = jnp.zeros(logits.shape[:-1] + (1,), dtype=jnp.int32)
+    for c0 in range(0, n, m_chunk):
+        part = xm[..., c0 : min(c0 + m_chunk, n)]
+        pmax = jnp.max(part, axis=-1, keepdims=True)
+        newmax = jnp.maximum(mx, pmax)
+        sm = sm >> jnp.minimum((newmax - mx) >> SHIFT, 31)
+        mx = newmax
+        s = (mx - part) >> SHIFT
+        terms = jnp.right_shift(jnp.int32(1 << TERM_SCALE), s)
+        if causal:
+            terms = jnp.where(mask[..., c0 : min(c0 + m_chunk, n)], terms, 0)
+        # dtype pinned: under x64, jnp.sum would promote int32 -> int64.
+        sm = sm + jnp.sum(terms, axis=-1, keepdims=True, dtype=jnp.int32)
+    inv = jnp.minimum(jnp.int32(1 << DIV_NUM_LOG2) // jnp.maximum(sm, 1), 0xFFFF)
+    s = (mx - xm) >> SHIFT
+    a = jnp.minimum(inv >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS)), 255)
+    if causal:
+        a = jnp.where(mask, a, 0)
+
+    # A·V + bias, requantized (EN feeds the PEs directly — Fig. 3).
+    out = _requant(jnp.dot(a, v, preferred_element_type=jnp.int32), *rq_av, bias=bav)
+
+    o_ref[...] = out
+    a_ref[...] = a.astype(jnp.int32)
+
+
+def ita_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    bias_av: jnp.ndarray,
+    rq_qk: tuple[int, int],
+    rq_av: tuple[int, int],
+    m_chunk: int = 64,
+    block_rows: int = 64,
+    causal: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused attention core for one head.
+
+    q, k, v: (S, P) int32 with int8-range values; bias_av: (P,) int32.
+    Returns ``(out, A)``: (S, P) int8-range and (S, S) uint8-range
+    int32 arrays, bit-exact vs the Rust ``TileEngine::attention_core``
+    (``attention_core_causal`` when ``causal=True``).
+    """
+    s_len, p = k.shape  # true sequence length from K (Q may be padded)
+    assert v.shape == (s_len, p)
+    rows = q.shape[0]
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        # Pad Q's rows to a block multiple; K/V keep the true length
+        # (logit columns are unpadded), padded output rows are dropped.
+        pad = br - rows % br
+        zq = jnp.concatenate([q, jnp.zeros((pad, p), q.dtype)], axis=0)
+        out, a = ita_attention(
+            zq, k, v, bias_av, rq_qk, rq_av, m_chunk, block_rows, causal
+        )
+        return out[:rows], a[:rows]
+
+    kernel = functools.partial(
+        _attention_kernel,
+        rq_qk=rq_qk,
+        rq_av=rq_av,
+        m_chunk=m_chunk,
+        block_rows=br,
+        causal=causal,
+    )
+    bav2 = bias_av.reshape(1, p).astype(jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, p), lambda i: (i, 0)),  # Q row block
+            pl.BlockSpec((s_len, p), lambda i: (0, 0)),  # K resident
+            pl.BlockSpec((s_len, p), lambda i: (0, 0)),  # V resident
+            pl.BlockSpec((1, p), lambda i: (0, 0)),  # bias
+        ],
+        out_specs=[
+            pl.BlockSpec((br, p), lambda i: (i, 0)),
+            pl.BlockSpec((br, s_len), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, p), jnp.int32),
+            jax.ShapeDtypeStruct((rows, s_len), jnp.int32),
+        ],
+        interpret=True,
+    )(q.astype(jnp.int32), k.astype(jnp.int32), v.astype(jnp.int32), bav2)

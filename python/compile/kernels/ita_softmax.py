@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: ITA's integer streaming softmax (paper §IV).
+
+TPU mapping of the ASIC datapath (DESIGN.md §Hardware-Adaptation):
+
+* the grid dimension walks row blocks — the analogue of the M-row
+  MAX/Σ buffer stripes;
+* within a block, the DA loop streams column chunks of ``m_chunk``
+  (the hardware's M-wide parts) through VMEM, carrying the running
+  (max, Σ) state exactly like the MAX/Σ latch buffers;
+* all exponentials are shifts on int32 lanes; the 15/16-bit width
+  guarantees of the paper hold unchanged.
+
+``interpret=True`` everywhere: CPU-PJRT cannot run Mosaic custom-calls;
+the kernel's *structure* (BlockSpec tiling, VMEM footprint) is the
+TPU-performance story, its *numerics* are validated against ``ref.py``
+and the Rust golden model bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DIV_NUM_LOG2, PROB_BITS, SHIFT, TERM_SCALE
+
+
+def _softmax_kernel(x_ref, o_ref, *, m_chunk: int):
+    """One row-block: DA over column chunks, DI, EN."""
+    x = x_ref[...].astype(jnp.int32)  # (block_rows, n)
+    n = x.shape[-1]
+
+    mx = jnp.full(x.shape[:-1] + (1,), -128, dtype=jnp.int32)
+    sm = jnp.zeros(x.shape[:-1] + (1,), dtype=jnp.int32)
+    # DA: the streaming loop is static (n, m_chunk are compile-time),
+    # so it unrolls into straight-line HLO — no dynamic control flow.
+    for c0 in range(0, n, m_chunk):
+        part = x[..., c0 : min(c0 + m_chunk, n)]
+        pmax = jnp.max(part, axis=-1, keepdims=True)
+        newmax = jnp.maximum(mx, pmax)
+        sm = sm >> jnp.minimum((newmax - mx) >> SHIFT, 31)
+        mx = newmax
+        s = (mx - part) >> SHIFT
+        # dtype pinned: under x64, jnp.sum would promote int32 -> int64.
+        sm = sm + jnp.sum(
+            jnp.right_shift(jnp.int32(1 << TERM_SCALE), s),
+            axis=-1,
+            keepdims=True,
+            dtype=jnp.int32,
+        )
+
+    # DI (the two serial dividers of the ASIC).
+    inv = jnp.minimum(jnp.int32(1 << DIV_NUM_LOG2) // jnp.maximum(sm, 1), 0xFFFF)
+
+    # EN: one shift per element.
+    s = (mx - x) >> SHIFT
+    out = inv >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS))
+    o_ref[...] = jnp.minimum(out, 255).astype(jnp.int32)
+
+
+def ita_softmax(
+    logits: jnp.ndarray, m_chunk: int = 64, block_rows: int = 64
+) -> jnp.ndarray:
+    """Row-wise integer softmax over an (R, n) int32 matrix of
+    int8-range logits; returns (R, n) int32 uint8-range probabilities
+    (scale 2^-8). Bit-exact vs ``ref.ita_softmax_ref`` and the Rust
+    ``ita_softmax_rows``.
+    """
+    r, n = logits.shape
+    br = min(block_rows, r)
+    if r % br != 0:
+        # Pad rows to a block multiple; padded rows are dropped after.
+        pad = br - r % br
+        padded = jnp.concatenate([logits, jnp.zeros((pad, n), logits.dtype)], axis=0)
+        return ita_softmax(padded, m_chunk, block_rows)[:r]
+
+    kernel = functools.partial(_softmax_kernel, m_chunk=m_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.int32),
+        interpret=True,
+    )(logits.astype(jnp.int32))

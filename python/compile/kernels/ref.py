@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for the Pallas kernels — the L1 correctness signal.
+
+``ita_softmax_ref`` / ``requant_ref`` are *bit-exact specifications*
+(mirroring ``rust/src/ita/softmax.rs`` and ``requant.rs``); the float
+softmax is the accuracy ground truth for the MAE experiments.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- constants (paper §IV, B = 8) -----------------------------------
+B = 8
+SHIFT = 5  # B - log2 B
+TERM_SCALE = 7
+DIV_NUM_LOG2 = 22
+PROB_BITS = 8
+
+
+def float_softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable float softmax over the last axis (Eq. 1)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def requant_ref(acc: jnp.ndarray, mult: int, shift: int, bias=None) -> jnp.ndarray:
+    """Bit-exact mirror of ``RequantParams::apply(_biased)``:
+    ``clip_i8(((acc + bias) * mult + 2^(shift-1)) >> shift)`` in i64."""
+    a = acc.astype(jnp.int64)
+    if bias is not None:
+        a = a + bias.astype(jnp.int64)
+    prod = a * jnp.int64(mult)
+    if shift > 0:
+        prod = (prod + jnp.int64(1 << (shift - 1))) >> jnp.int64(shift)
+    return jnp.clip(prod, -128, 127).astype(jnp.int32)
+
+
+def ita_softmax_ref(logits: jnp.ndarray, m_chunk: int = 64) -> jnp.ndarray:
+    """Bit-exact mirror of ``ita_softmax_row(x, part=m_chunk)`` applied
+    row-wise: the streaming DA → DI → EN pipeline with running-max
+    renormalization, vectorized over rows.
+
+    ``logits``: (..., n) int32 holding int8-range values.
+    Returns (..., n) int32 holding uint8-range probabilities
+    (scale 2^-8).
+    """
+    x = logits.astype(jnp.int32)
+    n = x.shape[-1]
+
+    # --- DA: stream over column chunks -------------------------------
+    mx = jnp.full(x.shape[:-1] + (1,), -128, dtype=jnp.int32)
+    sm = jnp.zeros(x.shape[:-1] + (1,), dtype=jnp.int32)
+    for c0 in range(0, n, m_chunk):
+        part = x[..., c0 : min(c0 + m_chunk, n)]
+        pmax = jnp.max(part, axis=-1, keepdims=True)
+        newmax = jnp.maximum(mx, pmax)
+        # Renormalize the accumulated sum by the max delta (3-bit shift).
+        delta_s = jnp.minimum((newmax - mx) >> SHIFT, 31)
+        sm = sm >> delta_s
+        mx = newmax
+        s = (mx - part) >> SHIFT  # 0..7
+        # dtype pinned: under x64, jnp.sum would promote int32 -> int64.
+        sm = sm + jnp.sum(
+            jnp.right_shift(jnp.int32(1 << TERM_SCALE), s),
+            axis=-1,
+            keepdims=True,
+            dtype=jnp.int32,
+        )
+
+    # --- DI: serial division 2^22 / Σ ---------------------------------
+    inv = jnp.minimum(jnp.int32(1 << DIV_NUM_LOG2) // jnp.maximum(sm, 1), 0xFFFF)
+
+    # --- EN: shift-only normalization ---------------------------------
+    s = (mx - x) >> SHIFT
+    out = inv >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS))
+    return jnp.minimum(out, 255).astype(jnp.int32)
+
+
+def ita_softmax_ref_masked(
+    logits: jnp.ndarray, mask: jnp.ndarray, m_chunk: int = 64
+) -> jnp.ndarray:
+    """Masked streaming softmax — bit-exact mirror of the Rust
+    ``ita_softmax_row_masked`` for *prefix* masks (decoder causal rows).
+
+    ``mask``: (..., n) bool, True = position participates. Masked
+    positions output probability 0. Chunk boundaries are absolute, as
+    in the hardware's fixed M-wide stripes with gated lanes.
+    """
+    x = logits.astype(jnp.int32)
+    n = x.shape[-1]
+    # Masked values pinned to -128: they can never win the max, and the
+    # derived shift stays non-negative.
+    xm = jnp.where(mask, x, jnp.int32(-128))
+
+    mx = jnp.full(x.shape[:-1] + (1,), -128, dtype=jnp.int32)
+    sm = jnp.zeros(x.shape[:-1] + (1,), dtype=jnp.int32)
+    for c0 in range(0, n, m_chunk):
+        part = xm[..., c0 : min(c0 + m_chunk, n)]
+        mpart = mask[..., c0 : min(c0 + m_chunk, n)]
+        pmax = jnp.max(part, axis=-1, keepdims=True)
+        newmax = jnp.maximum(mx, pmax)
+        sm = sm >> jnp.minimum((newmax - mx) >> SHIFT, 31)
+        mx = newmax
+        s = (mx - part) >> SHIFT
+        terms = jnp.where(mpart, jnp.right_shift(jnp.int32(1 << TERM_SCALE), s), 0)
+        sm = sm + jnp.sum(terms, axis=-1, keepdims=True, dtype=jnp.int32)
+
+    inv = jnp.minimum(jnp.int32(1 << DIV_NUM_LOG2) // jnp.maximum(sm, 1), 0xFFFF)
+    s = (mx - xm) >> SHIFT
+    out = inv >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS))
+    return jnp.where(mask, jnp.minimum(out, 255), 0).astype(jnp.int32)
+
+
+def int_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Exact int32 matmul (the PE array's arithmetic)."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def attention_core_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    rq_qk: tuple[int, int],
+    bias_av: jnp.ndarray,
+    rq_av: tuple[int, int],
+    m_chunk: int = 64,
+    causal: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bit-exact mirror of ``TileEngine::attention_core`` (and
+    ``attention_core_causal`` when ``causal=True``) for a single head:
+    ``logits = requant(Q·Kᵀ)``, streaming softmax, ``requant(A·V+b)``.
+    Returns ``(out, A)`` as int32 arrays."""
+    logits = requant_ref(int_matmul(q, k.T), *rq_qk)
+    if causal:
+        s_len = logits.shape[0]
+        rows = jnp.arange(s_len)[:, None]
+        cols = jnp.arange(logits.shape[-1])[None, :]
+        a = ita_softmax_ref_masked(logits, cols <= rows, m_chunk)
+    else:
+        a = ita_softmax_ref(logits, m_chunk)
+    out = requant_ref(int_matmul(a, v), *rq_av, bias=bias_av)
+    return out, a

@@ -1,0 +1,115 @@
+"""L2: the quantized multi-head attention model in JAX, calling the L1
+Pallas kernels, with weights generated bit-identically to the Rust
+golden model (``rust/src/attention/mod.rs::gen_weights``).
+
+The built function takes an int32 (S, E) activation matrix (int8-range
+values — int32 is the HLO boundary dtype the xla-crate runtime feeds)
+and returns the int32 (S, E) attention output. Weights are baked into
+the HLO as constants: the artifact *is* the model (weight-stationary,
+taken to its AOT conclusion).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels.ita_attention import ita_attention
+from .kernels.ref import requant_ref
+from .rng import i8_stream
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    s: int
+    e: int
+    p: int
+    h: int
+
+    @property
+    def name(self) -> str:
+        return f"attention_s{self.s}_e{self.e}_p{self.p}_h{self.h}"
+
+
+def gen_weights(seed: int, d: ModelDims) -> dict:
+    """Mirror of Rust ``gen_weights``: ONE SplitMix64 stream, order
+    per head: Wq (E·P row-major), bq, Wk, bk, Wv, bv, bav; then Wo, bo.
+    """
+    sizes = []
+    for _ in range(d.h):
+        sizes += [("wq", d.e * d.p), ("bq", d.p), ("wk", d.e * d.p), ("bk", d.p),
+                  ("wv", d.e * d.p), ("bv", d.p), ("bav", d.p)]
+    sizes += [("wo", d.h * d.p * d.e), ("bo", d.e)]
+    total = sum(n for _, n in sizes)
+    stream = i8_stream(seed, total)
+
+    out: dict = {"heads": []}
+    pos = 0
+
+    def take(n: int) -> np.ndarray:
+        nonlocal pos
+        v = stream[pos : pos + n]
+        pos += n
+        return v
+
+    for _ in range(d.h):
+        head = {
+            "wq": take(d.e * d.p).reshape(d.e, d.p),
+            "bq": take(d.p),
+            "wk": take(d.e * d.p).reshape(d.e, d.p),
+            "bk": take(d.p),
+            "wv": take(d.e * d.p).reshape(d.e, d.p),
+            "bv": take(d.p),
+            "bav": take(d.p),
+        }
+        out["heads"].append(head)
+    out["wo"] = take(d.h * d.p * d.e).reshape(d.h * d.p, d.e)
+    out["bo"] = take(d.e)
+    assert pos == total
+    return out
+
+
+def gen_input(seed: int, d: ModelDims) -> np.ndarray:
+    """Mirror of Rust ``gen_input``: (S, E) int8 from its own stream."""
+    return i8_stream(seed, d.s * d.e).reshape(d.s, d.e)
+
+
+def build_attention_fn(d: ModelDims, seed: int, m_chunk: int = 64):
+    """Return ``fn(x_i32) -> (out_i32,)`` for jit/lowering.
+
+    Linear projections are plain jnp (they lower to XLA dot ops — the
+    PE array's job); the fused attention core is the Pallas kernel.
+    """
+    w = gen_weights(seed, d)
+    rq = quant.default_requants(d.s, d.e, d.p, d.h)
+
+    # Bake weights as int32 constants.
+    heads = [
+        {k: jnp.asarray(v, dtype=jnp.int32) for k, v in head.items()}
+        for head in w["heads"]
+    ]
+    wo = jnp.asarray(w["wo"], dtype=jnp.int32)
+    bo = jnp.asarray(w["bo"], dtype=jnp.int32)
+
+    def fn(x):
+        x = x.astype(jnp.int32)
+        outs = []
+        for head in heads:
+            q = requant_ref(jnp.matmul(x, head["wq"]), rq["q"].mult, rq["q"].shift, bias=head["bq"])
+            k = requant_ref(jnp.matmul(x, head["wk"]), rq["k"].mult, rq["k"].shift, bias=head["bk"])
+            v = requant_ref(jnp.matmul(x, head["wv"]), rq["v"].mult, rq["v"].shift, bias=head["bv"])
+            o, _a = ita_attention(
+                q, k, v, head["bav"],
+                (rq["qk"].mult, rq["qk"].shift),
+                (rq["av"].mult, rq["av"].shift),
+                m_chunk=m_chunk,
+            )
+            outs.append(o)
+        concat = jnp.concatenate(outs, axis=-1)
+        out = requant_ref(jnp.matmul(concat, wo), rq["o"].mult, rq["o"].shift, bias=bo)
+        return (out,)
+
+    return fn

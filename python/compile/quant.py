@@ -1,0 +1,56 @@
+"""Quantization helpers — bit-exact mirrors of ``rust/src/ita/requant.rs``
+and the deterministic requant derivation in ``rust/src/attention/mod.rs``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# Paper constants (rust/src/ita/softmax.rs).
+B = 8
+SHIFT = 5  # B - log2(B)
+EPSILON_MAX = B / ((1 << B) * math.log2(math.e))
+
+# Deterministic requant derivation constants (rust/src/attention/mod.rs).
+UNIFORM_I8_VAR = (256.0 * 256.0 - 1.0) / 12.0
+TARGET_STD = 32.0
+
+
+@dataclass(frozen=True)
+class RequantParams:
+    """``y = clip_i8((acc + bias) * mult >> shift)`` with round-to-nearest."""
+
+    mult: int
+    shift: int
+
+    def as_float(self) -> float:
+        return self.mult / (1 << self.shift)
+
+
+def requant_from_scale(target: float) -> RequantParams:
+    """Mirror of ``RequantParams::from_scale``: the largest shift whose
+    rounded multiplier still fits u8. NOTE: Rust ``f64::round`` rounds
+    half away from zero — ``math.floor(x + 0.5)`` matches for x > 0."""
+    assert target > 0.0
+    best = RequantParams(1, 0)
+    for s in range(32):
+        m = math.floor(target * (1 << s) + 0.5)
+        if 1 <= m <= 255:
+            best = RequantParams(m, s)
+        if m > 255:
+            break
+    return best
+
+
+def default_requants(s: int, e: int, p: int, h: int) -> dict:
+    """Mirror of ``attention::default_requants`` — one formula per stage."""
+    proj_acc_std = UNIFORM_I8_VAR * math.sqrt(e)
+    proj = requant_from_scale(TARGET_STD / proj_acc_std)
+    qk_acc_std = TARGET_STD * TARGET_STD * math.sqrt(p)
+    qk = requant_from_scale(48.0 / qk_acc_std)
+    av_acc_std = TARGET_STD * 256.0 / math.sqrt(s)
+    av = requant_from_scale(TARGET_STD / av_acc_std)
+    o_acc_std = TARGET_STD * math.sqrt(UNIFORM_I8_VAR) * math.sqrt(h * p)
+    o = requant_from_scale(TARGET_STD / o_acc_std)
+    return {"q": proj, "k": proj, "v": proj, "qk": qk, "av": av, "o": o}

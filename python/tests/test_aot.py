@@ -1,0 +1,23 @@
+"""AOT pipeline: lowering produces loadable HLO text + manifest."""
+
+import json
+import pathlib
+import tempfile
+
+from compile.aot import build_artifact
+from compile.model import ModelDims
+
+
+def test_lowering_produces_hlo_text():
+    d = ModelDims(s=16, e=16, p=8, h=2)
+    with tempfile.TemporaryDirectory() as tmp:
+        out = pathlib.Path(tmp)
+        meta = build_artifact(d, seed=42, out_dir=out)
+        text = (out / meta["file"]).read_text()
+        assert text.startswith("HloModule"), text[:80]
+        # The boundary contract the rust runtime relies on.
+        assert meta["inputs"] == [[16, 16]]
+        assert meta["output"] == [16, 16]
+        # Tuple return (rust unwraps with to_tuple1).
+        assert "ROOT" in text and "tuple" in text
+        json.dumps(meta)  # manifest-serializable

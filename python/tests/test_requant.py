@@ -1,0 +1,69 @@
+"""Requantization mirrors: python/compile/quant.py must track
+rust/src/ita/requant.rs (derivation) and kernels/ref.requant_ref must
+track RequantParams::apply_biased (arithmetic)."""
+
+import jax.numpy as jnp
+import numpy as np
+from compile.kernels.ref import requant_ref
+from compile.quant import RequantParams, default_requants, requant_from_scale
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def test_from_scale_known_values():
+    # Values verified against the Rust implementation.
+    assert requant_from_scale(0.5) == RequantParams(128, 8)
+    assert requant_from_scale(1.0) == RequantParams(128, 7)
+    assert requant_from_scale(0.005) == RequantParams(164, 15)
+
+
+@given(st.floats(min_value=1e-7, max_value=100.0))
+@settings(max_examples=200, deadline=None)
+def test_from_scale_precision(target):
+    p = requant_from_scale(target)
+    assert 1 <= p.mult <= 255
+    assert 0 <= p.shift <= 31
+    rel = abs(p.as_float() - target) / target
+    # u8 multiplier gives < 1% error for in-range targets (large
+    # targets saturate at shift 0).
+    if target <= 255.0:
+        assert rel < 0.01
+
+
+def test_requant_ref_rounding_and_clip():
+    acc = jnp.array([3, 2, -3, -4, 1000, -1000], dtype=jnp.int32)
+    out = requant_ref(acc, mult=1, shift=1)
+    # Matches rust tests: (3+1)>>1=2, (2+1)>>1=1, (-3+1)>>1=-1,
+    # (-4+1)>>1=-2, clip at ±.
+    assert out.tolist() == [2, 1, -1, -2, 127, -128]
+
+
+def test_requant_ref_bias_before_scale():
+    acc = jnp.array([[100]], dtype=jnp.int32)
+    bias = jnp.array([20], dtype=jnp.int32)
+    out = requant_ref(acc, mult=1, shift=2, bias=bias)
+    assert out.tolist() == [[30]]
+
+
+@given(
+    st.integers(min_value=-(2**23), max_value=2**23 - 1),
+    st.integers(min_value=1, max_value=255),
+    st.integers(min_value=0, max_value=24),
+)
+@settings(max_examples=300, deadline=None)
+def test_requant_ref_matches_scalar_spec(acc, mult, shift):
+    """Property: jnp implementation == the scalar i64 spec."""
+    prod = acc * mult
+    if shift > 0:
+        prod = (prod + (1 << (shift - 1))) >> shift
+    want = int(np.clip(prod, -128, 127))
+    got = int(requant_ref(jnp.array([acc], dtype=jnp.int32), mult, shift)[0])
+    assert got == want
+
+
+def test_default_requants_deterministic_and_shaped():
+    a = default_requants(64, 128, 64, 2)
+    b = default_requants(64, 128, 64, 2)
+    assert a == b
+    for key in ("q", "k", "v", "qk", "av", "o"):
+        assert 1 <= a[key].mult <= 255

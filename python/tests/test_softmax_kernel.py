@@ -1,0 +1,80 @@
+"""L1 correctness: the Pallas streaming-softmax kernel vs the pure-jnp
+oracle (bit-exact) and vs float softmax (accuracy band) — the CORE
+kernel-correctness signal, swept over shapes/chunkings via hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+from compile.kernels.ita_softmax import ita_softmax
+from compile.kernels.ref import float_softmax, ita_softmax_ref
+from compile.quant import EPSILON_MAX
+from compile.rng import i8_stream
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def rand_logits(seed: int, rows: int, n: int) -> jnp.ndarray:
+    return jnp.asarray(i8_stream(seed, rows * n).reshape(rows, n), dtype=jnp.int32)
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**32),
+    rows=st.integers(min_value=1, max_value=9),
+    n=st.sampled_from([4, 16, 63, 64, 65, 128, 200, 256]),
+    m_chunk=st.sampled_from([16, 64]),
+    block_rows=st.sampled_from([4, 64]),
+)
+@settings(max_examples=40, deadline=None)
+def test_pallas_matches_ref_bit_exact(seed, rows, n, m_chunk, block_rows):
+    x = rand_logits(seed, rows, n)
+    want = ita_softmax_ref(x, m_chunk=m_chunk)
+    got = ita_softmax(x, m_chunk=m_chunk, block_rows=block_rows)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), (
+        f"kernel != ref for rows={rows} n={n} m_chunk={m_chunk}"
+    )
+
+
+def test_uniform_rows_are_uniform():
+    for n in (4, 16, 64, 256):
+        x = jnp.full((1, n), 10, dtype=jnp.int32)
+        p = np.asarray(ita_softmax(x))[0]
+        assert (p == p[0]).all()
+        assert abs(p[0] / 256.0 - 1.0 / n) <= 1.0 / 256.0 + 0.05 / n
+
+
+def test_monotone_in_logits():
+    x = rand_logits(5, 1, 64)
+    p = np.asarray(ita_softmax(x))[0]
+    xs = np.asarray(x)[0]
+    order = np.argsort(xs)
+    assert (np.diff(p[order]) >= 0).all()
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32))
+@settings(max_examples=25, deadline=None)
+def test_mass_reasonable(seed):
+    x = rand_logits(seed, 4, 128)
+    p = np.asarray(ita_softmax(x)).astype(np.float64) / 256.0
+    mass = p.sum(axis=-1)
+    assert ((mass > 0.4) & (mass < 1.3)).all(), mass
+
+
+def test_close_to_float_softmax():
+    maes = []
+    for seed in range(50):
+        x = rand_logits(seed, 1, 64)
+        xf = np.asarray(x)[0].astype(np.float64) * EPSILON_MAX
+        want = np.asarray(float_softmax(jnp.asarray(xf)))
+        got = np.asarray(ita_softmax(x))[0] / 256.0
+        maes.append(np.abs(want - got).mean())
+    assert np.mean(maes) < 0.02, np.mean(maes)
+
+
+def test_streaming_chunks_equivalent_when_max_first():
+    # Bit-exact across chunk widths when the max is in the first chunk
+    # of every width (mirrors the Rust streaming-invariance test).
+    x = np.asarray(rand_logits(9, 1, 96)).copy()
+    x[0, 0] = 127
+    x = jnp.asarray(x)
+    full = np.asarray(ita_softmax(x, m_chunk=96))
+    for mc in (1, 7, 16, 64):
+        assert np.array_equal(np.asarray(ita_softmax(x, m_chunk=mc)), full)

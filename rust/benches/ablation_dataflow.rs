@@ -1,0 +1,30 @@
+//! Bench: §III dataflow ablation — weight-stationary vs output-
+//! stationary bandwidth (the paper's Eq.-level argument), plus the
+//! cycle-exact stall behaviour when the weight port is starved.
+
+use ita::experiments;
+use ita::ita::simulator::{MatmulDims, Simulator};
+use ita::ita::ItaConfig;
+use ita::util::table::Table;
+
+fn main() {
+    print!("{}", experiments::ablation_dataflow().render());
+
+    // Cycle-exact: starve the weight port and watch utilization fall —
+    // the weight-stationary design's raison d'être quantified.
+    let mut t = Table::new("weight-port bandwidth vs stalls (cycle-exact, 128^3 matmul)")
+        .header(&["weight bw [B/cy]", "busy", "stalls", "overhead"]);
+    let d = MatmulDims { r: 128, k: 128, c: 128 };
+    for bw in [16u64, 8, 4, 2] {
+        let mut cfg = ItaConfig::paper();
+        cfg.weight_bw = bw;
+        let (busy, stalls) = Simulator::new(cfg).matmul_cycle_exact(d);
+        t.row(&[
+            bw.to_string(),
+            busy.to_string(),
+            stalls.to_string(),
+            format!("{:.1}%", 100.0 * stalls as f64 / busy as f64),
+        ]);
+    }
+    print!("{}", t.render());
+}

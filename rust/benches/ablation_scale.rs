@@ -1,0 +1,11 @@
+//! Bench: design-space sweep over (N, M) — how area, power and the
+//! efficiency metrics scale (extension beyond the paper's single
+//! design point), plus the divider ablation.
+
+use ita::experiments;
+use ita::ita::ItaConfig;
+
+fn main() {
+    print!("{}", experiments::ablation_scale().render());
+    print!("{}", experiments::ablation_dividers(&ItaConfig::paper()).render());
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig. 5 — the effect of softmax + 8-bit
+//! quantization on attention probabilities (sorted profile, float vs
+//! integer), plus the clipping-boundary series across scale factors.
+
+use ita::baselines::float_softmax::softmax_f64;
+use ita::experiments;
+use ita::ita::softmax::{dequantize_probs, epsilon_max, ita_softmax_row};
+use ita::quant::QuantParams;
+use ita::util::rng::SplitMix64;
+use ita::util::stats::mae;
+use ita::util::table::Table;
+
+fn main() {
+    print!("{}", experiments::fig5(1, 128).render());
+
+    // Scale-factor sweep: the paper's argument that ε_max is the
+    // maximum *meaningful* scale — larger ε clips more, smaller wastes
+    // resolution; MAE is minimized near ε_max for in-window logits.
+    let eps_max = epsilon_max();
+    let mut t = Table::new("scale-factor sweep (MAE vs float softmax, N(0,1) logits x QAT gain)")
+        .header(&["eps / eps_max", "MAE", "zero-prob fraction"]);
+    let mut rng = SplitMix64::new(3);
+    let rows: Vec<Vec<f64>> =
+        (0..200).map(|_| (0..64).map(|_| rng.next_gaussian() * (2.75 / 3.29)).collect()).collect();
+    for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let eps = eps_max * mult;
+        let q = QuantParams { eps };
+        let mut maes = Vec::new();
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for xf in &rows {
+            let xq: Vec<i8> = xf.iter().map(|&v| q.quantize(v)).collect();
+            let pf = softmax_f64(xf);
+            // NOTE: the hardware shift amount is tied to ε_max; other ε
+            // values model *mis-calibrated* inputs (Fig. 5's message).
+            let pq = dequantize_probs(&ita_softmax_row(&xq, 64));
+            zeros += pq.iter().filter(|&&p| p == 0.0).count();
+            total += pq.len();
+            maes.push(mae(&pf, &pq));
+        }
+        t.row(&[
+            format!("{mult:.2}"),
+            format!("{:.2e}", maes.iter().sum::<f64>() / maes.len() as f64),
+            format!("{:.2}", zeros as f64 / total as f64),
+        ]);
+    }
+    print!("{}", t.render());
+}

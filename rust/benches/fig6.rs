@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 6 — area and power breakdown of ITA,
+//! side-by-side with the paper's published shares.
+
+use ita::experiments;
+use ita::ita::ItaConfig;
+
+fn main() {
+    let cfg = ItaConfig::paper();
+    print!("{}", experiments::fig6_area(&cfg).render());
+    print!("{}", experiments::fig6_power(&cfg).render());
+}

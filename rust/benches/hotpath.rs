@@ -1,0 +1,89 @@
+//! Bench: host-side hot paths — the targets of the §Perf optimization
+//! pass (EXPERIMENTS.md §Perf records before/after for each).
+//!
+//! * integer softmax row (the L3 datapath inner loop),
+//! * int8 matmul (the functional engine's dominant cost),
+//! * fused attention core,
+//! * full attention execution (S=64 compact workload),
+//! * analytic simulator,
+//! * coordinator round trip (single inference, warm server).
+
+use ita::attention::{gen_input, AttentionExecutor, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::Server;
+use ita::ita::datapath::TileEngine;
+use ita::ita::requant::RequantParams;
+use ita::ita::simulator::Simulator;
+use ita::ita::softmax::ita_softmax_row;
+use ita::ita::ItaConfig;
+use ita::util::bench::{bencher, black_box};
+use ita::util::mat::{matmul_i8, MatI8};
+use ita::util::rng::SplitMix64;
+
+fn main() {
+    let mut b = bencher();
+    let mut rng = SplitMix64::new(1);
+
+    // --- softmax row ---------------------------------------------------
+    let row256 = rng.vec_i8(256);
+    b.bench_throughput("ita_softmax_row(256, part=64)", 256.0, "elem", || {
+        black_box(ita_softmax_row(black_box(&row256), 64));
+    });
+
+    // --- int8 matmul -----------------------------------------------------
+    let a = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
+    let w = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
+    let macs = (128 * 128 * 128) as f64;
+    b.bench_throughput("matmul_i8(128^3)", macs, "MAC", || {
+        black_box(matmul_i8(black_box(&a), black_box(&w)));
+    });
+
+    // --- fused attention core -------------------------------------------
+    let cfg = ItaConfig::paper();
+    let s = 64;
+    let p = 64;
+    let q = MatI8::from_fn(s, p, |_, _| rng.next_i8());
+    let k = MatI8::from_fn(s, p, |_, _| rng.next_i8());
+    let v = MatI8::from_fn(s, p, |_, _| rng.next_i8());
+    let bias = vec![0i8; p];
+    let rq = RequantParams { mult: 136, shift: 13 };
+    let core_macs = (2 * s * s * p) as f64;
+    b.bench_throughput("attention_core(S=64,P=64)", core_macs, "MAC", || {
+        let mut eng = TileEngine::new(cfg);
+        black_box(eng.attention_core(
+            black_box(&q),
+            black_box(&k),
+            black_box(&v),
+            rq,
+            &bias,
+            rq,
+        ));
+    });
+
+    // --- full attention (compact) -----------------------------------------
+    let dims = ModelDims::compact();
+    let mut exec = AttentionExecutor::new(cfg, dims, 42);
+    let x = gen_input(7, &dims);
+    let attn_macs = dims.shape().total_macs() as f64;
+    b.bench_throughput("run_attention(S=64,E=128,H=2)", attn_macs, "MAC", || {
+        black_box(exec.run(black_box(&x)));
+    });
+
+    // --- analytic simulator ------------------------------------------------
+    let shape = dims.shape();
+    b.bench("simulate_attention(compact)", || {
+        black_box(Simulator::new(cfg).simulate_attention(black_box(shape)));
+    });
+
+    // --- coordinator round trip ---------------------------------------------
+    let sys = SystemConfig {
+        accelerator: cfg,
+        model: ModelConfig { dims, ffn: 256, layers: 1, seed: 42 },
+        server: ServerConfig { workers: 2, max_batch: 8, max_wait_us: 50, queue_depth: 64 },
+    };
+    let server = Server::start(sys);
+    b.bench("server.infer(compact) round trip", || {
+        black_box(server.infer(x.clone()).unwrap());
+    });
+    server.shutdown();
+}

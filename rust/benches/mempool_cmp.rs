@@ -1,0 +1,26 @@
+//! Bench: regenerate §V-D — ITA vs the MemPool 256-core software
+//! baseline (paper: 6× speedup, 45× energy efficiency), across
+//! sequence lengths, plus a sensitivity sweep over the baseline's
+//! utilization assumption.
+
+use ita::baselines::mempool::{compare, MemPoolConfig};
+use ita::experiments;
+use ita::ita::simulator::AttentionShape;
+use ita::ita::ItaConfig;
+use ita::util::table::Table;
+
+fn main() {
+    let cfg = ItaConfig::paper();
+    print!("{}", experiments::mempool_cmp(&cfg).render());
+
+    // Sensitivity: the speedup claim vs the software kernel quality.
+    let mut t = Table::new("sensitivity: MemPool matmul utilization vs claimed ratios")
+        .header(&["utilization", "speedup", "energy ratio"]);
+    for util in [0.10, 0.15, 0.19, 0.25, 0.33] {
+        let mut mp = MemPoolConfig::paper();
+        mp.matmul_utilization = util;
+        let (s, e) = compare(&cfg, &mp, AttentionShape { s: 512, e: 256, p: 64, h: 4 });
+        t.row(&[format!("{util:.2}"), format!("{s:.2}x"), format!("{e:.1}x")]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate §V-C — MAE of ITA's 8-bit softmax vs I-BERT's
+//! 32-bit integer softmax vs Softermax, against the float oracle
+//! (paper: ITA 0.46 %, I-BERT 0.35 %), and time all implementations.
+
+use ita::baselines::ibert::ibert_softmax_i8;
+use ita::baselines::softermax::softermax_i8;
+use ita::experiments;
+use ita::ita::softmax::{epsilon_max, ita_softmax_row};
+use ita::util::bench::{bencher, black_box};
+use ita::util::rng::SplitMix64;
+
+fn main() {
+    print!("{}", experiments::softmax_mae_table(42, 500, 64).render());
+
+    // Latency of one 64-element row on the host (the relative cost
+    // echoes the paper's datapath-complexity argument).
+    let mut rng = SplitMix64::new(1);
+    let x = rng.vec_i8(64);
+    let eps = epsilon_max();
+    let mut b = bencher();
+    b.bench_throughput("ita_softmax_row(64)", 64.0, "elem", || {
+        black_box(ita_softmax_row(black_box(&x), 64));
+    });
+    b.bench_throughput("ibert_softmax(64)", 64.0, "elem", || {
+        black_box(ibert_softmax_i8(black_box(&x), eps));
+    });
+    b.bench_throughput("softermax(64)", 64.0, "elem", || {
+        black_box(softermax_i8(black_box(&x), eps));
+    });
+}

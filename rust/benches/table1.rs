@@ -1,0 +1,25 @@
+//! Bench: regenerate Table I (SOTA comparison) — the simulated
+//! "This work" columns next to the published rows — and time the
+//! simulator that produces them.
+
+use ita::experiments;
+use ita::ita::simulator::Simulator;
+use ita::ita::ItaConfig;
+use ita::util::bench::{bencher, black_box};
+
+fn main() {
+    let cfg = ItaConfig::paper();
+    print!("{}", experiments::table1(&cfg).render());
+
+    // Timing: the analytic simulation behind each row.
+    let mut b = bencher();
+    let shape = experiments::benchmark_shape();
+    b.bench_throughput(
+        "simulate_attention(S=256,E=256,P=64,H=4)",
+        shape.total_macs() as f64,
+        "simMAC",
+        || {
+            black_box(Simulator::new(cfg).simulate_attention(black_box(shape)));
+        },
+    );
+}

@@ -1,0 +1,156 @@
+//! Quantized transformer encoder layer on the ITA engine.
+//!
+//! The paper accelerates the attention block; a full encoder layer
+//! additionally has residual connections and a feed-forward network
+//! whose two linears map onto the same PE array ("ITA computes linear
+//! layers sequentially", §III). Residual adds are saturating int8 adds
+//! (host-side in a real deployment, bit-exactly modeled here);
+//! normalization is folded into the requantization scales, as in
+//! integer-only deployments of quantized transformers (I-BERT-style) —
+//! documented as a substitution in DESIGN.md.
+
+use super::{default_requants, gen_weights, AttentionWeights, ModelDims, RequantConfig};
+use crate::ita::datapath::TileEngine;
+use crate::ita::requant::RequantParams;
+use crate::util::mat::MatI8;
+use crate::util::rng::SplitMix64;
+
+/// Feed-forward weights: E → F → E.
+#[derive(Debug, Clone)]
+pub struct FfnWeights {
+    pub w1: MatI8, // E×F
+    pub b1: Vec<i8>,
+    pub w2: MatI8, // F×E
+    pub b2: Vec<i8>,
+}
+
+/// One encoder layer's parameters.
+#[derive(Debug, Clone)]
+pub struct EncoderLayer {
+    pub attn: AttentionWeights,
+    pub ffn: FfnWeights,
+}
+
+/// Whole encoder model.
+#[derive(Debug, Clone)]
+pub struct EncoderModel {
+    pub dims: ModelDims,
+    /// FFN inner dimension.
+    pub f: usize,
+    pub layers: Vec<EncoderLayer>,
+    pub rq: RequantConfig,
+    pub rq_ffn1: RequantParams,
+    pub rq_ffn2: RequantParams,
+}
+
+impl EncoderModel {
+    /// Deterministic model generation. Stream order (mirrored in
+    /// `python/compile/model.py`): per layer, the attention weights
+    /// (seed `seed + 1000·layer`), then W1 (E·F), b1 (F), W2 (F·E),
+    /// b2 (E) from seed `seed + 1000·layer + 500`.
+    pub fn generate(dims: ModelDims, f: usize, n_layers: usize, seed: u64) -> Self {
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let attn = gen_weights(seed + 1000 * l as u64, &dims);
+            let mut rng = SplitMix64::new(seed + 1000 * l as u64 + 500);
+            let w1 = MatI8::from_vec(dims.e, f, rng.vec_i8(dims.e * f));
+            let b1 = rng.vec_i8(f);
+            let w2 = MatI8::from_vec(f, dims.e, rng.vec_i8(f * dims.e));
+            let b2 = rng.vec_i8(dims.e);
+            layers.push(EncoderLayer { attn, ffn: FfnWeights { w1, b1, w2, b2 } });
+        }
+        let rq = default_requants(&dims);
+        // FFN requants: same deterministic derivation as projections.
+        let acc1 = super::UNIFORM_I8_VAR * (dims.e as f64).sqrt();
+        let rq_ffn1 = RequantParams::from_scale(super::TARGET_STD / acc1);
+        let acc2 = super::TARGET_STD * super::UNIFORM_I8_VAR.sqrt() * (f as f64).sqrt();
+        let rq_ffn2 = RequantParams::from_scale(super::TARGET_STD / acc2);
+        Self { dims, f, layers, rq, rq_ffn1, rq_ffn2 }
+    }
+
+    /// Total useful MACs per token sequence (all layers).
+    pub fn total_macs(&self) -> u64 {
+        let per_attn = self.dims.shape().total_macs();
+        let per_ffn = 2 * (self.dims.s * self.dims.e * self.f) as u64;
+        (per_attn + per_ffn) * self.layers.len() as u64
+    }
+}
+
+/// Saturating int8 residual add (host-side op).
+pub fn residual_add(a: &MatI8, b: &MatI8) -> MatI8 {
+    assert_eq!(a.shape(), b.shape());
+    MatI8::from_fn(a.rows(), a.cols(), |r, c| a.get(r, c).saturating_add(b.get(r, c)))
+}
+
+/// Integer ReLU.
+pub fn relu_i8(x: &MatI8) -> MatI8 {
+    x.map(|v| v.max(0))
+}
+
+/// Run the full encoder on the engine; returns per-layer outputs' final
+/// activation.
+pub fn run_encoder(engine: &mut TileEngine, model: &EncoderModel, x: &MatI8) -> MatI8 {
+    let mut h = x.clone();
+    for layer in &model.layers {
+        let attn_out = super::run_attention(engine, &h, &layer.attn, &model.rq);
+        let h1 = residual_add(&h, &attn_out.out);
+        let ff1 = relu_i8(&engine.linear(&h1, &layer.ffn.w1, &layer.ffn.b1, model.rq_ffn1));
+        let ff2 = engine.linear(&ff1, &layer.ffn.w2, &layer.ffn.b2, model.rq_ffn2);
+        h = residual_add(&h1, &ff2);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::gen_input;
+    use crate::ita::ItaConfig;
+
+    fn tiny_model() -> EncoderModel {
+        EncoderModel::generate(ModelDims { s: 16, e: 16, p: 8, h: 2 }, 32, 2, 9)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = tiny_model();
+        let b = tiny_model();
+        assert_eq!(a.layers[1].ffn.w1, b.layers[1].ffn.w1);
+        assert_eq!(a.layers[0].attn.wo, b.layers[0].attn.wo);
+    }
+
+    #[test]
+    fn encoder_runs_and_is_deterministic() {
+        let model = tiny_model();
+        let x = gen_input(1, &model.dims);
+        let mut e1 = TileEngine::new(ItaConfig::tiny());
+        let mut e2 = TileEngine::new(ItaConfig::tiny());
+        let y1 = run_encoder(&mut e1, &model, &x);
+        let y2 = run_encoder(&mut e2, &model, &x);
+        assert_eq!(y1, y2);
+        assert_eq!(y1.shape(), (16, 16));
+    }
+
+    #[test]
+    fn residual_saturates() {
+        let a = MatI8::from_vec(1, 2, vec![120, -120]);
+        let b = MatI8::from_vec(1, 2, vec![20, -20]);
+        let r = residual_add(&a, &b);
+        assert_eq!(r.as_slice(), &[127, -128]);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let x = MatI8::from_vec(1, 3, vec![-5, 0, 5]);
+        assert_eq!(relu_i8(&x).as_slice(), &[0, 0, 5]);
+    }
+
+    #[test]
+    fn mac_accounting_includes_ffn() {
+        let model = tiny_model();
+        let x = gen_input(1, &model.dims);
+        let mut e = TileEngine::new(ItaConfig::tiny());
+        let _ = run_encoder(&mut e, &model, &x);
+        assert_eq!(e.activity.macs, model.total_macs());
+    }
+}

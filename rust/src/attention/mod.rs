@@ -1,0 +1,335 @@
+//! Multi-head attention workload: weight containers, deterministic
+//! model generation (bit-mirrored in Python), and execution on the
+//! [`crate::ita::datapath::TileEngine`].
+//!
+//! Dataflow per Fig. 1/3: per head h,
+//! `Q/K/V = requant(X·W_{q,k,v}^h + b)`, `A = ita_softmax(requant(Q·Kᵀ))`,
+//! `O_h = requant(A·V + b_av)`; heads concatenated and projected with
+//! `W_o`. All tensors int8 (A: uint8 probabilities at scale 2^−8).
+
+pub mod encoder;
+pub mod schedule;
+
+use crate::ita::datapath::TileEngine;
+use crate::ita::requant::RequantParams;
+use crate::ita::ItaConfig;
+use crate::util::mat::{MatI8, MatU8};
+use crate::util::rng::SplitMix64;
+
+/// Workload dimensions (paper Fig. 1 naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Sequence length.
+    pub s: usize,
+    /// Embedding size.
+    pub e: usize,
+    /// Projection size per head.
+    pub p: usize,
+    /// Number of heads.
+    pub h: usize,
+}
+
+impl ModelDims {
+    pub fn compact() -> Self {
+        Self { s: 64, e: 128, p: 64, h: 2 }
+    }
+
+    pub fn shape(&self) -> crate::ita::simulator::AttentionShape {
+        crate::ita::simulator::AttentionShape { s: self.s, e: self.e, p: self.p, h: self.h }
+    }
+}
+
+/// One head's projection weights.
+#[derive(Debug, Clone)]
+pub struct HeadWeights {
+    pub wq: MatI8, // E×P
+    pub bq: Vec<i8>,
+    pub wk: MatI8,
+    pub bk: Vec<i8>,
+    pub wv: MatI8,
+    pub bv: Vec<i8>,
+    /// Bias of the A·V output (the hardware's bias port in the AV pass).
+    pub bav: Vec<i8>,
+}
+
+/// Full attention-block weights.
+#[derive(Debug, Clone)]
+pub struct AttentionWeights {
+    pub heads: Vec<HeadWeights>,
+    pub wo: MatI8, // (H·P)×E
+    pub bo: Vec<i8>,
+}
+
+/// Requantization parameters for every stage.
+#[derive(Debug, Clone, Copy)]
+pub struct RequantConfig {
+    pub q: RequantParams,
+    pub k: RequantParams,
+    pub v: RequantParams,
+    pub qk: RequantParams,
+    pub av: RequantParams,
+    pub o: RequantParams,
+}
+
+/// Standard deviation of a uniform int8 code (discrete uniform on
+/// [−128, 127]): sqrt((256² − 1)/12) ≈ 73.9. Used by the deterministic
+/// requant derivation below (mirrored in `python/compile/quant.py`).
+pub const UNIFORM_I8_VAR: f64 = (256.0 * 256.0 - 1.0) / 12.0;
+/// Target post-requant standard deviation (±4σ inside int8).
+pub const TARGET_STD: f64 = 32.0;
+
+/// Deterministic requant derivation for the synthetic workloads: one
+/// formula per stage, computed only from the model dimensions. Both
+/// the Rust golden model and the JAX model call their mirrored copy,
+/// which keeps the layers bit-identical without serializing scales.
+pub fn default_requants(d: &ModelDims) -> RequantConfig {
+    let proj_acc_std = UNIFORM_I8_VAR * (d.e as f64).sqrt();
+    let proj = RequantParams::from_scale(TARGET_STD / proj_acc_std);
+    // Q,K post-requant std ≈ TARGET_STD ⇒ logit accumulation std:
+    let qk_acc_std = TARGET_STD * TARGET_STD * (d.p as f64).sqrt();
+    // Logit std target 48: exercises the softmax window (±2.77/ε≈128).
+    let qk = RequantParams::from_scale(48.0 / qk_acc_std);
+    // A rows sum to ~256 (uint8, scale 2^−8); value std TARGET_STD.
+    let av_acc_std = TARGET_STD * 256.0 / (d.s as f64).sqrt();
+    let av = RequantParams::from_scale(TARGET_STD / av_acc_std);
+    let o_acc_std = TARGET_STD * UNIFORM_I8_VAR.sqrt() * ((d.h * d.p) as f64).sqrt();
+    let o = RequantParams::from_scale(TARGET_STD / o_acc_std);
+    RequantConfig { q: proj, k: proj, v: proj, qk, av, o }
+}
+
+/// Deterministically generate attention weights from a seed.
+///
+/// Stream order (MUST stay in sync with `python/compile/model.py`):
+/// per head: Wq (E·P row-major), bq (P), Wk, bk, Wv, bv, bav (P);
+/// then Wo ((H·P)·E), bo (E). All values full-range uniform int8.
+pub fn gen_weights(seed: u64, d: &ModelDims) -> AttentionWeights {
+    let mut rng = SplitMix64::new(seed);
+    fn mat(rng: &mut SplitMix64, r: usize, c: usize) -> MatI8 {
+        MatI8::from_vec(r, c, rng.vec_i8(r * c))
+    }
+    let heads = (0..d.h)
+        .map(|_| {
+            let wq = mat(&mut rng, d.e, d.p);
+            let bq = rng.vec_i8(d.p);
+            let wk = mat(&mut rng, d.e, d.p);
+            let bk = rng.vec_i8(d.p);
+            let wv = mat(&mut rng, d.e, d.p);
+            let bv = rng.vec_i8(d.p);
+            let bav = rng.vec_i8(d.p);
+            HeadWeights { wq, bq, wk, bk, wv, bv, bav }
+        })
+        .collect();
+    let wo = mat(&mut rng, d.h * d.p, d.e);
+    let bo = rng.vec_i8(d.e);
+    AttentionWeights { heads, wo, bo }
+}
+
+/// Deterministically generate an int8 input activation matrix.
+pub fn gen_input(seed: u64, d: &ModelDims) -> MatI8 {
+    let mut rng = SplitMix64::new(seed);
+    MatI8::from_vec(d.s, d.e, rng.vec_i8(d.s * d.e))
+}
+
+/// Result of one attention execution.
+#[derive(Debug, Clone)]
+pub struct AttentionOutput {
+    /// Final S×E output.
+    pub out: MatI8,
+    /// Per-head attention probability matrices (for Fig. 5 / tests).
+    pub attn: Vec<MatU8>,
+}
+
+/// Execute a full multi-head attention block on the ITA engine.
+/// This is the golden numeric reference for all layers.
+pub fn run_attention(
+    engine: &mut TileEngine,
+    x: &MatI8,
+    w: &AttentionWeights,
+    rq: &RequantConfig,
+) -> AttentionOutput {
+    let mut head_outputs: Vec<MatI8> = Vec::with_capacity(w.heads.len());
+    let mut attn = Vec::with_capacity(w.heads.len());
+    for hw in &w.heads {
+        let q = engine.linear(x, &hw.wq, &hw.bq, rq.q);
+        let k = engine.linear(x, &hw.wk, &hw.bk, rq.k);
+        let v = engine.linear(x, &hw.wv, &hw.bv, rq.v);
+        let (o, a) = engine.attention_core(&q, &k, &v, rq.qk, &hw.bav, rq.av);
+        head_outputs.push(o);
+        attn.push(a);
+    }
+    // Concatenate heads along the feature dimension, project.
+    let mut concat = head_outputs[0].clone();
+    for o in &head_outputs[1..] {
+        concat = concat.hcat(o);
+    }
+    let out = engine.linear(&concat, &w.wo, &w.bo, rq.o);
+    AttentionOutput { out, attn }
+}
+
+/// Pre-transposed weight cache (§Perf): the serving path pays each
+/// weight transpose once at model load — the software expression of
+/// ITA's weight-stationary buffer.
+#[derive(Debug, Clone)]
+pub struct TransposedWeights {
+    /// Per head: (Wqᵀ, Wkᵀ, Wvᵀ), each P×E.
+    pub heads: Vec<(MatI8, MatI8, MatI8)>,
+    /// Woᵀ, E×(H·P).
+    pub wot: MatI8,
+}
+
+impl TransposedWeights {
+    pub fn of(w: &AttentionWeights) -> Self {
+        Self {
+            heads: w
+                .heads
+                .iter()
+                .map(|h| (h.wq.transpose(), h.wk.transpose(), h.wv.transpose()))
+                .collect(),
+            wot: w.wo.transpose(),
+        }
+    }
+}
+
+/// Convenience wrapper owning the engine.
+pub struct AttentionExecutor {
+    pub engine: TileEngine,
+    pub weights: AttentionWeights,
+    /// Transposed copies for the hot path (built once).
+    pub weights_t: TransposedWeights,
+    pub requants: RequantConfig,
+    pub dims: ModelDims,
+}
+
+impl AttentionExecutor {
+    pub fn new(cfg: ItaConfig, dims: ModelDims, seed: u64) -> Self {
+        let weights = gen_weights(seed, &dims);
+        let weights_t = TransposedWeights::of(&weights);
+        Self {
+            engine: TileEngine::new(cfg),
+            weights,
+            weights_t,
+            requants: default_requants(&dims),
+            dims,
+        }
+    }
+
+    /// Bit-identical to [`run_attention`] but uses the pre-transposed
+    /// weight cache (asserted equal in tests).
+    pub fn run(&mut self, x: &MatI8) -> AttentionOutput {
+        let (w, wt, rq) = (&self.weights, &self.weights_t, &self.requants);
+        let engine = &mut self.engine;
+        let mut head_outputs: Vec<MatI8> = Vec::with_capacity(w.heads.len());
+        let mut attn = Vec::with_capacity(w.heads.len());
+        for (hw, (wqt, wkt, wvt)) in w.heads.iter().zip(&wt.heads) {
+            let q = engine.linear_pret(x, wqt, &hw.bq, rq.q);
+            let k = engine.linear_pret(x, wkt, &hw.bk, rq.k);
+            let v = engine.linear_pret(x, wvt, &hw.bv, rq.v);
+            let (o, a) = engine.attention_core(&q, &k, &v, rq.qk, &hw.bav, rq.av);
+            head_outputs.push(o);
+            attn.push(a);
+        }
+        let mut concat = head_outputs[0].clone();
+        for o in &head_outputs[1..] {
+            concat = concat.hcat(o);
+        }
+        let out = engine.linear_pret(&concat, &wt.wot, &w.bo, rq.o);
+        AttentionOutput { out, attn }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::ItaConfig;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { s: 16, e: 16, p: 8, h: 2 }
+    }
+
+    #[test]
+    fn weight_generation_deterministic() {
+        let d = tiny_dims();
+        let a = gen_weights(42, &d);
+        let b = gen_weights(42, &d);
+        assert_eq!(a.wo, b.wo);
+        assert_eq!(a.heads[1].wv, b.heads[1].wv);
+        let c = gen_weights(43, &d);
+        assert_ne!(a.wo, c.wo, "different seeds differ");
+    }
+
+    #[test]
+    fn output_shape_and_determinism() {
+        let d = tiny_dims();
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 1);
+        let x = gen_input(2, &d);
+        let out1 = ex.run(&x);
+        assert_eq!(out1.out.shape(), (d.s, d.e));
+        assert_eq!(out1.attn.len(), d.h);
+        assert_eq!(out1.attn[0].shape(), (d.s, d.s));
+        let out2 = ex.run(&x);
+        assert_eq!(out1.out, out2.out);
+    }
+
+    #[test]
+    fn cached_transpose_path_matches_plain_run_attention() {
+        // The §Perf pre-transposed path must be bit-identical to the
+        // reference run_attention.
+        let d = ModelDims { s: 24, e: 32, p: 16, h: 3 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 5);
+        let x = gen_input(6, &d);
+        let fast = ex.run(&x);
+        let mut engine = TileEngine::new(ItaConfig::tiny());
+        let slow = run_attention(&mut engine, &x, &ex.weights, &ex.requants);
+        assert_eq!(fast.out, slow.out);
+        assert_eq!(fast.attn, slow.attn);
+        // Activity accounting identical too.
+        assert_eq!(ex.engine.activity, engine.activity);
+    }
+
+    #[test]
+    fn activity_matches_simulator_prediction() {
+        // The functional engine's MAC count must equal the analytic
+        // workload model exactly.
+        let d = ModelDims { s: 24, e: 32, p: 16, h: 2 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 3);
+        let x = gen_input(4, &d);
+        let _ = ex.run(&x);
+        assert_eq!(ex.engine.activity.macs, d.shape().total_macs());
+    }
+
+    #[test]
+    fn attention_rows_valid_distributions() {
+        let d = ModelDims { s: 32, e: 32, p: 16, h: 1 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 7);
+        let x = gen_input(8, &d);
+        let out = ex.run(&x);
+        for r in 0..d.s {
+            let mass: f64 = out.attn[0].row(r).iter().map(|&v| v as f64 / 256.0).sum();
+            // Shift-floor quantization can cost up to ~half the mass on
+            // adversarial rows (every term just past a shift boundary).
+            assert!(mass > 0.4 && mass < 1.3, "row {r} mass {mass}");
+        }
+    }
+
+    #[test]
+    fn logits_exercise_softmax_range() {
+        // The deterministic requant derivation must place QKᵀ logits in
+        // a range where softmax output is non-trivial (not all-uniform,
+        // not all-saturated): check attention rows have spread.
+        let d = ModelDims { s: 32, e: 64, p: 32, h: 1 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 11);
+        let x = gen_input(12, &d);
+        let out = ex.run(&x);
+        let a = &out.attn[0];
+        let mut nonuniform_rows = 0;
+        for r in 0..d.s {
+            let row = a.row(r);
+            let max = *row.iter().max().unwrap();
+            let min = *row.iter().min().unwrap();
+            if max > min + 4 {
+                nonuniform_rows += 1;
+            }
+        }
+        assert!(nonuniform_rows > d.s / 2, "only {nonuniform_rows} rows show structure");
+    }
+}

@@ -1,0 +1,214 @@
+//! Tile-level schedule generation (Fig. 3's workload mapping).
+//!
+//! Expands an attention workload into the ordered sequence of tile
+//! operations the hardware executes: per phase, the (row-tile,
+//! depth-tile, column-group) loop nest with weight-set changes marked.
+//! The coordinator uses this to interleave requests; the cycle-exact
+//! simulator walks it; tests assert its totals equal the analytic
+//! model.
+
+use crate::ita::simulator::{tiles_ceil, AttentionShape, MatmulDims};
+use crate::ita::ItaConfig;
+
+/// Phase identifiers in schedule order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Q,
+    K,
+    V,
+    QK,
+    AV,
+    OW,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Q => "Q",
+            Phase::K => "K",
+            Phase::V => "V",
+            Phase::QK => "QK^T",
+            Phase::AV => "AV",
+            Phase::OW => "OW",
+        }
+    }
+}
+
+/// One tile operation: M cycles of PE-array work on one weight set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileOp {
+    pub phase: Phase,
+    pub head: usize,
+    /// Row-tile index (output rows `row_tile·M ..`).
+    pub row_tile: usize,
+    /// Depth-tile index along the reduction dimension.
+    pub depth_tile: usize,
+    /// Column group index (output columns `col_group·N ..`).
+    pub col_group: usize,
+    /// True when this op needs a new weight set in the buffer.
+    pub loads_weights: bool,
+    /// True when this op's outputs complete (last depth tile).
+    pub produces_output: bool,
+    /// Softmax side effects riding on this op.
+    pub softmax_da: bool,
+    pub softmax_en: bool,
+}
+
+/// Generate the loop nest for one matmul phase.
+fn matmul_ops(
+    cfg: &ItaConfig,
+    phase: Phase,
+    head: usize,
+    d: MatmulDims,
+    out: &mut Vec<TileOp>,
+) {
+    let rt = tiles_ceil(d.r, cfg.m);
+    let kt = tiles_ceil(d.k, cfg.m);
+    let cg = tiles_ceil(d.c, cfg.n);
+    for row_tile in 0..rt {
+        for col_group in 0..cg {
+            for depth_tile in 0..kt {
+                out.push(TileOp {
+                    phase,
+                    head,
+                    row_tile,
+                    depth_tile,
+                    col_group,
+                    loads_weights: true, // weights change every (group, depth) step
+                    produces_output: depth_tile == kt - 1,
+                    softmax_da: phase == Phase::QK && depth_tile == kt - 1,
+                    softmax_en: phase == Phase::AV && depth_tile == 0,
+                });
+            }
+        }
+    }
+}
+
+/// Full schedule of one attention block, fusing QKᵀ and AV per row
+/// block as the paper describes ("fuses Q×Kᵀ and A×V in iterations of
+/// i"): for each head and each row block, all QKᵀ tiles of the block
+/// are followed immediately by its AV tiles.
+pub fn attention_schedule(cfg: &ItaConfig, shape: AttentionShape) -> Vec<TileOp> {
+    let mut ops = Vec::new();
+    let proj = MatmulDims { r: shape.s, k: shape.e, c: shape.p };
+    for head in 0..shape.h {
+        matmul_ops(cfg, Phase::Q, head, proj, &mut ops);
+        matmul_ops(cfg, Phase::K, head, proj, &mut ops);
+        matmul_ops(cfg, Phase::V, head, proj, &mut ops);
+        // Fused QKᵀ/AV per row block.
+        let row_blocks = tiles_ceil(shape.s, cfg.m);
+        for rb in 0..row_blocks {
+            let mut qk_ops = Vec::new();
+            matmul_ops(
+                cfg,
+                Phase::QK,
+                head,
+                MatmulDims { r: cfg.m.min(shape.s - rb * cfg.m), k: shape.p, c: shape.s },
+                &mut qk_ops,
+            );
+            for op in &mut qk_ops {
+                op.row_tile = rb;
+            }
+            ops.extend(qk_ops);
+            let mut av_ops = Vec::new();
+            matmul_ops(
+                cfg,
+                Phase::AV,
+                head,
+                MatmulDims { r: cfg.m.min(shape.s - rb * cfg.m), k: shape.s, c: shape.p },
+                &mut av_ops,
+            );
+            for op in &mut av_ops {
+                op.row_tile = rb;
+            }
+            ops.extend(av_ops);
+        }
+    }
+    matmul_ops(
+        cfg,
+        Phase::OW,
+        0,
+        MatmulDims { r: shape.s, k: shape.h * shape.p, c: shape.e },
+        &mut ops,
+    );
+    ops
+}
+
+/// Total cycles of a schedule (M per tile op, no stalls).
+pub fn schedule_cycles(cfg: &ItaConfig, ops: &[TileOp]) -> u64 {
+    ops.len() as u64 * cfg.m as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::simulator::Simulator;
+
+    #[test]
+    fn schedule_totals_match_analytic_model() {
+        let cfg = ItaConfig::paper();
+        for shape in [
+            AttentionShape { s: 64, e: 128, p: 64, h: 2 },
+            AttentionShape { s: 128, e: 256, p: 64, h: 4 },
+            AttentionShape { s: 65, e: 130, p: 60, h: 3 }, // non-aligned
+        ] {
+            let ops = attention_schedule(&cfg, shape);
+            let analytic = Simulator::new(cfg).simulate_attention(shape);
+            assert_eq!(
+                schedule_cycles(&cfg, &ops),
+                analytic.activity.cycles,
+                "shape {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_order_alternates_qk_av() {
+        let cfg = ItaConfig::paper();
+        let shape = AttentionShape { s: 128, e: 128, p: 64, h: 1 };
+        let ops = attention_schedule(&cfg, shape);
+        // Find first AV op; there must be QK ops before it and QK ops
+        // of the *second* row block after it (fusion interleaves).
+        let first_av = ops.iter().position(|o| o.phase == Phase::AV).unwrap();
+        let later_qk = ops[first_av..].iter().any(|o| o.phase == Phase::QK);
+        assert!(later_qk, "QKᵀ of later row blocks must follow the first AV");
+        assert!(ops[..first_av].iter().any(|o| o.phase == Phase::QK));
+    }
+
+    #[test]
+    fn da_marks_final_depth_tiles_only() {
+        let cfg = ItaConfig::paper();
+        let shape = AttentionShape { s: 128, e: 128, p: 128, h: 1 };
+        let ops = attention_schedule(&cfg, shape);
+        for op in &ops {
+            if op.softmax_da {
+                assert_eq!(op.phase, Phase::QK);
+                assert!(op.produces_output);
+            }
+            if op.softmax_en {
+                assert_eq!(op.phase, Phase::AV);
+            }
+        }
+        // Every QK column group contributes exactly one DA op per depth
+        // completion.
+        let da_count = ops.iter().filter(|o| o.softmax_da).count();
+        let qk_outputs = ops.iter().filter(|o| o.phase == Phase::QK && o.produces_output).count();
+        assert_eq!(da_count, qk_outputs);
+    }
+
+    #[test]
+    fn head_and_phase_coverage() {
+        let cfg = ItaConfig::tiny();
+        let shape = AttentionShape { s: 16, e: 16, p: 8, h: 3 };
+        let ops = attention_schedule(&cfg, shape);
+        for h in 0..3 {
+            for ph in [Phase::Q, Phase::K, Phase::V, Phase::QK, Phase::AV] {
+                assert!(
+                    ops.iter().any(|o| o.head == h && o.phase == ph),
+                    "missing head {h} phase {ph:?}"
+                );
+            }
+        }
+        assert!(ops.iter().any(|o| o.phase == Phase::OW));
+    }
+}

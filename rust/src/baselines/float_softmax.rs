@@ -1,0 +1,80 @@
+//! Floating-point softmax oracle — the ground truth for the §V-C
+//! accuracy experiments, implemented with the numerically-stable
+//! max-subtraction form (Eq. 1 of the paper).
+
+/// Stable softmax over f64.
+pub fn softmax_f64(x: &[f64]) -> Vec<f64> {
+    if x.is_empty() {
+        return Vec::new();
+    }
+    let max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = x.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Softmax of dequantized int8 logits under scale `eps` — what an
+/// FP-equipped accelerator (SpAtten/ELSA-style dequantize→softmax→
+/// requantize) would compute before output quantization.
+pub fn softmax_dequant_i8(x: &[i8], eps: f64) -> Vec<f64> {
+    let xf: Vec<f64> = x.iter().map(|&v| v as f64 * eps).collect();
+    softmax_f64(&xf)
+}
+
+/// Row-wise softmax over a matrix of f32 (reference attention path).
+pub fn softmax_rows_f32(
+    x: &crate::util::mat::MatF32,
+) -> crate::util::mat::MatF32 {
+    let mut out = crate::util::mat::MatF32::zeros(x.rows(), x.cols());
+    for r in 0..x.rows() {
+        let row: Vec<f64> = x.row(r).iter().map(|&v| v as f64).collect();
+        let p = softmax_f64(&row);
+        for (c, &v) in p.iter().enumerate() {
+            out.set(r, c, v as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn sums_to_one() {
+        forall("softmax mass", 200, |g| {
+            let x: Vec<f64> = (0..g.usize_in(1, 128)).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            let p = softmax_f64(&x);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(p.iter().all(|&v| v >= 0.0));
+        });
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [101.0, 102.0, 103.0];
+        let (px, py) = (softmax_f64(&x), softmax_f64(&y));
+        for (a, b) in px.iter().zip(&py) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn extreme_values_stable() {
+        let x = [800.0, -800.0, 0.0];
+        let p = softmax_f64(&x);
+        assert!((p[0] - 1.0).abs() < 1e-10);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn uniform_inputs_uniform_output() {
+        let p = softmax_f64(&[5.0; 8]);
+        for v in p {
+            assert!((v - 0.125).abs() < 1e-12);
+        }
+    }
+}

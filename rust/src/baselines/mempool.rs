@@ -1,0 +1,174 @@
+//! MemPool software baseline (paper §V-D).
+//!
+//! The paper compares ITA against attention executed on MemPool
+//! (Cavalcante et al., DATE 2021): a shared-L1 cluster of 256 32-bit
+//! RISC-V cores with SIMD (4×int8 MAC per core per cycle via
+//! SDOTP-style instructions), running "a highly optimized kernel for
+//! matrix multiplications and the I-BERT algorithm for softmax".
+//! Result: ITA is **6× faster** and **45× more energy-efficient** on
+//! attention.
+//!
+//! We reproduce that comparison with a cost/energy model of the
+//! cluster. Model constants below are calibrated from published
+//! MemPool kernel studies (DATE'21 report ~50 % LSU/stall overhead on
+//! dense matmul at 256 cores; terapool follow-ups similar) and the
+//! paper's own 6×/45× end-to-end ratios; each constant is documented
+//! so the `mempool_cmp` bench can sweep them (the *shape* of the
+//! comparison — who wins and by roughly what factor — is the
+//! reproduction target, not the absolute cycle counts).
+
+use crate::ita::simulator::AttentionShape;
+
+use super::ibert::{IBERT_CYCLES_PER_ELEM, IBERT_CYCLES_PER_ROW_DIV};
+
+/// MemPool cluster parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MemPoolConfig {
+    /// Number of cores (paper: 256).
+    pub cores: usize,
+    /// int8 MACs per core per cycle with 32-bit SIMD (SDOTP: 4).
+    pub simd_macs: usize,
+    /// Clock frequency (MemPool: ~500 MHz in 22FDX, same node as ITA).
+    pub freq_hz: f64,
+    /// Achievable MAC utilization of the optimized matmul kernel.
+    /// Instruction-level bound: each SDOTP (4 MACs) needs two loads
+    /// plus address/loop overhead ⇒ ≤ 25 % even before shared-L1
+    /// banking conflicts and barriers; 0.19 end-to-end.
+    pub matmul_utilization: f64,
+    /// Fraction of cores doing useful work in the softmax phase
+    /// (row-parallel mapping leaves cores idle when S < cores).
+    pub softmax_parallel_eff: f64,
+    /// Average cluster power at full tilt (W). MemPool-class clusters
+    /// in 22FDX run ~0.4–0.5 W at 500 MHz; solved here against the
+    /// paper's 45× energy-efficiency ratio.
+    pub power_w: f64,
+}
+
+impl MemPoolConfig {
+    pub fn paper() -> Self {
+        Self {
+            cores: 256,
+            simd_macs: 4,
+            freq_hz: 500e6,
+            matmul_utilization: 0.19,
+            softmax_parallel_eff: 0.35,
+            power_w: 0.45,
+        }
+    }
+
+    /// Peak MACs per cycle across the cluster.
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        (self.cores * self.simd_macs) as f64
+    }
+}
+
+/// Cycle/energy estimate of one attention block on MemPool.
+#[derive(Debug, Clone, Copy)]
+pub struct MemPoolReport {
+    pub matmul_cycles: f64,
+    pub softmax_cycles: f64,
+    pub energy_j: f64,
+    pub runtime_s: f64,
+}
+
+impl MemPoolReport {
+    pub fn total_cycles(&self) -> f64 {
+        self.matmul_cycles + self.softmax_cycles
+    }
+}
+
+/// Estimate the attention workload on the MemPool cluster.
+pub fn simulate_attention(cfg: &MemPoolConfig, shape: AttentionShape) -> MemPoolReport {
+    let macs = shape.total_macs() as f64;
+    let matmul_cycles = macs / (cfg.peak_macs_per_cycle() * cfg.matmul_utilization);
+
+    // I-BERT softmax over H heads × S rows × S elements: three passes
+    // (max, i-exp+sum, normalize) folded into the per-element constant,
+    // plus one 32-bit division per row; row-parallel across cores.
+    let elems = (shape.h * shape.s * shape.s) as f64;
+    let rows = (shape.h * shape.s) as f64;
+    let softmax_work = elems * IBERT_CYCLES_PER_ELEM + rows * IBERT_CYCLES_PER_ROW_DIV;
+    let softmax_cycles = softmax_work / (cfg.cores as f64 * cfg.softmax_parallel_eff);
+
+    let total = matmul_cycles + softmax_cycles;
+    let runtime_s = total / cfg.freq_hz;
+    MemPoolReport {
+        matmul_cycles,
+        softmax_cycles,
+        energy_j: cfg.power_w * runtime_s,
+        runtime_s,
+    }
+}
+
+/// Speedup / energy-efficiency ratios of ITA over MemPool for a given
+/// workload — the §V-D numbers.
+pub fn compare(
+    ita_cfg: &crate::ita::ItaConfig,
+    mp_cfg: &MemPoolConfig,
+    shape: AttentionShape,
+) -> (f64, f64) {
+    let sim = crate::ita::simulator::Simulator::new(*ita_cfg);
+    let ita = sim.simulate_attention(shape);
+    let ita_energy =
+        crate::ita::energy::EnergyBreakdown::for_activity(ita_cfg, &ita.activity).total();
+    let mp = simulate_attention(mp_cfg, shape);
+
+    let speedup = mp.runtime_s / ita.runtime_s();
+    let ops = shape.total_ops() as f64;
+    let eff_ita = ops / ita_energy;
+    let eff_mp = ops / mp.energy_j;
+    (speedup, eff_ita / eff_mp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::ItaConfig;
+
+    #[test]
+    fn peak_throughput_parity() {
+        // Interesting calibration fact: MemPool's *peak* int8 MAC rate
+        // (256 cores × 4) equals ITA's (16×64) — the 6× speedup is all
+        // utilization and softmax overhead.
+        let mp = MemPoolConfig::paper();
+        let ita = ItaConfig::paper();
+        assert_eq!(mp.peak_macs_per_cycle() as usize, ita.mac_units());
+    }
+
+    #[test]
+    fn paper_ratios_reproduced() {
+        // §V-D: "ITA achieves 6× speedup and 45× energy efficiency in
+        // attention computation" — reproduce within ±25 % on the
+        // compact workload.
+        let (speedup, eff) = compare(
+            &ItaConfig::paper(),
+            &MemPoolConfig::paper(),
+            AttentionShape { s: 256, e: 256, p: 64, h: 4 },
+        );
+        assert!((speedup - 6.0).abs() / 6.0 < 0.25, "speedup {speedup}");
+        assert!((eff - 45.0).abs() / 45.0 < 0.25, "energy ratio {eff}");
+    }
+
+    #[test]
+    fn softmax_share_significant() {
+        // The softmax overhead is a visible fraction of MemPool's
+        // runtime (the paper's motivation for accelerating it).
+        let mp = simulate_attention(
+            &MemPoolConfig::paper(),
+            AttentionShape { s: 256, e: 256, p: 64, h: 4 },
+        );
+        let share = mp.softmax_cycles / mp.total_cycles();
+        assert!(share > 0.05 && share < 0.5, "softmax share {share}");
+    }
+
+    #[test]
+    fn speedup_grows_with_sequence_length() {
+        // Longer sequences → more softmax work (S²) relative to linear
+        // layers → ITA's advantage grows.
+        let ita = ItaConfig::paper();
+        let mp = MemPoolConfig::paper();
+        let (s1, _) = compare(&ita, &mp, AttentionShape { s: 64, e: 256, p: 64, h: 4 });
+        let (s2, _) = compare(&ita, &mp, AttentionShape { s: 512, e: 256, p: 64, h: 4 });
+        assert!(s2 > s1, "s1={s1} s2={s2}");
+    }
+}

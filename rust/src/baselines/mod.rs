@@ -1,0 +1,16 @@
+//! Baseline implementations the paper compares against:
+//!
+//! * [`float_softmax`] — the floating-point oracle (ground truth for
+//!   §V-C accuracy and the dequantize→softmax→requantize approach of
+//!   SpAtten/ELSA);
+//! * [`ibert`] — I-BERT's 32-bit integer polynomial softmax (§V-C
+//!   accuracy baseline and the MemPool softmax kernel);
+//! * [`softermax`] — Softermax's base-2 fixed-point softmax (used by
+//!   Keller et al. [13], discussed in §II-C);
+//! * [`mempool`] — cost/energy model of the MemPool 256-core RISC-V
+//!   software baseline (§V-D).
+
+pub mod float_softmax;
+pub mod ibert;
+pub mod mempool;
+pub mod softermax;

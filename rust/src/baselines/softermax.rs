@@ -1,0 +1,133 @@
+//! Softermax (Stevens et al., DAC 2021) — the base-2, fixed-point
+//! softmax used by Keller et al. [13], reimplemented as an accuracy/
+//! cost comparison point (paper §II-C discusses it as the closest
+//! integer alternative to ITA's approach).
+//!
+//! Differences from ITA's softmax:
+//! * replaces `e^x` with `2^x` **without** folding `log2 e` into the
+//!   quantization scale (a *different function*, compensated during
+//!   training);
+//! * evaluates `2^frac` with a piecewise-linear LUT on `FRAC_BITS`
+//!   fractional bits instead of ITA's shift-only 3-bit exponent;
+//! * runs a running-max online renormalization like ITA's DA.
+
+/// Fractional bits of the fixed-point representation.
+pub const FRAC_BITS: u32 = 8;
+
+/// 2^f for f in [0,1) via piecewise-linear interpolation between
+/// integer LUT endpoints: 2^f ≈ 1 + f·(2−1)·(correction). Softermax
+/// uses a small LUT; 4 segments reproduce its reported precision.
+fn pow2_frac_fx(frac: u32) -> u32 {
+    // frac has FRAC_BITS bits; 4-segment PWL LUT of 2^x on [0,1).
+    debug_assert!(frac < (1 << FRAC_BITS));
+    const SEGS: [(f64, f64); 4] = [
+        // (value at segment start, slope) precomputed for 2^x.
+        (1.0, 0.189207115),
+        (1.189207115, 0.224984770),
+        (1.414213562, 0.267530668),
+        (1.681792831, 0.318131367),
+    ];
+    let seg = (frac >> (FRAC_BITS - 2)) as usize; // top 2 bits
+    let rem = frac & ((1 << (FRAC_BITS - 2)) - 1);
+    let t = rem as f64 / (1u32 << (FRAC_BITS - 2)) as f64;
+    let v = SEGS[seg].0 + SEGS[seg].1 * t;
+    (v * (1u32 << FRAC_BITS) as f64).round() as u32
+}
+
+/// Softermax over int8 logits with quantization scale `eps`
+/// (probabilities out as uint8 with scale 2^−8, like ITA's output).
+///
+/// The input is first mapped to base-2 fixed point:
+/// `x·log2 e / eps_step` with FRAC_BITS fractional bits.
+pub fn softermax_i8(x: &[i8], eps: f64) -> Vec<u8> {
+    if x.is_empty() {
+        return Vec::new();
+    }
+    // Fixed-point exponent: e^(eps·q) = 2^(eps·log2e·q).
+    let k = eps * std::f64::consts::LOG2_E; // exponent per code
+    let fx: Vec<i64> =
+        x.iter().map(|&v| (v as f64 * k * (1u64 << FRAC_BITS) as f64).round() as i64).collect();
+    let max = *fx.iter().max().unwrap();
+    // 2^(fx−max): split into integer and fractional parts.
+    let terms: Vec<u64> = fx
+        .iter()
+        .map(|&v| {
+            let d = (max - v) as u64; // ≥ 0, fixed point
+            let int = (d >> FRAC_BITS).min(31);
+            let frac = (d & ((1 << FRAC_BITS) - 1)) as u32;
+            // 2^(−int−f) = 2^(−int)·2^(−f); with 2^(−f) = 2^(1−f)/2:
+            // use LUT of 2^(1−f)… simpler: 2^(−f) = pow2(1−f)/2 when f>0.
+            let scaled = if frac == 0 {
+                1u64 << FRAC_BITS // 2^0 in fx
+            } else {
+                (pow2_frac_fx((1 << FRAC_BITS) - frac) as u64) >> 1
+            };
+            scaled >> int
+        })
+        .collect();
+    let sum: u64 = terms.iter().sum();
+    if sum == 0 {
+        return vec![0; x.len()];
+    }
+    terms
+        .iter()
+        .map(|&t| {
+            let p = (t as u128 * 256u128 / sum as u128) as u64;
+            p.min(255) as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::float_softmax::softmax_dequant_i8;
+    use crate::ita::softmax::epsilon_max;
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::mae;
+
+    #[test]
+    fn pow2_lut_accuracy() {
+        for f in 0..(1u32 << FRAC_BITS) {
+            let want = 2f64.powf(f as f64 / (1u32 << FRAC_BITS) as f64);
+            let got = pow2_frac_fx(f) as f64 / (1u32 << FRAC_BITS) as f64;
+            assert!((want - got).abs() < 0.01, "f={f} want={want} got={got}");
+        }
+    }
+
+    #[test]
+    fn close_to_float_softmax() {
+        let mut rng = SplitMix64::new(7);
+        let eps = epsilon_max();
+        let mut maes = Vec::new();
+        for _ in 0..200 {
+            let x = rng.vec_i8(64);
+            let want = softmax_dequant_i8(&x, eps);
+            let got: Vec<f64> = softermax_i8(&x, eps).iter().map(|&p| p as f64 / 256.0).collect();
+            maes.push(mae(&want, &got));
+        }
+        let avg = maes.iter().sum::<f64>() / maes.len() as f64;
+        // Finer fractional exponent than ITA ⇒ accuracy between ITA
+        // (0.46 %) and I-BERT (0.35 %) territory.
+        assert!(avg < 0.008, "softermax MAE {avg}");
+    }
+
+    #[test]
+    fn mass_and_monotonicity() {
+        forall("softermax invariants", 100, |g| {
+            let x = g.i8_vec(2, 128);
+            let p = softermax_i8(&x, epsilon_max());
+            let mass: f64 = p.iter().map(|&v| v as f64 / 256.0).sum();
+            // Floor losses are up to 1/256 per element.
+            assert!(mass > 1.0 - x.len() as f64 / 256.0 - 0.1 && mass < 1.2, "mass {mass}");
+            for i in 0..x.len() {
+                for j in 0..x.len() {
+                    if x[i] > x[j] {
+                        assert!(p[i] >= p[j], "monotonicity violated");
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,264 @@
+//! Configuration system: one TOML file describes the accelerator
+//! design point, the workload/model dimensions, and the serving
+//! coordinator — the knobs every example, bench, and the CLI share.
+//!
+//! ```toml
+//! [accelerator]
+//! n = 16
+//! m = 64
+//! d = 24
+//! freq_mhz = 500.0
+//! vdd = 0.8
+//!
+//! [model]
+//! s = 64
+//! e = 128
+//! p = 64
+//! heads = 2
+//! ffn = 256
+//! layers = 2
+//! seed = 42
+//!
+//! [server]
+//! workers = 2
+//! max_batch = 8
+//! max_wait_us = 200
+//! queue_depth = 64
+//! ```
+
+pub mod toml;
+
+use crate::attention::ModelDims;
+use crate::ita::ItaConfig;
+use toml::{parse, TomlDoc, TomlError};
+
+/// Model/workload configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub dims: ModelDims,
+    /// FFN inner dimension for encoder workloads.
+    pub ffn: usize,
+    /// Number of encoder layers.
+    pub layers: usize,
+    /// Weight-generation seed.
+    pub seed: u64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self { dims: ModelDims::compact(), ffn: 256, layers: 2, seed: 42 }
+    }
+}
+
+/// Serving coordinator configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Worker threads (each owns one simulated accelerator instance).
+    pub workers: usize,
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum batching delay in microseconds.
+    pub max_wait_us: u64,
+    /// Bounded request-queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers: 2, max_batch: 8, max_wait_us: 200, queue_depth: 64 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemConfig {
+    pub accelerator: ItaConfig,
+    pub model: ModelConfig,
+    pub server: ServerConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            accelerator: ItaConfig::paper(),
+            model: ModelConfig::default(),
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+/// Configuration errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error(transparent)]
+    Parse(#[from] TomlError),
+    #[error("config: {0}")]
+    Invalid(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn get_usize(doc: &TomlDoc, section: &str, key: &str, default: usize) -> Result<usize, ConfigError> {
+    match doc.get(section).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => v
+            .as_i64()
+            .filter(|&x| x >= 0)
+            .map(|x| x as usize)
+            .ok_or_else(|| {
+                ConfigError::Invalid(format!("[{section}] {key} must be a non-negative integer"))
+            }),
+    }
+}
+
+fn get_f64(doc: &TomlDoc, section: &str, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match doc.get(section).and_then(|s| s.get(key)) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| ConfigError::Invalid(format!("[{section}] {key} must be a number"))),
+    }
+}
+
+impl SystemConfig {
+    /// Parse from TOML text; missing keys fall back to defaults.
+    pub fn from_toml(text: &str) -> Result<Self, ConfigError> {
+        let doc = parse(text)?;
+        let def = SystemConfig::default();
+
+        let mut acc = def.accelerator;
+        acc.n = get_usize(&doc, "accelerator", "n", acc.n)?;
+        acc.m = get_usize(&doc, "accelerator", "m", acc.m)?;
+        acc.d = get_usize(&doc, "accelerator", "d", acc.d as usize)? as u32;
+        acc.freq_hz = get_f64(&doc, "accelerator", "freq_mhz", acc.freq_hz / 1e6)? * 1e6;
+        acc.vdd = get_f64(&doc, "accelerator", "vdd", acc.vdd)?;
+        acc.n_dividers = get_usize(&doc, "accelerator", "dividers", acc.n_dividers)?;
+        acc.fifo_bytes = get_usize(&doc, "accelerator", "fifo_bytes", acc.fifo_bytes)?;
+        acc.weight_bw = get_usize(&doc, "accelerator", "weight_bw", acc.weight_bw as usize)? as u64;
+        acc.input_bw = get_usize(&doc, "accelerator", "input_bw", acc.input_bw as usize)? as u64;
+        acc.output_bw = get_usize(&doc, "accelerator", "output_bw", acc.output_bw as usize)? as u64;
+
+        let dims = ModelDims {
+            s: get_usize(&doc, "model", "s", def.model.dims.s)?,
+            e: get_usize(&doc, "model", "e", def.model.dims.e)?,
+            p: get_usize(&doc, "model", "p", def.model.dims.p)?,
+            h: get_usize(&doc, "model", "heads", def.model.dims.h)?,
+        };
+        let model = ModelConfig {
+            dims,
+            ffn: get_usize(&doc, "model", "ffn", def.model.ffn)?,
+            layers: get_usize(&doc, "model", "layers", def.model.layers)?,
+            seed: get_usize(&doc, "model", "seed", def.model.seed as usize)? as u64,
+        };
+
+        let server = ServerConfig {
+            workers: get_usize(&doc, "server", "workers", def.server.workers)?,
+            max_batch: get_usize(&doc, "server", "max_batch", def.server.max_batch)?,
+            max_wait_us: get_usize(&doc, "server", "max_wait_us", def.server.max_wait_us as usize)?
+                as u64,
+            queue_depth: get_usize(&doc, "server", "queue_depth", def.server.queue_depth)?,
+        };
+
+        let cfg = Self { accelerator: acc, model, server };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Design-rule checks (the constraints §III/§V-A state).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let a = &self.accelerator;
+        if a.n == 0 || a.m == 0 {
+            return Err(ConfigError::Invalid("N and M must be positive".into()));
+        }
+        if !a.m.is_power_of_two() {
+            return Err(ConfigError::Invalid("M must be a power of two (tile math)".into()));
+        }
+        if a.d < 16 || a.d > 32 {
+            return Err(ConfigError::Invalid("D must be in [16, 32]".into()));
+        }
+        // D must cover the worst-case dot product of the workload's
+        // deepest reduction (paper: D=24 for 256-element dots).
+        let deepest = self
+            .model
+            .dims
+            .e
+            .max(self.model.dims.s)
+            .max(self.model.dims.h * self.model.dims.p)
+            .max(self.model.ffn);
+        let max_len = crate::ita::pe::PeConfig { m: a.m, d: a.d }.max_dot_len();
+        if deepest > max_len {
+            return Err(ConfigError::Invalid(format!(
+                "D={} supports dot products up to {max_len}, workload needs {deepest}",
+                a.d
+            )));
+        }
+        if self.server.workers == 0 || self.server.max_batch == 0 {
+            return Err(ConfigError::Invalid("server workers/max_batch must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [accelerator]
+            n = 32
+            freq_mhz = 250.0
+            [model]
+            s = 128
+            heads = 4
+            [server]
+            workers = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.accelerator.n, 32);
+        assert_eq!(cfg.accelerator.m, 64); // default retained
+        assert!((cfg.accelerator.freq_hz - 250e6).abs() < 1.0);
+        assert_eq!(cfg.model.dims.s, 128);
+        assert_eq!(cfg.model.dims.h, 4);
+        assert_eq!(cfg.server.workers, 4);
+    }
+
+    #[test]
+    fn rejects_overflowing_depth() {
+        let err = SystemConfig::from_toml(
+            r#"
+            [accelerator]
+            d = 16
+            [model]
+            e = 1024
+            "#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_pow2_m() {
+        let err = SystemConfig::from_toml("[accelerator]\nm = 48\n").unwrap_err();
+        assert!(err.to_string().contains("power of two"));
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        let err = SystemConfig::from_toml("[accelerator]\nn = \"many\"\n").unwrap_err();
+        assert!(err.to_string().contains("non-negative integer"));
+    }
+}

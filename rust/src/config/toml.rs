@@ -1,0 +1,178 @@
+//! Minimal TOML-subset parser for the configuration system.
+//!
+//! Supports what our config files use: `[section]` headers (one level),
+//! `key = value` with integers, floats, booleans, strings, and
+//! comments. No arrays-of-tables, no nested inline tables — config
+//! files stay flat and reviewable.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`. Keys before any `[section]` live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = lineno + 1;
+        let text = strip_comment(raw).trim();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or(TomlError { line, msg: "unterminated section header".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line, msg: "empty section name".into() });
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = text
+            .split_once('=')
+            .ok_or(TomlError { line, msg: "expected 'key = value'".into() })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError { line, msg: "empty key".into() });
+        }
+        let value = parse_value(value.trim())
+            .ok_or_else(|| TomlError { line, msg: format!("bad value: {}", value.trim()) })?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if s == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        return Some(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Some(TomlValue::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Some(TomlValue::Float(v));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 1
+            [accelerator]
+            n = 16            # PEs
+            freq_mhz = 500.0
+            enabled = true
+            name = "ita"
+            big = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["accelerator"]["n"], TomlValue::Int(16));
+        assert_eq!(doc["accelerator"]["freq_mhz"], TomlValue::Float(500.0));
+        assert_eq!(doc["accelerator"]["enabled"], TomlValue::Bool(true));
+        assert_eq!(doc["accelerator"]["name"], TomlValue::Str("ita".into()));
+        assert_eq!(doc["accelerator"]["big"], TomlValue::Int(1_000_000));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc[""]["s"], TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e2 = parse("[oops").unwrap_err();
+        assert_eq!(e2.line, 1);
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(parse_value("3").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parse_value("3.5").unwrap().as_i64(), None);
+        assert_eq!(parse_value("true").unwrap().as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,139 @@
+//! Dynamic batching policy.
+//!
+//! The serving-level expression of ITA's weight-stationary design:
+//! requests to the *same model* batched together reuse each streamed
+//! weight set across the whole batch, amortizing the weight port
+//! traffic B-fold (§III's motivation, applied at the coordinator).
+//! The policy is the classic latency/throughput trade: flush a batch
+//! when it reaches `max_batch` or when the oldest member has waited
+//! `max_wait`.
+
+use std::time::{Duration, Instant};
+
+/// Decision state for one forming batch. Generic over the queued item
+/// so it unit-tests without a server.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self { pending: Vec::with_capacity(max_batch), oldest: None, max_batch, max_wait }
+    }
+
+    /// Add an item; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.max_batch {
+            return Some(self.take());
+        }
+        None
+    }
+
+    /// Flush if the oldest item exceeded the wait budget.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.max_wait => {
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    /// Time until the wait trigger fires (for the dispatcher's sleep).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let waited = now.duration_since(t0);
+            self.max_wait.saturating_sub(waited)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(3, Duration::from_millis(10));
+        let now = Instant::now();
+        assert!(b.push(1, now).is_none());
+        assert!(b.push(2, now).is_none());
+        let batch = b.push(3, now).expect("size trigger");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn time_trigger() {
+        let mut b = Batcher::new(100, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert!(b.poll(t0).is_none(), "not yet");
+        let later = t0 + Duration::from_millis(6);
+        assert_eq!(b.poll(later), Some(vec![1]));
+        assert!(b.poll(later).is_none(), "empty after flush");
+    }
+
+    #[test]
+    fn deadline_accounting() {
+        let mut b = Batcher::new(10, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none(), "no pending items");
+        b.push(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn flush_on_shutdown() {
+        let mut b = Batcher::new(10, Duration::from_secs(1));
+        b.push('a', Instant::now());
+        b.push('b', Instant::now());
+        assert_eq!(b.flush(), Some(vec!['a', 'b']));
+        assert_eq!(b.flush(), None);
+    }
+
+    #[test]
+    fn oldest_resets_per_batch() {
+        let mut b = Batcher::new(2, Duration::from_millis(50));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0); // flushes
+        let t1 = t0 + Duration::from_millis(100);
+        b.push(3, t1);
+        // Deadline must be relative to t1, not t0.
+        assert!(b.poll(t1 + Duration::from_millis(10)).is_none());
+        assert_eq!(b.poll(t1 + Duration::from_millis(51)), Some(vec![3]));
+    }
+}

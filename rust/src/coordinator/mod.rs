@@ -1,0 +1,17 @@
+//! Layer-3 serving coordinator.
+//!
+//! ITA's contribution is an attention accelerator; the coordinator is
+//! the system around it: a request router with a bounded ingress queue
+//! (backpressure), a dynamic batcher that exploits the weight-
+//! stationary design at the serving level (batched requests share
+//! every weight stream), and a worker pool where each worker owns one
+//! simulated accelerator instance (optionally validating numerics
+//! against the AOT-compiled JAX model via the PJRT runtime).
+
+pub mod batcher;
+pub mod request;
+pub mod server;
+pub mod tracegen;
+
+pub use request::{InferenceRequest, InferenceResponse, SubmitError};
+pub use server::Server;

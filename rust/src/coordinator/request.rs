@@ -1,0 +1,64 @@
+//! Request/response types of the serving coordinator.
+
+use crate::util::mat::MatI8;
+use std::time::{Duration, Instant};
+
+/// One attention-inference request (an S×E int8 activation matrix).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub input: MatI8,
+    pub enqueued: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, input: MatI8) -> Self {
+        Self { id, input, enqueued: Instant::now() }
+    }
+}
+
+/// Completed inference with simulator-side accounting.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub output: MatI8,
+    /// Simulated accelerator cycles attributed to this request.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy attributed to this request (J).
+    pub sim_energy_j: f64,
+    /// Wall-clock latency through the coordinator.
+    pub latency: Duration,
+    /// Number of requests in the batch this ran in.
+    pub batch_size: usize,
+}
+
+/// Submission failure modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// Bounded queue is full — backpressure.
+    #[error("queue full (backpressure)")]
+    QueueFull,
+    /// Server is shutting down.
+    #[error("server is shut down")]
+    Shutdown,
+    /// Input shape does not match the served model.
+    #[error("input shape mismatch")]
+    BadShape,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_timestamps() {
+        let r = InferenceRequest::new(1, MatI8::zeros(2, 2));
+        assert!(r.enqueued.elapsed() < Duration::from_secs(1));
+        assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn submit_error_display() {
+        assert_eq!(SubmitError::QueueFull.to_string(), "queue full (backpressure)");
+    }
+}

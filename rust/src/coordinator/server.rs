@@ -1,0 +1,337 @@
+//! The serving coordinator: bounded ingress queue, dispatcher thread
+//! running the dynamic batcher, and a pool of worker threads each
+//! owning one simulated ITA instance.
+//!
+//! Rust owns the whole event loop; the Python layer only ever ran at
+//! build time. Workers execute requests on the bit-exact datapath
+//! ([`crate::attention::AttentionExecutor`]) and account simulated
+//! cycles/energy per request, with the weight-stationary batching
+//! benefit modeled explicitly (weight streams amortized over a batch).
+
+use super::batcher::Batcher;
+use super::request::{InferenceRequest, InferenceResponse, SubmitError};
+use crate::attention::AttentionExecutor;
+use crate::config::SystemConfig;
+use crate::ita::energy::EnergyBreakdown;
+use crate::ita::Activity;
+use crate::metrics::ServerMetrics;
+use crate::util::mat::MatI8;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+type Job = (InferenceRequest, Sender<InferenceResponse>);
+
+/// Handle to a running server.
+pub struct Server {
+    /// `None` after shutdown — dropping the sender disconnects the
+    /// dispatcher, which drains and stops the workers.
+    ingress: Mutex<Option<SyncSender<Job>>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<ServerMetrics>,
+    pub config: SystemConfig,
+    shutdown: Arc<AtomicBool>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Start dispatcher + workers.
+    pub fn start(config: SystemConfig) -> Arc<Server> {
+        let metrics = Arc::new(ServerMetrics::default());
+        let (ingress_tx, ingress_rx) = sync_channel::<Job>(config.server.queue_depth);
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Dispatcher -> workers channel sized to keep workers busy
+        // without unbounded buildup.
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Job>>(config.server.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        threads.push(spawn_dispatcher(config, ingress_rx, batch_tx, metrics.clone()));
+        for worker_id in 0..config.server.workers {
+            threads.push(spawn_worker(config, worker_id, batch_rx.clone(), metrics.clone()));
+        }
+
+        Arc::new(Server {
+            ingress: Mutex::new(Some(ingress_tx)),
+            next_id: AtomicU64::new(1),
+            metrics,
+            config,
+            shutdown,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    /// Submit an inference; non-blocking. Returns the response channel.
+    pub fn submit(&self, input: MatI8) -> Result<Receiver<InferenceResponse>, SubmitError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
+        }
+        let d = self.config.model.dims;
+        if input.shape() != (d.s, d.e) {
+            return Err(SubmitError::BadShape);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = InferenceRequest::new(id, input);
+        let guard = self.ingress.lock().unwrap();
+        let sender = guard.as_ref().ok_or(SubmitError::Shutdown)?;
+        match sender.try_send((req, tx)) {
+            Ok(()) => {
+                self.metrics.requests_accepted.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.requests_rejected.inc();
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Shutdown),
+        }
+    }
+
+    /// Blocking submit-and-wait convenience.
+    pub fn infer(&self, input: MatI8) -> Result<InferenceResponse, SubmitError> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Graceful shutdown: close the ingress, drain in-flight work,
+    /// join all threads.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // Dropping the sender disconnects the dispatcher's receive
+        // loop, which flushes the batcher and exits; dropping its
+        // batch sender then stops the workers.
+        self.ingress.lock().unwrap().take();
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn spawn_dispatcher(
+    config: SystemConfig,
+    ingress: Receiver<Job>,
+    batch_tx: SyncSender<Vec<Job>>,
+    metrics: Arc<ServerMetrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ita-dispatcher".into())
+        .spawn(move || {
+            let max_wait = Duration::from_micros(config.server.max_wait_us);
+            let mut batcher: Batcher<Job> = Batcher::new(config.server.max_batch, max_wait);
+            loop {
+                let timeout = batcher
+                    .time_to_deadline(Instant::now())
+                    .unwrap_or(Duration::from_millis(50));
+                match ingress.recv_timeout(timeout) {
+                    Ok(job) => {
+                        metrics.queue_depth.set(batcher.len() as u64 + 1);
+                        if let Some(batch) = batcher.push(job, Instant::now()) {
+                            send_batch(&batch_tx, batch, &metrics);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if let Some(batch) = batcher.poll(Instant::now()) {
+                            send_batch(&batch_tx, batch, &metrics);
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if let Some(batch) = batcher.flush() {
+                            send_batch(&batch_tx, batch, &metrics);
+                        }
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn dispatcher")
+}
+
+fn send_batch(tx: &SyncSender<Vec<Job>>, batch: Vec<Job>, metrics: &ServerMetrics) {
+    metrics.batches_formed.inc();
+    metrics.batch_fill_sum.add(batch.len() as u64);
+    // Blocking send: backpressure propagates to the batcher, then to
+    // the bounded ingress queue, then to submitters.
+    let _ = tx.send(batch);
+}
+
+fn spawn_worker(
+    config: SystemConfig,
+    worker_id: usize,
+    batch_rx: Arc<Mutex<Receiver<Vec<Job>>>>,
+    metrics: Arc<ServerMetrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ita-worker-{worker_id}"))
+        .spawn(move || {
+            let mut exec = AttentionExecutor::new(
+                config.accelerator,
+                config.model.dims,
+                config.model.seed,
+            );
+            loop {
+                // Take one batch (workers race on the shared receiver).
+                let batch = {
+                    let rx = batch_rx.lock().unwrap();
+                    match rx.recv() {
+                        Ok(b) => b,
+                        Err(_) => break,
+                    }
+                };
+                process_batch(&config, &mut exec, batch, &metrics);
+            }
+        })
+        .expect("spawn worker")
+}
+
+/// Execute a batch on one simulated accelerator and deliver responses.
+///
+/// Weight-stationary amortization: the batch shares every weight
+/// stream, so `weight_buf_writes` (and the matching I/O port energy)
+/// are charged once per batch instead of once per request.
+fn process_batch(
+    config: &SystemConfig,
+    exec: &mut AttentionExecutor,
+    batch: Vec<Job>,
+    metrics: &ServerMetrics,
+) {
+    let b = batch.len() as u64;
+    let mut per_req: Vec<(Activity, InferenceRequest, Sender<InferenceResponse>, MatI8)> =
+        Vec::with_capacity(batch.len());
+    for (req, tx) in batch {
+        exec.engine.reset_activity();
+        let out = exec.run(&req.input);
+        per_req.push((exec.engine.activity, req, tx, out.out));
+    }
+    // Batch-level activity with amortized weight traffic.
+    let single_weight_writes = per_req.first().map(|(a, ..)| a.weight_buf_writes).unwrap_or(0);
+    let mut batch_activity = Activity::default();
+    for (a, ..) in &per_req {
+        batch_activity.add(a);
+    }
+    batch_activity.weight_buf_writes -= single_weight_writes * (b - 1);
+
+    let energy = EnergyBreakdown::for_activity(&config.accelerator, &batch_activity).total();
+    let cycles = batch_activity.cycles + batch_activity.stall_cycles;
+    metrics.sim_cycles.add(cycles);
+    metrics.sim_energy_pj.add((energy * 1e12) as u64);
+
+    let energy_per_req = energy / b as f64;
+    let cycles_per_req = cycles / b;
+    for (_, req, tx, out) in per_req {
+        let latency = req.enqueued.elapsed();
+        metrics.latency.observe(latency);
+        metrics.requests_completed.inc();
+        let _ = tx.send(InferenceResponse {
+            id: req.id,
+            output: out,
+            sim_cycles: cycles_per_req,
+            sim_energy_j: energy_per_req,
+            latency,
+            batch_size: b as usize,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{gen_input, ModelDims};
+    use crate::config::{ModelConfig, ServerConfig};
+    use crate::ita::ItaConfig;
+
+    fn test_config() -> SystemConfig {
+        SystemConfig {
+            accelerator: ItaConfig::tiny(),
+            model: ModelConfig {
+                dims: ModelDims { s: 16, e: 16, p: 8, h: 2 },
+                ffn: 32,
+                layers: 1,
+                seed: 42,
+            },
+            server: ServerConfig { workers: 2, max_batch: 4, max_wait_us: 500, queue_depth: 16 },
+        }
+    }
+
+    #[test]
+    fn serves_requests_correctly() {
+        let cfg = test_config();
+        let server = Server::start(cfg);
+        let x = gen_input(7, &cfg.model.dims);
+        let resp = server.infer(x.clone()).unwrap();
+        // Must equal a direct run on the golden engine.
+        let mut exec = AttentionExecutor::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+        let want = exec.run(&x);
+        assert_eq!(resp.output, want.out);
+        assert!(resp.sim_cycles > 0);
+        assert!(resp.sim_energy_j > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let server = Server::start(test_config());
+        let err = server.submit(MatI8::zeros(3, 3)).unwrap_err();
+        assert_eq!(err, SubmitError::BadShape);
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic() {
+        let mut cfg = test_config();
+        cfg.server.max_wait_us = 20_000; // generous window: the burst batches
+        let server = Server::start(cfg);
+        let x = gen_input(7, &cfg.model.dims);
+        // Fire a burst; they should form batches > 1 and all succeed.
+        let rxs: Vec<_> = (0..8).filter_map(|_| server.submit(x.clone()).ok()).collect();
+        assert!(!rxs.is_empty());
+        let mut max_batch = 0;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        assert!(max_batch >= 2, "burst should batch, got max fill {max_batch}");
+        assert!(server.metrics.mean_batch_fill() >= 1.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut cfg = test_config();
+        cfg.server.queue_depth = 1;
+        cfg.server.workers = 1;
+        cfg.server.max_wait_us = 50_000; // slow flush to force buildup
+        cfg.server.max_batch = 64;
+        let server = Server::start(cfg);
+        let x = gen_input(7, &cfg.model.dims);
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match server.submit(x.clone()) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected > 0, "bounded queue must reject under burst");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        assert_eq!(server.metrics.requests_rejected.get(), rejected);
+    }
+
+    #[test]
+    fn throughput_counts_consistent() {
+        let cfg = test_config();
+        let server = Server::start(cfg);
+        let x = gen_input(1, &cfg.model.dims);
+        let rxs: Vec<_> = (0..10).filter_map(|_| server.submit(x.clone()).ok()).collect();
+        let n = rxs.len() as u64;
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(server.metrics.requests_completed.get(), n);
+        assert!(server.metrics.latency.count() == n);
+    }
+}

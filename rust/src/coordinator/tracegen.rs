@@ -1,0 +1,176 @@
+//! Synthetic arrival-trace generation for load testing the coordinator
+//! (`ita loadtest`): Poisson (open-loop), bursty on/off, and uniform
+//! arrivals, all deterministic under a seed.
+
+use crate::util::rng::SplitMix64;
+use std::time::Duration;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson with mean rate λ (requests/second).
+    Poisson { rate: f64 },
+    /// On/off bursts: `burst` back-to-back arrivals, then `gap` idle.
+    Bursty { burst: usize, gap: Duration },
+    /// Fixed inter-arrival spacing.
+    Uniform { rate: f64 },
+}
+
+/// Generate `n` inter-arrival gaps (time BEFORE each request).
+pub fn interarrival_gaps(process: ArrivalProcess, n: usize, seed: u64) -> Vec<Duration> {
+    let mut rng = SplitMix64::new(seed);
+    match process {
+        ArrivalProcess::Poisson { rate } => {
+            assert!(rate > 0.0);
+            (0..n)
+                .map(|_| {
+                    // Exponential via inverse CDF.
+                    let u = rng.next_f64().max(1e-12);
+                    Duration::from_secs_f64(-u.ln() / rate)
+                })
+                .collect()
+        }
+        ArrivalProcess::Bursty { burst, gap } => {
+            assert!(burst > 0);
+            (0..n).map(|i| if i % burst == 0 && i > 0 { gap } else { Duration::ZERO }).collect()
+        }
+        ArrivalProcess::Uniform { rate } => {
+            assert!(rate > 0.0);
+            vec![Duration::from_secs_f64(1.0 / rate); n]
+        }
+    }
+}
+
+/// Result of a load test.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall: Duration,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_batch_fill: f64,
+}
+
+impl LoadReport {
+    pub fn achieved_rps(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "offered {} completed {} rejected {} in {:.1} ms\n\
+             achieved {:.0} req/s, p50 {:.0} us, p99 {:.0} us, mean batch fill {:.2}",
+            self.offered,
+            self.completed,
+            self.rejected,
+            self.wall.as_secs_f64() * 1e3,
+            self.achieved_rps(),
+            self.p50_us,
+            self.p99_us,
+            self.mean_batch_fill
+        )
+    }
+}
+
+/// Drive a running server with a synthetic trace (blocking).
+pub fn run_load(
+    server: &crate::coordinator::Server,
+    process: ArrivalProcess,
+    n: usize,
+    seed: u64,
+) -> LoadReport {
+    let dims = server.config.model.dims;
+    let mut rng = SplitMix64::new(seed ^ 0xABCD);
+    let inputs: Vec<_> = (0..8)
+        .map(|_| {
+            crate::util::mat::MatI8::from_vec(dims.s, dims.e, rng.vec_i8(dims.s * dims.e))
+        })
+        .collect();
+    let gaps = interarrival_gaps(process, n, seed);
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for (i, gap) in gaps.iter().enumerate() {
+        if !gap.is_zero() {
+            std::thread::sleep(*gap);
+        }
+        match server.submit(inputs[i % inputs.len()].clone()) {
+            Ok(rx) => pending.push(rx),
+            Err(crate::coordinator::SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    let completed = pending.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    let wall = t0.elapsed();
+    LoadReport {
+        offered: n,
+        completed,
+        rejected,
+        wall,
+        p50_us: server.metrics.latency.quantile_us(0.5),
+        p99_us: server.metrics.latency.quantile_us(0.99),
+        mean_batch_fill: server.metrics.mean_batch_fill(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let gaps = interarrival_gaps(ArrivalProcess::Poisson { rate: 1000.0 }, 20_000, 7);
+        let mean = gaps.iter().map(|d| d.as_secs_f64()).sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean gap {mean}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = interarrival_gaps(ArrivalProcess::Poisson { rate: 100.0 }, 100, 1);
+        let b = interarrival_gaps(ArrivalProcess::Poisson { rate: 100.0 }, 100, 1);
+        assert_eq!(a, b);
+        let c = interarrival_gaps(ArrivalProcess::Poisson { rate: 100.0 }, 100, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bursty_structure() {
+        let gaps = interarrival_gaps(
+            ArrivalProcess::Bursty { burst: 4, gap: Duration::from_millis(1) },
+            12,
+            0,
+        );
+        for (i, g) in gaps.iter().enumerate() {
+            if i % 4 == 0 && i > 0 {
+                assert_eq!(*g, Duration::from_millis(1));
+            } else {
+                assert!(g.is_zero());
+            }
+        }
+    }
+
+    #[test]
+    fn load_test_end_to_end() {
+        use crate::attention::ModelDims;
+        use crate::config::{ModelConfig, ServerConfig, SystemConfig};
+        let cfg = SystemConfig {
+            accelerator: crate::ita::ItaConfig::tiny(),
+            model: ModelConfig {
+                dims: ModelDims { s: 16, e: 16, p: 8, h: 2 },
+                ffn: 32,
+                layers: 1,
+                seed: 42,
+            },
+            server: ServerConfig { workers: 2, max_batch: 4, max_wait_us: 200, queue_depth: 64 },
+        };
+        let server = crate::coordinator::Server::start(cfg);
+        let rep = run_load(&server, ArrivalProcess::Bursty { burst: 8, gap: Duration::from_micros(100) }, 32, 3);
+        assert_eq!(rep.completed + rep.rejected, 32);
+        assert!(rep.completed > 0);
+        assert!(rep.achieved_rps() > 0.0);
+        server.shutdown();
+    }
+}

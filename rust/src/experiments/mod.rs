@@ -1,0 +1,472 @@
+//! Experiment reproductions — one function per paper table/figure,
+//! shared by the CLI (`ita <experiment>`) and the bench targets so the
+//! numbers in EXPERIMENTS.md come from exactly one implementation.
+//!
+//! | function | paper artifact |
+//! |---|---|
+//! | [`table1`] | Table I (SOTA comparison) |
+//! | [`fig5`] | Fig. 5 (softmax/quantization effect on probabilities) |
+//! | [`fig6_area`], [`fig6_power`] | Fig. 6 (area & power breakdown) |
+//! | [`softmax_mae`] | §V-C (MAE vs I-BERT / float) |
+//! | [`mempool_cmp`] | §V-D (6× speedup, 45× energy efficiency) |
+//! | [`ablation_dataflow`] | §III bandwidth equations (WS vs OS) |
+//! | [`ablation_scale`] | design-space sweep over N/M (extension) |
+//! | [`ablation_dividers`] | DI no-stall claim check (extension) |
+
+use crate::baselines::float_softmax::softmax_f64;
+use crate::baselines::ibert::ibert_softmax_q_wide;
+use crate::baselines::mempool::{self, MemPoolConfig};
+use crate::baselines::softermax::softermax_i8;
+use crate::ita::area::{system_area_mm2, AreaBreakdown};
+use crate::ita::energy::{tops_per_watt, EnergyBreakdown};
+use crate::ita::simulator::{AttentionShape, Simulator};
+use crate::ita::softmax::{dequantize_probs, epsilon_max, ita_softmax_row};
+use crate::ita::ItaConfig;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{mae, max_abs_err, mean, rmse};
+use crate::util::table::Table;
+
+/// The workload used as "the synthetic attention benchmark" whenever a
+/// paper experiment needs one: large enough that every phase is
+/// tile-aligned at the paper design point.
+pub fn benchmark_shape() -> AttentionShape {
+    AttentionShape { s: 256, e: 256, p: 64, h: 4 }
+}
+
+// ---------------------------------------------------------------------
+// Table I
+// ---------------------------------------------------------------------
+
+/// Literature rows of Table I (reported values, for comparison shape).
+pub struct SotaRow {
+    pub name: &'static str,
+    pub tech_nm: u32,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub tops: f64,
+    pub tops_w: f64,
+    pub tops_mm2: f64,
+}
+
+/// Reported numbers from Table I of the paper (not simulated — these
+/// are the published comparison points).
+pub fn sota_rows() -> Vec<SotaRow> {
+    vec![
+        SotaRow { name: "OPTIMUS [14]", tech_nm: 28, area_mm2: 5.2, power_mw: 731.8, tops: 0.5, tops_w: 0.68, tops_mm2: 0.096 },
+        SotaRow { name: "SpAtten [15]", tech_nm: 40, area_mm2: 18.71, power_mw: 2600.0, tops: 1.61, tops_w: 0.62, tops_mm2: 0.086 },
+        SotaRow { name: "ELSA [16]", tech_nm: 40, area_mm2: 1.26, power_mw: 969.4, tops: 1.09, tops_w: 1.12, tops_mm2: 0.865 },
+        SotaRow { name: "Wang et al. [12]", tech_nm: 28, area_mm2: 6.82, power_mw: 272.8, tops: 4.07, tops_w: 27.56, tops_mm2: 0.597 },
+        SotaRow { name: "Keller [13] INT8", tech_nm: 5, area_mm2: 0.153, power_mw: 0.0, tops: 1.8, tops_w: 39.1, tops_mm2: 11.7 },
+    ]
+}
+
+/// Simulated "This work" columns + published rows.
+pub fn table1(cfg: &ItaConfig) -> Table {
+    let shape = benchmark_shape();
+    let rep = Simulator::new(*cfg).simulate_attention(shape);
+    let a = &rep.activity;
+    let area = AreaBreakdown::for_config(cfg);
+    let e_core = EnergyBreakdown::for_activity(cfg, a);
+    let e_sys = EnergyBreakdown::for_activity_system(cfg, a);
+    let cycles = rep.total_cycles();
+    let power_core = e_core.avg_power_w(cycles, cfg.freq_hz);
+    let power_sys = e_sys.avg_power_w(cycles, cfg.freq_hz);
+    let tops = rep.achieved_ops() / 1e12;
+    let area_core = area.total_mm2();
+    let area_sys = system_area_mm2(cfg, 64 * 1024);
+    let ge_m = area.total_ge() / 1e6;
+
+    let mut t = Table::new("Table I — comparison to state-of-the-art (This work: simulated)")
+        .header(&["Design", "Tech [nm]", "Area [mm2]", "Power [mW]", "Thru [TOPS]", "Eff [TOPS/W]", "Area-eff [TOPS/mm2]", "TOPS/MGE"]);
+    for r in sota_rows() {
+        t.row(&[
+            r.name.into(),
+            r.tech_nm.to_string(),
+            format!("{:.3}", r.area_mm2),
+            if r.power_mw > 0.0 { format!("{:.1}", r.power_mw) } else { "-".into() },
+            format!("{:.2}", r.tops),
+            format!("{:.2}", r.tops_w),
+            format!("{:.3}", r.tops_mm2),
+            "-".into(),
+        ]);
+    }
+    t.row(&[
+        "ITA (this repro)".into(),
+        "22".into(),
+        format!("{area_core:.3}"),
+        format!("{:.1}", power_core * 1e3),
+        format!("{tops:.2}"),
+        format!("{:.1}", tops_per_watt(cfg, a, false)),
+        format!("{:.2}", tops / area_core),
+        format!("{:.2}", tops / ge_m),
+    ]);
+    t.row(&[
+        "ITA System (this repro)".into(),
+        "22".into(),
+        format!("{area_sys:.3}"),
+        format!("{:.1}", power_sys * 1e3),
+        format!("{tops:.2}"),
+        format!("{:.2}", tops_per_watt(cfg, a, true)),
+        format!("{:.2}", tops / area_sys),
+        "-".into(),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5
+// ---------------------------------------------------------------------
+
+/// Fig. 5: effect of softmax and quantization on attention
+/// probabilities. For one realistic logit row, prints the sorted
+/// probability profile under (a) float softmax, (b) ITA integer
+/// softmax at ε_max, and the quantized-to-zero boundary the paper's
+/// clipping argument predicts.
+pub fn fig5(seed: u64, n: usize) -> Table {
+    let mut rng = SplitMix64::new(seed);
+    // Compact-transformer-like logits: zero-mean Gaussian scaled so
+    // p99.9 fills the clipped window (the QAT-tuned regime).
+    let logits: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    let gain = crate::quant::calib::softmax_logit_gain(&logits);
+    let eps = epsilon_max();
+    let xf: Vec<f64> = logits.iter().map(|v| v * gain).collect();
+    let xq: Vec<i8> = xf.iter().map(|&v| crate::quant::QuantParams { eps }.quantize(v)).collect();
+
+    let pf = softmax_f64(&xf);
+    let pq = dequantize_probs(&ita_softmax_row(&xq, 64));
+
+    // Sort by float probability (descending) to show the profile.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| pf[b].partial_cmp(&pf[a]).unwrap());
+
+    let mut t = Table::new("Fig. 5 — attention probabilities: float vs ITA 8-bit softmax")
+        .header(&["rank", "logit (dequant)", "float softmax", "ITA softmax", "abs err"]);
+    for (rank, &i) in idx.iter().enumerate() {
+        if rank < 16 || rank % (n / 16).max(1) == 0 {
+            t.row(&[
+                rank.to_string(),
+                format!("{:+.3}", xq[i] as f64 * eps),
+                format!("{:.5}", pf[i]),
+                format!("{:.5}", pq[i]),
+                format!("{:.5}", (pf[i] - pq[i]).abs()),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig. 6
+// ---------------------------------------------------------------------
+
+/// Fig. 6 left: area breakdown.
+pub fn fig6_area(cfg: &ItaConfig) -> Table {
+    let a = AreaBreakdown::for_config(cfg);
+    let mut t = Table::new(format!(
+        "Fig. 6 — area breakdown (total {:.3} mm2, {:.0} kGE; paper: 0.173 mm2)",
+        a.total_mm2(),
+        a.total_ge() / 1e3
+    )
+    .as_str())
+    .header(&["Component", "kGE", "share", "paper share"]);
+    let paper = [
+        ("PEs", 0.581),
+        ("Weight buffer", 0.196),
+        ("Softmax", 0.033),
+        ("Datapath other", 0.063),
+        ("Control", 0.023),
+        ("Output buffer", 0.011),
+        ("I/O registers", 0.093),
+    ];
+    for ((name, ge, frac), (pname, pshare)) in a.rows().into_iter().zip(paper) {
+        assert_eq!(name, pname);
+        t.row(&[
+            name.into(),
+            format!("{:.1}", ge / 1e3),
+            format!("{:.1}%", frac * 100.0),
+            format!("{:.1}%", pshare * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6 right: power breakdown over the benchmark workload.
+pub fn fig6_power(cfg: &ItaConfig) -> Table {
+    let rep = Simulator::new(*cfg).simulate_attention(benchmark_shape());
+    let e = EnergyBreakdown::for_activity(cfg, &rep.activity);
+    let p = e.avg_power_w(rep.total_cycles(), cfg.freq_hz);
+    let mut t = Table::new(format!(
+        "Fig. 6 — power breakdown (total {:.1} mW; paper: 60.5 mW)",
+        p * 1e3
+    )
+    .as_str())
+    .header(&["Component", "mW", "share", "paper share"]);
+    let paper = [
+        ("PEs", 0.595),
+        ("Clock tree + I/O regs", 0.229),
+        ("Datapath other", 0.067),
+        ("Weight buffer", 0.017),
+        ("Softmax", 0.014),
+        ("Output buffer", 0.007),
+        ("Static/other", 0.071),
+    ];
+    let time = rep.total_cycles() as f64 / cfg.freq_hz;
+    for ((name, joules, frac), (pname, pshare)) in e.rows().into_iter().zip(paper) {
+        assert_eq!(name, pname);
+        t.row(&[
+            name.into(),
+            format!("{:.2}", joules / time * 1e3),
+            format!("{:.1}%", frac * 100.0),
+            format!("{:.1}%", pshare * 100.0),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// §V-C softmax accuracy
+// ---------------------------------------------------------------------
+
+/// Accuracy statistics of one softmax implementation.
+#[derive(Debug, Clone)]
+pub struct MaeResult {
+    pub name: &'static str,
+    pub mae: f64,
+    pub rmse: f64,
+    pub max_err: f64,
+}
+
+/// §V-C: MAE of ITA's softmax vs I-BERT's vs Softermax against float,
+/// on realistic logit rows. Returns the stats (also used by pytest via
+/// the mirrored Python implementation).
+pub fn softmax_mae(seed: u64, rows: usize, row_len: usize) -> Vec<MaeResult> {
+    let mut rng = SplitMix64::new(seed);
+    let eps = epsilon_max();
+    let mut accum: Vec<(&'static str, Vec<f64>, Vec<f64>, Vec<f64>)> = vec![
+        ("ITA int8 softmax", vec![], vec![], vec![]),
+        ("I-BERT int32 softmax", vec![], vec![], vec![]),
+        ("Softermax (base-2 fx)", vec![], vec![], vec![]),
+    ];
+    for _ in 0..rows {
+        // Compact-transformer-like logits, QAT-scaled into the window.
+        let raw: Vec<f64> = (0..row_len).map(|_| rng.next_gaussian()).collect();
+        let gain = 2.75 / 3.29; // p99.9 of N(0,1) → window edge
+        let xf: Vec<f64> = raw.iter().map(|v| v * gain).collect();
+        let xq: Vec<i8> =
+            xf.iter().map(|&v| crate::quant::QuantParams { eps }.quantize(v)).collect();
+        let want = softmax_f64(&xf);
+
+        // ITA: 8-bit input, shift-only datapath.
+        let ita = dequantize_probs(&ita_softmax_row(&xq, 64));
+        // I-BERT: 16-bit-quantized input (the paper's "32-bit" refers
+        // to the arithmetic; the input precision advantage is what the
+        // paper credits for its lower MAE).
+        let eps16 = 2.75 / 32767.0;
+        let xq16: Vec<i64> = xf
+            .iter()
+            .map(|&v| ((v / eps16).round() as i64).clamp(-32768, 32767))
+            .collect();
+        // Output re-quantized to uint8 probabilities like ITA's (any
+        // integer accelerator stores A in int8; the paper's 0.35 % is
+        // consistent with this, not with full 2^-30 outputs).
+        let ibert: Vec<f64> = ibert_softmax_q_wide(&xq16, eps16)
+            .iter()
+            .map(|&q| ((q >> 22).clamp(0, 255)) as f64 / 256.0)
+            .collect();
+        // Softermax on the same 8-bit input as ITA.
+        let sm: Vec<f64> = softermax_i8(&xq, eps).iter().map(|&p| p as f64 / 256.0).collect();
+
+        for (slot, got) in [&ita, &ibert, &sm].iter().enumerate() {
+            accum[slot].1.push(mae(&want, got));
+            accum[slot].2.push(rmse(&want, got));
+            accum[slot].3.push(max_abs_err(&want, got));
+        }
+    }
+    accum
+        .into_iter()
+        .map(|(name, maes, rmses, maxes)| MaeResult {
+            name,
+            mae: mean(&maes),
+            rmse: mean(&rmses),
+            max_err: maxes.iter().cloned().fold(0.0, f64::max),
+        })
+        .collect()
+}
+
+/// Render [`softmax_mae`] as the §V-C table.
+pub fn softmax_mae_table(seed: u64, rows: usize, row_len: usize) -> Table {
+    let results = softmax_mae(seed, rows, row_len);
+    let mut t = Table::new(
+        "§V-C — softmax accuracy vs float (paper: ITA 0.46%, I-BERT 0.35%)",
+    )
+    .header(&["Implementation", "MAE", "MAE %", "RMSE", "max |err|"]);
+    for r in results {
+        t.row(&[
+            r.name.into(),
+            format!("{:.2e}", r.mae),
+            format!("{:.2}%", r.mae * 100.0),
+            format!("{:.2e}", r.rmse),
+            format!("{:.3}", r.max_err),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// §V-D MemPool comparison
+// ---------------------------------------------------------------------
+
+/// §V-D: ITA vs the MemPool software baseline across sequence lengths.
+pub fn mempool_cmp(cfg: &ItaConfig) -> Table {
+    let mp = MemPoolConfig::paper();
+    let mut t = Table::new(
+        "§V-D — ITA vs MemPool software baseline (paper: 6x speedup, 45x energy eff.)",
+    )
+    .header(&["S", "ITA cycles", "MemPool cycles", "speedup", "energy ratio"]);
+    for s in [64usize, 128, 256, 512] {
+        let shape = AttentionShape { s, e: 256, p: 64, h: 4 };
+        let (speedup, eff) = mempool::compare(cfg, &mp, shape);
+        let ita = Simulator::new(*cfg).simulate_attention(shape);
+        let mpr = mempool::simulate_attention(&mp, shape);
+        t.row(&[
+            s.to_string(),
+            ita.total_cycles().to_string(),
+            format!("{:.0}", mpr.total_cycles()),
+            format!("{speedup:.2}x"),
+            format!("{eff:.1}x"),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Ablations
+// ---------------------------------------------------------------------
+
+/// §III bandwidth equations: weight-stationary vs output-stationary
+/// bandwidth requirement across N (the paper's argument for WS).
+pub fn ablation_dataflow() -> Table {
+    let mut t = Table::new("§III — dataflow bandwidth: weight-stationary vs output-stationary")
+        .header(&["N", "M", "WS [bits/cy]", "OS [bits/cy]", "OS/WS", "WS buffer [B]", "OS buffer [B]"]);
+    for (n, m) in [(4usize, 64usize), (8, 64), (16, 64), (32, 64), (16, 32), (16, 128)] {
+        let mut cfg = ItaConfig::paper();
+        cfg.n = n;
+        cfg.m = m;
+        let ws = cfg.bw_weight_stationary_bits();
+        let os = cfg.bw_output_stationary_bits();
+        t.row(&[
+            n.to_string(),
+            m.to_string(),
+            ws.to_string(),
+            os.to_string(),
+            format!("{:.2}x", os as f64 / ws as f64),
+            cfg.weight_buffer_bytes().to_string(),
+            (2 * m).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Design-space sweep over (N, M): area, power, efficiency at the
+/// benchmark workload — how the silicon would respond to scaling.
+pub fn ablation_scale() -> Table {
+    let mut t = Table::new("Design-space sweep (benchmark workload)").header(&[
+        "N", "M", "MACs", "Area [mm2]", "Power [mW]", "TOPS", "TOPS/W", "TOPS/mm2", "util",
+    ]);
+    for (n, m) in [(8usize, 64usize), (16, 32), (16, 64), (16, 128), (32, 64), (64, 64)] {
+        let mut cfg = ItaConfig::paper();
+        cfg.n = n;
+        cfg.m = m;
+        cfg.weight_bw = n as u64;
+        cfg.input_bw = m as u64;
+        cfg.output_bw = n as u64;
+        let rep = Simulator::new(cfg).simulate_attention(benchmark_shape());
+        let e = EnergyBreakdown::for_activity(&cfg, &rep.activity);
+        let area = AreaBreakdown::for_config(&cfg);
+        let tops = rep.achieved_ops() / 1e12;
+        t.row(&[
+            n.to_string(),
+            m.to_string(),
+            (n * m).to_string(),
+            format!("{:.3}", area.total_mm2()),
+            format!("{:.1}", e.avg_power_w(rep.total_cycles(), cfg.freq_hz) * 1e3),
+            format!("{tops:.2}"),
+            format!("{:.1}", tops_per_watt(&cfg, &rep.activity, false)),
+            format!("{:.2}", tops / area.total_mm2()),
+            format!("{:.2}", rep.utilization()),
+        ]);
+    }
+    t
+}
+
+/// DI overlap check: serial-divider count vs softmax-induced stalls
+/// (the paper claims two dividers suffice; the model *tests* it).
+pub fn ablation_dividers(cfg: &ItaConfig) -> Table {
+    let mut t = Table::new("DI overlap check — dividers vs stalls (paper claims 2 suffice)")
+        .header(&["dividers", "DI stalls [cy]", "total cycles", "overhead"]);
+    for nd in [1usize, 2, 4, 8, 16, 32] {
+        let mut c = *cfg;
+        c.n_dividers = nd;
+        let rep = Simulator::new(c).simulate_attention(benchmark_shape());
+        let total = rep.total_cycles();
+        t.row(&[
+            nd.to_string(),
+            rep.di_stall_cycles.to_string(),
+            total.to_string(),
+            format!("{:.2}%", 100.0 * rep.di_stall_cycles as f64 / total as f64),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_both_this_work_rows() {
+        let t = table1(&ItaConfig::paper());
+        let s = t.render();
+        assert!(s.contains("ITA (this repro)"));
+        assert!(s.contains("ITA System"));
+        assert!(s.contains("OPTIMUS"));
+    }
+
+    #[test]
+    fn mae_reproduces_paper_band() {
+        let r = softmax_mae(42, 200, 64);
+        let ita = &r[0];
+        let ibert = &r[1];
+        // Paper: ITA 0.46 % — accept [0.2 %, 0.9 %] (distribution-
+        // dependent), and I-BERT strictly more accurate than ITA.
+        assert!(ita.mae > 0.002 && ita.mae < 0.009, "ITA MAE {}", ita.mae);
+        assert!(ibert.mae < ita.mae, "I-BERT {} !< ITA {}", ibert.mae, ita.mae);
+    }
+
+    #[test]
+    fn fig6_tables_render() {
+        let cfg = ItaConfig::paper();
+        assert!(fig6_area(&cfg).render().contains("Softmax"));
+        assert!(fig6_power(&cfg).render().contains("Clock tree"));
+    }
+
+    #[test]
+    fn fig5_shows_clipping_profile() {
+        let t = fig5(1, 128);
+        assert!(t.n_rows() > 10);
+    }
+
+    #[test]
+    fn mempool_table_rows() {
+        let t = mempool_cmp(&ItaConfig::paper());
+        assert_eq!(t.n_rows(), 4);
+        assert!(t.render().contains("speedup"));
+    }
+
+    #[test]
+    fn ablations_render() {
+        assert!(ablation_dataflow().render().contains("OS/WS"));
+        assert!(ablation_scale().render().contains("TOPS/W"));
+        assert!(ablation_dividers(&ItaConfig::paper()).render().contains("dividers"));
+    }
+}

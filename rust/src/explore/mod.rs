@@ -1,0 +1,210 @@
+//! Design-space exploration: the co-design loop a user of ITA runs
+//! before committing to a configuration — sweep (N, M, D, dividers),
+//! evaluate each candidate on a target workload with the simulator and
+//! the area/energy models, apply budget constraints, and keep the
+//! Pareto frontier over (area, power, −throughput).
+//!
+//! Exposed as `ita explore` and tested for the Pareto and constraint
+//! invariants.
+
+use crate::ita::area::AreaBreakdown;
+use crate::ita::energy::{tops_per_watt, EnergyBreakdown};
+use crate::ita::simulator::{AttentionShape, Simulator};
+use crate::ita::ItaConfig;
+use crate::util::table::Table;
+
+/// Budget constraints for the search (None = unconstrained).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Budget {
+    pub max_area_mm2: Option<f64>,
+    pub max_power_w: Option<f64>,
+    /// Minimum achieved throughput in TOPS.
+    pub min_tops: Option<f64>,
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub cfg: ItaConfig,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub tops: f64,
+    pub tops_per_w: f64,
+    pub tops_per_mm2: f64,
+    pub utilization: f64,
+}
+
+impl DesignPoint {
+    /// Evaluate one configuration on a workload.
+    pub fn evaluate(cfg: ItaConfig, shape: AttentionShape) -> Self {
+        let rep = Simulator::new(cfg).simulate_attention(shape);
+        let area = AreaBreakdown::for_config(&cfg).total_mm2();
+        let e = EnergyBreakdown::for_activity(&cfg, &rep.activity);
+        let power = e.avg_power_w(rep.total_cycles(), cfg.freq_hz);
+        let tops = rep.achieved_ops() / 1e12;
+        Self {
+            cfg,
+            area_mm2: area,
+            power_w: power,
+            tops,
+            tops_per_w: tops_per_watt(&cfg, &rep.activity, false),
+            tops_per_mm2: tops / area,
+            utilization: rep.utilization(),
+        }
+    }
+
+    fn satisfies(&self, b: &Budget) -> bool {
+        b.max_area_mm2.map_or(true, |v| self.area_mm2 <= v)
+            && b.max_power_w.map_or(true, |v| self.power_w <= v)
+            && b.min_tops.map_or(true, |v| self.tops >= v)
+    }
+
+    /// True if `self` dominates `other` (≤ area, ≤ power, ≥ tops, with
+    /// at least one strict).
+    fn dominates(&self, other: &Self) -> bool {
+        let le = self.area_mm2 <= other.area_mm2
+            && self.power_w <= other.power_w
+            && self.tops >= other.tops;
+        let strict = self.area_mm2 < other.area_mm2
+            || self.power_w < other.power_w
+            || self.tops > other.tops;
+        le && strict
+    }
+}
+
+/// The default candidate grid (powers of two around the paper point).
+pub fn candidate_grid(base: &ItaConfig) -> Vec<ItaConfig> {
+    let mut out = Vec::new();
+    for &n in &[4usize, 8, 16, 32, 64] {
+        for &m in &[32usize, 64, 128] {
+            for &d in &[20u32, 24, 28] {
+                let mut c = *base;
+                c.n = n;
+                c.m = m;
+                c.d = d;
+                // Keep the ports balanced as the paper sizes them.
+                c.weight_bw = n as u64;
+                c.input_bw = m as u64;
+                c.output_bw = n as u64;
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// Run the exploration: evaluate the grid, filter by budget, return
+/// the Pareto frontier sorted by throughput (descending).
+pub fn explore(base: &ItaConfig, shape: AttentionShape, budget: Budget) -> Vec<DesignPoint> {
+    let evaluated: Vec<DesignPoint> = candidate_grid(base)
+        .into_iter()
+        // Workload must fit the accumulator depth.
+        .filter(|c| {
+            let deepest = shape.e.max(shape.s).max(shape.h * shape.p);
+            deepest <= crate::ita::pe::PeConfig { m: c.m, d: c.d }.max_dot_len()
+        })
+        .map(|c| DesignPoint::evaluate(c, shape))
+        .filter(|p| p.satisfies(&budget))
+        .collect();
+    let mut frontier: Vec<DesignPoint> = evaluated
+        .iter()
+        .filter(|p| !evaluated.iter().any(|q| q.dominates(p)))
+        .copied()
+        .collect();
+    frontier.sort_by(|a, b| b.tops.partial_cmp(&a.tops).unwrap());
+    frontier
+}
+
+/// Render the frontier as a table.
+pub fn frontier_table(points: &[DesignPoint]) -> Table {
+    let mut t = Table::new("Pareto frontier (area, power, throughput)").header(&[
+        "N", "M", "D", "Area [mm2]", "Power [mW]", "TOPS", "TOPS/W", "TOPS/mm2", "util",
+    ]);
+    for p in points {
+        t.row(&[
+            p.cfg.n.to_string(),
+            p.cfg.m.to_string(),
+            p.cfg.d.to_string(),
+            format!("{:.3}", p.area_mm2),
+            format!("{:.1}", p.power_w * 1e3),
+            format!("{:.2}", p.tops),
+            format!("{:.1}", p.tops_per_w),
+            format!("{:.2}", p.tops_per_mm2),
+            format!("{:.2}", p.utilization),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> AttentionShape {
+        AttentionShape { s: 128, e: 128, p: 64, h: 2 }
+    }
+
+    #[test]
+    fn frontier_is_pareto() {
+        let pts = explore(&ItaConfig::paper(), shape(), Budget::default());
+        assert!(!pts.is_empty());
+        for (i, a) in pts.iter().enumerate() {
+            for (j, b) in pts.iter().enumerate() {
+                if i != j {
+                    assert!(!a.dominates(b), "frontier contains dominated point");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_constraints_respected() {
+        let budget = Budget {
+            max_area_mm2: Some(0.2),
+            max_power_w: Some(0.07),
+            min_tops: Some(0.3),
+        };
+        let pts = explore(&ItaConfig::paper(), shape(), budget);
+        for p in &pts {
+            assert!(p.area_mm2 <= 0.2 && p.power_w <= 0.07 && p.tops >= 0.3, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn paper_point_is_efficient_for_its_class() {
+        // The paper's (16, 64, 24) must survive to the frontier of an
+        // unconstrained search on its benchmark workload — otherwise
+        // our models contradict the paper's design choice.
+        let pts = explore(
+            &ItaConfig::paper(),
+            AttentionShape { s: 256, e: 256, p: 64, h: 4 },
+            Budget::default(),
+        );
+        assert!(
+            pts.iter().any(|p| p.cfg.n == 16 && p.cfg.m == 64 && p.cfg.d == 24),
+            "paper design point dominated: {pts:?}"
+        );
+    }
+
+    #[test]
+    fn impossible_budget_empty() {
+        let pts = explore(
+            &ItaConfig::paper(),
+            shape(),
+            Budget { max_area_mm2: Some(1e-6), ..Default::default() },
+        );
+        assert!(pts.is_empty());
+    }
+
+    #[test]
+    fn deep_workloads_exclude_narrow_accumulators() {
+        // E=512 needs max_dot_len >= 512 ⇒ D=20 (len 63) and D=24
+        // (len 511) are excluded, D=28 survives.
+        let pts = explore(
+            &ItaConfig::paper(),
+            AttentionShape { s: 64, e: 512, p: 64, h: 2 },
+            Budget::default(),
+        );
+        assert!(pts.iter().all(|p| p.cfg.d == 28), "{pts:?}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Gate-equivalent area model, calibrated to the paper's 22FDX
+//! implementation (§V-B, Fig. 6 left, Table I).
+//!
+//! Silicon facts used for calibration at the (N=16, M=64, D=24) design
+//! point:
+//!
+//! * total area 0.173 mm²;
+//! * softmax module 28.7 kGE = 3.3 % of total ⇒ total ≈ 869.7 kGE and
+//!   1 GE ≈ 0.199 µm² in GF 22FDX;
+//! * breakdown: PEs 58.1 %, weight buffer 19.6 %, datapath-other 6.3 %,
+//!   softmax 3.3 %, control 2.3 %, output buffer 1.1 % (remaining
+//!   ~9.3 % attributed to I/O registers and top-level glue);
+//! * ITA System adds 64 KiB SRAM for a total of 0.407 mm².
+//!
+//! Each component area is a *function of the architecture parameters*
+//! (N, M, D, buffer sizes), with per-unit constants solved from the
+//! calibration point — so design-space sweeps (`ablation_scale` bench)
+//! respond the way the silicon would to first order.
+
+use super::ItaConfig;
+
+/// µm² per gate-equivalent (NAND2) in 22FDX, from the calibration
+/// total: 0.173 mm² / 869.7 kGE.
+pub const UM2_PER_GE: f64 = 0.173e6 / TOTAL_GE_PAPER;
+/// Total GE at the paper's design point: 28.7 kGE / 3.3 %.
+pub const TOTAL_GE_PAPER: f64 = 28_700.0 / 0.033;
+
+/// GE per 8×8-bit multiplier within a MAC lane (solved from the PE
+/// share: 58.1 % · 869.7 kGE / 1024 lanes − adder share).
+pub const GE_MAC_MUL: f64 = 301.5;
+/// GE per accumulator bit of the per-lane adder-tree slice.
+pub const GE_MAC_ADD_PER_BIT: f64 = 8.0;
+/// GE per latch-based storage bit (weight buffer, MAX/Σ buffers).
+pub const GE_LATCH_BIT: f64 = 10.4;
+/// GE per FIFO storage bit (shift-register FIFO without random-access
+/// addressing is cheaper than the latch arrays; solved from the 1.1 %
+/// output-buffer share at 256 bytes).
+pub const GE_FIFO_BIT: f64 = 4.67;
+/// GE per serial divider (16-bit restoring).
+pub const GE_DIVIDER: f64 = 1_200.0;
+/// GE of softmax per-lane shift/compare/accumulate datapath.
+pub const GE_SOFTMAX_LANE: f64 = 161.0;
+/// Control: fixed sequencer plus per-PE decode.
+pub const GE_CTRL_FIXED: f64 = 8_000.0;
+pub const GE_CTRL_PER_PE: f64 = 750.0;
+/// Datapath-other per PE: requant unit, accumulator regs (2·D bits),
+/// adders after PEs.
+pub const GE_REQUANT_PER_PE: f64 = 1_500.0;
+pub const GE_DP_MISC_PER_PE: f64 = 1_426.0;
+/// I/O registers and glue per port bit (ports: M input + N weight +
+/// N output + N bias bytes).
+pub const GE_IO_PER_PORT_BIT: f64 = 90.2;
+/// SRAM macro density for the ITA System configuration:
+/// (0.407 − 0.173) mm² / 64 KiB.
+pub const SRAM_UM2_PER_BYTE: f64 = (0.407e6 - 0.173e6) / (64.0 * 1024.0);
+
+/// Component-wise area breakdown in GE.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub pes: f64,
+    pub weight_buffer: f64,
+    pub softmax: f64,
+    pub datapath_other: f64,
+    pub control: f64,
+    pub output_fifo: f64,
+    pub io: f64,
+}
+
+impl AreaBreakdown {
+    /// Evaluate the model for an architecture configuration.
+    pub fn for_config(cfg: &ItaConfig) -> Self {
+        let n = cfg.n as f64;
+        let m = cfg.m as f64;
+        let d = cfg.d as f64;
+        let pes = n * m * (GE_MAC_MUL + GE_MAC_ADD_PER_BIT * d);
+        let weight_buffer = (2.0 * n * m * 8.0) * GE_LATCH_BIT;
+        // Softmax: MAX (M×8b) + Σ (M×16b) latches, per-lane shift
+        // datapath, serial dividers.
+        let softmax = m * 24.0 * GE_LATCH_BIT
+            + m * GE_SOFTMAX_LANE
+            + cfg.n_dividers as f64 * GE_DIVIDER;
+        // Requant units, D-bit accumulator registers (double-buffered),
+        // adders after PEs.
+        let datapath_other = n * (GE_REQUANT_PER_PE + GE_DP_MISC_PER_PE)
+            + n * d * 2.0 * GE_LATCH_BIT;
+        let control = GE_CTRL_FIXED + n * GE_CTRL_PER_PE;
+        let output_fifo = cfg.fifo_bytes as f64 * 8.0 * GE_FIFO_BIT;
+        // Port widths in bits: input M bytes, weight N, output N, bias N.
+        let io = (m + 3.0 * n) * 8.0 * GE_IO_PER_PORT_BIT;
+        Self { pes, weight_buffer, softmax, datapath_other, control, output_fifo, io }
+    }
+
+    pub fn total_ge(&self) -> f64 {
+        self.pes
+            + self.weight_buffer
+            + self.softmax
+            + self.datapath_other
+            + self.control
+            + self.output_fifo
+            + self.io
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.total_ge() * UM2_PER_GE / 1e6
+    }
+
+    /// (label, GE, fraction) rows for the Fig. 6 table.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total_ge();
+        vec![
+            ("PEs", self.pes, self.pes / t),
+            ("Weight buffer", self.weight_buffer, self.weight_buffer / t),
+            ("Softmax", self.softmax, self.softmax / t),
+            ("Datapath other", self.datapath_other, self.datapath_other / t),
+            ("Control", self.control, self.control / t),
+            ("Output buffer", self.output_fifo, self.output_fifo / t),
+            ("I/O registers", self.io, self.io / t),
+        ]
+    }
+}
+
+/// Area of the ITA System configuration (accelerator + `sram_bytes` of
+/// on-chip SRAM), in mm². Paper: 64 KiB ⇒ 0.407 mm².
+pub fn system_area_mm2(cfg: &ItaConfig, sram_bytes: usize) -> f64 {
+    AreaBreakdown::for_config(cfg).total_mm2() + sram_bytes as f64 * SRAM_UM2_PER_BYTE / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_total_area() {
+        let a = AreaBreakdown::for_config(&ItaConfig::paper());
+        // Within 3 % of the paper's 0.173 mm².
+        let rel = (a.total_mm2() - 0.173).abs() / 0.173;
+        assert!(rel < 0.03, "total {} mm² (rel err {rel})", a.total_mm2());
+    }
+
+    #[test]
+    fn calibration_softmax_ge() {
+        let a = AreaBreakdown::for_config(&ItaConfig::paper());
+        // Paper: 28.7 kGE, 3.3 %.
+        assert!((a.softmax - 28_700.0).abs() / 28_700.0 < 0.02, "softmax {}", a.softmax);
+        let frac = a.softmax / a.total_ge();
+        assert!((frac - 0.033).abs() < 0.005, "softmax frac {frac}");
+    }
+
+    #[test]
+    fn calibration_breakdown_shares() {
+        let a = AreaBreakdown::for_config(&ItaConfig::paper());
+        let t = a.total_ge();
+        // Fig. 6 left: PEs 58.1 %, weight buffer 19.6 %, control 2.3 %.
+        assert!((a.pes / t - 0.581).abs() < 0.02, "pe frac {}", a.pes / t);
+        assert!((a.weight_buffer / t - 0.196).abs() < 0.02, "wb frac {}", a.weight_buffer / t);
+        assert!((a.control / t - 0.023).abs() < 0.01, "ctrl frac {}", a.control / t);
+    }
+
+    #[test]
+    fn system_area_matches_paper() {
+        let mm2 = system_area_mm2(&ItaConfig::paper(), 64 * 1024);
+        assert!((mm2 - 0.407).abs() / 0.407 < 0.03, "system {mm2} mm²");
+    }
+
+    #[test]
+    fn area_scales_with_macs() {
+        let mut big = ItaConfig::paper();
+        big.n *= 2;
+        let a1 = AreaBreakdown::for_config(&ItaConfig::paper());
+        let a2 = AreaBreakdown::for_config(&big);
+        assert!(a2.pes / a1.pes > 1.99 && a2.pes / a1.pes < 2.01);
+        assert!(a2.total_ge() > 1.5 * a1.total_ge());
+        // Softmax area is independent of N (per-row structures scale
+        // with M only) except dividers.
+        assert_eq!(a2.softmax, a1.softmax);
+    }
+}

@@ -1,0 +1,394 @@
+//! Functional tile engine: the bit-exact compute path of Fig. 2/3.
+//!
+//! Executes requantized int8 linear layers and the fused
+//! `Q·Kᵀ → streaming softmax → A·V` attention core exactly as the
+//! hardware does, while recording the [`Activity`] events the energy
+//! model consumes. Cycle counts follow the Fig. 3 schedule
+//! (see [`super::simulator`] for the derivation and the cycle-exact
+//! cross-check).
+//!
+//! Numerics here are the **golden reference** for all other layers: the
+//! Pallas kernel and the JAX model must match this engine bit-for-bit
+//! (asserted by `rust/tests/cross_layer.rs`).
+
+use super::requant::{requant_mat, RequantParams};
+use super::simulator::{activity_for_matmul, MatmulDims};
+use super::softmax::{ita_softmax_rows, SoftmaxUnit};
+use super::{Activity, ItaConfig};
+use crate::util::mat::{matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
+
+/// Functional engine over one ITA instance.
+#[derive(Debug, Clone)]
+pub struct TileEngine {
+    pub cfg: ItaConfig,
+    pub activity: Activity,
+}
+
+impl TileEngine {
+    pub fn new(cfg: ItaConfig) -> Self {
+        Self { cfg, activity: Activity::default() }
+    }
+
+    pub fn reset_activity(&mut self) {
+        self.activity = Activity::default();
+    }
+
+    /// Record the events of one tiled matmul pass (R×K)·(K×C), using
+    /// the same port-traffic model as the simulator
+    /// ([`activity_for_matmul`]) so the two can never diverge.
+    fn record_matmul(&mut self, r: usize, k: usize, c: usize, useful_macs: u64) {
+        let a = activity_for_matmul(&self.cfg, MatmulDims { r, k, c }, useful_macs);
+        self.activity.add(&a);
+    }
+
+    /// Linear layer: `y = requant(x · w + bias)`, the Q/K/V/OW (and
+    /// FFN) building block. `bias` has one entry per output column.
+    pub fn linear(
+        &mut self,
+        x: &MatI8,
+        w: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+    ) -> MatI8 {
+        assert_eq!(x.cols(), w.rows(), "linear dims");
+        self.check_depth(w.rows());
+        let acc = matmul_i8(x, w);
+        let useful = (x.rows() * x.cols() * w.cols()) as u64;
+        self.record_matmul(x.rows(), x.cols(), w.cols(), useful);
+        requant_mat(&acc, bias, rq)
+    }
+
+    /// Linear layer against a **pre-transposed** weight matrix
+    /// (`wt` = Wᵀ, shape C×K). §Perf: the serving path transposes each
+    /// weight once at model load instead of on every request — the
+    /// software expression of the weight-stationary buffer.
+    pub fn linear_pret(
+        &mut self,
+        x: &MatI8,
+        wt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+    ) -> MatI8 {
+        assert_eq!(x.cols(), wt.cols(), "linear dims (pre-transposed)");
+        self.check_depth(wt.cols());
+        let acc = matmul_i8_pret(x, wt);
+        let useful = (x.rows() * x.cols() * wt.rows()) as u64;
+        self.record_matmul(x.rows(), x.cols(), wt.rows(), useful);
+        requant_mat(&acc, bias, rq)
+    }
+
+    fn check_depth(&self, k: usize) {
+        assert!(
+            k <= self.cfg.pe_config().max_dot_len(),
+            "K dim {k} exceeds D={}-bit accumulation bound",
+            self.cfg.d
+        );
+    }
+
+    /// Causal (decoder) attention core: row r attends to columns 0..=r
+    /// (paper §II-A: decoders modify the inputs, "the attention
+    /// mechanism remains the same"). Masked logits never enter DA and
+    /// their probabilities are gated to zero before A·V.
+    pub fn attention_core_causal(
+        &mut self,
+        q: &MatI8,
+        k: &MatI8,
+        v: &MatI8,
+        rq_qk: RequantParams,
+        bias_av: &[i8],
+        rq_av: RequantParams,
+    ) -> (MatI8, MatU8) {
+        let s = q.rows();
+        assert_eq!(k.rows(), s, "K sequence length");
+        assert_eq!(v.rows(), s, "V sequence length");
+        let p = v.cols();
+        let m = self.cfg.m;
+
+        let acc = matmul_i8_pret(q, k);
+        let zero_bias = vec![0i8; s];
+        let logits = requant_mat(&acc, &zero_bias, rq_qk);
+        let useful_qk: u64 = (0..s).map(|r| ((r + 1) * q.cols()) as u64).sum();
+        self.record_matmul(s, q.cols(), s, useful_qk);
+
+        let mut a = MatU8::zeros(s, s);
+        for r in 0..s {
+            let row = crate::ita::softmax::ita_softmax_row_masked(logits.row(r), m, r + 1);
+            a.row_mut(r).copy_from_slice(&row);
+        }
+        self.activity.softmax_elems += (0..s).map(|r| (r + 1) as u64).sum::<u64>() * 2;
+        self.activity.divisions += s as u64;
+
+        let acc_av = matmul_u8_i8(&a, v);
+        let out = requant_mat(&acc_av, bias_av, rq_av);
+        let useful_av: u64 = (0..s).map(|r| ((r + 1) * p) as u64).sum();
+        self.record_matmul(s, s, p, useful_av);
+        (out, a)
+    }
+
+    /// The fused attention core for one head (Fig. 3's i-iterations):
+    /// logits `L = requant(Q·Kᵀ)` with streaming softmax DA as tiles
+    /// complete, DI per finished row, then `A·V` with EN normalizing
+    /// logits into u8 probabilities as they enter the PEs.
+    ///
+    /// Returns `(requant(A·V + bias_av), A)` — A exposed for tests and
+    /// the Fig. 5 experiment.
+    pub fn attention_core(
+        &mut self,
+        q: &MatI8,
+        k: &MatI8,
+        v: &MatI8,
+        rq_qk: RequantParams,
+        bias_av: &[i8],
+        rq_av: RequantParams,
+    ) -> (MatI8, MatU8) {
+        let s = q.rows();
+        assert_eq!(k.rows(), s, "K sequence length");
+        assert_eq!(v.rows(), s, "V sequence length");
+        assert_eq!(q.cols(), k.cols(), "projection dim");
+        let p = v.cols();
+
+        // --- Q·Kᵀ, requantized to int8 logits --------------------------
+        // K is (S, P) row-major, i.e. already the transposed layout for
+        // row-dot products: A[r,c] = q.row(r)·k.row(c). §Perf: avoids a
+        // double transpose (attention_core used to transpose K only for
+        // matmul_i8 to transpose it back).
+        let acc = matmul_i8_pret(q, k);
+        let zero_bias = vec![0i8; s];
+        let logits = requant_mat(&acc, &zero_bias, rq_qk);
+        let useful_qk = (s * q.cols() * s) as u64;
+        self.record_matmul(s, q.cols(), s, useful_qk);
+
+        // --- Streaming softmax: DA per column stripe, then DI ----------
+        // (Bit-identical to processing stripes as the hardware does;
+        // asserted against SoftmaxUnit in tests.)
+        let m = self.cfg.m;
+        let a = ita_softmax_rows(&logits, m);
+        // DA touches every logit once, EN once more during A·V.
+        self.activity.softmax_elems += (s * s) as u64 * 2;
+        self.activity.divisions += s as u64;
+
+        // --- A·V with on-the-fly EN -----------------------------------
+        let acc_av = matmul_u8_i8(&a, v);
+        let out = requant_mat(&acc_av, bias_av, rq_av);
+        let useful_av = (s * s * p) as u64;
+        self.record_matmul(s, s, p, useful_av);
+
+        (out, a)
+    }
+
+    /// Same computation but explicitly stripe-ordered through
+    /// [`SoftmaxUnit`] — the hardware's exact dataflow. Used by tests to
+    /// prove `attention_core`'s vectorized path is bit-identical to the
+    /// streaming hardware order.
+    pub fn attention_core_streamed(
+        &mut self,
+        q: &MatI8,
+        k: &MatI8,
+        v: &MatI8,
+        rq_qk: RequantParams,
+        bias_av: &[i8],
+        rq_av: RequantParams,
+    ) -> (MatI8, MatU8) {
+        let s = q.rows();
+        let m = self.cfg.m;
+        let acc = matmul_i8_pret(q, k); // K rows are Kᵀ columns (§Perf)
+        let zero_bias = vec![0i8; s];
+        let logits = requant_mat(&acc, &zero_bias, rq_qk);
+
+        let mut a = MatU8::zeros(s, s);
+        // Process row blocks of M rows (the MAX/Σ buffers hold M rows).
+        for r0 in (0..s).step_by(m) {
+            let rows = (s - r0).min(m);
+            let mut unit = SoftmaxUnit::new(rows);
+            // DA: column stripes of width M, in order (Fig. 3 j-loop).
+            for c0 in (0..s).step_by(m) {
+                let w = (s - c0).min(m);
+                let parts: Vec<&[i8]> =
+                    (0..rows).map(|r| &logits.row(r0 + r)[c0..c0 + w]).collect();
+                unit.accumulate_stripe(&parts);
+            }
+            unit.invert_all();
+            // EN: normalize as the logits stream back in for A·V.
+            for r in 0..rows {
+                for c in 0..s {
+                    a.set(r0 + r, c, unit.rows[r].normalize(logits.get(r0 + r, c)));
+                }
+            }
+        }
+        let acc_av = matmul_u8_i8(&a, v);
+        let out = requant_mat(&acc_av, bias_av, rq_av);
+        (out, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::pe::PeArray;
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_mat(rng: &mut SplitMix64, r: usize, c: usize) -> MatI8 {
+        MatI8::from_fn(r, c, |_, _| rng.next_i8())
+    }
+
+    /// Small-scale requant params keeping logits in a realistic range.
+    fn rq() -> RequantParams {
+        RequantParams { mult: 1, shift: 6 }
+    }
+
+    #[test]
+    fn linear_matches_pe_array_execution() {
+        // The vectorized linear() must equal an explicit PE-by-PE,
+        // tile-by-tile execution with the weight buffer dataflow.
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(1);
+        let (r, k, c) = (10, 16, 6);
+        let x = rand_mat(&mut rng, r, k);
+        let w = rand_mat(&mut rng, k, c);
+        let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+
+        let mut eng = TileEngine::new(cfg);
+        let got = eng.linear(&x, &w, &bias, rq());
+
+        // Reference: N PEs sharing inputs, weights stationary per column.
+        let mut arr = PeArray::new(cfg.n, cfg.pe_config());
+        let wt = w.transpose();
+        let mut want = MatI8::zeros(r, c);
+        for row in 0..r {
+            for col0 in (0..c).step_by(cfg.n) {
+                let ncols = (c - col0).min(cfg.n);
+                let mut acc = vec![0i32; ncols];
+                for k0 in (0..k).step_by(cfg.m) {
+                    let kw = (k - k0).min(cfg.m);
+                    let a = &x.row(row)[k0..k0 + kw];
+                    let ws: Vec<&[i8]> =
+                        (0..ncols).map(|j| &wt.row(col0 + j)[k0..k0 + kw]).collect();
+                    arr.step_i8(a, &ws, &mut acc);
+                }
+                for j in 0..ncols {
+                    want.set(row, col0 + j, rq().apply_biased(acc[j], bias[col0 + j]));
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn attention_vectorized_equals_streamed() {
+        forall("attention stream order", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let s = g.usize_in(2, 24);
+            let p = g.usize_in(2, 12);
+            let mut rng = SplitMix64::new(g.u64());
+            let q = rand_mat(&mut rng, s, p);
+            let k = rand_mat(&mut rng, s, p);
+            let v = rand_mat(&mut rng, s, p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let mut e2 = TileEngine::new(cfg);
+            let (o1, a1) = e1.attention_core(&q, &k, &v, rq(), &bias, rq());
+            let (o2, a2) = e2.attention_core_streamed(&q, &k, &v, rq(), &bias, rq());
+            assert_eq!(a1, a2, "attention matrices differ");
+            assert_eq!(o1, o2, "outputs differ");
+        });
+    }
+
+    #[test]
+    fn activity_cycles_match_schedule() {
+        // R=K=C=M with C padded to N ⇒ cycles = M*M*(C→N-padded)/NM.
+        let cfg = ItaConfig::tiny(); // n=2, m=8
+        let mut rng = SplitMix64::new(3);
+        let x = rand_mat(&mut rng, 8, 8);
+        let w = rand_mat(&mut rng, 8, 6); // pads to 6→6? tiles_ceil(6,2)=3 ⇒ cp=6
+        let bias = vec![0i8; 6];
+        let mut eng = TileEngine::new(cfg);
+        let _ = eng.linear(&x, &w, &bias, rq());
+        // rp=8, kp=8, cp=6 ⇒ cycles = 8*8*6/(2*8) = 24.
+        assert_eq!(eng.activity.cycles, 24);
+        assert_eq!(eng.activity.macs, (8 * 8 * 6) as u64);
+        assert_eq!(eng.activity.input_bytes, 24 * 8);
+        assert_eq!(eng.activity.requant_ops, 48);
+    }
+
+    #[test]
+    fn causal_attention_is_lower_triangular() {
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(21);
+        let (s, p) = (24, 8);
+        let q = rand_mat(&mut rng, s, p);
+        let k = rand_mat(&mut rng, s, p);
+        let v = rand_mat(&mut rng, s, p);
+        let bias = vec![0i8; p];
+        let mut eng = TileEngine::new(cfg);
+        let (_, a) = eng.attention_core_causal(&q, &k, &v, rq(), &bias, rq());
+        for r in 0..s {
+            for c in 0..s {
+                if c > r {
+                    assert_eq!(a.get(r, c), 0, "future position ({r},{c}) attended");
+                }
+            }
+            let mass: f64 = a.row(r).iter().map(|&x| x as f64 / 256.0).sum();
+            assert!(mass > 0.4 && mass < 1.3, "row {r} mass {mass}");
+        }
+        // Row 0 attends only to itself: full mass on the diagonal.
+        assert!(a.get(0, 0) >= 255);
+    }
+
+    #[test]
+    fn causal_last_row_matches_full_attention_row() {
+        // The last row attends to everything — it must equal the
+        // unmasked computation's last row bit-for-bit.
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(22);
+        let (s, p) = (16, 8);
+        let q = rand_mat(&mut rng, s, p);
+        let k = rand_mat(&mut rng, s, p);
+        let v = rand_mat(&mut rng, s, p);
+        let bias = vec![0i8; p];
+        let mut e1 = TileEngine::new(cfg);
+        let mut e2 = TileEngine::new(cfg);
+        let (o_causal, a_causal) = e1.attention_core_causal(&q, &k, &v, rq(), &bias, rq());
+        let (o_full, a_full) = e2.attention_core(&q, &k, &v, rq(), &bias, rq());
+        assert_eq!(a_causal.row(s - 1), a_full.row(s - 1));
+        assert_eq!(o_causal.row(s - 1), o_full.row(s - 1));
+    }
+
+    #[test]
+    fn attention_activity_counts() {
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(4);
+        let s = 16;
+        let p = 8;
+        let q = rand_mat(&mut rng, s, p);
+        let k = rand_mat(&mut rng, s, p);
+        let v = rand_mat(&mut rng, s, p);
+        let bias = vec![0i8; p];
+        let mut eng = TileEngine::new(cfg);
+        let (_, a) = eng.attention_core(&q, &k, &v, rq(), &bias, rq());
+        assert_eq!(a.shape(), (s, s));
+        // DA+EN touch every attention element twice.
+        assert_eq!(eng.activity.softmax_elems, (s * s * 2) as u64);
+        assert_eq!(eng.activity.divisions, s as u64);
+        assert_eq!(eng.activity.macs, (s * p * s + s * s * p) as u64);
+    }
+
+    #[test]
+    fn attention_rows_mass_reasonable() {
+        // End-to-end sanity: probabilities per row sum near 1 after the
+        // fused pipeline (requantized logits in a realistic range).
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(5);
+        let (s, p) = (32, 8);
+        let q = rand_mat(&mut rng, s, p);
+        let k = rand_mat(&mut rng, s, p);
+        let v = rand_mat(&mut rng, s, p);
+        let bias = vec![0i8; p];
+        let mut eng = TileEngine::new(cfg);
+        let (_, a) = eng.attention_core(&q, &k, &v, rq(), &bias, rq());
+        for r in 0..s {
+            let mass: f64 = a.row(r).iter().map(|&x| x as f64 / 256.0).sum();
+            assert!(mass > 0.5 && mass < 1.3, "row {r} mass {mass}");
+        }
+    }
+}

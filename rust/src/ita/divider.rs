@@ -1,0 +1,130 @@
+//! Serial divider model for Denominator Inversion (DI).
+//!
+//! The paper (§IV) uses **two serial dividers** to invert the M per-row
+//! denominators while DA of the next rows is still running: "Since DI
+//! is overlapped with DA, we have plenty of time to compute the inverse
+//! ... only two serial dividers suffice ... without causing any stalls."
+//!
+//! This module provides both the bit-exact restoring division (matching
+//! `RowState::invert`) and the occupancy/cycle model the simulator uses
+//! to verify the paper's no-stall claim for arbitrary (N, M, S).
+
+use super::softmax::DIV_NUM_LOG2;
+
+/// Restoring serial division: `2^DIV_NUM_LOG2 / d`, one quotient bit per
+/// cycle — returns (quotient, cycles). The quotient matches
+/// `RowState::invert` bit-for-bit (same floor division), the cycle count
+/// feeds the occupancy model.
+pub fn serial_divide(d: u32) -> (u32, u32) {
+    assert!(d > 0, "division by zero denominator");
+    let num: u64 = 1 << DIV_NUM_LOG2;
+    let mut rem: u64 = 0;
+    let mut quo: u64 = 0;
+    let bits = DIV_NUM_LOG2 + 1; // enough to cover the numerator
+    for i in (0..bits).rev() {
+        rem = (rem << 1) | ((num >> i) & 1);
+        quo <<= 1;
+        if rem >= d as u64 {
+            rem -= d as u64;
+            quo |= 1;
+        }
+    }
+    (quo as u32, bits)
+}
+
+/// A bank of serial dividers with a request queue: the cycle-accurate
+/// occupancy model. Each division occupies one divider for
+/// `DIV_NUM_LOG2 + 1` cycles.
+#[derive(Debug, Clone)]
+pub struct DividerBank {
+    /// Cycle at which each divider becomes free.
+    free_at: Vec<u64>,
+    /// Total divisions issued.
+    pub issued: u64,
+    /// Maximum queueing delay observed (cycles a request waited).
+    pub max_wait: u64,
+}
+
+impl DividerBank {
+    pub fn new(n_dividers: usize) -> Self {
+        Self { free_at: vec![0; n_dividers], issued: 0, max_wait: 0 }
+    }
+
+    /// Latency of one serial division in cycles.
+    pub fn latency() -> u64 {
+        (DIV_NUM_LOG2 + 1) as u64
+    }
+
+    /// Issue a division request at `now`; returns the cycle the result
+    /// is ready. Requests queue on the earliest-free divider.
+    pub fn issue(&mut self, now: u64) -> u64 {
+        let (idx, &earliest) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .expect("divider bank is non-empty");
+        let start = now.max(earliest);
+        self.max_wait = self.max_wait.max(start - now);
+        let done = start + Self::latency();
+        self.free_at[idx] = done;
+        self.issued += 1;
+        done
+    }
+
+    /// Would the bank stall the pipeline? True if a request issued at
+    /// `now` cannot start immediately.
+    pub fn busy(&self, now: u64) -> bool {
+        self.free_at.iter().all(|&t| t > now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn serial_matches_floor_division() {
+        forall("serial div == floor div", 500, |g| {
+            let d = g.usize_in(1, 1 << 15) as u32;
+            let (q, cycles) = serial_divide(d);
+            assert_eq!(q, (1u32 << DIV_NUM_LOG2) / d);
+            assert_eq!(cycles, DIV_NUM_LOG2 + 1);
+        });
+    }
+
+    #[test]
+    fn bank_parallelism() {
+        let mut bank = DividerBank::new(2);
+        let lat = DividerBank::latency();
+        // Two requests at t=0 run in parallel.
+        assert_eq!(bank.issue(0), lat);
+        assert_eq!(bank.issue(0), lat);
+        // Third waits for a divider.
+        assert_eq!(bank.issue(0), 2 * lat);
+        assert_eq!(bank.max_wait, lat);
+        assert_eq!(bank.issued, 3);
+    }
+
+    #[test]
+    fn no_stall_when_spread_out() {
+        // Paper claim: M rows' DI requests spread over a tile's DA time
+        // (M·M/N-cycle stripes for the QKᵀ tile) never stall 2 dividers.
+        // With M=64, N=16: a new row denominator completes every M/N = 4
+        // cycles... actually all M rows complete at tile end; they spread
+        // over the NEXT tile computation: M·M/N = 256 cycles for 64
+        // divisions of 23 cycles on 2 dividers = 64·23/2 = 736 > 256!
+        // The resolution: DI only needs to finish before EN *of that
+        // row*, which begins after the full attention row (S/M tiles).
+        // The simulator checks the real schedule; here we sanity-check
+        // the queueing arithmetic.
+        let mut bank = DividerBank::new(2);
+        let mut ready_last = 0;
+        for i in 0..64u64 {
+            ready_last = bank.issue(i * 23); // one request per 23 cycles
+        }
+        assert_eq!(bank.max_wait, 0, "2 dividers keep up at 1 req / 23 cycles");
+        assert!(ready_last >= 63 * 23);
+    }
+}

@@ -1,0 +1,253 @@
+//! Activity-based energy model, calibrated to the paper's post-layout
+//! power estimation (§V-B, Fig. 6 right, Table I).
+//!
+//! Silicon facts used for calibration at (N=16, M=64, D=24), 500 MHz,
+//! TT/0.80 V/25 °C, synthetic attention benchmark at full utilization:
+//!
+//! * total power 60.5 mW ⇒ 121 pJ per cycle;
+//! * breakdown: PEs 59.5 %, clock tree + I/O registers 22.9 %,
+//!   datapath-other 6.7 %, weight buffer 1.7 %, softmax 1.4 %,
+//!   output buffer 0.7 %;
+//! * ITA System (with 64 KiB SRAM): 121 mW;
+//! * energies scale with Vdd² (the paper's §V-E hypothetical scaling).
+//!
+//! Every constant is an energy **per event**; the [`super::Activity`]
+//! counters produced by the datapath/simulator multiply in. Constants
+//! are solved so a fully-utilized attention run reproduces Fig. 6.
+
+use super::{Activity, ItaConfig};
+
+/// Reference supply voltage for the calibrated constants.
+pub const VDD_REF: f64 = 0.8;
+
+/// Energy per MAC operation (8×8→D-bit), in joules.
+/// 59.5 % · 121 pJ / 1024 MACs ≈ 70.3 fJ; split into multiplier and
+/// accumulate-bit terms so D scaling is meaningful.
+pub fn e_mac(d: u32) -> f64 {
+    (55.0 + 0.64 * d as f64) * 1e-15
+}
+
+/// Clock-tree energy per cycle, proportional to sequential area:
+/// 60 % of the 22.9 % clock+I/O share ⇒ 16.6 pJ/cycle at 869.7 kGE.
+pub const E_CLK_PER_GE_CYCLE: f64 = 16.6e-12 / 869_700.0;
+
+/// I/O register energy per port byte moved. Solved from the 22.9 %
+/// clock+I/O share: 27.7 pJ/cycle − 16.6 pJ clock over the average
+/// 78.3 port bytes/cycle of the attention schedule.
+pub const E_IO_BYTE: f64 = 142.0e-15;
+
+/// Datapath-other (accumulator regs, adders, requant) per busy cycle:
+/// 6.7 % · 121 pJ = 8.1 pJ/cycle at N=16, D=24 ⇒ 21 fJ per N·D unit.
+pub const E_DP_PER_ND_CYCLE: f64 = 21.0e-15;
+
+/// Weight buffer: clock-gated latch array. Write ≈ 50 fJ/B (latch
+/// capture), read ≈ 1.82 fJ/B (mux tree only) — solves the 1.7 % share
+/// with ~4 write + 1024 read bytes per cycle on the attention schedule.
+pub const E_WBUF_WRITE_BYTE: f64 = 50.0e-15;
+pub const E_WBUF_READ_BYTE: f64 = 1.82e-15;
+
+/// Softmax datapath per element event (DA absorb or EN normalize);
+/// solves the 1.4 % share over 2·S²·H element events per attention.
+pub const E_SOFTMAX_ELEM: f64 = 354.0e-15;
+/// One serial division (23 cycles of a 16-bit restoring divider).
+pub const E_DIVISION: f64 = 8.0e-12;
+
+/// Output FIFO per byte (push+pop): 0.7 % · 121 pJ over the average
+/// 5.1 output bytes/cycle.
+pub const E_FIFO_BYTE: f64 = 165.0e-15;
+
+/// Static/leakage + unattributed power: the paper's published shares
+/// sum to 92.9 %; the remaining 7.1 % (8.6 pJ/cycle) is charged per
+/// wall-clock cycle, proportional to area.
+pub const E_STATIC_PER_GE_CYCLE: f64 = 8.6e-12 / 869_700.0;
+
+/// SRAM access energy per byte for the ITA System configuration
+/// (solves 121 mW − 60.5 mW over the ~78 B/cycle port traffic),
+/// including the interconnect to the accelerator.
+pub const E_SRAM_BYTE: f64 = 1546.0e-15;
+
+/// Energy breakdown of a simulated run, in joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub pes: f64,
+    pub clock: f64,
+    pub io: f64,
+    pub datapath_other: f64,
+    pub weight_buffer: f64,
+    pub softmax: f64,
+    pub output_fifo: f64,
+    /// Static/leakage and unattributed (the paper's missing 7.1 %).
+    pub static_other: f64,
+    /// Only non-zero for the System configuration.
+    pub sram: f64,
+}
+
+impl EnergyBreakdown {
+    /// Core accelerator energy for an activity trace.
+    pub fn for_activity(cfg: &ItaConfig, a: &Activity) -> Self {
+        let ge = super::area::AreaBreakdown::for_config(cfg).total_ge();
+        let vscale = (cfg.vdd / VDD_REF).powi(2);
+        let cycles = (a.cycles + a.stall_cycles) as f64;
+        let port_bytes =
+            (a.input_bytes + a.output_bytes + a.weight_buf_writes) as f64 + a.output_bytes as f64; // bias port ≈ output width
+        let raw = Self {
+            pes: a.macs as f64 * e_mac(cfg.d),
+            clock: cycles * ge * E_CLK_PER_GE_CYCLE,
+            io: port_bytes * E_IO_BYTE,
+            datapath_other:
+                a.cycles as f64 * (cfg.n as f64 * cfg.d as f64) * E_DP_PER_ND_CYCLE,
+            weight_buffer: a.weight_buf_writes as f64 * E_WBUF_WRITE_BYTE
+                + a.weight_buf_reads as f64 * E_WBUF_READ_BYTE,
+            softmax: a.softmax_elems as f64 * E_SOFTMAX_ELEM
+                + a.divisions as f64 * E_DIVISION,
+            output_fifo: a.output_bytes as f64 * E_FIFO_BYTE,
+            static_other: cycles * ge * E_STATIC_PER_GE_CYCLE,
+            sram: 0.0,
+        };
+        raw.scaled(vscale)
+    }
+
+    /// System configuration: adds SRAM energy on all port traffic.
+    pub fn for_activity_system(cfg: &ItaConfig, a: &Activity) -> Self {
+        let mut e = Self::for_activity(cfg, a);
+        let vscale = (cfg.vdd / VDD_REF).powi(2);
+        let traffic =
+            (a.input_bytes + a.output_bytes + a.weight_buf_writes + a.output_bytes) as f64;
+        e.sram = traffic * E_SRAM_BYTE * vscale;
+        e
+    }
+
+    fn scaled(self, k: f64) -> Self {
+        Self {
+            pes: self.pes * k,
+            clock: self.clock * k,
+            io: self.io * k,
+            datapath_other: self.datapath_other * k,
+            weight_buffer: self.weight_buffer * k,
+            softmax: self.softmax * k,
+            output_fifo: self.output_fifo * k,
+            static_other: self.static_other * k,
+            sram: self.sram * k,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.pes
+            + self.clock
+            + self.io
+            + self.datapath_other
+            + self.weight_buffer
+            + self.softmax
+            + self.output_fifo
+            + self.static_other
+            + self.sram
+    }
+
+    /// Average power over `cycles` at `freq_hz`.
+    pub fn avg_power_w(&self, total_cycles: u64, freq_hz: f64) -> f64 {
+        if total_cycles == 0 {
+            return 0.0;
+        }
+        self.total() / (total_cycles as f64 / freq_hz)
+    }
+
+    /// (label, joules, fraction) rows for the Fig. 6 table. The clock
+    /// and I/O rows are merged to match the paper's grouping.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total();
+        let mut rows = vec![
+            ("PEs", self.pes, self.pes / t),
+            ("Clock tree + I/O regs", self.clock + self.io, (self.clock + self.io) / t),
+            ("Datapath other", self.datapath_other, self.datapath_other / t),
+            ("Weight buffer", self.weight_buffer, self.weight_buffer / t),
+            ("Softmax", self.softmax, self.softmax / t),
+            ("Output buffer", self.output_fifo, self.output_fifo / t),
+            ("Static/other", self.static_other, self.static_other / t),
+        ];
+        if self.sram > 0.0 {
+            rows.push(("SRAM", self.sram, self.sram / t));
+        }
+        rows
+    }
+}
+
+/// Energy efficiency in TOPS/W for an activity trace.
+pub fn tops_per_watt(cfg: &ItaConfig, a: &Activity, system: bool) -> f64 {
+    let e = if system {
+        EnergyBreakdown::for_activity_system(cfg, a)
+    } else {
+        EnergyBreakdown::for_activity(cfg, a)
+    };
+    (a.ops() as f64 / 1e12) / e.total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::simulator::{AttentionShape, Simulator};
+
+    fn paper_run() -> (ItaConfig, Activity) {
+        let cfg = ItaConfig::paper();
+        // Large attention workload ≈ the paper's synthetic benchmark.
+        let shape = AttentionShape { s: 256, e: 256, p: 64, h: 4 };
+        let rep = Simulator::new(cfg).simulate_attention(shape);
+        (cfg, rep.activity)
+    }
+
+    #[test]
+    fn calibrated_power_near_60mw() {
+        let (cfg, a) = paper_run();
+        let e = EnergyBreakdown::for_activity(&cfg, &a);
+        let p = e.avg_power_w(a.cycles + a.stall_cycles, cfg.freq_hz);
+        // Paper: 60.5 mW (this workload has no padding; only residual
+        // stall cycles perturb the average).
+        assert!((p - 0.0605).abs() / 0.0605 < 0.06, "power {p} W");
+    }
+
+    #[test]
+    fn breakdown_shares_match_fig6() {
+        let (cfg, a) = paper_run();
+        let e = EnergyBreakdown::for_activity(&cfg, &a);
+        let t = e.total();
+        assert!((e.pes / t - 0.595).abs() < 0.03, "pe share {}", e.pes / t);
+        assert!(((e.clock + e.io) / t - 0.229).abs() < 0.03, "clk+io {}", (e.clock + e.io) / t);
+        assert!((e.weight_buffer / t - 0.017).abs() < 0.006, "wbuf {}", e.weight_buffer / t);
+        assert!((e.softmax / t - 0.014).abs() < 0.006, "softmax {}", e.softmax / t);
+        assert!((e.output_fifo / t - 0.007).abs() < 0.004, "fifo {}", e.output_fifo / t);
+        assert!((e.datapath_other / t - 0.067).abs() < 0.02, "dp {}", e.datapath_other / t);
+    }
+
+    #[test]
+    fn efficiency_near_paper() {
+        let (cfg, a) = paper_run();
+        let eff = tops_per_watt(&cfg, &a, false);
+        // Paper: 16.9 TOPS/W standalone.
+        assert!(eff > 15.5 && eff < 18.0, "standalone {eff} TOPS/W");
+        let eff_sys = tops_per_watt(&cfg, &a, true);
+        // Paper: 8.46 TOPS/W for the system.
+        assert!(eff_sys > 7.6 && eff_sys < 9.3, "system {eff_sys} TOPS/W");
+        assert!(eff_sys < eff);
+    }
+
+    #[test]
+    fn voltage_scaling_quadratic() {
+        let (mut cfg, a) = paper_run();
+        let e0 = EnergyBreakdown::for_activity(&cfg, &a).total();
+        cfg.vdd = 0.46;
+        let e1 = EnergyBreakdown::for_activity(&cfg, &a).total();
+        let want = (0.46f64 / 0.8).powi(2);
+        assert!((e1 / e0 - want).abs() < 1e-9);
+        // §V-E: at 0.46 V ITA standalone ≈ 1.3× more efficient than
+        // Keller et al. INT8 (39.1 TOPS/W): 16.9/(0.46/0.8)² ≈ 51.
+        let eff = tops_per_watt(&cfg, &a, false);
+        assert!(eff > 40.0, "scaled efficiency {eff}");
+    }
+
+    #[test]
+    fn zero_activity_zero_energy() {
+        let cfg = ItaConfig::paper();
+        let e = EnergyBreakdown::for_activity(&cfg, &Activity::default());
+        assert_eq!(e.total(), 0.0);
+        assert_eq!(e.avg_power_w(0, cfg.freq_hz), 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Output FIFO (Fig. 2, right edge).
+//!
+//! "The output FIFO buffers the results temporarily to prevent stalling
+//! the accelerator in case the output cannot be written to the memory
+//! immediately" (§III). The model tracks occupancy against a drain
+//! bandwidth so the simulator can quantify back-pressure stalls and the
+//! Fig. 6 output-buffer energy share.
+
+/// Cycle-level FIFO model with a fixed byte capacity and drain rate.
+#[derive(Debug, Clone)]
+pub struct OutputFifo {
+    /// Capacity in bytes.
+    pub capacity: usize,
+    /// Drain bandwidth in bytes/cycle (memory write port).
+    pub drain_bw: u64,
+    occupancy: u64,
+    last_cycle: u64,
+    /// Statistics.
+    pub bytes_pushed: u64,
+    pub stall_cycles: u64,
+    pub peak_occupancy: u64,
+}
+
+impl OutputFifo {
+    pub fn new(capacity: usize, drain_bw: u64) -> Self {
+        Self {
+            capacity,
+            drain_bw: drain_bw.max(1),
+            occupancy: 0,
+            last_cycle: 0,
+            bytes_pushed: 0,
+            stall_cycles: 0,
+            peak_occupancy: 0,
+        }
+    }
+
+    /// Advance the drain to `cycle`.
+    fn drain_to(&mut self, cycle: u64) {
+        if cycle > self.last_cycle {
+            let drained = (cycle - self.last_cycle) * self.drain_bw;
+            self.occupancy = self.occupancy.saturating_sub(drained);
+            self.last_cycle = cycle;
+        }
+    }
+
+    /// Push `bytes` produced at `cycle`. Returns the cycle at which the
+    /// producer may continue: if the FIFO would overflow, the producer
+    /// stalls until enough bytes drained.
+    pub fn push(&mut self, cycle: u64, bytes: u64) -> u64 {
+        self.drain_to(cycle);
+        self.bytes_pushed += bytes;
+        let mut resume = cycle;
+        if self.occupancy + bytes > self.capacity as u64 {
+            // Stall until occupancy + bytes fits.
+            let need = self.occupancy + bytes - self.capacity as u64;
+            let wait = need.div_ceil(self.drain_bw);
+            resume = cycle + wait;
+            self.stall_cycles += wait;
+            self.drain_to(resume);
+        }
+        self.occupancy += bytes;
+        self.peak_occupancy = self.peak_occupancy.max(self.occupancy);
+        resume
+    }
+
+    /// Cycles after `cycle` until the FIFO is fully drained.
+    pub fn flush_cycles(&mut self, cycle: u64) -> u64 {
+        self.drain_to(cycle);
+        self.occupancy.div_ceil(self.drain_bw)
+    }
+
+    pub fn occupancy_at(&mut self, cycle: u64) -> u64 {
+        self.drain_to(cycle);
+        self.occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_over_time() {
+        let mut f = OutputFifo::new(64, 4);
+        assert_eq!(f.push(0, 32), 0);
+        assert_eq!(f.occupancy_at(4), 16);
+        assert_eq!(f.occupancy_at(8), 0);
+    }
+
+    #[test]
+    fn overflow_stalls_producer() {
+        let mut f = OutputFifo::new(16, 2);
+        assert_eq!(f.push(0, 16), 0); // fills exactly
+        // 8 more bytes need 8/2 = 4 cycles of drain.
+        let resume = f.push(0, 8);
+        assert_eq!(resume, 4);
+        assert_eq!(f.stall_cycles, 4);
+    }
+
+    #[test]
+    fn peak_occupancy_tracked() {
+        let mut f = OutputFifo::new(100, 1);
+        f.push(0, 10);
+        f.push(1, 10);
+        assert_eq!(f.peak_occupancy, 19); // one byte drained at cycle 1
+    }
+
+    #[test]
+    fn flush_accounts_remaining() {
+        let mut f = OutputFifo::new(64, 4);
+        f.push(0, 30);
+        assert_eq!(f.flush_cycles(0), 8); // ceil(30/4)
+        assert_eq!(f.flush_cycles(100), 0);
+    }
+
+    #[test]
+    fn fast_drain_never_stalls() {
+        let mut f = OutputFifo::new(16, 1000);
+        let mut t = 0;
+        for c in 0..100u64 {
+            t = f.push(c, 16);
+            assert_eq!(t, c);
+        }
+        assert_eq!(f.stall_cycles, 0);
+        let _ = t;
+    }
+}

@@ -1,0 +1,219 @@
+//! The ITA accelerator substrate: bit-exact functional datapath,
+//! cycle-accurate simulator, and area/power models.
+//!
+//! Layout mirrors Fig. 2 of the paper:
+//!
+//! * [`pe`] — the N wide dot-product processing engines.
+//! * [`weight_buffer`] — double-buffered weight storage (W1/W2).
+//! * [`softmax`] — the integer streaming softmax module (Fig. 4).
+//! * [`divider`] — the serial dividers used by Denominator Inversion.
+//! * [`requant`] — requantization back to int8 after accumulation.
+//! * [`fifo`] — the output FIFO.
+//! * [`datapath`] — the M×M tile engine tying the above together.
+//! * [`simulator`] — cycle/bandwidth/stall accounting (analytic +
+//!   cycle-exact modes).
+//! * [`area`], [`energy`] — GE-based area and activity-based energy
+//!   models calibrated to the paper's 22FDX implementation (§V).
+
+pub mod area;
+pub mod datapath;
+pub mod divider;
+pub mod energy;
+pub mod fifo;
+pub mod pe;
+pub mod requant;
+pub mod roofline;
+pub mod simulator;
+pub mod softmax;
+pub mod weight_buffer;
+
+use pe::PeConfig;
+
+/// Design-time architecture parameters (paper §III: "N, M, and D are
+/// configured at design time").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItaConfig {
+    /// Number of processing engines.
+    pub n: usize,
+    /// Dot-product width / tile edge (elements).
+    pub m: usize,
+    /// Accumulator precision in bits.
+    pub d: u32,
+    /// Clock frequency in Hz (paper: 500 MHz in 22FDX at 0.8 V).
+    pub freq_hz: f64,
+    /// Supply voltage in volts (for V² power scaling studies, §V-E).
+    pub vdd: f64,
+    /// Number of serial dividers in the softmax module (paper: 2).
+    pub n_dividers: usize,
+    /// Output FIFO capacity in bytes.
+    pub fifo_bytes: usize,
+    /// Memory-side bandwidth in bytes/cycle for each port (weight,
+    /// input, output). The paper's interface sustains N bytes/cycle on
+    /// the weight port and M on the input port.
+    pub weight_bw: u64,
+    pub input_bw: u64,
+    pub output_bw: u64,
+}
+
+impl ItaConfig {
+    /// The paper's evaluated design point: N=16, M=64, D=24,
+    /// 500 MHz @ 0.8 V (§V-A).
+    pub fn paper() -> Self {
+        Self {
+            n: 16,
+            m: 64,
+            d: 24,
+            freq_hz: 500e6,
+            vdd: 0.8,
+            n_dividers: 2,
+            fifo_bytes: 256,
+            weight_bw: 16,
+            input_bw: 64,
+            output_bw: 16,
+        }
+    }
+
+    /// A small configuration for fast exhaustive tests.
+    pub fn tiny() -> Self {
+        Self {
+            n: 2,
+            m: 8,
+            d: 24,
+            freq_hz: 500e6,
+            vdd: 0.8,
+            n_dividers: 2,
+            fifo_bytes: 64,
+            weight_bw: 2,
+            input_bw: 8,
+            output_bw: 2,
+        }
+    }
+
+    pub fn pe_config(&self) -> PeConfig {
+        PeConfig { m: self.m, d: self.d }
+    }
+
+    /// Number of MAC units (paper Table I row: N·M = 1024).
+    pub fn mac_units(&self) -> usize {
+        self.n * self.m
+    }
+
+    /// Peak throughput in ops/s (2 ops per MAC per cycle).
+    pub fn peak_ops(&self) -> f64 {
+        2.0 * self.mac_units() as f64 * self.freq_hz
+    }
+
+    /// Weight-stationary bandwidth requirement in **bits/cycle**
+    /// (paper §III): 8(M + 3N) + 2·N·D.
+    pub fn bw_weight_stationary_bits(&self) -> u64 {
+        8 * (self.m as u64 + 3 * self.n as u64) + 2 * self.n as u64 * self.d as u64
+    }
+
+    /// Output-stationary bandwidth requirement in bits/cycle
+    /// (paper §III): 8(N·M + 3N) + 2·N·D.
+    pub fn bw_output_stationary_bits(&self) -> u64 {
+        8 * (self.n as u64 * self.m as u64 + 3 * self.n as u64)
+            + 2 * self.n as u64 * self.d as u64
+    }
+
+    /// Weight buffer capacity in bytes: 2·N·M (double buffered).
+    pub fn weight_buffer_bytes(&self) -> usize {
+        2 * self.n * self.m
+    }
+}
+
+/// Activity counters: every energy-relevant event the datapath and
+/// simulator produce. The energy model (`energy.rs`) converts these to
+/// joules; the simulator also derives utilization from them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Activity {
+    /// Multiply-accumulate operations executed.
+    pub macs: u64,
+    /// Bytes read from / written to the weight buffer.
+    pub weight_buf_writes: u64,
+    pub weight_buf_reads: u64,
+    /// Input bytes streamed in.
+    pub input_bytes: u64,
+    /// Output bytes produced (post-requant).
+    pub output_bytes: u64,
+    /// Requantization operations.
+    pub requant_ops: u64,
+    /// Softmax element operations (DA absorb + EN normalize).
+    pub softmax_elems: u64,
+    /// Serial divisions performed (DI).
+    pub divisions: u64,
+    /// Total cycles (busy + stall).
+    pub cycles: u64,
+    /// Stall cycles (weight starvation + FIFO backpressure).
+    pub stall_cycles: u64,
+}
+
+impl Activity {
+    pub fn add(&mut self, other: &Activity) {
+        self.macs += other.macs;
+        self.weight_buf_writes += other.weight_buf_writes;
+        self.weight_buf_reads += other.weight_buf_reads;
+        self.input_bytes += other.input_bytes;
+        self.output_bytes += other.output_bytes;
+        self.requant_ops += other.requant_ops;
+        self.softmax_elems += other.softmax_elems;
+        self.divisions += other.divisions;
+        self.cycles += other.cycles;
+        self.stall_cycles += other.stall_cycles;
+    }
+
+    /// Operations (2 per MAC, the accelerator-literature convention).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+
+    /// MAC-array utilization: achieved MACs / (cycles · N·M).
+    pub fn utilization(&self, cfg: &ItaConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.cycles as f64 * cfg.mac_units() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point() {
+        let c = ItaConfig::paper();
+        assert_eq!(c.mac_units(), 1024);
+        // 1.024 TOPS peak (Table I: 1.02 TOPS).
+        assert!((c.peak_ops() - 1.024e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn bandwidth_equations_match_paper() {
+        let c = ItaConfig::paper();
+        // 8(M+3N)+2ND = 8(64+48) + 2*16*24 = 896 + 768 = 1664 bits/cycle.
+        assert_eq!(c.bw_weight_stationary_bits(), 1664);
+        // 8(NM+3N)+2ND = 8(1024+48) + 768 = 9344 bits/cycle.
+        assert_eq!(c.bw_output_stationary_bits(), 9344);
+        // WS is ~5.6x cheaper at the paper's design point.
+        let ratio = c.bw_output_stationary_bits() as f64 / c.bw_weight_stationary_bits() as f64;
+        assert!(ratio > 5.0 && ratio < 6.0);
+    }
+
+    #[test]
+    fn activity_accumulates() {
+        let mut a = Activity { macs: 10, cycles: 5, ..Default::default() };
+        let b = Activity { macs: 6, cycles: 3, stall_cycles: 1, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.macs, 16);
+        assert_eq!(a.cycles, 8);
+        assert_eq!(a.ops(), 32);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let c = ItaConfig::tiny();
+        let a = Activity { macs: (c.mac_units() * 10) as u64, cycles: 10, ..Default::default() };
+        assert!((a.utilization(&c) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,182 @@
+//! Processing engines (PEs): wide dot-product units.
+//!
+//! ITA's PEs are *not* a systolic array — each of the N engines is a
+//! single M-element 8-bit dot-product unit with a maximally deep adder
+//! tree (paper §I), accumulating into D-bit partial sums. D is a design
+//! parameter; the paper selects D = 24, "enough for up to 256-element
+//! dot products" (§V-A): 256·(−128)·(−128) = 2^22 < 2^23.
+//!
+//! This module is the bit-faithful functional model, including the
+//! D-bit saturation-free bound checks the RTL relies on.
+
+/// Design-time PE parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Dot-product width (elements per cycle per PE) — the paper's M.
+    pub m: usize,
+    /// Accumulator width in bits — the paper's D.
+    pub d: u32,
+}
+
+impl PeConfig {
+    pub fn ita_default() -> Self {
+        Self { m: 64, d: 24 }
+    }
+
+    /// Maximum dot-product length that provably cannot overflow the
+    /// signed D-bit accumulator with int8 × int8 products.
+    /// |sum| ≤ len · 128 · 128 ≤ 2^(D−1) − 1  ⇒  len ≤ (2^(D−1)−1) / 2^14.
+    pub fn max_dot_len(&self) -> usize {
+        (((1u64 << (self.d - 1)) - 1) / (128 * 128)) as usize
+    }
+}
+
+/// One PE: M-lane int8 dot product with D-bit accumulation.
+///
+/// `acc_in` models the partial-sum input port (Fig. 2's adders after the
+/// PEs accumulate partial results across the K-dimension tiles).
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub cfg: PeConfig,
+    /// Count of MAC operations performed (drives the energy model).
+    pub mac_count: u64,
+}
+
+impl Pe {
+    pub fn new(cfg: PeConfig) -> Self {
+        Self { cfg, mac_count: 0 }
+    }
+
+    /// Signed int8 · signed int8 dot product of up to M lanes, added to
+    /// the incoming D-bit partial sum. Asserts the D-bit bound — the
+    /// hardware has no saturation here; overflow is a design error.
+    #[inline]
+    pub fn dot_i8(&mut self, a: &[i8], w: &[i8], acc_in: i32) -> i32 {
+        debug_assert_eq!(a.len(), w.len());
+        debug_assert!(a.len() <= self.cfg.m, "input wider than PE ({} > {})", a.len(), self.cfg.m);
+        let mut acc = acc_in;
+        for i in 0..a.len() {
+            acc += a[i] as i32 * w[i] as i32;
+        }
+        self.mac_count += a.len() as u64;
+        self.check_bound(acc);
+        acc
+    }
+
+    /// Unsigned u8 (attention probabilities) · signed int8 (values) dot.
+    #[inline]
+    pub fn dot_u8_i8(&mut self, a: &[u8], w: &[i8], acc_in: i32) -> i32 {
+        debug_assert_eq!(a.len(), w.len());
+        debug_assert!(a.len() <= self.cfg.m);
+        let mut acc = acc_in;
+        for i in 0..a.len() {
+            acc += a[i] as i32 * w[i] as i32;
+        }
+        self.mac_count += a.len() as u64;
+        self.check_bound(acc);
+        acc
+    }
+
+    #[inline(always)]
+    fn check_bound(&self, acc: i32) {
+        let bound = 1i64 << (self.cfg.d - 1);
+        debug_assert!(
+            (acc as i64) < bound && (acc as i64) >= -bound,
+            "D={}-bit accumulator overflow: {acc}",
+            self.cfg.d
+        );
+    }
+}
+
+/// The array of N PEs sharing one input vector (spatial input reuse,
+/// Fig. 3: "shares inputs among N PEs").
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub pes: Vec<Pe>,
+}
+
+impl PeArray {
+    pub fn new(n: usize, cfg: PeConfig) -> Self {
+        Self { pes: vec![Pe::new(cfg); n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// One array step: the shared input vector `a` against N weight
+    /// vectors, each PE adding onto its incoming partial sum.
+    pub fn step_i8(&mut self, a: &[i8], weights: &[&[i8]], acc_in: &mut [i32]) {
+        assert!(weights.len() <= self.pes.len());
+        assert_eq!(weights.len(), acc_in.len());
+        for (i, w) in weights.iter().enumerate() {
+            acc_in[i] = self.pes[i].dot_i8(a, w, acc_in[i]);
+        }
+    }
+
+    /// Total MACs across the array (energy/throughput accounting).
+    pub fn total_macs(&self) -> u64 {
+        self.pes.iter().map(|p| p.mac_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = PeConfig::ita_default();
+        assert_eq!(c.m, 64);
+        assert_eq!(c.d, 24);
+        // D=24 supports up to 256-element dot products minus one corner:
+        // the paper's bound is the practical 2^22 worst case.
+        assert!(c.max_dot_len() >= 256 - 1);
+    }
+
+    #[test]
+    fn dot_known_values() {
+        let mut pe = Pe::new(PeConfig::ita_default());
+        let a = [1i8, -2, 3];
+        let w = [4i8, 5, -6];
+        assert_eq!(pe.dot_i8(&a, &w, 10), 10 + 4 - 10 - 18);
+        assert_eq!(pe.mac_count, 3);
+    }
+
+    #[test]
+    fn array_shares_input() {
+        let mut arr = PeArray::new(2, PeConfig::ita_default());
+        let a = [1i8, 1, 1, 1];
+        let w0 = [1i8, 2, 3, 4];
+        let w1 = [-1i8, -1, -1, -1];
+        let mut acc = [0i32, 100];
+        arr.step_i8(&a, &[&w0, &w1], &mut acc);
+        assert_eq!(acc, [10, 96]);
+        assert_eq!(arr.total_macs(), 8);
+    }
+
+    #[test]
+    fn matches_matmul_reference() {
+        forall("pe vs matmul", 100, |g| {
+            let k = g.usize_in(1, 64);
+            let a = g.i8_vec_exact(k);
+            let w = g.i8_vec_exact(k);
+            let mut pe = Pe::new(PeConfig::ita_default());
+            let got = pe.dot_i8(&a, &w, 0);
+            let want: i32 = a.iter().zip(&w).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "accumulator overflow")]
+    fn overflow_detected() {
+        // Force an accumulation beyond 2^23 with a tiny D.
+        let mut pe = Pe::new(PeConfig { m: 64, d: 8 });
+        let a = [127i8; 8];
+        let w = [127i8; 8];
+        pe.dot_i8(&a, &w, 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Requantization module (`ReQuant` in Fig. 2).
+//!
+//! After each matmul's D-bit accumulation (and the 8-bit bias add), the
+//! result is converted back to int8 with a fixed-point multiply-shift:
+//!
+//! ```text
+//!   y = clip_i8( (acc + bias) * mult  >>  shift )        (round-to-nearest)
+//! ```
+//!
+//! `mult` (u8) and `shift` (u8) encode the combined scale
+//! `ε_in·ε_w / ε_out = mult / 2^shift`, computed offline by the
+//! calibration pass ([`crate::quant`]). This is the standard integer
+//! requantization used by PULP's quantlib flow, which ITA's
+//! quantization-aware training targets; the clipping threshold the
+//! paper mentions (§III) is realized by the saturating clip.
+
+/// Parameters of one requantization stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequantParams {
+    /// Fixed-point multiplier (hardware: 8-bit unsigned).
+    pub mult: u8,
+    /// Right shift amount (hardware: 8-bit unsigned, practically ≤ 31).
+    pub shift: u8,
+}
+
+impl RequantParams {
+    /// Identity-ish requant for tests (mult=1, shift=0).
+    pub fn identity() -> Self {
+        Self { mult: 1, shift: 0 }
+    }
+
+    /// Derive `mult`/`shift` from a real-valued rescale factor
+    /// `target ≈ mult / 2^shift`, maximizing precision within u8 mult.
+    /// Deterministic — mirrored in `python/compile/quant.py`.
+    pub fn from_scale(target: f64) -> Self {
+        assert!(target > 0.0, "rescale factor must be positive");
+        // Find the largest shift such that mult = round(target * 2^shift)
+        // still fits u8 — maximal precision within the 8-bit multiplier.
+        let mut best = Self { mult: 1, shift: 0 };
+        for s in 0..=31u8 {
+            let m = (target * (1u64 << s) as f64).round();
+            if m >= 1.0 && m <= 255.0 {
+                best = Self { mult: m as u8, shift: s };
+            }
+            if m > 255.0 {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Effective real rescale factor.
+    pub fn as_f64(&self) -> f64 {
+        self.mult as f64 / (1u64 << self.shift) as f64
+    }
+
+    /// Requantize one D-bit accumulator value (bias already added).
+    /// Round-to-nearest via the `1 << (shift−1)` offset, then clip.
+    #[inline(always)]
+    pub fn apply(&self, acc: i32) -> i8 {
+        let prod = acc as i64 * self.mult as i64;
+        let rounded = if self.shift == 0 {
+            prod
+        } else {
+            // Arithmetic shift with round-to-nearest (ties away from -inf,
+            // matching the RTL's adder-based rounding).
+            (prod + (1i64 << (self.shift - 1))) >> self.shift
+        };
+        rounded.clamp(i8::MIN as i64, i8::MAX as i64) as i8
+    }
+
+    /// Requantize with bias (the hardware adds the 8-bit bias to the
+    /// D-bit accumulator right before the multiply-shift).
+    #[inline(always)]
+    pub fn apply_biased(&self, acc: i32, bias: i8) -> i8 {
+        self.apply(acc + bias as i32)
+    }
+}
+
+/// Requantize a whole accumulator matrix with a per-output-column bias
+/// vector (one bias per output feature, as the N-byte bias port feeds).
+pub fn requant_mat(
+    acc: &crate::util::mat::MatI32,
+    bias: &[i8],
+    p: RequantParams,
+) -> crate::util::mat::MatI8 {
+    assert_eq!(bias.len(), acc.cols(), "one bias per output column");
+    crate::util::mat::MatI8::from_fn(acc.rows(), acc.cols(), |r, c| {
+        p.apply_biased(acc.get(r, c), bias[c])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::MatI32;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn identity_clips() {
+        let p = RequantParams::identity();
+        assert_eq!(p.apply(5), 5);
+        assert_eq!(p.apply(1000), 127);
+        assert_eq!(p.apply(-1000), -128);
+    }
+
+    #[test]
+    fn rounding_to_nearest() {
+        let p = RequantParams { mult: 1, shift: 1 }; // y = round(x/2)
+        assert_eq!(p.apply(3), 2); // 1.5 rounds up
+        assert_eq!(p.apply(2), 1);
+        assert_eq!(p.apply(-3), -1); // -1.5 -> -1 (ties toward +inf)
+        assert_eq!(p.apply(-4), -2);
+    }
+
+    #[test]
+    fn from_scale_precision() {
+        for target in [0.5, 0.123, 0.01, 0.0007, 1.9] {
+            let p = RequantParams::from_scale(target);
+            let rel = (p.as_f64() - target).abs() / target;
+            assert!(rel < 0.01, "target={target} got={} rel={rel}", p.as_f64());
+        }
+    }
+
+    #[test]
+    fn bias_applied_before_scale() {
+        let p = RequantParams { mult: 1, shift: 2 };
+        // (100 + 20) / 4 = 30
+        assert_eq!(p.apply_biased(100, 20), 30);
+    }
+
+    #[test]
+    fn matrix_requant_per_column_bias() {
+        let acc = MatI32::from_vec(2, 2, vec![100, 200, -100, -200]);
+        let bias = vec![0i8, 56];
+        let out = requant_mat(&acc, &bias, RequantParams { mult: 1, shift: 3 });
+        assert_eq!(out.get(0, 0), 13); // round(100/8) = 12.5 -> 13
+        assert_eq!(out.get(0, 1), 32); // (200+56)/8 = 32
+        assert_eq!(out.get(1, 0), -12); // (-100+0.5*8... ) round(-12.5)=-12
+        assert_eq!(out.get(1, 1), -18); // (-200+56)/8 = -18
+    }
+
+    #[test]
+    fn requant_always_in_i8() {
+        forall("requant range", 300, |g| {
+            let p = RequantParams { mult: g.i8_in(1, 127) as u8, shift: g.usize_in(0, 24) as u8 };
+            let acc = g.u64() as i32 >> g.usize_in(0, 8); // arbitrary i32
+            let y = p.apply(acc);
+            // Clip behaviour: result of the real-valued op, clamped.
+            let real = (acc as f64 * p.as_f64()).round().clamp(-128.0, 127.0);
+            assert!((y as f64 - real).abs() <= 1.0, "acc={acc} p={p:?} y={y} real={real}");
+        });
+    }
+
+    #[test]
+    fn monotone_in_acc() {
+        forall("requant monotone", 200, |g| {
+            let p = RequantParams { mult: g.i8_in(1, 127) as u8, shift: g.usize_in(0, 16) as u8 };
+            let a = g.u64() as i16 as i32;
+            let b = g.u64() as i16 as i32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(p.apply(lo) <= p.apply(hi));
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Roofline analysis of the ITA schedule: per-phase arithmetic
+//! intensity against the machine balance of the port system —
+//! quantifies *why* the weight-stationary dataflow keeps the PE array
+//! fed (paper §III's bandwidth argument, turned into a model).
+//!
+//! Machine model: peak compute = N·M MACs/cycle; the external memory
+//! system sustains `weight_bw + input_bw + output_bw` bytes/cycle.
+//! A phase attains `min(peak, AI × BW)` where AI = MACs per external
+//! byte moved.
+
+use super::simulator::{activity_for_matmul, AttentionShape, MatmulDims};
+use super::ItaConfig;
+use crate::util::table::Table;
+
+/// Roofline numbers for one phase.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseRoofline {
+    pub name: &'static str,
+    /// MACs per externally-moved byte.
+    pub arithmetic_intensity: f64,
+    /// Attainable MACs/cycle under the roofline.
+    pub attainable_macs_per_cycle: f64,
+    /// Achieved (scheduled) MACs/cycle.
+    pub achieved_macs_per_cycle: f64,
+    /// True when the phase is compute-bound (AI ≥ machine balance).
+    pub compute_bound: bool,
+}
+
+/// The machine balance: MACs/cycle per byte/cycle of external traffic.
+pub fn machine_balance(cfg: &ItaConfig) -> f64 {
+    let peak = cfg.mac_units() as f64;
+    let bw = (cfg.weight_bw + cfg.input_bw + cfg.output_bw) as f64;
+    peak / bw
+}
+
+/// Roofline of one matmul phase.
+pub fn phase_roofline(cfg: &ItaConfig, name: &'static str, d: MatmulDims) -> PhaseRoofline {
+    let a = activity_for_matmul(cfg, d, d.useful_macs());
+    // External traffic: inputs + weights (once into the buffer) +
+    // outputs. Weight-buffer *reads* are internal (the whole point of
+    // the buffer).
+    let ext_bytes = (a.input_bytes + a.weight_buf_writes + a.output_bytes) as f64;
+    let ai = a.macs as f64 / ext_bytes;
+    let bw = (cfg.weight_bw + cfg.input_bw + cfg.output_bw) as f64;
+    let peak = cfg.mac_units() as f64;
+    let attainable = (ai * bw).min(peak);
+    let achieved = a.macs as f64 / a.cycles as f64;
+    PhaseRoofline {
+        name,
+        arithmetic_intensity: ai,
+        attainable_macs_per_cycle: attainable,
+        achieved_macs_per_cycle: achieved,
+        compute_bound: ai >= machine_balance(cfg),
+    }
+}
+
+/// Roofline table over all phases of an attention workload.
+pub fn attention_roofline(cfg: &ItaConfig, shape: AttentionShape) -> Vec<PhaseRoofline> {
+    shape
+        .phases()
+        .into_iter()
+        .map(|(name, d, _reps)| phase_roofline(cfg, name, d))
+        .collect()
+}
+
+/// Render as a table.
+pub fn roofline_table(cfg: &ItaConfig, shape: AttentionShape) -> Table {
+    let mut t = Table::new(format!(
+        "Roofline (machine balance {:.1} MAC/B, peak {} MAC/cy)",
+        machine_balance(cfg),
+        cfg.mac_units()
+    )
+    .as_str())
+    .header(&["phase", "AI [MAC/B]", "attainable [MAC/cy]", "achieved [MAC/cy]", "bound"]);
+    for r in attention_roofline(cfg, shape) {
+        t.row(&[
+            r.name.into(),
+            format!("{:.1}", r.arithmetic_intensity),
+            format!("{:.0}", r.attainable_macs_per_cycle),
+            format!("{:.0}", r.achieved_macs_per_cycle),
+            if r.compute_bound { "compute".into() } else { "memory".into() },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_phases_are_compute_bound() {
+        // The weight-stationary design exists to make every phase
+        // compute-bound at the paper's port widths.
+        let cfg = ItaConfig::paper();
+        let shape = AttentionShape { s: 256, e: 256, p: 64, h: 4 };
+        for r in attention_roofline(&cfg, shape) {
+            assert!(r.compute_bound, "{} became memory-bound", r.name);
+            assert!(r.achieved_macs_per_cycle <= cfg.mac_units() as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn starved_ports_flip_to_memory_bound() {
+        let mut cfg = ItaConfig::paper();
+        cfg.input_bw = 2;
+        cfg.weight_bw = 2;
+        cfg.output_bw = 2;
+        let r = phase_roofline(&cfg, "Q", MatmulDims { r: 256, k: 256, c: 64 });
+        assert!(!r.compute_bound, "should be memory-bound at 6 B/cycle");
+        assert!(r.attainable_macs_per_cycle < cfg.mac_units() as f64);
+    }
+
+    #[test]
+    fn achieved_never_exceeds_attainable_when_memory_bound() {
+        // The schedule model and the roofline must be consistent: a
+        // memory-bound phase's achieved rate (with stalls charged)
+        // cannot exceed the roofline.
+        let mut cfg = ItaConfig::paper();
+        cfg.weight_bw = 4;
+        let d = MatmulDims { r: 128, k: 128, c: 128 };
+        let r = phase_roofline(&cfg, "Q", d);
+        let (busy, stalls) =
+            super::super::simulator::Simulator::new(cfg).matmul_cycle_exact(d);
+        let achieved_with_stalls = d.useful_macs() as f64 / (busy + stalls) as f64;
+        assert!(
+            achieved_with_stalls <= r.attainable_macs_per_cycle * 1.05,
+            "cycle-exact {achieved_with_stalls} > roofline {}",
+            r.attainable_macs_per_cycle
+        );
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = roofline_table(&ItaConfig::paper(), AttentionShape::compact());
+        let s = t.render();
+        assert!(s.contains("QK^T") && s.contains("compute"));
+    }
+}

@@ -1,0 +1,409 @@
+//! Cycle and bandwidth model of the ITA schedule (Fig. 3).
+//!
+//! Two modes, cross-checked against each other in tests:
+//!
+//! * **Analytic** — closed-form cycle counts from the tile schedule:
+//!   a matmul of (R×K)·(K×C) runs in `⌈R/M⌉·⌈K/M⌉·⌈C/N⌉·M` cycles
+//!   (each (row-tile, depth-tile, column-group) triple keeps the PE
+//!   array busy for M cycles), plus pipeline prologue and bandwidth
+//!   stalls.
+//! * **Cycle-exact** — walks every weight-set fill, FIFO push and
+//!   serial-divider request through the component models
+//!   ([`WeightBuffer`], [`OutputFifo`], [`DividerBank`]) and counts
+//!   stalls as they happen.
+//!
+//! The Denominator-Inversion overlap claim of the paper (§IV: two
+//! serial dividers "without causing any stalls") is *checked*, not
+//! assumed: the DI/EN timing is modeled explicitly and any shortfall
+//! shows up as `di_stall_cycles` (see EXPERIMENTS.md for the finding).
+
+use super::divider::DividerBank;
+use super::fifo::OutputFifo;
+use super::weight_buffer::WeightBuffer;
+use super::{Activity, ItaConfig};
+
+/// `⌈x / t⌉` — number of tiles covering extent `x`.
+pub fn tiles_ceil(x: usize, t: usize) -> usize {
+    x.div_ceil(t)
+}
+
+/// One matmul's dimensions: (R×K) · (K×C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatmulDims {
+    pub r: usize,
+    pub k: usize,
+    pub c: usize,
+}
+
+impl MatmulDims {
+    pub fn useful_macs(&self) -> u64 {
+        (self.r * self.k * self.c) as u64
+    }
+}
+
+/// Port-level activity of one tiled matmul (shared by the functional
+/// engine and the simulator so the two can never diverge).
+pub fn activity_for_matmul(cfg: &ItaConfig, d: MatmulDims, useful_macs: u64) -> Activity {
+    let (n, m) = (cfg.n as u64, cfg.m as u64);
+    let rp = tiles_ceil(d.r, cfg.m) as u64 * m;
+    let kp = tiles_ceil(d.k, cfg.m) as u64 * m;
+    let cp = tiles_ceil(d.c, cfg.n) as u64 * n;
+    let cycles = rp * kp * cp / (n * m);
+    Activity {
+        macs: useful_macs,
+        cycles,
+        input_bytes: cycles * m,
+        weight_buf_writes: kp * cp,
+        weight_buf_reads: cycles * n * m,
+        output_bytes: rp * cp,
+        requant_ops: rp * cp,
+        ..Default::default()
+    }
+}
+
+/// Analytic compute cycles of one matmul (no stalls).
+pub fn matmul_cycles(cfg: &ItaConfig, d: MatmulDims) -> u64 {
+    activity_for_matmul(cfg, d, 0).cycles
+}
+
+/// Analytic stall estimate for one matmul: weight-port prologue plus
+/// steady-state shortfall when `weight_bw < N` bytes/cycle, plus output
+/// back-pressure when `output_bw < N` during output-producing cycles.
+pub fn matmul_stalls(cfg: &ItaConfig, d: MatmulDims) -> u64 {
+    let (n, m) = (cfg.n as u64, cfg.m as u64);
+    let rt = tiles_ceil(d.r, cfg.m) as u64;
+    let kt = tiles_ceil(d.k, cfg.m) as u64;
+    let cg = tiles_ceil(d.c, cfg.n) as u64;
+    let fill = (n * m).div_ceil(cfg.weight_bw.max(1));
+    // Prologue: the very first weight set cannot be hidden.
+    let mut stalls = fill;
+    // Steady state: each of the remaining rt*kt*cg−1 sets overlaps an
+    // M-cycle compute window.
+    let sets = rt * kt * cg;
+    stalls += (sets - 1) * fill.saturating_sub(m);
+    // Output: N bytes/cycle during the last depth-tile of each column
+    // group; shortfall accumulates if the port is narrower.
+    if cfg.output_bw < n {
+        let out_cycles = rt * cg * m; // cycles that produce outputs
+        stalls += out_cycles * (n - cfg.output_bw) / cfg.output_bw.max(1);
+    }
+    stalls
+}
+
+/// Multi-head attention workload shape (Fig. 1): sequence length S,
+/// embedding E, projection P, heads H.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttentionShape {
+    pub s: usize,
+    pub e: usize,
+    pub p: usize,
+    pub h: usize,
+}
+
+impl AttentionShape {
+    /// The paper's synthetic benchmark shape is not given explicitly;
+    /// compact-transformer-class models (§V-A "targeted compact
+    /// models") use S=64..256, E=128..256, P=64, H=2..4. Default used
+    /// in our experiments:
+    pub fn compact() -> Self {
+        Self { s: 64, e: 128, p: 64, h: 2 }
+    }
+
+    /// All matmuls of one multi-head attention block, with repetition
+    /// counts: (phase name, dims, repeats).
+    pub fn phases(&self) -> Vec<(&'static str, MatmulDims, usize)> {
+        let &Self { s, e, p, h } = self;
+        vec![
+            ("Q", MatmulDims { r: s, k: e, c: p }, h),
+            ("K", MatmulDims { r: s, k: e, c: p }, h),
+            ("V", MatmulDims { r: s, k: e, c: p }, h),
+            ("QK^T", MatmulDims { r: s, k: p, c: s }, h),
+            ("AV", MatmulDims { r: s, k: s, c: p }, h),
+            ("OW", MatmulDims { r: s, k: h * p, c: e }, 1),
+        ]
+    }
+
+    /// Useful MACs of the whole attention block.
+    pub fn total_macs(&self) -> u64 {
+        self.phases()
+            .iter()
+            .map(|(_, d, reps)| d.useful_macs() * *reps as u64)
+            .sum()
+    }
+
+    /// Operations (2 per MAC).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+}
+
+/// Per-phase simulation results.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub name: &'static str,
+    pub cycles: u64,
+    pub stall_cycles: u64,
+    pub macs: u64,
+}
+
+/// Whole-workload simulation result.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cfg: ItaConfig,
+    pub phases: Vec<PhaseReport>,
+    pub activity: Activity,
+    /// Softmax DI-induced stalls (checked, not assumed — see module doc).
+    pub di_stall_cycles: u64,
+}
+
+impl SimReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.activity.cycles + self.activity.stall_cycles
+    }
+
+    pub fn runtime_s(&self) -> f64 {
+        self.total_cycles() as f64 / self.cfg.freq_hz
+    }
+
+    /// Achieved throughput in ops/s over the simulated workload.
+    pub fn achieved_ops(&self) -> f64 {
+        self.activity.ops() as f64 / self.runtime_s()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.achieved_ops() / self.cfg.peak_ops()
+    }
+}
+
+/// The schedule simulator.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub cfg: ItaConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: ItaConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// DI/EN overlap check for one fused QKᵀ→AV row block of `rows`
+    /// rows (≤ M): returns the stall cycles the serial dividers add
+    /// before/while A·V consumes the block.
+    ///
+    /// Timing model (see module doc):
+    /// * denominator of block row `r` completes at `r − rows` relative
+    ///   to the end of the block's QKᵀ (one row per cycle during the
+    ///   final column group);
+    /// * A·V loads row groups of N (EN at weight-buffer load): group
+    ///   `g` is needed `g · group_cycles` after AV start.
+    pub fn di_stalls_for_block(&self, rows: usize, s: usize, p: usize) -> u64 {
+        let cfg = &self.cfg;
+        let mut bank = DividerBank::new(cfg.n_dividers);
+        let kt = tiles_ceil(s, cfg.m) as u64;
+        let cg = tiles_ceil(p, cfg.n) as u64;
+        let group_cycles = kt * cg * cfg.m as u64 / (rows as u64).div_ceil(cfg.n as u64).max(1);
+        // AV start = 0; denominators complete during the preceding
+        // cycles (negative times clamped via offset).
+        let offset = rows as u64;
+        let mut stall = 0u64;
+        let mut ready_group = vec![0u64; rows.div_ceil(cfg.n)];
+        for r in 0..rows {
+            let issue = offset + r as u64 - rows as u64; // = r
+            let done = bank.issue(issue);
+            let g = r / cfg.n;
+            ready_group[g] = ready_group[g].max(done);
+        }
+        for (g, &ready) in ready_group.iter().enumerate() {
+            let needed = offset + g as u64 * group_cycles;
+            stall += ready.saturating_sub(needed);
+        }
+        stall
+    }
+
+    /// Analytic simulation of a full multi-head attention block.
+    pub fn simulate_attention(&self, shape: AttentionShape) -> SimReport {
+        let mut phases = Vec::new();
+        let mut activity = Activity::default();
+        for (name, d, reps) in shape.phases() {
+            let mut a = activity_for_matmul(&self.cfg, d, d.useful_macs());
+            let stalls = matmul_stalls(&self.cfg, d);
+            a.stall_cycles += stalls;
+            let mut phase = PhaseReport {
+                name,
+                cycles: a.cycles * reps as u64,
+                stall_cycles: a.stall_cycles * reps as u64,
+                macs: a.macs * reps as u64,
+            };
+            // Softmax activity rides on the QKᵀ/AV phases.
+            if name == "QK^T" {
+                a.softmax_elems += (shape.s * shape.s) as u64;
+            }
+            if name == "AV" {
+                a.softmax_elems += (shape.s * shape.s) as u64;
+                a.divisions += shape.s as u64;
+            }
+            for _ in 0..reps {
+                activity.add(&a);
+            }
+            if name == "AV" {
+                // DI overlap check per row block, per head.
+                let blocks = tiles_ceil(shape.s, self.cfg.m);
+                let mut di = 0u64;
+                for b in 0..blocks {
+                    let rows = (shape.s - b * self.cfg.m).min(self.cfg.m);
+                    di += self.di_stalls_for_block(rows, shape.s, shape.p);
+                }
+                phase.stall_cycles += di * reps as u64;
+                activity.stall_cycles += di * reps as u64;
+            }
+            phases.push(phase);
+        }
+        let di_stall_cycles = phases
+            .iter()
+            .filter(|p| p.name == "AV")
+            .map(|p| p.stall_cycles)
+            .sum::<u64>()
+            .saturating_sub(
+                shape.h as u64 * matmul_stalls(&self.cfg, shape.phases()[4].1),
+            );
+        SimReport { cfg: self.cfg, phases, activity, di_stall_cycles }
+    }
+
+    /// Cycle-exact matmul walk: every weight-set fill goes through the
+    /// [`WeightBuffer`], every output through the [`OutputFifo`].
+    /// Returns (busy_cycles, stall_cycles).
+    pub fn matmul_cycle_exact(&self, d: MatmulDims) -> (u64, u64) {
+        let cfg = &self.cfg;
+        let (n, m) = (cfg.n, cfg.m);
+        let mut wb = WeightBuffer::new(n, m);
+        let mut fifo = OutputFifo::new(cfg.fifo_bytes, cfg.output_bw);
+        let rt = tiles_ceil(d.r, m);
+        let kt = tiles_ceil(d.k, m);
+        let cg = tiles_ceil(d.c, n);
+        let dummy_weights: Vec<Vec<i8>> = vec![vec![0i8; m]; n];
+        let mut now = 0u64;
+        let mut busy = 0u64;
+        // Prime the first weight set.
+        wb.start_fill(&dummy_weights, now, cfg.weight_bw);
+        for _row_tile in 0..rt {
+            for _grp in 0..cg {
+                for kt_i in 0..kt {
+                    // Swap onto the freshly filled set (stall if late).
+                    now = wb.swap(now);
+                    // Prefetch the next set while computing this one.
+                    wb.start_fill(&dummy_weights, now, cfg.weight_bw);
+                    // M cycles of compute on this set; on the last depth
+                    // tile each cycle also pushes N output bytes.
+                    if kt_i == kt - 1 {
+                        for _ in 0..m {
+                            now += 1;
+                            busy += 1;
+                            now = fifo.push(now, n as u64);
+                        }
+                    } else {
+                        now += m as u64;
+                        busy += m as u64;
+                    }
+                }
+            }
+        }
+        now += fifo.flush_cycles(now);
+        let stalls = now - busy;
+        (busy, stalls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn tiles_ceil_basics() {
+        assert_eq!(tiles_ceil(64, 64), 1);
+        assert_eq!(tiles_ceil(65, 64), 2);
+        assert_eq!(tiles_ceil(1, 64), 1);
+    }
+
+    #[test]
+    fn paper_attention_cycles() {
+        // At the paper design point, a (64,64,64) matmul runs in
+        // 64·64·64/(16·64) = 256 cycles.
+        let cfg = ItaConfig::paper();
+        let c = matmul_cycles(&cfg, MatmulDims { r: 64, k: 64, c: 64 });
+        assert_eq!(c, 256);
+    }
+
+    #[test]
+    fn analytic_matches_cycle_exact_busy() {
+        forall("analytic == exact busy cycles", 40, |g| {
+            let cfg = ItaConfig::paper();
+            let d = MatmulDims {
+                r: g.usize_in(1, 200),
+                k: g.usize_in(1, 200),
+                c: g.usize_in(1, 200),
+            };
+            let analytic = matmul_cycles(&cfg, d);
+            let (busy, _) = Simulator::new(cfg).matmul_cycle_exact(d);
+            assert_eq!(busy, analytic, "dims {d:?}");
+        });
+    }
+
+    #[test]
+    fn balanced_bandwidth_no_steady_stalls() {
+        // weight_bw = N ⇒ fills exactly hide under M-cycle compute:
+        // only the prologue fill remains.
+        let cfg = ItaConfig::paper();
+        let d = MatmulDims { r: 128, k: 128, c: 128 };
+        let (_, stalls) = Simulator::new(cfg).matmul_cycle_exact(d);
+        let fill = (cfg.n * cfg.m) as u64 / cfg.weight_bw;
+        // Prologue + final FIFO flush only.
+        assert!(stalls <= fill + (cfg.n as u64 * cfg.m as u64) / cfg.output_bw,
+                "stalls={stalls}");
+    }
+
+    #[test]
+    fn halved_weight_bw_stalls() {
+        let mut cfg = ItaConfig::paper();
+        cfg.weight_bw = cfg.n as u64 / 2; // starve the weight port
+        let d = MatmulDims { r: 128, k: 128, c: 128 };
+        let (busy, stalls) = Simulator::new(cfg).matmul_cycle_exact(d);
+        // Each set now takes 2M to fill vs M to compute: ~100% overhead.
+        assert!(stalls as f64 > 0.8 * busy as f64, "busy={busy} stalls={stalls}");
+    }
+
+    #[test]
+    fn attention_report_consistency() {
+        let cfg = ItaConfig::paper();
+        let shape = AttentionShape::compact();
+        let rep = Simulator::new(cfg).simulate_attention(shape);
+        assert_eq!(rep.phases.len(), 6);
+        assert_eq!(rep.activity.macs, shape.total_macs());
+        assert!(rep.utilization() > 0.3 && rep.utilization() <= 1.0,
+                "util={}", rep.utilization());
+        // Phase cycles sum to activity cycles.
+        let sum: u64 = rep.phases.iter().map(|p| p.cycles).sum();
+        assert_eq!(sum, rep.activity.cycles);
+    }
+
+    #[test]
+    fn di_stall_check_responds_to_divider_count() {
+        let cfg = ItaConfig::paper();
+        let sim = Simulator::new(cfg);
+        let base = sim.di_stalls_for_block(64, 64, 64);
+        let mut many = cfg;
+        many.n_dividers = 64;
+        let none = Simulator::new(many).di_stalls_for_block(64, 64, 64);
+        assert!(none <= base, "more dividers cannot stall more");
+        assert_eq!(none, 0, "64 dividers must eliminate DI stalls");
+    }
+
+    #[test]
+    fn bigger_s_longer_runtime() {
+        let cfg = ItaConfig::paper();
+        let sim = Simulator::new(cfg);
+        let small = sim.simulate_attention(AttentionShape { s: 64, e: 128, p: 64, h: 2 });
+        let large = sim.simulate_attention(AttentionShape { s: 256, e: 128, p: 64, h: 2 });
+        assert!(large.total_cycles() > 2 * small.total_cycles());
+    }
+}

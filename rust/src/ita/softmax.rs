@@ -1,0 +1,464 @@
+//! ITA's integer streaming softmax (paper §IV) — bit-exact functional
+//! model of the hardware datapath in Fig. 4.
+//!
+//! # The algorithm
+//!
+//! With B-bit quantization (B = 8) and the paper's maximum meaningful
+//! scaling factor ε = B / (2^B · log2 e), the softmax exponent becomes a
+//! pure right shift (Eq. 2–4):
+//!
+//! ```text
+//!   e^(ε·(x_q − max)) = 2^((x_q − max) · B/2^B) = 2^(−((max − x_q) >> 5))
+//! ```
+//!
+//! since B − log2 B = 5 for B = 8: the shift amount is simply the top 3
+//! bits of the 8-bit difference `max − x_q`. The module then works in
+//! three overlapped phases (Fig. 3):
+//!
+//! * **DA — Denominator Accumulation**: streaming over row *parts* of up
+//!   to M elements (the column stripes of a tile as Q·Kᵀ produces them),
+//!   keep a running per-row maximum (`MAX` buffer) and the accumulated
+//!   denominator (`Σ` buffer). Each element contributes
+//!   `2^(7 − shift)` — the 2^7 scaling prevents underflow and keeps the
+//!   accumulation within the paper's 15-bit range for rows up to 256
+//!   elements. When a later part raises the maximum by Δ, the previous
+//!   partial sum is renormalized with a single shift `Σ >>= Δ >> 5`.
+//! * **DI — Denominator Inversion**: once a row's denominator is
+//!   complete, a serial divider computes `Σ_inv = 2^22 / Σ` (16-bit
+//!   result; Σ ∈ [2^7, 2^15] ⇒ Σ_inv ∈ [2^7, 2^15]).
+//! * **EN — Element Normalization**: when the attention row streams back
+//!   in for A·V, each probability is produced with one more shift:
+//!   `a_i = Σ_inv >> (((max − x_i) >> 5) + 7)`, yielding an unsigned
+//!   8-bit probability with scale 2^−8.
+//!
+//! No multiplier, no exponential unit, no floating point — exactly the
+//! paper's datapath. The same arithmetic is mirrored in the Pallas
+//! kernel (`python/compile/kernels/ita_softmax.py`); the cross-layer
+//! tests assert bit-identical outputs.
+
+/// Quantization bit-width B. The architecture fixes B = 8; the shift
+/// amount `B - log2(B)` is then the constant 5 and the hardware takes
+/// the top 3 bits of the difference instead of using a programmable
+/// shifter (paper §IV).
+pub const B: u32 = 8;
+/// `B - log2(B)` = 5 for B = 8.
+pub const SHIFT: u32 = B - B.trailing_zeros() - 0; // 8 - 3 = 5
+/// Scaling exponent of each denominator term: terms are 2^(7 - s).
+pub const TERM_SCALE: u32 = 7;
+/// Numerator of the serial division: Σ_inv = 2^DIV_NUM_LOG2 / Σ.
+/// Chosen so Σ_inv fits 16 bits (paper: "inversion ... 16-bit") and the
+/// normalized output has 8 fractional bits after the EN shift.
+pub const DIV_NUM_LOG2: u32 = 22;
+/// Output probability scale: probabilities are uint8 with scale 2^-8.
+pub const PROB_BITS: u32 = 8;
+
+/// The paper's maximum meaningful scaling factor
+/// ε = B / (2^B · log2 e) ≈ 0.021661 for B = 8 (paper Eq. before (3)).
+pub fn epsilon_max() -> f64 {
+    B as f64 / ((1u64 << B) as f64 * std::f64::consts::LOG2_E)
+}
+
+/// 3-bit shift amount for one element: top 3 bits of the 8-bit
+/// difference `max − x` (both int8, difference in [0, 255]).
+#[inline(always)]
+pub fn shift_of(max: i8, x: i8) -> u32 {
+    debug_assert!(max >= x);
+    let diff = (max as i16 - x as i16) as u16; // 0..=255
+    (diff >> SHIFT) as u32 // 0..=7
+}
+
+/// Per-row streaming state: one entry of the hardware's `MAX` and `Σ`
+/// buffers (M entries each — one per row of the current tile stripe).
+#[derive(Debug, Clone, Copy)]
+pub struct RowState {
+    /// Running maximum of the row seen so far (`MAX` buffer entry).
+    pub max: i8,
+    /// Accumulated scaled denominator (`Σ` buffer entry). Semantically
+    /// 15-bit in hardware; u32 here with a debug bound check.
+    pub sum: u32,
+    /// Inverted denominator after DI (`Σ` buffer is reused in hardware;
+    /// kept separate here for clarity).
+    pub inv: u16,
+    /// Number of elements absorbed (for the 15-bit bound check).
+    pub count: u32,
+    /// Phase flag: DI has run.
+    pub inverted: bool,
+}
+
+impl Default for RowState {
+    fn default() -> Self {
+        Self { max: i8::MIN, sum: 0, inv: 0, count: 0, inverted: false }
+    }
+}
+
+impl RowState {
+    /// **DA step**: absorb the next part (stripe) of the row.
+    ///
+    /// Mirrors the hardware exactly: find the part's local maximum,
+    /// renormalize the accumulated sum if the global maximum grew, then
+    /// accumulate `2^(7 − shift)` per element.
+    pub fn accumulate(&mut self, part: &[i8]) {
+        if part.is_empty() {
+            return;
+        }
+        let local_max = part.iter().copied().max().unwrap();
+        if local_max > self.max {
+            if self.count > 0 {
+                // Single-shift renormalization of the old partial sum —
+                // this is the approximation the streaming hardware makes
+                // (Δ is quantized to a 3-bit shift like everything else).
+                let delta = (local_max as i16 - self.max as i16) as u16;
+                let s = (delta >> SHIFT) as u32;
+                self.sum >>= s.min(31);
+            }
+            self.max = local_max;
+        }
+        for &x in part {
+            let s = shift_of(self.max, x);
+            self.sum += 1u32 << (TERM_SCALE - s.min(TERM_SCALE));
+        }
+        self.count += part.len() as u32;
+        // Paper: accumulation is performed in 15-bit format. With terms
+        // ≤ 2^7 and rows ≤ 256 elements the bound Σ ≤ 2^15 holds.
+        debug_assert!(
+            self.count > 256 || self.sum <= (1 << 15),
+            "15-bit Σ bound violated: sum={} count={}",
+            self.sum,
+            self.count
+        );
+    }
+
+    /// **DI step**: invert the accumulated denominator
+    /// (`Σ_inv = 2^22 / Σ`, the job of the two serial dividers).
+    pub fn invert(&mut self) {
+        debug_assert!(self.count > 0, "DI before any DA");
+        let sum = self.sum.max(1);
+        let inv = (1u32 << DIV_NUM_LOG2) / sum;
+        // Σ ≥ 2^7 (the max element always contributes 2^7), so
+        // inv ≤ 2^15: fits the 16-bit serial divider output.
+        self.inv = inv.min(u16::MAX as u32) as u16;
+        self.inverted = true;
+    }
+
+    /// **EN step**: normalize one element of the row into a uint8
+    /// probability with scale 2^−8.
+    #[inline]
+    pub fn normalize(&self, x: i8) -> u8 {
+        debug_assert!(self.inverted, "EN before DI");
+        let s = shift_of(self.max, x);
+        // inv ≈ 2^22/Σ; element weight 2^-s; output scale 2^-8:
+        //   p·2^8 = (2^22/Σ)·2^-s·2^-(22-7-8-?) … worked out:
+        //   p_i = 2^(7-s)/Σ  ⇒  p_i·2^8 = 2^(15-s)/Σ = inv >> (s + 7).
+        let v = (self.inv as u32) >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS));
+        v.min(u8::MAX as u32) as u8
+    }
+}
+
+/// Softmax module state for one M×M tile stripe: `M` parallel row
+/// states — the hardware's `MAX` and `Σ` buffers hold exactly M entries
+/// (paper §IV: "Both maximum and sum buffers contain M elements").
+#[derive(Debug, Clone)]
+pub struct SoftmaxUnit {
+    pub rows: Vec<RowState>,
+}
+
+impl SoftmaxUnit {
+    pub fn new(m: usize) -> Self {
+        Self { rows: vec![RowState::default(); m] }
+    }
+
+    pub fn reset(&mut self) {
+        for r in &mut self.rows {
+            *r = RowState::default();
+        }
+    }
+
+    /// DA over a stripe: `parts[r]` is the next slice of row `r`.
+    pub fn accumulate_stripe(&mut self, parts: &[&[i8]]) {
+        assert!(parts.len() <= self.rows.len(), "stripe wider than MAX/Σ buffers");
+        for (r, part) in parts.iter().enumerate() {
+            self.rows[r].accumulate(part);
+        }
+    }
+
+    /// DI for all rows (in hardware this overlaps DA of the next tile;
+    /// the cycle model accounts for the serial dividers separately).
+    pub fn invert_all(&mut self) {
+        for r in &mut self.rows {
+            if r.count > 0 {
+                r.invert();
+            }
+        }
+    }
+}
+
+/// One-shot reference entry point: softmax over a full row of int8
+/// logits streamed in parts of `part` elements. This is what the tests
+/// compare against the float oracle and the Pallas kernel.
+pub fn ita_softmax_row(x: &[i8], part: usize) -> Vec<u8> {
+    assert!(part > 0);
+    let mut st = RowState::default();
+    for chunk in x.chunks(part) {
+        st.accumulate(chunk);
+    }
+    st.invert();
+    x.iter().map(|&v| st.normalize(v)).collect()
+}
+
+/// Masked streaming softmax (decoder support, paper §II-A: "In
+/// decoders, the inputs are slightly modified but the attention
+/// mechanism remains the same"). Only the first `valid` elements
+/// participate; masked positions output probability 0.
+///
+/// Chunk boundaries stay *absolute* (the hardware streams fixed M-wide
+/// stripes and gates masked lanes), which keeps this bit-identical to
+/// the vectorized Pallas/jnp mirror.
+pub fn ita_softmax_row_masked(x: &[i8], part: usize, valid: usize) -> Vec<u8> {
+    assert!(part > 0);
+    let valid = valid.min(x.len());
+    if valid == 0 {
+        return vec![0; x.len()];
+    }
+    let mut st = RowState::default();
+    for (ci, chunk) in x.chunks(part).enumerate() {
+        let c0 = ci * part;
+        if c0 >= valid {
+            break; // fully masked stripe: the hardware gates it off
+        }
+        let w = (valid - c0).min(chunk.len());
+        st.accumulate(&chunk[..w]);
+    }
+    st.invert();
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| if i < valid { st.normalize(v) } else { 0 })
+        .collect()
+}
+
+/// Full-matrix convenience: row-wise ITA softmax with streaming width
+/// `part` (use `part = x.cols()` for single-pass).
+pub fn ita_softmax_rows(x: &crate::util::mat::MatI8, part: usize) -> crate::util::mat::MatU8 {
+    let mut out = crate::util::mat::MatU8::zeros(x.rows(), x.cols());
+    for r in 0..x.rows() {
+        let row = ita_softmax_row(x.row(r), part);
+        out.row_mut(r).copy_from_slice(&row);
+    }
+    out
+}
+
+/// Dequantize an ITA probability row to f64 (scale 2^−8).
+pub fn dequantize_probs(p: &[u8]) -> Vec<f64> {
+    p.iter().map(|&v| v as f64 / (1u32 << PROB_BITS) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::float_softmax::softmax_f64;
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::mae;
+
+    #[test]
+    fn constants_match_paper() {
+        assert_eq!(SHIFT, 5);
+        // ε = B/(2^B·log2 e) ≈ 0.0217
+        assert!((epsilon_max() - 0.021660849392498291).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shift_is_top_3_bits() {
+        assert_eq!(shift_of(127, 127), 0);
+        assert_eq!(shift_of(127, 96), 0); // diff 31 -> 0
+        assert_eq!(shift_of(127, 95), 1); // diff 32 -> 1
+        assert_eq!(shift_of(127, -128), 7); // diff 255 -> 7
+    }
+
+    #[test]
+    fn uniform_row_is_uniform() {
+        // All-equal logits: each probability should be ~1/n.
+        for n in [4usize, 16, 64, 256] {
+            let x = vec![10i8; n];
+            let p = ita_softmax_row(&x, 64);
+            let got = p[0] as f64 / 256.0;
+            let want = 1.0 / n as f64;
+            assert!(
+                (got - want).abs() <= want * 0.05 + 1.0 / 256.0,
+                "n={n} got={got} want={want}"
+            );
+            // All entries identical.
+            assert!(p.iter().all(|&v| v == p[0]));
+        }
+    }
+
+    #[test]
+    fn one_hot_row_dominates() {
+        // A single dominant logit. NOTE: with the paper's clipped range
+        // (ε_max ⇒ logits ∈ [−2.77, 2.75]) even the float softmax only
+        // reaches ~0.8 here; the integer version must agree in shape:
+        // dominant element large, the rest at the 2^−14-scale floor.
+        let mut x = vec![-128i8; 64];
+        x[7] = 127;
+        let p = ita_softmax_row(&x, 16);
+        assert!(p[7] >= 150, "max prob {}", p[7]);
+        for (i, &v) in p.iter().enumerate() {
+            if i != 7 {
+                assert!(v <= 2, "index {i} -> {v}");
+            }
+        }
+        // Cross-check the dominant probability against float softmax of
+        // the dequantized logits (within quantization slack).
+        let eps = epsilon_max();
+        let xf: Vec<f64> = x.iter().map(|&v| v as f64 * eps).collect();
+        let pf = softmax_f64(&xf);
+        assert!((p[7] as f64 / 256.0 - pf[7]).abs() < 0.15);
+    }
+
+    #[test]
+    fn streaming_invariant_to_part_size() {
+        // Bit-exact agreement across streaming widths when the global
+        // max is in the first part (no renormalization path).
+        let mut rng = SplitMix64::new(123);
+        for _ in 0..50 {
+            let mut x = rng.vec_i8(96);
+            // Force max into the first element so that it is in the
+            // first chunk for EVERY part size (no renormalization path):
+            x[0] = 127;
+            let full = ita_softmax_row(&x, 96);
+            for part in [1usize, 7, 16, 64] {
+                assert_eq!(ita_softmax_row(&x, part), full, "part={part}");
+            }
+        }
+    }
+
+    #[test]
+    fn renormalization_close_to_single_pass() {
+        // When the max arrives late the streaming renormalization is an
+        // approximation; it must stay within a small MAE of single-pass.
+        let mut rng = SplitMix64::new(77);
+        let mut worst = 0f64;
+        for _ in 0..200 {
+            let mut x = rng.vec_i8(128);
+            x[100] = 120; // late max
+            let single = dequantize_probs(&ita_softmax_row(&x, 128));
+            let streamed = dequantize_probs(&ita_softmax_row(&x, 32));
+            worst = worst.max(mae(&single, &streamed));
+        }
+        assert!(worst < 0.02, "streaming renorm MAE {worst}");
+    }
+
+    #[test]
+    fn close_to_float_softmax() {
+        // MAE vs the float softmax of the dequantized logits — the
+        // paper's §V-C metric; target ~0.46e-2 on realistic data, loose
+        // bound here (the bench measures the exact number).
+        let mut rng = SplitMix64::new(42);
+        let eps = epsilon_max();
+        let mut maes = Vec::new();
+        for _ in 0..100 {
+            let x = rng.vec_i8(64);
+            let xf: Vec<f64> = x.iter().map(|&v| v as f64 * eps).collect();
+            let pf = softmax_f64(&xf);
+            let pq = dequantize_probs(&ita_softmax_row(&x, 64));
+            maes.push(mae(&pf, &pq));
+        }
+        let avg = maes.iter().sum::<f64>() / maes.len() as f64;
+        assert!(avg < 0.02, "MAE vs float too high: {avg}");
+    }
+
+    #[test]
+    fn sum_bound_holds_up_to_256() {
+        forall("15-bit sigma bound", 200, |g| {
+            let x = g.i8_vec(1, 256);
+            let mut st = RowState::default();
+            for c in x.chunks(64) {
+                st.accumulate(c);
+            }
+            assert!(st.sum <= 1 << 15, "sum={}", st.sum);
+            st.invert();
+            assert!(st.inv >= 1);
+        });
+    }
+
+    #[test]
+    fn probabilities_sum_close_to_one() {
+        forall("prob mass ~1", 200, |g| {
+            let x = g.i8_vec(2, 200);
+            let p = ita_softmax_row(&x, 64);
+            let total: f64 = dequantize_probs(&p).iter().sum();
+            // Shift-quantized probabilities under-cover slightly; the
+            // hardware accepts this (QAT absorbs it). Bound the drift.
+            assert!(total > 0.5 && total < 1.3, "sum={total} n={}", x.len());
+        });
+    }
+
+    #[test]
+    fn monotonic_in_logits() {
+        forall("monotonicity", 200, |g| {
+            let x = g.i8_vec(2, 128);
+            let p = ita_softmax_row(&x, 32);
+            for i in 0..x.len() {
+                for j in 0..x.len() {
+                    if x[i] > x[j] {
+                        assert!(p[i] >= p[j], "x[{i}]={} > x[{j}]={} but p {} < {}", x[i], x[j], p[i], p[j]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn masked_equals_unmasked_prefix_when_chunk_aligned() {
+        // With valid = k·part, the masked row sees exactly the same
+        // stream as the unmasked prefix row.
+        let mut rng = SplitMix64::new(31);
+        for _ in 0..30 {
+            let x = rng.vec_i8(96);
+            for valid in [32usize, 64, 96] {
+                let masked = ita_softmax_row_masked(&x, 32, valid);
+                let prefix = ita_softmax_row(&x[..valid], 32);
+                assert_eq!(&masked[..valid], &prefix[..], "valid={valid}");
+                assert!(masked[valid..].iter().all(|&p| p == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn masked_fully_and_single() {
+        let x = vec![5i8; 8];
+        assert_eq!(ita_softmax_row_masked(&x, 4, 0), vec![0; 8]);
+        let one = ita_softmax_row_masked(&x, 4, 1);
+        assert!(one[0] >= 255, "single valid element gets all mass: {}", one[0]);
+        assert!(one[1..].iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn masked_mass_reasonable_any_valid() {
+        forall("masked mass", 150, |g| {
+            let x = g.i8_vec(4, 128);
+            let valid = g.usize_in(1, x.len());
+            let p = ita_softmax_row_masked(&x, 32, valid);
+            let mass: f64 = dequantize_probs(&p).iter().sum();
+            assert!(mass > 0.4 && mass < 1.3, "valid={valid} mass={mass}");
+            assert!(p[valid..].iter().all(|&v| v == 0), "masked tail must be zero");
+        });
+    }
+
+    #[test]
+    fn unit_stripe_api_matches_row_api() {
+        let mut rng = SplitMix64::new(5);
+        let m = 8;
+        let n = 96;
+        let rows: Vec<Vec<i8>> = (0..m).map(|_| rng.vec_i8(n)).collect();
+        let mut unit = SoftmaxUnit::new(m);
+        for c0 in (0..n).step_by(32) {
+            let parts: Vec<&[i8]> = rows.iter().map(|r| &r[c0..c0 + 32]).collect();
+            unit.accumulate_stripe(&parts);
+        }
+        unit.invert_all();
+        for (r, row) in rows.iter().enumerate() {
+            let via_unit: Vec<u8> = row.iter().map(|&x| unit.rows[r].normalize(x)).collect();
+            assert_eq!(via_unit, ita_softmax_row(row, 32));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Double-buffered weight buffer (W1/W2 in Fig. 2).
+//!
+//! ITA is weight stationary: each PE's M-byte weight vector is loaded
+//! once and reused for M input vectors. Double buffering lets the next
+//! tile's weights stream in at N bytes/cycle while the current tile
+//! computes, cutting the weight-port bandwidth from N·M to N bytes per
+//! cycle (paper §III). Total capacity: 2·N·M bytes.
+//!
+//! This model tracks occupancy and transfer scheduling so the simulator
+//! can (a) verify the no-stall property when the memory system sustains
+//! N bytes/cycle, and (b) charge buffer read/write energies.
+
+/// Which half of the double buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Half {
+    W1,
+    W2,
+}
+
+impl Half {
+    pub fn other(self) -> Half {
+        match self {
+            Half::W1 => Half::W2,
+            Half::W2 => Half::W1,
+        }
+    }
+}
+
+/// State of one half-buffer's pending fill.
+#[derive(Debug, Clone, Copy)]
+struct Fill {
+    /// Cycle at which the fill completes (all N·M bytes arrived).
+    done_at: u64,
+}
+
+/// Double-buffered weight storage for N PEs × M bytes each.
+#[derive(Debug, Clone)]
+pub struct WeightBuffer {
+    pub n: usize,
+    pub m: usize,
+    /// Weights resident per half: `buf[half][pe]` = M-byte vector.
+    buf: [Vec<Vec<i8>>; 2],
+    fill: [Option<Fill>; 2],
+    /// Half currently used for compute.
+    active: Half,
+    /// Statistics for the energy model.
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub stall_cycles: u64,
+}
+
+impl WeightBuffer {
+    pub fn new(n: usize, m: usize) -> Self {
+        let empty = || vec![vec![0i8; m]; n];
+        Self {
+            n,
+            m,
+            buf: [empty(), empty()],
+            fill: [None, None],
+            active: Half::W1,
+            bytes_written: 0,
+            bytes_read: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Capacity in bytes (paper: 2·N·M).
+    pub fn capacity_bytes(&self) -> usize {
+        2 * self.n * self.m
+    }
+
+    fn idx(h: Half) -> usize {
+        match h {
+            Half::W1 => 0,
+            Half::W2 => 1,
+        }
+    }
+
+    /// Begin streaming the next tile's weights into the inactive half at
+    /// `bw_bytes_per_cycle`. Returns the completion cycle.
+    pub fn start_fill(
+        &mut self,
+        weights: &[Vec<i8>],
+        now: u64,
+        bw_bytes_per_cycle: u64,
+    ) -> u64 {
+        assert_eq!(weights.len(), self.n, "one weight vector per PE");
+        let inactive = self.active.other();
+        let i = Self::idx(inactive);
+        for (pe, w) in weights.iter().enumerate() {
+            assert!(w.len() <= self.m, "weight vector longer than M");
+            let dst = &mut self.buf[i][pe];
+            dst[..w.len()].copy_from_slice(w);
+            dst[w.len()..].fill(0); // hardware zero-pads partial tiles
+        }
+        let bytes = (self.n * self.m) as u64;
+        self.bytes_written += bytes;
+        let cycles = bytes.div_ceil(bw_bytes_per_cycle.max(1));
+        let done_at = now + cycles;
+        self.fill[i] = Some(Fill { done_at });
+        done_at
+    }
+
+    /// Swap halves to start computing on the freshly filled buffer.
+    /// Returns the cycle compute can begin (≥ `now`; later if the fill
+    /// hasn't finished — that difference is a stall, which the paper's
+    /// design avoids by sizing bandwidth at N bytes/cycle).
+    pub fn swap(&mut self, now: u64) -> u64 {
+        let incoming = self.active.other();
+        let i = Self::idx(incoming);
+        let ready = match self.fill[i].take() {
+            Some(f) => f.done_at,
+            None => now, // nothing pending (e.g. reusing resident weights)
+        };
+        let start = ready.max(now);
+        self.stall_cycles += start - now;
+        self.active = incoming;
+        start
+    }
+
+    /// Read the active half's weight vector for one PE (compute path).
+    pub fn weights(&mut self, pe: usize) -> &[i8] {
+        self.bytes_read += self.m as u64;
+        &self.buf[Self::idx(self.active)][pe]
+    }
+
+    /// Peek without charging a read (testing).
+    pub fn peek(&self, half: Half, pe: usize) -> &[i8] {
+        &self.buf[Self::idx(half)][pe]
+    }
+
+    pub fn active_half(&self) -> Half {
+        self.active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(n: usize, m: usize, v: i8) -> Vec<Vec<i8>> {
+        vec![vec![v; m]; n]
+    }
+
+    #[test]
+    fn capacity_matches_paper() {
+        // N=16, M=64 → 2·16·64 = 2048 bytes = 2 KiB.
+        let b = WeightBuffer::new(16, 64);
+        assert_eq!(b.capacity_bytes(), 2048);
+    }
+
+    #[test]
+    fn fill_swap_compute() {
+        let mut b = WeightBuffer::new(2, 4);
+        let done = b.start_fill(&w(2, 4, 7), 0, 2); // 8 bytes at 2 B/cy = 4 cy
+        assert_eq!(done, 4);
+        let start = b.swap(10); // swap after fill completed: no stall
+        assert_eq!(start, 10);
+        assert_eq!(b.stall_cycles, 0);
+        assert_eq!(b.weights(0), &[7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn premature_swap_stalls() {
+        let mut b = WeightBuffer::new(2, 4);
+        b.start_fill(&w(2, 4, 1), 0, 1); // 8 cycles
+        let start = b.swap(3);
+        assert_eq!(start, 8);
+        assert_eq!(b.stall_cycles, 5);
+    }
+
+    #[test]
+    fn double_buffering_overlaps() {
+        let mut b = WeightBuffer::new(2, 4);
+        // Fill W2 while "computing" on W1, swap, fill W1 while on W2.
+        b.start_fill(&w(2, 4, 1), 0, 8);
+        b.swap(1);
+        assert_eq!(b.active_half(), Half::W2);
+        b.start_fill(&w(2, 4, 2), 1, 8);
+        b.swap(2);
+        assert_eq!(b.active_half(), Half::W1);
+        assert_eq!(b.weights(1), &[2, 2, 2, 2]);
+        assert_eq!(b.bytes_written, 16);
+    }
+
+    #[test]
+    fn partial_tiles_zero_padded() {
+        let mut b = WeightBuffer::new(1, 4);
+        b.start_fill(&[vec![5, 5]], 0, 4);
+        b.swap(1);
+        assert_eq!(b.weights(0), &[5, 5, 0, 0]);
+    }
+
+    #[test]
+    fn no_pending_fill_swap_is_free() {
+        let mut b = WeightBuffer::new(1, 2);
+        assert_eq!(b.swap(5), 5);
+        assert_eq!(b.stall_cycles, 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! # ITA — Integer Transformer Accelerator (ISLPED 2023) reproduction
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *"ITA: An Energy-Efficient Attention and Softmax Accelerator for
+//! Quantized Transformers"* (Islamoglu et al., ISLPED 2023):
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the integer streaming
+//!   softmax and fused int8 attention as Pallas kernels.
+//! * **Layer 2** (`python/compile/model.py`): a quantized transformer
+//!   encoder in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate): the accelerator substrate — bit-exact
+//!   datapath, cycle-accurate simulator, 22FDX-calibrated area/energy
+//!   models — plus the serving coordinator and the PJRT runtime that
+//!   executes the AOT artifacts with Python never on the request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod attention;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod explore;
+pub mod ita;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,263 @@
+//! `ita` — command-line launcher for the ITA reproduction.
+//!
+//! Subcommands map 1:1 to the paper's experiments plus operational
+//! modes (simulate / serve / runtime-check). Run `ita help` for usage.
+
+use ita::attention::{gen_input, ModelDims};
+use ita::config::SystemConfig;
+use ita::coordinator::Server;
+use ita::experiments;
+use ita::ita::energy::EnergyBreakdown;
+use ita::ita::simulator::Simulator;
+use ita::runtime::{ArtifactManifest, Runtime};
+use std::collections::HashMap;
+
+const USAGE: &str = "\
+ita — Integer Transformer Accelerator (ISLPED 2023) reproduction
+
+USAGE: ita <command> [--key value ...]
+
+COMMANDS
+  info                  architecture summary (area, power, peak perf)
+  simulate              run the cycle/energy simulator on a workload
+                          [--s N --e N --p N --heads N]
+  table1                Table I  — SOTA comparison (this work simulated)
+  fig5                  Fig. 5   — softmax/quantization probability profile
+  fig6                  Fig. 6   — area and power breakdown
+  mae                   §V-C     — softmax MAE vs I-BERT/Softermax/float
+  mempool               §V-D     — speedup/energy vs MemPool baseline
+  ablation-dataflow     §III     — WS vs OS bandwidth
+  ablation-scale        design-space sweep over N/M
+  ablation-dividers     DI no-stall claim check
+  explore               design-space Pareto search
+                          [--max-area mm2 --max-power mW --min-tops T]
+  roofline              per-phase roofline analysis of the schedule
+  serve                 run the serving coordinator demo
+                          [--requests N]
+  loadtest              trace-driven load test of the coordinator
+                          [--requests N --rate rps --process poisson|bursty|uniform]
+  runtime-check         load + execute AOT artifacts, verify vs golden
+  help                  this message
+
+COMMON FLAGS
+  --config path/to.toml   load a SystemConfig (defaults: paper design)
+  --csv                   emit tables as CSV instead of ASCII
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                map.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+            }
+        }
+        i += 1;
+    }
+    map
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_config(flags: &HashMap<String, String>) -> SystemConfig {
+    match flags.get("config") {
+        Some(path) => SystemConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("error loading {path}: {e}");
+            std::process::exit(2);
+        }),
+        None => SystemConfig::default(),
+    }
+}
+
+fn emit(t: ita::util::table::Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let cfg = load_config(&flags);
+    let acc = cfg.accelerator;
+    let csv = flags.contains_key("csv");
+
+    match cmd {
+        "info" => {
+            let area = ita::ita::area::AreaBreakdown::for_config(&acc);
+            println!(
+                "ITA configuration: N={} M={} D={} @ {:.0} MHz, {:.2} V",
+                acc.n,
+                acc.m,
+                acc.d,
+                acc.freq_hz / 1e6,
+                acc.vdd
+            );
+            println!("  MAC units:        {}", acc.mac_units());
+            println!("  peak throughput:  {:.3} TOPS", acc.peak_ops() / 1e12);
+            println!(
+                "  area:             {:.3} mm2 ({:.0} kGE)",
+                area.total_mm2(),
+                area.total_ge() / 1e3
+            );
+            println!("  weight buffer:    {} B (double-buffered)", acc.weight_buffer_bytes());
+            println!(
+                "  WS bandwidth:     {} bits/cycle (OS would need {})",
+                acc.bw_weight_stationary_bits(),
+                acc.bw_output_stationary_bits()
+            );
+        }
+        "simulate" => {
+            let shape = ita::ita::simulator::AttentionShape {
+                s: get(&flags, "s", cfg.model.dims.s),
+                e: get(&flags, "e", cfg.model.dims.e),
+                p: get(&flags, "p", cfg.model.dims.p),
+                h: get(&flags, "heads", cfg.model.dims.h),
+            };
+            let rep = Simulator::new(acc).simulate_attention(shape);
+            let e = EnergyBreakdown::for_activity(&acc, &rep.activity);
+            println!("workload: {shape:?}");
+            println!(
+                "  cycles:      {} (+{} stalls, {} DI)",
+                rep.activity.cycles, rep.activity.stall_cycles, rep.di_stall_cycles
+            );
+            println!("  runtime:     {:.3} us", rep.runtime_s() * 1e6);
+            println!("  utilization: {:.1}%", rep.utilization() * 100.0);
+            println!("  throughput:  {:.3} TOPS", rep.achieved_ops() / 1e12);
+            println!(
+                "  energy:      {:.3} uJ ({:.1} mW avg)",
+                e.total() * 1e6,
+                e.avg_power_w(rep.total_cycles(), acc.freq_hz) * 1e3
+            );
+            for ph in &rep.phases {
+                println!("    {:6} {:>9} cycles  {:>7} stalls", ph.name, ph.cycles, ph.stall_cycles);
+            }
+        }
+        "table1" => emit(experiments::table1(&acc), csv),
+        "fig5" => emit(experiments::fig5(get(&flags, "seed", 1u64), get(&flags, "n", 128usize)), csv),
+        "fig6" => {
+            emit(experiments::fig6_area(&acc), csv);
+            emit(experiments::fig6_power(&acc), csv);
+        }
+        "mae" => emit(
+            experiments::softmax_mae_table(
+                get(&flags, "seed", 42u64),
+                get(&flags, "rows", 500usize),
+                get(&flags, "len", 64usize),
+            ),
+            csv,
+        ),
+        "mempool" => emit(experiments::mempool_cmp(&acc), csv),
+        "explore" => {
+            let budget = ita::explore::Budget {
+                max_area_mm2: flags.get("max-area").and_then(|v| v.parse().ok()),
+                max_power_w: flags
+                    .get("max-power")
+                    .and_then(|v| v.parse::<f64>().ok())
+                    .map(|mw| mw / 1e3),
+                min_tops: flags.get("min-tops").and_then(|v| v.parse().ok()),
+            };
+            let shape = ita::ita::simulator::AttentionShape {
+                s: get(&flags, "s", 256),
+                e: get(&flags, "e", 256),
+                p: get(&flags, "p", 64),
+                h: get(&flags, "heads", 4),
+            };
+            let frontier = ita::explore::explore(&acc, shape, budget);
+            emit(ita::explore::frontier_table(&frontier), csv);
+        }
+        "roofline" => {
+            let shape = ita::ita::simulator::AttentionShape {
+                s: get(&flags, "s", cfg.model.dims.s),
+                e: get(&flags, "e", cfg.model.dims.e),
+                p: get(&flags, "p", cfg.model.dims.p),
+                h: get(&flags, "heads", cfg.model.dims.h),
+            };
+            emit(ita::ita::roofline::roofline_table(&acc, shape), csv);
+        }
+        "loadtest" => {
+            use ita::coordinator::tracegen::{run_load, ArrivalProcess};
+            let n: usize = get(&flags, "requests", 256);
+            let rate: f64 = get(&flags, "rate", 2000.0);
+            let process = match flags.get("process").map(String::as_str) {
+                Some("bursty") => ArrivalProcess::Bursty {
+                    burst: get(&flags, "burst", 8),
+                    gap: std::time::Duration::from_micros(get(&flags, "gap-us", 500)),
+                },
+                Some("uniform") => ArrivalProcess::Uniform { rate },
+                _ => ArrivalProcess::Poisson { rate },
+            };
+            let server = Server::start(cfg);
+            let rep = run_load(&server, process, n, get(&flags, "seed", 1u64));
+            println!("{}", rep.render());
+            server.shutdown();
+        }
+        "ablation-dataflow" => emit(experiments::ablation_dataflow(), csv),
+        "ablation-scale" => emit(experiments::ablation_scale(), csv),
+        "ablation-dividers" => emit(experiments::ablation_dividers(&acc), csv),
+        "serve" => {
+            let n: usize = get(&flags, "requests", 64);
+            let server = Server::start(cfg);
+            let x = gen_input(7, &cfg.model.dims);
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..n)
+                .filter_map(|_| match server.submit(x.clone()) {
+                    Ok(rx) => Some(rx),
+                    Err(e) => {
+                        eprintln!("rejected: {e}");
+                        None
+                    }
+                })
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv();
+            }
+            let dt = t0.elapsed();
+            println!("{}", server.metrics.report());
+            println!(
+                "wall: {:.1} ms  ({:.0} req/s)",
+                dt.as_secs_f64() * 1e3,
+                n as f64 / dt.as_secs_f64()
+            );
+            server.shutdown();
+        }
+        "runtime-check" => {
+            let dir = ArtifactManifest::default_dir();
+            let manifest = match ArtifactManifest::load(&dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            };
+            let rt = Runtime::cpu().expect("PJRT CPU client");
+            for meta in &manifest.artifacts {
+                let engine = rt.load(&manifest, &meta.name).expect("compile artifact");
+                let dims: ModelDims = meta.dims;
+                let x = gen_input(meta.seed + 1, &dims);
+                let got = engine.run_mat_i8(&x).expect("execute");
+                let mut exec = ita::attention::AttentionExecutor::new(acc, dims, meta.seed);
+                let want = exec.run(&x);
+                assert_eq!(got, want.out, "artifact {} diverges from golden model", meta.name);
+                println!("artifact {:30} OK (bit-exact vs golden model)", meta.name);
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Serving metrics: thread-safe counters, gauges and a log-bucketed
+//! latency histogram, with a registry that renders a text report.
+//! (Prometheus-style without the wire format — nothing network-facing
+//! exists in this environment.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with logarithmic buckets from 1 µs to ~17 s
+/// (one bucket per power of two of microseconds).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..25).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: std::time::Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the bucket boundaries (upper edge).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << self.buckets.len()) as f64
+    }
+}
+
+/// A registry of named metrics rendered as a report.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: Mutex<Vec<(String, String)>>,
+}
+
+impl Registry {
+    pub fn record(&self, name: &str, value: impl std::fmt::Display) {
+        self.entries.lock().unwrap().push((name.to_string(), value.to_string()));
+    }
+
+    pub fn render(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in entries.iter() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+/// Standard metric set of the serving coordinator.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub requests_accepted: Counter,
+    pub requests_rejected: Counter,
+    pub requests_completed: Counter,
+    pub batches_formed: Counter,
+    pub batch_fill_sum: Counter,
+    pub queue_depth: Gauge,
+    pub latency: LatencyHistogram,
+    /// Simulated accelerator cycles spent.
+    pub sim_cycles: Counter,
+    /// Simulated accelerator energy in picojoules.
+    pub sim_energy_pj: Counter,
+}
+
+impl ServerMetrics {
+    /// Mean batch fill (requests per batch).
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches_formed.get();
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_fill_sum.get() as f64 / b as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: accepted={} rejected={} completed={}\n\
+             batches: formed={} mean_fill={:.2}\n\
+             latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
+             sim: cycles={} energy={:.3}uJ",
+            self.requests_accepted.get(),
+            self.requests_rejected.get(),
+            self.requests_completed.get(),
+            self.batches_formed.get(),
+            self.mean_batch_fill(),
+            self.latency.mean_us(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.99),
+            self.sim_cycles.get(),
+            self.sim_energy_pj.get() as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 160, 3200] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 10.0);
+    }
+
+    #[test]
+    fn histogram_thread_safety() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.observe(Duration::from_micros(i + 1));
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn server_metrics_report() {
+        let m = ServerMetrics::default();
+        m.requests_accepted.add(10);
+        m.batches_formed.add(2);
+        m.batch_fill_sum.add(10);
+        assert!((m.mean_batch_fill() - 5.0).abs() < 1e-9);
+        assert!(m.report().contains("mean_fill=5.00"));
+    }
+
+    #[test]
+    fn registry_renders() {
+        let r = Registry::default();
+        r.record("a", 1);
+        r.record("b", "x");
+        let s = r.render();
+        assert!(s.contains("a = 1") && s.contains("b = x"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Post-training calibration.
+//!
+//! The paper trains with quantization-aware training (QAT) so that the
+//! attention logits fit the fixed softmax scale ε_max (§III: "the
+//! clipping threshold is obtained from quantization-aware training
+//! that incorporates our softmax implementation"). Without retraining,
+//! the same effect is achieved by *calibrating* each tensor's scale on
+//! sample activations; for the logits a scalar gain folds the observed
+//! range into ε_max's window (a QAT-lite substitute documented in
+//! DESIGN.md).
+
+use super::QuantParams;
+use crate::util::stats::percentile;
+
+/// Absmax calibration over observed values.
+pub fn calibrate_absmax(samples: &[f64]) -> QuantParams {
+    let absmax = samples.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-9);
+    QuantParams::from_absmax(absmax)
+}
+
+/// Percentile calibration (clips outliers; `pct` like 99.9).
+pub fn calibrate_percentile(samples: &[f64], pct: f64) -> QuantParams {
+    let abs: Vec<f64> = samples.iter().map(|v| v.abs()).collect();
+    let absmax = percentile(&abs, pct).max(1e-9);
+    QuantParams::from_absmax(absmax)
+}
+
+/// Softmax-aware logit calibration: returns the scalar gain `g` to
+/// apply to the float logits (or, equivalently, to fold into the
+/// preceding requantization) so that the clipped window of
+/// `ε_max·[−128, 127]` captures the probability-relevant range.
+///
+/// Values more than `ε_max · 256` below the row max quantize to
+/// softmax 0 anyway (the paper's "clipping" observation, Fig. 5), so
+/// the gain targets the *upper* tail: p99.9 of |logits| maps to the
+/// edge of the representable window.
+pub fn softmax_logit_gain(logit_samples: &[f64]) -> f64 {
+    let q = QuantParams::softmax_input();
+    let window = 127.0 * q.eps; // ≈ 2.75
+    let abs: Vec<f64> = logit_samples.iter().map(|v| v.abs()).collect();
+    let p = percentile(&abs, 99.9).max(1e-9);
+    window / p
+}
+
+/// Derive per-layer requant parameters for a linear layer from the
+/// calibrated scales. Deterministic; mirrored in
+/// `python/compile/quant.py` for cross-layer bit-exactness.
+pub fn linear_requant(
+    eps_x: f64,
+    eps_w: f64,
+    eps_y: f64,
+) -> crate::ita::requant::RequantParams {
+    crate::ita::requant::RequantParams::from_scale(super::rescale_factor(eps_x, eps_w, eps_y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn absmax_covers_extremes() {
+        let q = calibrate_absmax(&[0.1, -3.0, 2.0]);
+        assert_eq!(q.quantize(-3.0), -127);
+        assert_eq!(q.quantize(3.0), 127);
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut samples: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        samples.push(1000.0); // outlier
+        let q = calibrate_percentile(&samples, 99.0);
+        assert!(q.eps < 0.01, "outlier should not dominate: eps={}", q.eps);
+    }
+
+    #[test]
+    fn logit_gain_maps_tail_to_window() {
+        let mut rng = SplitMix64::new(2);
+        // Logits ~ N(0, 8): far larger than the ±2.75 window.
+        let samples: Vec<f64> = (0..10_000).map(|_| rng.next_gaussian() * 8.0).collect();
+        let g = softmax_logit_gain(&samples);
+        assert!(g < 0.2, "gain {g}");
+        let scaled_p999 = {
+            let abs: Vec<f64> = samples.iter().map(|v| (v * g).abs()).collect();
+            percentile(&abs, 99.9)
+        };
+        assert!((scaled_p999 - 2.75).abs() < 0.1, "p99.9 after gain {scaled_p999}");
+    }
+
+    #[test]
+    fn requant_derivation_deterministic() {
+        let a = linear_requant(0.05, 0.01, 0.1);
+        let b = linear_requant(0.05, 0.01, 0.1);
+        assert_eq!(a, b);
+        assert!((a.as_f64() - 0.005).abs() / 0.005 < 0.01);
+    }
+}

@@ -1,0 +1,105 @@
+//! Quantization toolkit: symmetric int8 quantization, calibration, and
+//! the softmax-aware clipping the paper derives in §IV / Fig. 5.
+//!
+//! ITA expects every tensor in int8 with per-tensor symmetric scales.
+//! The attention logits additionally use the *fixed* scale
+//! ε = B/(2^B·log2 e) so that the softmax exponent is a pure shift —
+//! "the range of the inputs can be clipped to the inputs that will end
+//! up with a softmax greater than 0, and the scaling factor can be
+//! tuned accordingly in training time" (§IV). [`calib`] provides that
+//! tuning for post-training calibration.
+
+pub mod calib;
+
+use crate::util::mat::{MatF32, MatI8};
+
+/// Symmetric per-tensor int8 quantization parameters: `x ≈ ε · x_q`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub eps: f64,
+}
+
+impl QuantParams {
+    /// Scale covering `[-absmax, absmax]` over the int8 range.
+    pub fn from_absmax(absmax: f64) -> Self {
+        assert!(absmax > 0.0, "absmax must be positive");
+        Self { eps: absmax / 127.0 }
+    }
+
+    /// The paper's softmax-input scale (§IV, Eq. 3 context).
+    pub fn softmax_input() -> Self {
+        Self { eps: crate::ita::softmax::epsilon_max() }
+    }
+
+    /// Quantize one value (round-to-nearest, clip to int8).
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i8 {
+        (x / self.eps).round().clamp(-128.0, 127.0) as i8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f64 {
+        q as f64 * self.eps
+    }
+
+    /// Quantize a float matrix.
+    pub fn quantize_mat(&self, x: &MatF32) -> MatI8 {
+        x.map(|v| self.quantize(v as f64))
+    }
+
+    /// Dequantize an int8 matrix.
+    pub fn dequantize_mat(&self, q: &MatI8) -> MatF32 {
+        q.map(|v| (v as f64 * self.eps) as f32)
+    }
+}
+
+/// Combined requantization scale for `y_q = (x_q · w_q) · ε_x·ε_w / ε_y`
+/// — feeds [`crate::ita::requant::RequantParams::from_scale`].
+pub fn rescale_factor(eps_x: f64, eps_w: f64, eps_y: f64) -> f64 {
+    eps_x * eps_w / eps_y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let q = QuantParams::from_absmax(4.0);
+        forall("quant roundtrip", 300, |g| {
+            let x = g.f64_in(-4.0, 4.0);
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= q.eps / 2.0 + 1e-12, "x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        let q = QuantParams::from_absmax(1.0);
+        assert_eq!(q.quantize(100.0), 127);
+        assert_eq!(q.quantize(-100.0), -128);
+    }
+
+    #[test]
+    fn softmax_scale_matches_module_constant() {
+        let q = QuantParams::softmax_input();
+        assert!((q.eps - 0.021660849392498291).abs() < 1e-15);
+        // Representable range ≈ ±2.77: the Fig. 5 clipped window.
+        assert!((q.dequantize(-128) + 2.7726).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rescale_composes() {
+        let f = rescale_factor(0.1, 0.02, 0.5);
+        assert!((f - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_quantization() {
+        let x = MatF32::from_vec(1, 3, vec![0.5, -0.25, 10.0]);
+        let q = QuantParams::from_absmax(1.0);
+        let xq = q.quantize_mat(&x);
+        assert_eq!(xq.as_slice(), &[64, -32, 127]);
+    }
+}

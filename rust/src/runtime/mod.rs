@@ -1,0 +1,195 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md for why not
+//! serialized protos) and executes them on the XLA CPU client from the
+//! Rust request path. Python never runs at serve time.
+//!
+//! The manifest (`artifacts/manifest.json`) describes each artifact's
+//! entry point, tensor shapes and the model dimensions/seed it was
+//! lowered for, so the coordinator can pick the right executable per
+//! model variant and the tests can regenerate matching golden data.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Input tensor shapes (row-major), in argument order.
+    pub inputs: Vec<Vec<i64>>,
+    /// Output tensor shape.
+    pub output: Vec<i64>,
+    /// Model dims (s, e, p, h) the artifact was lowered for.
+    pub dims: crate::attention::ModelDims,
+    /// Weight-generation seed baked into the artifact.
+    pub seed: u64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<i64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|v| v.as_usize().map(|u| u as i64).ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Default artifacts directory (next to the repo root).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().ok_or_else(|| anyhow!("manifest: no artifacts"))? {
+            let dims = a.get("dims");
+            artifacts.push(ArtifactMeta {
+                name: a.get("name").as_str().ok_or_else(|| anyhow!("artifact name"))?.into(),
+                file: a.get("file").as_str().ok_or_else(|| anyhow!("artifact file"))?.into(),
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact inputs"))?
+                    .iter()
+                    .map(parse_shape)
+                    .collect::<Result<_>>()?,
+                output: parse_shape(a.get("output"))?,
+                dims: crate::attention::ModelDims {
+                    s: dims.get("s").as_usize().unwrap_or(0),
+                    e: dims.get("e").as_usize().unwrap_or(0),
+                    p: dims.get("p").as_usize().unwrap_or(0),
+                    h: dims.get("h").as_usize().unwrap_or(0),
+                },
+                seed: a.get("seed").as_usize().unwrap_or(0) as u64,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// True when the artifacts have been built.
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load and compile one artifact.
+    pub fn load(&self, manifest: &ArtifactManifest, name: &str) -> Result<Engine> {
+        let meta = manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Engine { exe, meta })
+    }
+}
+
+/// One compiled executable with its metadata.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Engine {
+    /// Execute with int32 tensors (the HLO boundary dtype; int8
+    /// semantics are preserved inside — values stay in int8 range).
+    /// Inputs are row-major buffers matching `meta.inputs`.
+    pub fn run_i32(&self, inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("expected {} inputs, got {}", self.meta.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.meta.inputs) {
+            let want: i64 = shape.iter().product();
+            if buf.len() as i64 != want {
+                bail!("input length {} != shape {:?}", buf.len(), shape);
+            }
+            literals.push(xla::Literal::vec1(buf).reshape(shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Convenience: run on an int8 matrix, returning an int8 matrix of
+    /// the artifact's output shape (values are asserted to fit int8 —
+    /// the model's requantization guarantees it).
+    pub fn run_mat_i8(&self, x: &crate::util::mat::MatI8) -> Result<crate::util::mat::MatI8> {
+        let buf: Vec<i32> = x.as_slice().iter().map(|&v| v as i32).collect();
+        let out = self.run_i32(&[buf])?;
+        let (r, c) = (self.meta.output[0] as usize, self.meta.output[1] as usize);
+        if out.len() != r * c {
+            bail!("output length {} != {:?}", out.len(), self.meta.output);
+        }
+        let data = out
+            .iter()
+            .map(|&v| {
+                i8::try_from(v).map_err(|_| anyhow!("output value {v} does not fit int8"))
+            })
+            .collect::<Result<Vec<i8>>>()?;
+        Ok(crate::util::mat::MatI8::from_vec(r, c, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("ita-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "att", "file": "att.hlo.txt",
+                "inputs": [[16, 16]], "output": [16, 16],
+                "dims": {"s": 16, "e": 16, "p": 8, "h": 2}, "seed": 42}]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("att").unwrap();
+        assert_eq!(a.inputs, vec![vec![16, 16]]);
+        assert_eq!(a.dims.p, 8);
+        assert_eq!(a.seed, 42);
+        assert!(m.find("nope").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_contextual_error() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-ita")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

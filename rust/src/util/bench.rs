@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bencher`] for timing: warmup, N timed samples, median/mean/p95 and
+//! optional throughput units. Output is stable, parseable text so
+//! EXPERIMENTS.md can quote it directly.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+/// Re-export so bench targets don't need `std::hint` imports.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Timing statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Seconds per iteration.
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+    pub iters_per_sample: u64,
+    /// Work units per iteration (e.g. MACs), for throughput reporting.
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "bench {:<42} median {:>10}  mean {:>10}  p95 {:>10}",
+            self.name,
+            super::table::fmt_time(self.median),
+            super::table::fmt_time(self.mean),
+            super::table::fmt_time(self.p95),
+        );
+        if let Some((units, label)) = self.units {
+            s.push_str(&format!(
+                "  | {:>12} {}/s",
+                super::table::eng(units / self.median),
+                label
+            ));
+        }
+        s
+    }
+}
+
+/// Benchmark runner with auto-calibrated iteration counts.
+pub struct Bencher {
+    /// Target wall time per sample (seconds).
+    pub sample_target: f64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Warmup time (seconds).
+    pub warmup: f64,
+    results: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { sample_target: 0.05, samples: 12, warmup: 0.2, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI smoke: fewer/shorter samples.
+    pub fn quick() -> Self {
+        Self { sample_target: 0.01, samples: 5, warmup: 0.02, results: Vec::new() }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Sample {
+        self.bench_units(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput in `units` per second
+    /// (units = work per single call of `f`).
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        units: f64,
+        label: &'static str,
+        mut f: impl FnMut(),
+    ) -> &Sample {
+        self.bench_units(name, Some((units, label)), &mut f)
+    }
+
+    fn bench_units(
+        &mut self,
+        name: &str,
+        units: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) -> &Sample {
+        // Warmup + calibration: figure out how many iterations fill a sample.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = (t0.elapsed().as_secs_f64() / calib_iters as f64).max(1e-9);
+        let iters = ((self.sample_target / per_iter).ceil() as u64).max(1);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+
+        let s = Sample {
+            name: name.to_string(),
+            median,
+            mean,
+            p95,
+            iters_per_sample: iters,
+            units,
+        };
+        println!("{}", s.report());
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+/// True when the bench should run in quick mode (smoke testing).
+/// `ITA_BENCH_QUICK=1 cargo bench` or `cargo bench -- --quick`.
+pub fn quick_requested() -> bool {
+    std::env::var("ITA_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// Standard bencher honoring quick mode.
+pub fn bencher() -> Bencher {
+    if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_trivial_closure() {
+        let mut b = Bencher { sample_target: 1e-4, samples: 3, warmup: 1e-3, results: vec![] };
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.median > 0.0 && s.median < 1e-3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_units_attached() {
+        let mut b = Bencher { sample_target: 1e-4, samples: 3, warmup: 1e-3, results: vec![] };
+        let s = b.bench_throughput("tp", 1000.0, "ops", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.units.is_some());
+        assert!(s.report().contains("ops/s"));
+    }
+}

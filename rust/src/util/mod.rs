@@ -1,0 +1,16 @@
+//! Shared infrastructure substrates.
+//!
+//! The build environment is fully offline with a minimal crate cache, so
+//! this library ships its own implementations of what would normally be
+//! external dependencies: PRNG ([`rng`], mirrored bit-exactly in Python
+//! for cross-layer tests), matrices ([`mat`]), statistics ([`stats`]),
+//! JSON ([`json`]), table/CSV rendering ([`table`]), property testing
+//! ([`prop`]) and a micro-benchmark harness ([`bench`]).
+
+pub mod bench;
+pub mod json;
+pub mod mat;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

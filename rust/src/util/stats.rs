@@ -1,0 +1,150 @@
+//! Small statistics helpers shared by the evaluation harnesses:
+//! error metrics for the softmax accuracy experiments and summary
+//! statistics for the benchmark reports.
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Mean absolute error between two equal-length slices.
+/// This is the paper's §V-C metric ("the average distance to the
+/// floating point value").
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "MAE length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Maximum absolute error.
+pub fn max_abs_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Root-mean-square error.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64).sqrt()
+}
+
+/// Percentile via nearest-rank on a copy (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped into
+/// the edge bins. Used by the Fig. 5 probability-distribution series.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * n as f64).floor() as i64).clamp(0, n as i64 - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Bin centers, for printing series.
+    pub fn centers(&self) -> Vec<f64> {
+        let n = self.bins.len() as f64;
+        let w = (self.hi - self.lo) / n;
+        (0..self.bins.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Normalized frequencies.
+    pub fn freqs(&self) -> Vec<f64> {
+        let t = self.total().max(1) as f64;
+        self.bins.iter().map(|&b| b as f64 / t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_symmetric() {
+        let a = [0.0, 1.0];
+        let b = [1.0, 0.0];
+        assert!((mae(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((mae(&b, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_zero_for_equal() {
+        let a = [0.25, 0.5, 0.25];
+        assert_eq!(mae(&a, &a), 0.0);
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert_eq!(max_abs_err(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for &x in &[-0.5, 0.1, 0.3, 0.6, 0.9, 1.5] {
+            h.add(x);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.bins, vec![2, 1, 1, 2]); // clamped edges
+        let c = h.centers();
+        assert!((c[0] - 0.125).abs() < 1e-12);
+    }
+}

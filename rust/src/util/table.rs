@@ -1,0 +1,190 @@
+//! ASCII table / CSV rendering for the benchmark harnesses.
+//!
+//! Every paper table and figure is regenerated as rows printed by a
+//! bench binary; this module gives them a consistent, diffable format.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert!(
+            self.header.is_empty() || cells.len() == self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-able values.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String| {
+            let total: usize = widths.iter().sum::<usize>() + 3 * ncols + 1;
+            let _ = writeln!(out, "{}", "-".repeat(total));
+        };
+        if !self.header.is_empty() {
+            line(&mut out);
+            let _ = write!(out, "|");
+            for (i, h) in self.header.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", h, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        }
+        line(&mut out);
+        for row in &self.rows {
+            let _ = write!(out, "|");
+            for (i, c) in row.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        }
+        line(&mut out);
+        out
+    }
+
+    /// Render as CSV (for plotting pipelines).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            let _ = writeln!(
+                out,
+                "{}",
+                self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+            );
+        }
+        for row in &self.rows {
+            let _ =
+                writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Format a number with engineering suffixes (k, M, G, T).
+pub fn eng(v: f64) -> String {
+    let a = v.abs();
+    let (scaled, suffix) = if a >= 1e12 {
+        (v / 1e12, "T")
+    } else if a >= 1e9 {
+        (v / 1e9, "G")
+    } else if a >= 1e6 {
+        (v / 1e6, "M")
+    } else if a >= 1e3 {
+        (v / 1e3, "k")
+    } else {
+        (v, "")
+    };
+    format!("{scaled:.3}{suffix}")
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo").header(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| name   | value |"));
+        assert!(s.contains("| longer | 22    |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("").header(&["k", "v"]);
+        t.row(&["a,b".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\",\"q\"\"q\""));
+    }
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(1.024e12), "1.024T");
+        assert_eq!(eng(5.0e6), "5.000M");
+        assert_eq!(eng(12.0), "12.000");
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(fmt_time(2.5e-9), "2.5ns");
+        assert_eq!(fmt_time(3.0e-5), "30.00us");
+        assert_eq!(fmt_time(0.25), "250.00ms");
+        assert_eq!(fmt_time(2.0), "2.000s");
+    }
+}

@@ -1,0 +1,70 @@
+//! Cross-layer integration: the AOT-compiled JAX+Pallas model (L1+L2)
+//! executed through the PJRT runtime must be **bit-exact** against the
+//! Rust golden datapath (L3) — the strongest correctness statement the
+//! three-layer architecture can make.
+//!
+//! Tests are skipped (with a notice) when `artifacts/` has not been
+//! built; run `make artifacts` first.
+
+use ita::attention::{gen_input, AttentionExecutor};
+use ita::ita::ItaConfig;
+use ita::runtime::{ArtifactManifest, Runtime};
+use ita::util::rng::SplitMix64;
+
+fn manifest_or_skip() -> Option<ArtifactManifest> {
+    if !ArtifactManifest::available() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactManifest::load(&ArtifactManifest::default_dir()).expect("manifest parses"))
+}
+
+#[test]
+fn artifacts_match_golden_model_bit_exact() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(!manifest.artifacts.is_empty(), "manifest lists artifacts");
+    for meta in &manifest.artifacts {
+        let engine = rt.load(&manifest, &meta.name).expect("artifact compiles");
+        let mut exec = AttentionExecutor::new(ItaConfig::paper(), meta.dims, meta.seed);
+        // Several inputs per artifact, including adversarial seeds.
+        for seed_off in [1u64, 2, 99] {
+            let x = gen_input(meta.seed + seed_off, &meta.dims);
+            let got = engine.run_mat_i8(&x).expect("executes");
+            let want = exec.run(&x);
+            assert_eq!(got, want.out, "{}, input seed +{seed_off}", meta.name);
+        }
+    }
+}
+
+#[test]
+fn artifact_handles_extreme_inputs() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let meta = &manifest.artifacts[0];
+    let engine = rt.load(&manifest, &meta.name).expect("compiles");
+    let d = meta.dims;
+    let mut exec = AttentionExecutor::new(ItaConfig::paper(), d, meta.seed);
+    // All-max, all-min, alternating extremes.
+    for pattern in [
+        ita::util::mat::MatI8::from_fn(d.s, d.e, |_, _| 127),
+        ita::util::mat::MatI8::from_fn(d.s, d.e, |_, _| -128),
+        ita::util::mat::MatI8::from_fn(d.s, d.e, |r, c| if (r + c) % 2 == 0 { 127 } else { -128 }),
+    ] {
+        let got = engine.run_mat_i8(&pattern).expect("executes");
+        let want = exec.run(&pattern);
+        assert_eq!(got, want.out, "extreme pattern diverged");
+    }
+}
+
+#[test]
+fn artifact_reload_is_deterministic() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let meta = &manifest.artifacts[0];
+    let e1 = rt.load(&manifest, &meta.name).expect("compiles");
+    let e2 = rt.load(&manifest, &meta.name).expect("compiles twice");
+    let mut rng = SplitMix64::new(7);
+    let x = ita::util::mat::MatI8::from_fn(meta.dims.s, meta.dims.e, |_, _| rng.next_i8());
+    assert_eq!(e1.run_mat_i8(&x).unwrap(), e2.run_mat_i8(&x).unwrap());
+}

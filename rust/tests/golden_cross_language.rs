@@ -1,0 +1,23 @@
+//! Golden cross-language pin — the Rust half of
+//! `python/tests/test_golden_cross_language.py`: the fixed
+//! (input, output) pair both implementations must produce forever.
+//! Regenerate deliberately only if the algorithm spec itself changes,
+//! and update both files together.
+
+use ita::ita::softmax::ita_softmax_row;
+use ita::util::rng::SplitMix64;
+
+const GOLDEN_P: [u8; 96] = [
+    0, 1, 4, 1, 0, 0, 2, 0, 2, 9, 9, 0, 0, 0, 2, 0, 0, 4, 0, 9, 0, 0, 4, 9, 0, 0, 4, 0, 2, 2,
+    0, 4, 4, 2, 1, 0, 0, 9, 9, 0, 0, 0, 2, 9, 4, 0, 0, 4, 0, 0, 1, 2, 0, 2, 0, 2, 0, 1, 0, 0,
+    0, 9, 4, 0, 9, 4, 0, 9, 0, 0, 1, 4, 2, 0, 0, 4, 0, 2, 4, 0, 1, 9, 4, 0, 0, 0, 0, 4, 2, 2,
+    4, 4, 2, 0, 1, 9,
+];
+
+#[test]
+fn softmax_golden_vector_stable() {
+    let mut rng = SplitMix64::new(2024);
+    let x = rng.vec_i8(96);
+    assert_eq!(x[0], -97, "RNG stream changed — golden vectors invalid");
+    assert_eq!(ita_softmax_row(&x, 64), GOLDEN_P.to_vec());
+}

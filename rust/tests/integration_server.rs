@@ -1,0 +1,116 @@
+//! Coordinator integration: sustained load, mixed bursts, shutdown
+//! semantics, and end-to-end consistency between the served responses
+//! and the simulator's accounting.
+
+use ita::attention::{gen_input, AttentionExecutor, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{Server, SubmitError};
+use ita::ita::ItaConfig;
+use std::sync::Arc;
+
+fn config(workers: usize, max_batch: usize) -> SystemConfig {
+    SystemConfig {
+        accelerator: ItaConfig::tiny(),
+        model: ModelConfig {
+            dims: ModelDims { s: 16, e: 16, p: 8, h: 2 },
+            ffn: 32,
+            layers: 1,
+            seed: 42,
+        },
+        server: ServerConfig { workers, max_batch, max_wait_us: 300, queue_depth: 128 },
+    }
+}
+
+#[test]
+fn sustained_load_all_requests_complete_correctly() {
+    let cfg = config(4, 8);
+    let server = Server::start(cfg);
+    let mut exec = AttentionExecutor::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+
+    let inputs: Vec<_> = (0..5).map(|i| gen_input(100 + i, &cfg.model.dims)).collect();
+    let golden: Vec<_> = inputs.iter().map(|x| exec.run(x).out).collect();
+
+    let mut handles = Vec::new();
+    for round in 0..40usize {
+        let x = inputs[round % inputs.len()].clone();
+        loop {
+            match server.submit(x.clone()) {
+                Ok(rx) => {
+                    handles.push((round % inputs.len(), rx));
+                    break;
+                }
+                Err(SubmitError::QueueFull) => std::thread::yield_now(),
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+    }
+    for (idx, rx) in handles {
+        let resp = rx.recv().expect("response arrives");
+        assert_eq!(resp.output, golden[idx], "served output != golden for input {idx}");
+    }
+    assert_eq!(server.metrics.requests_completed.get(), 40);
+    assert!(server.metrics.sim_energy_pj.get() > 0);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_submitters() {
+    let cfg = config(2, 4);
+    let server = Server::start(cfg);
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let server: Arc<Server> = server.clone();
+        threads.push(std::thread::spawn(move || {
+            let x = gen_input(t, &config(2, 4).model.dims);
+            let mut done = 0;
+            for _ in 0..10 {
+                if let Ok(resp) = server.infer(x.clone()) {
+                    assert_eq!(resp.output.shape(), (16, 16));
+                    done += 1;
+                }
+            }
+            done
+        }));
+    }
+    let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_rejects_new_work() {
+    let cfg = config(1, 2);
+    let server = Server::start(cfg);
+    let x = gen_input(1, &cfg.model.dims);
+    assert!(server.infer(x.clone()).is_ok());
+    server.shutdown();
+    assert!(matches!(server.submit(x), Err(SubmitError::Shutdown)));
+}
+
+#[test]
+fn batching_reduces_energy_per_request() {
+    // The weight-stationary amortization: large batches must report
+    // lower per-request energy than singletons.
+    let mut cfg = config(1, 16);
+    cfg.server.max_wait_us = 20_000;
+    let server = Server::start(cfg);
+    let x = gen_input(5, &cfg.model.dims);
+
+    // Burst: forms large batches.
+    let rxs: Vec<_> = (0..16).filter_map(|_| server.submit(x.clone()).ok()).collect();
+    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let batched_energy =
+        batched.iter().map(|r| r.sim_energy_j).sum::<f64>() / batched.len() as f64;
+    let max_fill = batched.iter().map(|r| r.batch_size).max().unwrap();
+
+    // Singleton (after the burst drained).
+    let single = server.infer(x.clone()).unwrap();
+    if max_fill >= 4 {
+        assert!(
+            batched_energy < single.sim_energy_j,
+            "batched {batched_energy} !< single {}",
+            single.sim_energy_j
+        );
+    }
+    server.shutdown();
+}

@@ -1,0 +1,126 @@
+//! End-to-end checks of the paper's headline claims against the
+//! simulated system — the quantitative reproduction contract.
+//! (Each bench regenerates the full table; these tests pin the bands.)
+
+use ita::baselines::mempool::{compare, MemPoolConfig};
+use ita::experiments;
+use ita::ita::area::{system_area_mm2, AreaBreakdown};
+use ita::ita::energy::{tops_per_watt, EnergyBreakdown};
+use ita::ita::simulator::{AttentionShape, Simulator};
+use ita::ita::ItaConfig;
+
+fn benchmark_activity() -> (ItaConfig, ita::ita::Activity, u64) {
+    let cfg = ItaConfig::paper();
+    let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+    let cycles = rep.total_cycles();
+    (cfg, rep.activity, cycles)
+}
+
+#[test]
+fn claim_throughput_1_02_tops() {
+    let cfg = ItaConfig::paper();
+    let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+    let tops = rep.achieved_ops() / 1e12;
+    assert!((tops - 1.02).abs() < 0.06, "throughput {tops} TOPS vs paper 1.02");
+}
+
+#[test]
+fn claim_area_0_173_mm2_and_system_0_407() {
+    let cfg = ItaConfig::paper();
+    let a = AreaBreakdown::for_config(&cfg).total_mm2();
+    assert!((a - 0.173).abs() / 0.173 < 0.03, "area {a}");
+    let s = system_area_mm2(&cfg, 64 * 1024);
+    assert!((s - 0.407).abs() / 0.407 < 0.03, "system area {s}");
+}
+
+#[test]
+fn claim_power_60_5_mw() {
+    let (cfg, a, cycles) = benchmark_activity();
+    let p = EnergyBreakdown::for_activity(&cfg, &a).avg_power_w(cycles, cfg.freq_hz) * 1e3;
+    assert!((p - 60.5).abs() / 60.5 < 0.06, "power {p} mW vs paper 60.5");
+}
+
+#[test]
+fn claim_efficiency_16_9_and_8_46_tops_w() {
+    let (cfg, a, _) = benchmark_activity();
+    let standalone = tops_per_watt(&cfg, &a, false);
+    let system = tops_per_watt(&cfg, &a, true);
+    assert!((standalone - 16.9).abs() / 16.9 < 0.08, "standalone {standalone}");
+    assert!((system - 8.46).abs() / 8.46 < 0.10, "system {system}");
+}
+
+#[test]
+fn claim_area_efficiency_5_93_tops_mm2() {
+    let cfg = ItaConfig::paper();
+    let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+    let tops = rep.achieved_ops() / 1e12;
+    let eff = tops / AreaBreakdown::for_config(&cfg).total_mm2();
+    assert!((eff - 5.93).abs() / 5.93 < 0.08, "area efficiency {eff}");
+}
+
+#[test]
+fn claim_softmax_area_3_3_percent_28_7_kge() {
+    let a = AreaBreakdown::for_config(&ItaConfig::paper());
+    assert!((a.softmax / 1e3 - 28.7).abs() < 0.6, "softmax {} kGE", a.softmax / 1e3);
+    assert!((a.softmax / a.total_ge() - 0.033).abs() < 0.004);
+}
+
+#[test]
+fn claim_softmax_power_1_4_percent() {
+    let (cfg, a, _) = benchmark_activity();
+    let e = EnergyBreakdown::for_activity(&cfg, &a);
+    let share = e.softmax / e.total();
+    assert!((share - 0.014).abs() < 0.006, "softmax power share {share}");
+}
+
+#[test]
+fn claim_softmax_mae_0_46_percent_band() {
+    let r = experiments::softmax_mae(42, 300, 64);
+    let (ita, ibert) = (&r[0], &r[1]);
+    // Paper: 0.46 % (ITA) vs 0.35 % (I-BERT). Distribution-dependent;
+    // the reproduction contract: same order of magnitude, I-BERT ≤ ITA.
+    assert!(ita.mae > 0.002 && ita.mae < 0.009, "ITA MAE {}", ita.mae);
+    assert!(ibert.mae > 0.0005 && ibert.mae < ita.mae, "I-BERT MAE {}", ibert.mae);
+}
+
+#[test]
+fn claim_mempool_6x_speedup_45x_energy() {
+    // Matched at the longest benchmarked sequence (S grows the softmax
+    // share, which is where ITA's advantage concentrates).
+    let (speedup, eff) = compare(
+        &ItaConfig::paper(),
+        &MemPoolConfig::paper(),
+        AttentionShape { s: 512, e: 256, p: 64, h: 4 },
+    );
+    assert!((speedup - 6.0).abs() / 6.0 < 0.25, "speedup {speedup}");
+    assert!((eff - 45.0).abs() / 45.0 < 0.25, "energy ratio {eff}");
+}
+
+#[test]
+fn claim_voltage_scaling_beats_keller_int8() {
+    // §V-E: at 0.46 V, ITA standalone ≈ 1.3× more efficient than
+    // Keller INT8 (39.1 TOPS/W); the system ≈ 1.5× less efficient.
+    let (mut cfg, a, _) = benchmark_activity();
+    cfg.vdd = 0.46;
+    let standalone = tops_per_watt(&cfg, &a, false);
+    let system = tops_per_watt(&cfg, &a, true);
+    let vs_keller = standalone / 39.1;
+    assert!((vs_keller - 1.3).abs() < 0.25, "standalone vs Keller INT8: {vs_keller}x");
+    let system_deficit = 39.1 / system;
+    assert!((system_deficit - 1.5).abs() < 0.35, "system deficit {system_deficit}x");
+}
+
+#[test]
+fn finding_two_dividers_show_small_stalls() {
+    // Reproduction finding (EXPERIMENTS.md): under our strict DI/EN
+    // timing model the paper's 2 serial dividers leave a small stall
+    // overhead (~2-3 % at S=256); 8 dividers eliminate it.
+    let cfg = ItaConfig::paper();
+    let rep = Simulator::new(cfg).simulate_attention(experiments::benchmark_shape());
+    let overhead = rep.di_stall_cycles as f64 / rep.total_cycles() as f64;
+    assert!(overhead > 0.0 && overhead < 0.06, "DI overhead {overhead}");
+    let mut many = cfg;
+    many.n_dividers = 8;
+    let rep8 = Simulator::new(many).simulate_attention(experiments::benchmark_shape());
+    assert_eq!(rep8.di_stall_cycles, 0);
+}
