@@ -2,13 +2,21 @@
 //! pass (EXPERIMENTS.md §Perf records before/after for each).
 //!
 //! * integer softmax row (the L3 datapath inner loop),
-//! * int8 matmul (the functional engine's dominant cost),
-//! * fused attention core,
-//! * full attention execution (S=64 compact workload),
+//! * int8 matmul — pre-change oracle vs blocked GEMM kernel,
+//! * fused attention core — oracle vs scratch-arena blocked path,
+//! * full attention execution (S=64 compact workload) — oracle serial
+//!   vs blocked serial vs blocked + per-head threads,
 //! * analytic simulator,
 //! * coordinator round trip (single inference, warm server).
+//!
+//! The pre-change paths are the *retained* oracles
+//! (`matmul_i8`, `TileEngine::*_reference`, `run_attention_reference`),
+//! so every "before" number is measured in the same binary and the
+//! speedup lines below are computed, not asserted. Targets (this
+//! rework): ≥5× on matmul_i8(128³) single-threaded, ≥3× on
+//! run_attention(S=64,E=128,H=2).
 
-use ita::attention::{gen_input, AttentionExecutor, ModelDims};
+use ita::attention::{gen_input, run_attention_reference, AttentionExecutor, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
 use ita::coordinator::Server;
 use ita::ita::datapath::TileEngine;
@@ -17,7 +25,8 @@ use ita::ita::simulator::Simulator;
 use ita::ita::softmax::ita_softmax_row;
 use ita::ita::ItaConfig;
 use ita::util::bench::{bencher, black_box};
-use ita::util::mat::{matmul_i8, MatI8};
+use ita::util::gemm::{gemm_i32_pret, GemmScratch};
+use ita::util::mat::{matmul_i8, MatI32, MatI8};
 use ita::util::rng::SplitMix64;
 
 fn main() {
@@ -30,15 +39,30 @@ fn main() {
         black_box(ita_softmax_row(black_box(&row256), 64));
     });
 
-    // --- int8 matmul -----------------------------------------------------
+    // --- int8 matmul: oracle vs blocked kernel ---------------------------
     let a = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
     let w = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
     let macs = (128 * 128 * 128) as f64;
-    b.bench_throughput("matmul_i8(128^3)", macs, "MAC", || {
-        black_box(matmul_i8(black_box(&a), black_box(&w)));
-    });
+    let mm_old = b
+        .bench_throughput("matmul_i8(128^3) [oracle pre-change]", macs, "MAC", || {
+            black_box(matmul_i8(black_box(&a), black_box(&w)));
+        })
+        .median;
+    // New path as the engine runs it: per-call pack of Wᵀ into a reused
+    // buffer, then the blocked kernel with reused scratch/output.
+    let mut scratch = GemmScratch::default();
+    let mut wt = MatI8::zeros(0, 0);
+    let mut acc = MatI32::zeros(0, 0);
+    let mm_new = b
+        .bench_throughput("gemm_i32(128^3) [blocked]", macs, "MAC", || {
+            w.transpose_into(&mut wt);
+            gemm_i32_pret(black_box(&a), &wt, &mut scratch, &mut acc);
+            black_box(acc.get(0, 0));
+        })
+        .median;
+    println!("  -> speedup matmul_i8(128^3): {:.2}x (target >=5x)\n", mm_old / mm_new);
 
-    // --- fused attention core -------------------------------------------
+    // --- fused attention core: oracle vs blocked -------------------------
     let cfg = ItaConfig::paper();
     let s = 64;
     let p = 64;
@@ -48,26 +72,68 @@ fn main() {
     let bias = vec![0i8; p];
     let rq = RequantParams { mult: 136, shift: 13 };
     let core_macs = (2 * s * s * p) as f64;
-    b.bench_throughput("attention_core(S=64,P=64)", core_macs, "MAC", || {
-        let mut eng = TileEngine::new(cfg);
-        black_box(eng.attention_core(
-            black_box(&q),
-            black_box(&k),
-            black_box(&v),
-            rq,
-            &bias,
-            rq,
-        ));
-    });
+    let mut eng_ref = TileEngine::new(cfg);
+    let core_old = b
+        .bench_throughput("attention_core(S=64,P=64) [oracle]", core_macs, "MAC", || {
+            black_box(eng_ref.attention_core_reference(
+                black_box(&q),
+                black_box(&k),
+                black_box(&v),
+                rq,
+                &bias,
+                rq,
+            ));
+        })
+        .median;
+    let mut eng = TileEngine::new(cfg);
+    let core_new = b
+        .bench_throughput("attention_core(S=64,P=64) [blocked]", core_macs, "MAC", || {
+            black_box(eng.attention_core(
+                black_box(&q),
+                black_box(&k),
+                black_box(&v),
+                rq,
+                &bias,
+                rq,
+            ));
+        })
+        .median;
+    println!("  -> speedup attention_core(S=64,P=64): {:.2}x\n", core_old / core_new);
 
-    // --- full attention (compact) -----------------------------------------
+    // --- full attention (compact): oracle vs blocked vs threaded ----------
     let dims = ModelDims::compact();
     let mut exec = AttentionExecutor::new(cfg, dims, 42);
     let x = gen_input(7, &dims);
     let attn_macs = dims.shape().total_macs() as f64;
-    b.bench_throughput("run_attention(S=64,E=128,H=2)", attn_macs, "MAC", || {
-        black_box(exec.run(black_box(&x)));
-    });
+    let mut eng0 = TileEngine::new(cfg);
+    let attn_old = b
+        .bench_throughput("run_attention(S=64,E=128,H=2) [oracle serial]", attn_macs, "MAC", || {
+            black_box(run_attention_reference(
+                &mut eng0,
+                black_box(&x),
+                &exec.weights,
+                &exec.requants,
+            ));
+        })
+        .median;
+    let attn_serial = b
+        .bench_throughput("run_attention(S=64,E=128,H=2) [blocked serial]", attn_macs, "MAC", || {
+            black_box(exec.run_serial(black_box(&x)));
+        })
+        .median;
+    let attn_mt = b
+        .bench_throughput("run_attention(S=64,E=128,H=2) [blocked + threads]", attn_macs, "MAC", || {
+            black_box(exec.run(black_box(&x)));
+        })
+        .median;
+    println!(
+        "  -> speedup run_attention kernels only (single-thread-normalized): {:.2}x",
+        attn_old / attn_serial
+    );
+    println!(
+        "  -> speedup run_attention end to end (kernels + H-head threading): {:.2}x (target >=3x)\n",
+        attn_old / attn_mt
+    );
 
     // --- analytic simulator ------------------------------------------------
     let shape = dims.shape();

@@ -88,7 +88,8 @@ pub fn relu_i8(x: &MatI8) -> MatI8 {
 }
 
 /// Run the full encoder on the engine; returns per-layer outputs' final
-/// activation.
+/// activation. Attention blocks and FFN linears both run on the blocked
+/// GEMM kernels with fused requant (§Perf).
 pub fn run_encoder(engine: &mut TileEngine, model: &EncoderModel, x: &MatI8) -> MatI8 {
     let mut h = x.clone();
     for layer in &model.layers {
@@ -96,6 +97,21 @@ pub fn run_encoder(engine: &mut TileEngine, model: &EncoderModel, x: &MatI8) -> 
         let h1 = residual_add(&h, &attn_out.out);
         let ff1 = relu_i8(&engine.linear(&h1, &layer.ffn.w1, &layer.ffn.b1, model.rq_ffn1));
         let ff2 = engine.linear(&ff1, &layer.ffn.w2, &layer.ffn.b2, model.rq_ffn2);
+        h = residual_add(&h1, &ff2);
+    }
+    h
+}
+
+/// Pre-change encoder on the naive oracle kernels — the bit-exactness
+/// oracle for [`run_encoder`] (see `TileEngine::linear_reference`).
+pub fn run_encoder_reference(engine: &mut TileEngine, model: &EncoderModel, x: &MatI8) -> MatI8 {
+    let mut h = x.clone();
+    for layer in &model.layers {
+        let attn_out = super::run_attention_reference(engine, &h, &layer.attn, &model.rq);
+        let h1 = residual_add(&h, &attn_out.out);
+        let ff1 =
+            relu_i8(&engine.linear_reference(&h1, &layer.ffn.w1, &layer.ffn.b1, model.rq_ffn1));
+        let ff2 = engine.linear_reference(&ff1, &layer.ffn.w2, &layer.ffn.b2, model.rq_ffn2);
         h = residual_add(&h1, &ff2);
     }
     h
@@ -129,6 +145,20 @@ mod tests {
         let y2 = run_encoder(&mut e2, &model, &x);
         assert_eq!(y1, y2);
         assert_eq!(y1.shape(), (16, 16));
+    }
+
+    #[test]
+    fn encoder_blocked_kernels_match_oracle() {
+        // run_encoder (blocked GEMM + fused requant) vs the retained
+        // naive-kernel reference: outputs and activity bit-identical.
+        let model = tiny_model();
+        let x = gen_input(3, &model.dims);
+        let mut e1 = TileEngine::new(ItaConfig::tiny());
+        let mut e2 = TileEngine::new(ItaConfig::tiny());
+        let y1 = run_encoder(&mut e1, &model, &x);
+        let y2 = run_encoder_reference(&mut e2, &model, &x);
+        assert_eq!(y1, y2);
+        assert_eq!(e1.activity, e2.activity);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod schedule;
 
 use crate::ita::datapath::TileEngine;
 use crate::ita::requant::RequantParams;
-use crate::ita::ItaConfig;
+use crate::ita::{Activity, ItaConfig};
 use crate::util::mat::{MatI8, MatU8};
 use crate::util::rng::SplitMix64;
 
@@ -166,6 +166,35 @@ pub fn run_attention(
     AttentionOutput { out, attn }
 }
 
+/// Pre-change execution on the naive oracle kernels
+/// ([`TileEngine::linear_reference`] /
+/// [`TileEngine::attention_core_reference`]): the bit-exactness oracle
+/// for [`run_attention`] and the "before" side of
+/// `benches/hotpath.rs`'s speedup measurement.
+pub fn run_attention_reference(
+    engine: &mut TileEngine,
+    x: &MatI8,
+    w: &AttentionWeights,
+    rq: &RequantConfig,
+) -> AttentionOutput {
+    let mut head_outputs: Vec<MatI8> = Vec::with_capacity(w.heads.len());
+    let mut attn = Vec::with_capacity(w.heads.len());
+    for hw in &w.heads {
+        let q = engine.linear_reference(x, &hw.wq, &hw.bq, rq.q);
+        let k = engine.linear_reference(x, &hw.wk, &hw.bk, rq.k);
+        let v = engine.linear_reference(x, &hw.wv, &hw.bv, rq.v);
+        let (o, a) = engine.attention_core_reference(&q, &k, &v, rq.qk, &hw.bav, rq.av);
+        head_outputs.push(o);
+        attn.push(a);
+    }
+    let mut concat = head_outputs[0].clone();
+    for o in &head_outputs[1..] {
+        concat = concat.hcat(o);
+    }
+    let out = engine.linear_reference(&concat, &w.wo, &w.bo, rq.o);
+    AttentionOutput { out, attn }
+}
+
 /// Pre-transposed weight cache (§Perf): the serving path pays each
 /// weight transpose once at model load — the software expression of
 /// ITA's weight-stationary buffer.
@@ -193,11 +222,36 @@ impl TransposedWeights {
 /// Convenience wrapper owning the engine.
 pub struct AttentionExecutor {
     pub engine: TileEngine,
+    /// One persistent engine per head for the threaded [`Self::run`]
+    /// path: scratch arenas stay warm across calls (§Perf) and each
+    /// worker thread gets exclusive `&mut` access to its own engine.
+    head_engines: Vec<TileEngine>,
     pub weights: AttentionWeights,
     /// Transposed copies for the hot path (built once).
     pub weights_t: TransposedWeights,
     pub requants: RequantConfig,
     pub dims: ModelDims,
+}
+
+/// One head's full pipeline (projections + fused attention core) on
+/// that head's persistent engine. The engine's activity is reset on
+/// entry, so the returned copy is exactly this call's delta. Free
+/// function so the scoped workers in [`AttentionExecutor::run`] can
+/// call it without borrowing `self`.
+fn run_head(
+    engine: &mut TileEngine,
+    x: &MatI8,
+    hw: &HeadWeights,
+    wts: &(MatI8, MatI8, MatI8),
+    rq: RequantConfig,
+) -> (MatI8, MatU8, Activity) {
+    engine.reset_activity();
+    let (wqt, wkt, wvt) = wts;
+    let q = engine.linear_pret(x, wqt, &hw.bq, rq.q);
+    let k = engine.linear_pret(x, wkt, &hw.bk, rq.k);
+    let v = engine.linear_pret(x, wvt, &hw.bv, rq.v);
+    let (o, a) = engine.attention_core(&q, &k, &v, rq.qk, &hw.bav, rq.av);
+    (o, a, engine.activity)
 }
 
 impl AttentionExecutor {
@@ -206,6 +260,7 @@ impl AttentionExecutor {
         let weights_t = TransposedWeights::of(&weights);
         Self {
             engine: TileEngine::new(cfg),
+            head_engines: (0..dims.h).map(|_| TileEngine::new(cfg)).collect(),
             weights,
             weights_t,
             requants: default_requants(&dims),
@@ -214,13 +269,55 @@ impl AttentionExecutor {
     }
 
     /// Bit-identical to [`run_attention`] but uses the pre-transposed
-    /// weight cache (asserted equal in tests).
+    /// weight cache and executes the H heads on scoped worker threads
+    /// (§Perf). Each worker owns a thread-private [`TileEngine`]; head
+    /// outputs and [`Activity`] counters are merged back in head order,
+    /// so the result — outputs AND accounting — is deterministic and
+    /// identical to [`AttentionExecutor::run_serial`] (asserted in
+    /// tests: `Activity` merging is a sum of event counters, which is
+    /// order-invariant).
     pub fn run(&mut self, x: &MatI8) -> AttentionOutput {
+        if self.weights.heads.len() <= 1 {
+            return self.run_serial(x);
+        }
+        let (w, wt, rq) = (&self.weights, &self.weights_t, self.requants);
+
+        let head_results: Vec<(MatI8, MatU8, Activity)> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .head_engines
+                .iter_mut()
+                .zip(w.heads.iter().zip(&wt.heads))
+                .map(|(eng, (hw, wts))| s.spawn(move || run_head(eng, x, hw, wts, rq)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("head worker panicked")).collect()
+        });
+
+        let mut head_outputs: Vec<MatI8> = Vec::with_capacity(head_results.len());
+        let mut attn = Vec::with_capacity(head_results.len());
+        for (o, a, activity) in head_results {
+            self.engine.activity.add(&activity);
+            head_outputs.push(o);
+            attn.push(a);
+        }
+        let mut concat = head_outputs[0].clone();
+        for o in &head_outputs[1..] {
+            concat = concat.hcat(o);
+        }
+        let out = self.engine.linear_pret(&concat, &wt.wot, &w.bo, rq.o);
+        AttentionOutput { out, attn }
+    }
+
+    /// Single-threaded execution on the shared engine — the pre-change
+    /// `run` body. Kept callable for the determinism tests and as the
+    /// single-thread-normalized "before" side of the threading speedup
+    /// in `benches/hotpath.rs`.
+    pub fn run_serial(&mut self, x: &MatI8) -> AttentionOutput {
         let (w, wt, rq) = (&self.weights, &self.weights_t, &self.requants);
         let engine = &mut self.engine;
         let mut head_outputs: Vec<MatI8> = Vec::with_capacity(w.heads.len());
         let mut attn = Vec::with_capacity(w.heads.len());
-        for (hw, (wqt, wkt, wvt)) in w.heads.iter().zip(&wt.heads) {
+        for (hw, wts) in w.heads.iter().zip(&wt.heads) {
+            let (wqt, wkt, wvt) = wts;
             let q = engine.linear_pret(x, wqt, &hw.bq, rq.q);
             let k = engine.linear_pret(x, wkt, &hw.bk, rq.k);
             let v = engine.linear_pret(x, wvt, &hw.bv, rq.v);
@@ -283,6 +380,48 @@ mod tests {
         assert_eq!(fast.out, slow.out);
         assert_eq!(fast.attn, slow.attn);
         // Activity accounting identical too.
+        assert_eq!(ex.engine.activity, engine.activity);
+    }
+
+    #[test]
+    fn parallel_heads_deterministic_and_match_serial() {
+        // The issue's determinism contract: multi-threaded run()
+        // output AND merged Activity equal the serial path, run after
+        // run.
+        let d = ModelDims { s: 24, e: 32, p: 16, h: 4 };
+        let mut par = AttentionExecutor::new(ItaConfig::tiny(), d, 9);
+        let mut ser = AttentionExecutor::new(ItaConfig::tiny(), d, 9);
+        for seed in [1u64, 2, 3] {
+            // Fresh counters each round: the extra repeat-run below
+            // would otherwise skew the parallel side's totals.
+            par.engine.reset_activity();
+            ser.engine.reset_activity();
+            let x = gen_input(seed, &d);
+            let a = par.run(&x);
+            let b = ser.run_serial(&x);
+            assert_eq!(a.out, b.out, "seed {seed}");
+            assert_eq!(a.attn, b.attn, "seed {seed}");
+            assert_eq!(par.engine.activity, ser.engine.activity, "seed {seed}");
+            // Repeat the parallel run: bit-identical again.
+            let a2 = par.run(&x);
+            assert_eq!(a.out, a2.out);
+            assert_eq!(a.attn, a2.attn);
+        }
+    }
+
+    #[test]
+    fn blocked_run_matches_reference_oracle_run() {
+        // Full-block pin: the blocked-kernel path (run_attention and
+        // the threaded executor) against the retained pre-change
+        // oracle kernels.
+        let d = ModelDims { s: 24, e: 32, p: 16, h: 2 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 13);
+        let x = gen_input(14, &d);
+        let fast = ex.run(&x);
+        let mut engine = TileEngine::new(ItaConfig::tiny());
+        let oracle = run_attention_reference(&mut engine, &x, &ex.weights, &ex.requants);
+        assert_eq!(fast.out, oracle.out);
+        assert_eq!(fast.attn, oracle.attn);
         assert_eq!(ex.engine.activity, engine.activity);
     }
 

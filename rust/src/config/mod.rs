@@ -88,14 +88,43 @@ impl Default for SystemConfig {
 }
 
 /// Configuration errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error(transparent)]
-    Parse(#[from] TomlError),
-    #[error("config: {0}")]
+    Parse(TomlError),
     Invalid(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "{e}"),
+            ConfigError::Invalid(s) => write!(f, "config: {s}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Parse(e) => Some(e),
+            ConfigError::Io(e) => Some(e),
+            ConfigError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<TomlError> for ConfigError {
+    fn from(e: TomlError) -> Self {
+        ConfigError::Parse(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 fn get_usize(doc: &TomlDoc, section: &str, key: &str, default: usize) -> Result<usize, ConfigError> {

@@ -33,18 +33,27 @@ pub struct InferenceResponse {
 }
 
 /// Submission failure modes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     /// Bounded queue is full — backpressure.
-    #[error("queue full (backpressure)")]
     QueueFull,
     /// Server is shutting down.
-    #[error("server is shut down")]
     Shutdown,
     /// Input shape does not match the served model.
-    #[error("input shape mismatch")]
     BadShape,
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitError::QueueFull => "queue full (backpressure)",
+            SubmitError::Shutdown => "server is shut down",
+            SubmitError::BadShape => "input shape mismatch",
+        })
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 #[cfg(test)]
 mod tests {

@@ -168,11 +168,14 @@ fn spawn_worker(
     std::thread::Builder::new()
         .name(format!("ita-worker-{worker_id}"))
         .spawn(move || {
-            let mut exec = AttentionExecutor::new(
+            // Executor pool: grown lazily (each instance regenerates
+            // the model weights once) up to the host parallelism so
+            // wide batches fan out across requests (§Perf).
+            let mut pool = vec![AttentionExecutor::new(
                 config.accelerator,
                 config.model.dims,
                 config.model.seed,
-            );
+            )];
             loop {
                 // Take one batch (workers race on the shared receiver).
                 let batch = {
@@ -182,31 +185,100 @@ fn spawn_worker(
                         Err(_) => break,
                     }
                 };
-                process_batch(&config, &mut exec, batch, &metrics);
+                process_batch(&config, &mut pool, batch, &metrics);
             }
         })
         .expect("spawn worker")
 }
 
+/// Upper bound on one worker's request fan-out: the host cores are
+/// shared by all `workers` threads (which themselves fan out per
+/// head), so each worker gets an even share rather than the full
+/// machine — otherwise wide batches oversubscribe the host by
+/// workers × cores × heads.
+fn max_batch_parallelism(workers: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cores / workers.max(1)).max(1)
+}
+
 /// Execute a batch on one simulated accelerator and deliver responses.
+///
+/// The requests fan out across the worker's executor pool on scoped
+/// threads (round-robin by batch index, results merged back in batch
+/// order — every executor simulates the *same* model, so placement
+/// cannot change outputs and the per-request Activity is computed
+/// request-locally; the batch totals below are order-invariant sums).
 ///
 /// Weight-stationary amortization: the batch shares every weight
 /// stream, so `weight_buf_writes` (and the matching I/O port energy)
 /// are charged once per batch instead of once per request.
 fn process_batch(
     config: &SystemConfig,
-    exec: &mut AttentionExecutor,
+    pool: &mut Vec<AttentionExecutor>,
     batch: Vec<Job>,
     metrics: &ServerMetrics,
 ) {
     let b = batch.len() as u64;
-    let mut per_req: Vec<(Activity, InferenceRequest, Sender<InferenceResponse>, MatI8)> =
-        Vec::with_capacity(batch.len());
-    for (req, tx) in batch {
+    let want = batch.len().min(max_batch_parallelism(config.server.workers)).max(1);
+    while pool.len() < want {
+        pool.push(AttentionExecutor::new(
+            config.accelerator,
+            config.model.dims,
+            config.model.seed,
+        ));
+    }
+
+    type ReqResult = (Activity, InferenceRequest, Sender<InferenceResponse>, MatI8);
+    fn execute_one(
+        exec: &mut AttentionExecutor,
+        req: InferenceRequest,
+    ) -> (Activity, InferenceRequest, MatI8) {
         exec.engine.reset_activity();
         let out = exec.run(&req.input);
-        per_req.push((exec.engine.activity, req, tx, out.out));
+        (exec.engine.activity, req, out.out)
     }
+
+    let per_req: Vec<ReqResult> = if batch.len() == 1 || want == 1 {
+        // Serial fast path: no fan-out overhead for singleton batches.
+        let exec = &mut pool[0];
+        batch
+            .into_iter()
+            .map(|(req, tx)| {
+                let (activity, req, out) = execute_one(exec, req);
+                (activity, req, tx, out)
+            })
+            .collect()
+    } else {
+        // Round-robin the batch over `want` executors, keep indices so
+        // responses merge back in submission order.
+        let mut assigned: Vec<Vec<(usize, Job)>> = (0..want).map(|_| Vec::new()).collect();
+        for (i, job) in batch.into_iter().enumerate() {
+            assigned[i % want].push((i, job));
+        }
+        let mut slots: Vec<Option<ReqResult>> = (0..b as usize).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = pool
+                .iter_mut()
+                .zip(assigned)
+                .map(|(exec, jobs)| {
+                    s.spawn(move || {
+                        jobs.into_iter()
+                            .map(|(i, (req, tx))| {
+                                let (activity, req, out) = execute_one(exec, req);
+                                (i, (activity, req, tx, out))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("batch worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("request processed")).collect()
+    };
     // Batch-level activity with amortized weight traffic.
     let single_weight_writes = per_req.first().map(|(a, ..)| a.weight_buf_writes).unwrap_or(0);
     let mut batch_activity = Activity::default();
@@ -294,6 +366,27 @@ mod tests {
         }
         assert!(max_batch >= 2, "burst should batch, got max fill {max_batch}");
         assert!(server.metrics.mean_batch_fill() >= 1.0);
+    }
+
+    #[test]
+    fn parallel_batch_outputs_match_golden_serial() {
+        // Distinct inputs in one burst: whatever executor-pool fan-out
+        // the batch takes, every response must equal the golden serial
+        // engine's output for its own input.
+        let mut cfg = test_config();
+        cfg.server.workers = 1;
+        cfg.server.max_batch = 8;
+        cfg.server.max_wait_us = 20_000; // let the burst batch up
+        let server = Server::start(cfg);
+        let inputs: Vec<_> = (0..8u64).map(|i| gen_input(50 + i, &cfg.model.dims)).collect();
+        let mut exec = AttentionExecutor::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+        let golden: Vec<_> = inputs.iter().map(|x| exec.run_serial(x).out).collect();
+        let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.output, golden[i], "request {i} diverged");
+        }
+        server.shutdown();
     }
 
     #[test]

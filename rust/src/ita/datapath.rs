@@ -10,23 +10,50 @@
 //! Numerics here are the **golden reference** for all other layers: the
 //! Pallas kernel and the JAX model must match this engine bit-for-bit
 //! (asserted by `rust/tests/cross_layer.rs`).
+//!
+//! §Perf: the steady-state compute runs on the cache-blocked kernels in
+//! [`crate::util::gemm`] with engine-owned scratch arenas — no
+//! allocation beyond the returned outputs, the A·V pass reuses a
+//! once-packed Vᵀ, and the requant epilogue is fused into the GEMM
+//! tile loop. The pre-change naive paths survive as
+//! [`TileEngine::linear_reference`] /
+//! [`TileEngine::attention_core_reference`], the oracles every new
+//! kernel is pinned bit-identical to.
 
 use super::requant::{requant_mat, RequantParams};
 use super::simulator::{activity_for_matmul, MatmulDims};
-use super::softmax::{ita_softmax_rows, SoftmaxUnit};
+use super::softmax::{ita_softmax_row_masked_into, ita_softmax_rows, SoftmaxUnit};
 use super::{Activity, ItaConfig};
+use crate::util::gemm::{gemm_requant_pret, GemmScratch};
 use crate::util::mat::{matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
+
+/// Reusable scratch arenas (§Perf): everything the hot path needs
+/// beyond its returned outputs lives here and is recycled across calls.
+#[derive(Debug, Clone, Default)]
+struct EngineScratch {
+    /// GEMM accumulator tile.
+    gemm: GemmScratch,
+    /// Packed (pre-transposed) right operand: Wᵀ in [`TileEngine::linear`],
+    /// Vᵀ in the A·V pass — built once per call into a reused buffer.
+    bt: MatI8,
+    /// Requantized Q·Kᵀ logits.
+    logits: MatI8,
+    /// Zero bias for the QK requant stage (the hardware's bias port is
+    /// unused there), grown on demand.
+    zero_bias: Vec<i8>,
+}
 
 /// Functional engine over one ITA instance.
 #[derive(Debug, Clone)]
 pub struct TileEngine {
     pub cfg: ItaConfig,
     pub activity: Activity,
+    scratch: EngineScratch,
 }
 
 impl TileEngine {
     pub fn new(cfg: ItaConfig) -> Self {
-        Self { cfg, activity: Activity::default() }
+        Self { cfg, activity: Activity::default(), scratch: EngineScratch::default() }
     }
 
     pub fn reset_activity(&mut self) {
@@ -43,6 +70,8 @@ impl TileEngine {
 
     /// Linear layer: `y = requant(x · w + bias)`, the Q/K/V/OW (and
     /// FFN) building block. `bias` has one entry per output column.
+    /// W is packed (transposed) once into the scratch arena, then the
+    /// blocked kernel runs with the fused requant epilogue.
     pub fn linear(
         &mut self,
         x: &MatI8,
@@ -52,10 +81,15 @@ impl TileEngine {
     ) -> MatI8 {
         assert_eq!(x.cols(), w.rows(), "linear dims");
         self.check_depth(w.rows());
-        let acc = matmul_i8(x, w);
+        let mut out = MatI8::zeros(0, 0);
+        {
+            let EngineScratch { gemm, bt, .. } = &mut self.scratch;
+            w.transpose_into(bt);
+            gemm_requant_pret(x, bt, bias, rq, gemm, &mut out);
+        }
         let useful = (x.rows() * x.cols() * w.cols()) as u64;
         self.record_matmul(x.rows(), x.cols(), w.cols(), useful);
-        requant_mat(&acc, bias, rq)
+        out
     }
 
     /// Linear layer against a **pre-transposed** weight matrix
@@ -71,9 +105,30 @@ impl TileEngine {
     ) -> MatI8 {
         assert_eq!(x.cols(), wt.cols(), "linear dims (pre-transposed)");
         self.check_depth(wt.cols());
-        let acc = matmul_i8_pret(x, wt);
+        let mut out = MatI8::zeros(0, 0);
+        gemm_requant_pret(x, wt, bias, rq, &mut self.scratch.gemm, &mut out);
         let useful = (x.rows() * x.cols() * wt.rows()) as u64;
         self.record_matmul(x.rows(), x.cols(), wt.rows(), useful);
+        out
+    }
+
+    /// Pre-change linear: naive oracle matmul plus a separate requant
+    /// pass. Retained as the bit-exactness oracle — tests pin
+    /// [`TileEngine::linear`] to it, and `benches/hotpath.rs` uses it
+    /// as the "before" side of the speedup measurement. Activity
+    /// accounting is identical to [`TileEngine::linear`].
+    pub fn linear_reference(
+        &mut self,
+        x: &MatI8,
+        w: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+    ) -> MatI8 {
+        assert_eq!(x.cols(), w.rows(), "linear dims");
+        self.check_depth(w.rows());
+        let acc = matmul_i8(x, w);
+        let useful = (x.rows() * x.cols() * w.cols()) as u64;
+        self.record_matmul(x.rows(), x.cols(), w.cols(), useful);
         requant_mat(&acc, bias, rq)
     }
 
@@ -90,6 +145,54 @@ impl TileEngine {
     /// mechanism remains the same"). Masked logits never enter DA and
     /// their probabilities are gated to zero before A·V.
     pub fn attention_core_causal(
+        &mut self,
+        q: &MatI8,
+        k: &MatI8,
+        v: &MatI8,
+        rq_qk: RequantParams,
+        bias_av: &[i8],
+        rq_av: RequantParams,
+    ) -> (MatI8, MatU8) {
+        let s = q.rows();
+        assert_eq!(k.rows(), s, "K sequence length");
+        assert_eq!(v.rows(), s, "V sequence length");
+        let p = v.cols();
+        let m = self.cfg.m;
+
+        // Q·Kᵀ with the fused requant epilogue into the logits arena.
+        {
+            let EngineScratch { gemm, logits, zero_bias, .. } = &mut self.scratch;
+            zero_bias.resize(s, 0);
+            gemm_requant_pret(q, k, zero_bias.as_slice(), rq_qk, gemm, logits);
+        }
+        let useful_qk: u64 = (0..s).map(|r| ((r + 1) * q.cols()) as u64).sum();
+        self.record_matmul(s, q.cols(), s, useful_qk);
+
+        let mut a = MatU8::zeros(s, s);
+        for r in 0..s {
+            ita_softmax_row_masked_into(self.scratch.logits.row(r), m, r + 1, a.row_mut(r));
+        }
+        self.activity.softmax_elems += (0..s).map(|r| (r + 1) as u64).sum::<u64>() * 2;
+        self.activity.divisions += s as u64;
+
+        // A·V on the once-packed Vᵀ, int8 out straight from the tile.
+        let mut out = MatI8::zeros(0, 0);
+        {
+            let EngineScratch { gemm, bt, .. } = &mut self.scratch;
+            v.transpose_into(bt);
+            gemm_requant_pret(&a, bt, bias_av, rq_av, gemm, &mut out);
+        }
+        let useful_av: u64 = (0..s).map(|r| ((r + 1) * p) as u64).sum();
+        self.record_matmul(s, s, p, useful_av);
+        (out, a)
+    }
+
+    /// Pre-change causal core: oracle matmuls, separate requant pass,
+    /// per-row masked softmax with fresh row buffers — exactly the
+    /// implementation `attention_core_causal` had before the
+    /// blocked-kernel rework. Retained as its bit-exactness oracle.
+    /// Activity accounting is identical.
+    pub fn attention_core_causal_reference(
         &mut self,
         q: &MatI8,
         k: &MatI8,
@@ -149,12 +252,14 @@ impl TileEngine {
 
         // --- Q·Kᵀ, requantized to int8 logits --------------------------
         // K is (S, P) row-major, i.e. already the transposed layout for
-        // row-dot products: A[r,c] = q.row(r)·k.row(c). §Perf: avoids a
-        // double transpose (attention_core used to transpose K only for
-        // matmul_i8 to transpose it back).
-        let acc = matmul_i8_pret(q, k);
-        let zero_bias = vec![0i8; s];
-        let logits = requant_mat(&acc, &zero_bias, rq_qk);
+        // row-dot products: A[r,c] = q.row(r)·k.row(c). The requant
+        // epilogue is fused into the blocked kernel and lands in the
+        // reused logits arena (§Perf: zero steady-state allocation).
+        {
+            let EngineScratch { gemm, logits, zero_bias, .. } = &mut self.scratch;
+            zero_bias.resize(s, 0);
+            gemm_requant_pret(q, k, zero_bias.as_slice(), rq_qk, gemm, logits);
+        }
         let useful_qk = (s * q.cols() * s) as u64;
         self.record_matmul(s, q.cols(), s, useful_qk);
 
@@ -162,12 +267,58 @@ impl TileEngine {
         // (Bit-identical to processing stripes as the hardware does;
         // asserted against SoftmaxUnit in tests.)
         let m = self.cfg.m;
-        let a = ita_softmax_rows(&logits, m);
+        let a = ita_softmax_rows(&self.scratch.logits, m);
         // DA touches every logit once, EN once more during A·V.
         self.activity.softmax_elems += (s * s) as u64 * 2;
         self.activity.divisions += s as u64;
 
         // --- A·V with on-the-fly EN -----------------------------------
+        // V is packed (transposed) once per call into the reused arena
+        // instead of matmul_u8_i8's per-call transpose (§Perf), and the
+        // requant epilogue writes int8 straight from the i32 tile.
+        let mut out = MatI8::zeros(0, 0);
+        {
+            let EngineScratch { gemm, bt, .. } = &mut self.scratch;
+            v.transpose_into(bt);
+            gemm_requant_pret(&a, bt, bias_av, rq_av, gemm, &mut out);
+        }
+        let useful_av = (s * s * p) as u64;
+        self.record_matmul(s, s, p, useful_av);
+
+        (out, a)
+    }
+
+    /// Pre-change attention core: oracle matmuls with a separate
+    /// requant pass and a fresh V transpose per call — exactly the
+    /// implementation `attention_core` had before the blocked-kernel
+    /// rework. Retained as the bit-exactness oracle and the "before"
+    /// side of `benches/hotpath.rs`. Activity accounting is identical.
+    pub fn attention_core_reference(
+        &mut self,
+        q: &MatI8,
+        k: &MatI8,
+        v: &MatI8,
+        rq_qk: RequantParams,
+        bias_av: &[i8],
+        rq_av: RequantParams,
+    ) -> (MatI8, MatU8) {
+        let s = q.rows();
+        assert_eq!(k.rows(), s, "K sequence length");
+        assert_eq!(v.rows(), s, "V sequence length");
+        assert_eq!(q.cols(), k.cols(), "projection dim");
+        let p = v.cols();
+
+        let acc = matmul_i8_pret(q, k);
+        let zero_bias = vec![0i8; s];
+        let logits = requant_mat(&acc, &zero_bias, rq_qk);
+        let useful_qk = (s * q.cols() * s) as u64;
+        self.record_matmul(s, q.cols(), s, useful_qk);
+
+        let m = self.cfg.m;
+        let a = ita_softmax_rows(&logits, m);
+        self.activity.softmax_elems += (s * s) as u64 * 2;
+        self.activity.divisions += s as u64;
+
         let acc_av = matmul_u8_i8(&a, v);
         let out = requant_mat(&acc_av, bias_av, rq_av);
         let useful_av = (s * s * p) as u64;
@@ -239,7 +390,7 @@ mod tests {
 
     #[test]
     fn linear_matches_pe_array_execution() {
-        // The vectorized linear() must equal an explicit PE-by-PE,
+        // The blocked-kernel linear() must equal an explicit PE-by-PE,
         // tile-by-tile execution with the weight buffer dataflow.
         let cfg = ItaConfig::tiny();
         let mut rng = SplitMix64::new(1);
@@ -275,6 +426,69 @@ mod tests {
     }
 
     #[test]
+    fn blocked_linear_matches_reference_oracle() {
+        // linear() (blocked, fused epilogue) vs linear_reference()
+        // (pre-change naive path): outputs AND activity identical,
+        // across ragged shapes.
+        forall("linear == linear_reference", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let (r, k, c) = (g.usize_in(1, 80), g.usize_in(1, 64), g.usize_in(1, 80));
+            let mut rng = SplitMix64::new(g.u64());
+            let x = rand_mat(&mut rng, r, k);
+            let w = rand_mat(&mut rng, k, c);
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let mut e2 = TileEngine::new(cfg);
+            let got = e1.linear(&x, &w, &bias, rq());
+            let want = e2.linear_reference(&x, &w, &bias, rq());
+            assert_eq!(got, want, "r={r} k={k} c={c}");
+            assert_eq!(e1.activity, e2.activity);
+        });
+    }
+
+    #[test]
+    fn attention_core_matches_reference_oracle() {
+        forall("attention_core == reference", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let s = g.usize_in(2, 40);
+            let p = g.usize_in(2, 16);
+            let mut rng = SplitMix64::new(g.u64());
+            let q = rand_mat(&mut rng, s, p);
+            let k = rand_mat(&mut rng, s, p);
+            let v = rand_mat(&mut rng, s, p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let mut e2 = TileEngine::new(cfg);
+            let (o1, a1) = e1.attention_core(&q, &k, &v, rq(), &bias, rq());
+            let (o2, a2) = e2.attention_core_reference(&q, &k, &v, rq(), &bias, rq());
+            assert_eq!(a1, a2, "attention matrices differ");
+            assert_eq!(o1, o2, "outputs differ");
+            assert_eq!(e1.activity, e2.activity, "activity accounting differs");
+        });
+    }
+
+    #[test]
+    fn causal_core_matches_reference_oracle() {
+        forall("attention_core_causal == reference", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let s = g.usize_in(1, 40);
+            let p = g.usize_in(1, 16);
+            let mut rng = SplitMix64::new(g.u64());
+            let q = rand_mat(&mut rng, s, p);
+            let k = rand_mat(&mut rng, s, p);
+            let v = rand_mat(&mut rng, s, p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let mut e2 = TileEngine::new(cfg);
+            let (o1, a1) = e1.attention_core_causal(&q, &k, &v, rq(), &bias, rq());
+            let (o2, a2) = e2.attention_core_causal_reference(&q, &k, &v, rq(), &bias, rq());
+            assert_eq!(a1, a2, "causal attention matrices differ (s={s} p={p})");
+            assert_eq!(o1, o2, "causal outputs differ (s={s} p={p})");
+            assert_eq!(e1.activity, e2.activity, "activity accounting differs");
+        });
+    }
+
+    #[test]
     fn attention_vectorized_equals_streamed() {
         forall("attention stream order", 25, |g| {
             let cfg = ItaConfig::tiny();
@@ -292,6 +506,27 @@ mod tests {
             assert_eq!(a1, a2, "attention matrices differ");
             assert_eq!(o1, o2, "outputs differ");
         });
+    }
+
+    #[test]
+    fn scratch_arenas_survive_shape_changes() {
+        // One engine serving different shapes back to back must not
+        // leak state between calls (arena reset semantics).
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(17);
+        let mut eng = TileEngine::new(cfg);
+        let mut oracle = TileEngine::new(cfg);
+        for &(s, p) in &[(24usize, 12usize), (5, 3), (16, 8), (3, 16)] {
+            let q = rand_mat(&mut rng, s, p);
+            let k = rand_mat(&mut rng, s, p);
+            let v = rand_mat(&mut rng, s, p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+            let (o1, a1) = eng.attention_core(&q, &k, &v, rq(), &bias, rq());
+            let (o2, a2) = oracle.attention_core_reference(&q, &k, &v, rq(), &bias, rq());
+            assert_eq!(o1, o2, "shape ({s},{p})");
+            assert_eq!(a1, a2, "shape ({s},{p})");
+        }
+        assert_eq!(eng.activity, oracle.activity);
     }
 
     #[test]

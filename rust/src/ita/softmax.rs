@@ -214,10 +214,21 @@ pub fn ita_softmax_row(x: &[i8], part: usize) -> Vec<u8> {
 /// stripes and gates masked lanes), which keeps this bit-identical to
 /// the vectorized Pallas/jnp mirror.
 pub fn ita_softmax_row_masked(x: &[i8], part: usize, valid: usize) -> Vec<u8> {
+    let mut out = vec![0u8; x.len()];
+    ita_softmax_row_masked_into(x, part, valid, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`ita_softmax_row_masked`]: writes the
+/// probabilities into a caller-provided row (§Perf — the causal
+/// attention core streams rows straight into its output matrix).
+pub fn ita_softmax_row_masked_into(x: &[i8], part: usize, valid: usize, out: &mut [u8]) {
     assert!(part > 0);
+    assert_eq!(out.len(), x.len(), "output row length");
     let valid = valid.min(x.len());
     if valid == 0 {
-        return vec![0; x.len()];
+        out.fill(0);
+        return;
     }
     let mut st = RowState::default();
     for (ci, chunk) in x.chunks(part).enumerate() {
@@ -229,10 +240,9 @@ pub fn ita_softmax_row_masked(x: &[i8], part: usize, valid: usize) -> Vec<u8> {
         st.accumulate(&chunk[..w]);
     }
     st.invert();
-    x.iter()
-        .enumerate()
-        .map(|(i, &v)| if i < valid { st.normalize(v) } else { 0 })
-        .collect()
+    for (i, (&v, o)) in x.iter().zip(out.iter_mut()).enumerate() {
+        *o = if i < valid { st.normalize(v) } else { 0 };
+    }
 }
 
 /// Full-matrix convenience: row-wise ITA softmax with streaming width

@@ -8,8 +8,11 @@
 //! lowered for, so the coordinator can pick the right executable per
 //! model variant and the tests can regenerate matching golden data.
 
+use crate::anyhow;
+#[cfg(feature = "xla-runtime")]
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One artifact's metadata from the manifest.
@@ -89,10 +92,12 @@ impl ArtifactManifest {
 }
 
 /// The PJRT CPU runtime.
+#[cfg(feature = "xla-runtime")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         Ok(Self { client: xla::PjRtClient::cpu()? })
@@ -115,11 +120,13 @@ impl Runtime {
 }
 
 /// One compiled executable with its metadata.
+#[cfg(feature = "xla-runtime")]
 pub struct Engine {
     exe: xla::PjRtLoadedExecutable,
     pub meta: ArtifactMeta,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl Engine {
     /// Execute with int32 tensors (the HLO boundary dtype; int8
     /// semantics are preserved inside — values stay in int8 range).
@@ -159,6 +166,57 @@ impl Engine {
             })
             .collect::<Result<Vec<i8>>>()?;
         Ok(crate::util::mat::MatI8::from_vec(r, c, data))
+    }
+}
+
+/// True when this build can execute artifacts (the `xla-runtime`
+/// feature is enabled). Tests and tools that would otherwise call
+/// [`Runtime::cpu`] unconditionally gate on this so a default-feature
+/// build with `artifacts/` present skips gracefully instead of
+/// hitting the stub's error.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "xla-runtime")
+}
+
+/// Stub runtime for builds without the `xla-runtime` feature: the
+/// offline image ships no `xla` bindings, so PJRT execution is
+/// unavailable. Manifest parsing above still works; every execution
+/// entry point fails with an explanatory error ([`pjrt_enabled`] lets
+/// call sites skip before reaching these).
+#[cfg(not(feature = "xla-runtime"))]
+pub struct Runtime;
+
+#[cfg(not(feature = "xla-runtime"))]
+const NO_XLA: &str = "built without the `xla-runtime` feature: vendored xla bindings \
+     are required for PJRT execution (see rust/Cargo.toml [features])";
+
+#[cfg(not(feature = "xla-runtime"))]
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Err(anyhow!("{NO_XLA}"))
+    }
+
+    /// Load and compile one artifact (unreachable in stub builds —
+    /// `cpu()` always errors first — but kept signature-compatible).
+    pub fn load(&self, _manifest: &ArtifactManifest, _name: &str) -> Result<Engine> {
+        Err(anyhow!("{NO_XLA}"))
+    }
+}
+
+/// Stub of the compiled executable handle (see [`Runtime`] stub).
+#[cfg(not(feature = "xla-runtime"))]
+pub struct Engine {
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl Engine {
+    pub fn run_i32(&self, _inputs: &[Vec<i32>]) -> Result<Vec<i32>> {
+        Err(anyhow!("{NO_XLA}"))
+    }
+
+    pub fn run_mat_i8(&self, _x: &crate::util::mat::MatI8) -> Result<crate::util::mat::MatI8> {
+        Err(anyhow!("{NO_XLA}"))
     }
 }
 

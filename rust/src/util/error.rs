@@ -1,0 +1,113 @@
+//! Minimal `anyhow`-style error plumbing (the real crate is not
+//! available in this offline build environment).
+//!
+//! Provides the small surface the runtime layer uses: an opaque
+//! [`Error`] carrying a message chain, a defaulted [`Result`] alias,
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!`
+//! macros (exported at the crate root, import with
+//! `use crate::{anyhow, bail};`).
+
+use std::fmt;
+
+/// Opaque error: a rendered message chain. Like `anyhow::Error`, this
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// makes the blanket `From` impl below possible.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Any concrete error converts with `?`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` defaulting to [`Error`], as `anyhow::Result` does.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .with_context(|| format!("reading {}", "/definitely/not/a/path"))?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let err = io_fail().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("reading /definitely/not/a/path: "), "{msg}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("value {} too big", 42);
+        assert_eq!(e.to_string(), "value 42 too big");
+        fn bails() -> Result<()> {
+            bail!("nope: {}", "reason")
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not-a-number".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! Cache-blocked integer GEMM kernels — the host-side hot path behind
+//! [`crate::ita::datapath::TileEngine`].
+//!
+//! The functional engine's dominant cost is int8×int8→i32 (projections,
+//! Q·Kᵀ) and u8×i8→i32 (A·V) matmuls. The oracle implementations in
+//! [`super::mat`] are naive per-element row-dots that allocate a fresh
+//! accumulator matrix (and, for the non-`_pret` variants, a fresh
+//! transpose) on every call. The kernels here mirror ITA's dataflow
+//! discipline in software:
+//!
+//! * **MC×KC×NC blocking** — the output is computed in MC×NC tiles with
+//!   the K dimension walked in KC-deep slabs, so the right-operand rows
+//!   touched by a tile stay L1/L2-resident across the whole row block
+//!   (the software analogue of the weight-stationary buffer).
+//! * **MR×NR register micro-tiles** — each A-row slice is reused across
+//!   NR right-hand rows while LLVM vectorizes the inner dot (same
+//!   zip/map/sum shape as [`super::mat::dot_i8_i32`], which
+//!   `target-cpu=native` turns into packed integer MACs).
+//! * **Caller-provided scratch and output** — steady-state calls do not
+//!   allocate: the accumulator tile lives in a reusable
+//!   [`GemmScratch`], outputs land in caller-owned matrices resized in
+//!   place, and pre-transposed ("packed") right operands are built once
+//!   per invocation with [`super::mat::Mat::transpose_into`].
+//! * **Fused requant epilogue** — the int8 result is written directly
+//!   from the i32 accumulator tile while it is still cache-hot, instead
+//!   of materializing the full i32 matrix and re-walking it.
+//!
+//! Everything is **bit-identical** to the oracles: i32 accumulation of
+//! exact int products is associative, so any blocking order yields the
+//! same sums, and the epilogue applies the identical
+//! [`RequantParams::apply_biased`] the oracle path applies. Property
+//! tests below (and `tests/kernel_parity.rs`) pin this across ragged
+//! shapes.
+
+use super::mat::{Mat, MatI32, MatI8};
+use crate::ita::requant::RequantParams;
+
+/// Row-block height: output rows processed per tile.
+pub const MC: usize = 64;
+/// Depth slab: K elements accumulated per pass. Matches the deepest
+/// reduction the D=24-bit datapath admits (max_dot_len() = 511 ⇒ at
+/// most two slabs), and one A-row slab of KC i8 stays well inside L1.
+pub const KC: usize = 256;
+/// Column-block width: right-operand rows kept hot per tile.
+pub const NC: usize = 64;
+/// Register micro-tile: MR A-rows × NR B-rows per inner step.
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// Left-operand element: i8 activations or u8 attention probabilities.
+pub trait GemmLhs: Copy + Default {
+    fn widen(self) -> i32;
+}
+
+impl GemmLhs for i8 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl GemmLhs for u8 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+/// Reusable scratch arena: owns the i32 accumulator tile so that
+/// steady-state GEMM calls perform no allocation. One per engine (or
+/// per thread — it is cheap and `Default`).
+#[derive(Debug, Clone, Default)]
+pub struct GemmScratch {
+    /// MC×NC accumulator tile, row-major with the tile's column count.
+    acc: Vec<i32>,
+}
+
+/// Exact widening dot product (auto-vectorizing shape, §Perf).
+#[inline(always)]
+fn dot_widen<L: GemmLhs>(a: &[L], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x.widen() * y as i32).sum()
+}
+
+/// Blocked GEMM driver against a **pre-transposed** right operand
+/// (`bt` holds Bᵀ: one row per output column). Calls `epilogue` once
+/// per finished MC×NC tile with `(row0, col0, rows, cols, acc_tile)`;
+/// `acc_tile` is row-major with stride `cols`.
+fn gemm_blocked<L: GemmLhs>(
+    a: &Mat<L>,
+    bt: &MatI8,
+    scratch: &mut GemmScratch,
+    mut epilogue: impl FnMut(usize, usize, usize, usize, &[i32]),
+) {
+    assert_eq!(a.cols(), bt.cols(), "gemm inner-dim mismatch");
+    let (m, n, k) = (a.rows(), bt.rows(), a.cols());
+    if scratch.acc.len() < MC * NC {
+        scratch.acc.resize(MC * NC, 0);
+    }
+    for ic in (0..m).step_by(MC) {
+        let mcb = MC.min(m - ic);
+        for jc in (0..n).step_by(NC) {
+            let ncb = NC.min(n - jc);
+            let tile = &mut scratch.acc[..mcb * ncb];
+            tile.fill(0);
+            // K slabs accumulate into the same tile: i32 adds of exact
+            // products are associative, so the split is bit-invisible.
+            for pc in (0..k).step_by(KC) {
+                let kcb = KC.min(k - pc);
+                let mut ir = 0;
+                while ir < mcb {
+                    let mr = MR.min(mcb - ir);
+                    let mut jr = 0;
+                    while jr < ncb {
+                        let nr = NR.min(ncb - jr);
+                        for r in 0..mr {
+                            let arow = &a.row(ic + ir + r)[pc..pc + kcb];
+                            let base = (ir + r) * ncb + jr;
+                            for c in 0..nr {
+                                let brow = &bt.row(jc + jr + c)[pc..pc + kcb];
+                                tile[base + c] += dot_widen(arow, brow);
+                            }
+                        }
+                        jr += NR;
+                    }
+                    ir += MR;
+                }
+            }
+            epilogue(ic, jc, mcb, ncb, tile);
+        }
+    }
+}
+
+/// Blocked i32 GEMM against a pre-transposed right operand, writing the
+/// full accumulator matrix into caller-owned `out` (resized in place).
+pub fn gemm_i32_pret<L: GemmLhs>(
+    a: &Mat<L>,
+    bt: &MatI8,
+    scratch: &mut GemmScratch,
+    out: &mut MatI32,
+) {
+    // The tile epilogues below cover every output element.
+    out.reset_for_overwrite(a.rows(), bt.rows());
+    gemm_blocked(a, bt, scratch, |ic, jc, mcb, ncb, tile| {
+        for r in 0..mcb {
+            out.row_mut(ic + r)[jc..jc + ncb].copy_from_slice(&tile[r * ncb..(r + 1) * ncb]);
+        }
+    });
+}
+
+/// Blocked GEMM with the **fused requant epilogue**: int8 output is
+/// produced directly from the cache-hot i32 accumulator tile with the
+/// per-output-column bias, exactly as
+/// `requant_mat(&matmul(a, b), bias, rq)` would — without ever
+/// materializing the i32 matrix. `out` is resized in place.
+pub fn gemm_requant_pret<L: GemmLhs>(
+    a: &Mat<L>,
+    bt: &MatI8,
+    bias: &[i8],
+    rq: RequantParams,
+    scratch: &mut GemmScratch,
+    out: &mut MatI8,
+) {
+    assert_eq!(bias.len(), bt.rows(), "one bias per output column");
+    // The tile epilogues below cover every output element.
+    out.reset_for_overwrite(a.rows(), bt.rows());
+    gemm_blocked(a, bt, scratch, |ic, jc, mcb, ncb, tile| {
+        for r in 0..mcb {
+            let orow = &mut out.row_mut(ic + r)[jc..jc + ncb];
+            let trow = &tile[r * ncb..(r + 1) * ncb];
+            for c in 0..ncb {
+                orow[c] = rq.apply_biased(trow[c], bias[jc + c]);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::requant::requant_mat;
+    use crate::util::mat::{matmul_i8_pret, matmul_u8_i8, MatU8};
+    use crate::util::prop::forall;
+    use crate::util::rng::SplitMix64;
+
+    fn rq(g: &mut crate::util::prop::Gen) -> RequantParams {
+        RequantParams { mult: g.i8_in(1, 127) as u8, shift: g.usize_in(0, 14) as u8 }
+    }
+
+    /// Ragged shapes around the block boundaries plus the degenerate
+    /// row/column vectors the issue calls out.
+    fn ragged_shape(g: &mut crate::util::prop::Gen) -> (usize, usize, usize) {
+        match g.usize_in(0, 4) {
+            0 => (1, g.usize_in(1, 2 * NC + 3), g.usize_in(1, 40)), // 1×N
+            1 => (g.usize_in(1, 2 * MC + 3), 1, g.usize_in(1, 40)), // N×1
+            2 => (MC + 1, NC + 1, KC + 1), // every block ragged by one
+            _ => (g.usize_in(1, 90), g.usize_in(1, 90), g.usize_in(1, 70)),
+        }
+    }
+
+    #[test]
+    fn blocked_i8_bit_identical_to_oracle() {
+        forall("gemm i8 == dot_i8_i32 oracle", 40, |g| {
+            let (m, n, k) = ragged_shape(g);
+            let mut rng = SplitMix64::new(g.u64());
+            let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
+            let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+            let mut scratch = GemmScratch::default();
+            let mut got = MatI32::zeros(0, 0);
+            gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
+            assert_eq!(got, matmul_i8_pret(&a, &bt), "m={m} n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn fused_requant_bit_identical_to_two_pass_oracle() {
+        forall("gemm+requant == matmul;requant_mat", 40, |g| {
+            let (m, n, k) = ragged_shape(g);
+            let p = rq(g);
+            let mut rng = SplitMix64::new(g.u64());
+            let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
+            let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+            let bias: Vec<i8> = rng.vec_i8(n);
+            let mut scratch = GemmScratch::default();
+            let mut got = MatI8::zeros(0, 0);
+            gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut got);
+            let want = requant_mat(&matmul_i8_pret(&a, &bt), &bias, p);
+            assert_eq!(got, want, "m={m} n={n} k={k} rq={p:?}");
+        });
+    }
+
+    #[test]
+    fn blocked_u8_i8_bit_identical_to_oracle() {
+        forall("gemm u8·i8 == matmul_u8_i8 oracle", 40, |g| {
+            let (m, n, k) = ragged_shape(g);
+            let p = rq(g);
+            let mut rng = SplitMix64::new(g.u64());
+            let a = MatU8::from_fn(m, k, |_, _| rng.next_i8() as u8);
+            let b = MatI8::from_fn(k, n, |_, _| rng.next_i8());
+            let bias: Vec<i8> = rng.vec_i8(n);
+            let bt = b.transpose(); // the once-packed Vᵀ the engine reuses
+            let mut scratch = GemmScratch::default();
+            let mut got_acc = MatI32::zeros(0, 0);
+            gemm_i32_pret(&a, &bt, &mut scratch, &mut got_acc);
+            let want_acc = matmul_u8_i8(&a, &b);
+            assert_eq!(got_acc, want_acc, "m={m} n={n} k={k}");
+            let mut got = MatI8::zeros(0, 0);
+            gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut got);
+            assert_eq!(got, requant_mat(&want_acc, &bias, p));
+        });
+    }
+
+    #[test]
+    fn k_spanning_multiple_depth_slabs_is_exact() {
+        // K > KC forces the two-slab accumulation path; the D=24-bit
+        // guard upstream allows K up to 511, so 300 is a legal depth.
+        let mut rng = SplitMix64::new(7);
+        let (m, n, k) = (5, 6, KC + 44);
+        let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
+        let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+        let mut scratch = GemmScratch::default();
+        let mut got = MatI32::zeros(0, 0);
+        gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
+        assert_eq!(got, matmul_i8_pret(&a, &bt));
+    }
+
+    #[test]
+    fn scratch_and_output_reuse_across_shrinking_shapes() {
+        // A big call followed by a smaller one must not leak stale
+        // accumulator or output state (reset() semantics).
+        let mut rng = SplitMix64::new(8);
+        let mut scratch = GemmScratch::default();
+        let mut out = MatI8::zeros(0, 0);
+        let p = RequantParams { mult: 3, shift: 4 };
+        let a1 = MatI8::from_fn(70, 65, |_, _| rng.next_i8());
+        let bt1 = MatI8::from_fn(70, 65, |_, _| rng.next_i8());
+        let bias1 = vec![1i8; 70];
+        gemm_requant_pret(&a1, &bt1, &bias1, p, &mut scratch, &mut out);
+        assert_eq!(out, requant_mat(&matmul_i8_pret(&a1, &bt1), &bias1, p));
+        let a2 = MatI8::from_fn(3, 9, |_, _| rng.next_i8());
+        let bt2 = MatI8::from_fn(2, 9, |_, _| rng.next_i8());
+        let bias2 = vec![-7i8; 2];
+        gemm_requant_pret(&a2, &bt2, &bias2, p, &mut scratch, &mut out);
+        assert_eq!(out, requant_mat(&matmul_i8_pret(&a2, &bt2), &bias2, p));
+    }
+
+    #[test]
+    fn empty_k_yields_bias_only_requant() {
+        // k = 0: accumulator is all zeros, output is requant(0 + bias).
+        let a = MatI8::zeros(2, 0);
+        let bt = MatI8::zeros(3, 0);
+        let bias = vec![10i8, -20, 30];
+        let p = RequantParams { mult: 1, shift: 0 };
+        let mut scratch = GemmScratch::default();
+        let mut out = MatI8::zeros(0, 0);
+        gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut out);
+        assert_eq!(out.shape(), (2, 3));
+        for r in 0..2 {
+            assert_eq!(out.row(r), &[10, -20, 30]);
+        }
+    }
+}

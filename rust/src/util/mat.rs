@@ -4,6 +4,15 @@
 //! The simulator manipulates `i8` activations/weights, `u8` attention
 //! probabilities, `i32` accumulators (the hardware's D-bit partial sums)
 //! and `f32` reference values. One generic container covers all of them.
+//!
+//! # Kernel layering (§Perf)
+//!
+//! The matmuls in this module are the **bit-exactness oracles**: naive
+//! row-dot implementations whose output defines correct numerics for
+//! every other layer. The hot path no longer calls them — the cache-
+//! blocked, scratch-reusing kernels in [`super::gemm`] carry the
+//! steady-state compute (see `TileEngine`), and property tests pin them
+//! bit-identical to the oracles here across ragged shapes.
 
 use std::fmt;
 
@@ -93,9 +102,53 @@ impl<T: Copy + Default> Mat<T> {
         &mut self.data
     }
 
+    /// Reshape in place, reusing the backing buffer when capacity
+    /// allows (the scratch-arena primitive behind the zero-alloc hot
+    /// path). All elements are reset to `T::default()`.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, T::default());
+    }
+
+    /// Reshape in place WITHOUT clearing: existing elements keep
+    /// stale values (only newly grown slots are default-filled).
+    /// §Perf: for callers that overwrite every element anyway
+    /// (transpose packing, GEMM outputs) the `reset` memset is a
+    /// wasted full pass over the buffer.
+    pub fn reset_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, T::default());
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Self {
-        Self::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+        let mut out = Self::zeros(0, 0);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-provided matrix (buffer reused across
+    /// calls — the packing primitive for the weight-stationary /
+    /// pre-transposed-V paths). Cache-tiled: both the strided reads and
+    /// the strided writes stay within one tile's footprint.
+    pub fn transpose_into(&self, dst: &mut Self) {
+        // Every destination element is written below.
+        dst.reset_for_overwrite(self.cols, self.rows);
+        const TB: usize = 32;
+        for r0 in (0..self.rows).step_by(TB) {
+            let rh = TB.min(self.rows - r0);
+            for c0 in (0..self.cols).step_by(TB) {
+                let cw = TB.min(self.cols - c0);
+                for r in r0..r0 + rh {
+                    for c in c0..c0 + cw {
+                        dst.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
     }
 
     /// Map every element.
@@ -129,6 +182,13 @@ impl<T: Copy + Default> Mat<T> {
                 T::default()
             }
         })
+    }
+}
+
+impl<T: Copy + Default> Default for Mat<T> {
+    /// Empty 0×0 matrix — the initial state of scratch arenas.
+    fn default() -> Self {
+        Self::zeros(0, 0)
     }
 }
 
@@ -222,6 +282,44 @@ mod tests {
         assert_eq!(m.get(2, 3), 42);
         assert_eq!(m.get(0, 0), -7);
         assert_eq!(m.shape(), (3, 4));
+    }
+
+    #[test]
+    fn reset_reuses_and_clears() {
+        let mut m = MatI32::zeros(4, 4);
+        m.set(1, 1, 99);
+        m.reset(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert!(m.as_slice().iter().all(|&v| v == 0), "reset must clear");
+        m.reset(40, 40); // grows
+        assert_eq!(m.shape(), (40, 40));
+        assert_eq!(m.get(39, 39), 0);
+    }
+
+    #[test]
+    fn reset_for_overwrite_reshapes_without_clearing_requirement() {
+        // Contract: shape is correct and every element is writable;
+        // stale values may remain (callers overwrite everything).
+        let mut m = MatI32::zeros(4, 4);
+        m.set(0, 0, 7);
+        m.reset_for_overwrite(2, 2);
+        assert_eq!(m.shape(), (2, 2));
+        m.reset_for_overwrite(5, 5); // grows: new slots default-filled
+        assert_eq!(m.shape(), (5, 5));
+        m.set(4, 4, 1);
+        assert_eq!(m.get(4, 4), 1);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        // Exercise the tiled path across ragged shapes (edges smaller
+        // than the 32-wide tile, and shapes spanning multiple tiles).
+        for (r, c) in [(1, 1), (3, 70), (70, 3), (33, 65), (64, 64)] {
+            let m = MatI8::from_fn(r, c, |i, j| ((i * 31 + j * 7) % 251) as i8);
+            let mut dst = MatI8::zeros(0, 0);
+            m.transpose_into(&mut dst);
+            assert_eq!(dst, MatI8::from_fn(c, r, |i, j| m.get(j, i)));
+        }
     }
 
     #[test]

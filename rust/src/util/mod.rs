@@ -5,9 +5,13 @@
 //! external dependencies: PRNG ([`rng`], mirrored bit-exactly in Python
 //! for cross-layer tests), matrices ([`mat`]), statistics ([`stats`]),
 //! JSON ([`json`]), table/CSV rendering ([`table`]), property testing
-//! ([`prop`]) and a micro-benchmark harness ([`bench`]).
+//! ([`prop`]), a micro-benchmark harness ([`bench`]), anyhow-style
+//! error plumbing ([`error`]) and the cache-blocked integer GEMM
+//! kernels ([`gemm`]) behind the hot compute path.
 
 pub mod bench;
+pub mod error;
+pub mod gemm;
 pub mod json;
 pub mod mat;
 pub mod prop;

@@ -12,6 +12,10 @@ use ita::runtime::{ArtifactManifest, Runtime};
 use ita::util::rng::SplitMix64;
 
 fn manifest_or_skip() -> Option<ArtifactManifest> {
+    if !ita::runtime::pjrt_enabled() {
+        eprintln!("SKIP: built without the `xla-runtime` feature (PJRT unavailable)");
+        return None;
+    }
     if !ArtifactManifest::available() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
         return None;

@@ -1,0 +1,167 @@
+//! Kernel-parity contract for the blocked GEMM rework: every new-path
+//! output is **bit-identical** to the retained pre-change oracles
+//! (`dot_i8_i32`-based matmuls + `requant_mat`), across ragged shapes,
+//! and the multi-threaded execution paths are deterministic and equal
+//! to the serial ones — output and merged `Activity` alike.
+
+use ita::attention::{
+    gen_input, run_attention, run_attention_reference, AttentionExecutor, ModelDims,
+};
+use ita::ita::datapath::TileEngine;
+use ita::ita::requant::{requant_mat, RequantParams};
+use ita::ita::ItaConfig;
+use ita::util::gemm::{gemm_i32_pret, gemm_requant_pret, GemmScratch, KC, MC, NC};
+use ita::util::mat::{matmul_i8_pret, matmul_u8_i8, MatI32, MatI8, MatU8};
+use ita::util::prop::forall;
+use ita::util::rng::SplitMix64;
+
+#[test]
+fn gemm_matches_oracle_on_block_boundary_shapes() {
+    // Deterministic sweep of the shapes where blocking bugs live:
+    // exact multiples of the block sizes, one off either side, and the
+    // degenerate row/column vectors.
+    let edges = [1, 2, MC - 1, MC, MC + 1, NC + 1, 2 * NC + 3];
+    let depths = [1, 2, 63, 64, 65, KC - 1, KC, KC + 1, KC + 100];
+    let mut rng = SplitMix64::new(0xB10C);
+    let mut scratch = GemmScratch::default();
+    let mut got = MatI32::zeros(0, 0);
+    for &m in &edges {
+        for &k in &depths {
+            let n = edges[(m + k) % edges.len()];
+            let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
+            let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+            gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
+            assert_eq!(got, matmul_i8_pret(&a, &bt), "m={m} n={n} k={k}");
+        }
+    }
+}
+
+#[test]
+fn fused_requant_epilogue_matches_two_pass_oracle() {
+    forall("fused epilogue == matmul+requant_mat", 60, |g| {
+        let (m, n, k) = (g.usize_in(1, 80), g.usize_in(1, 80), g.usize_in(1, 70));
+        let p = RequantParams { mult: g.i8_in(1, 127) as u8, shift: g.usize_in(0, 14) as u8 };
+        let mut rng = SplitMix64::new(g.u64());
+        let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
+        let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+        let bias: Vec<i8> = rng.vec_i8(n);
+        let mut scratch = GemmScratch::default();
+        let mut got = MatI8::zeros(0, 0);
+        gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut got);
+        assert_eq!(got, requant_mat(&matmul_i8_pret(&a, &bt), &bias, p));
+    });
+}
+
+#[test]
+fn u8_gemm_with_packed_vt_matches_oracle() {
+    // The A·V pass packs Vᵀ once; the oracle transposes internally on
+    // every call. Both must agree bit for bit.
+    forall("u8·i8 packed == matmul_u8_i8", 60, |g| {
+        let (m, n, k) = (g.usize_in(1, 70), g.usize_in(1, 70), g.usize_in(1, 70));
+        let mut rng = SplitMix64::new(g.u64());
+        let a = MatU8::from_fn(m, k, |_, _| rng.next_i8() as u8);
+        let v = MatI8::from_fn(k, n, |_, _| rng.next_i8());
+        let vt = v.transpose();
+        let mut scratch = GemmScratch::default();
+        let mut got = MatI32::zeros(0, 0);
+        gemm_i32_pret(&a, &vt, &mut scratch, &mut got);
+        assert_eq!(got, matmul_u8_i8(&a, &v));
+    });
+}
+
+#[test]
+fn engine_paths_match_reference_across_ragged_attention_shapes() {
+    forall("engine blocked == reference", 20, |g| {
+        let cfg = ItaConfig::tiny();
+        let s = g.usize_in(1, 48);
+        let pdim = g.usize_in(1, 20);
+        let mut rng = SplitMix64::new(g.u64());
+        let q = MatI8::from_fn(s, pdim, |_, _| rng.next_i8());
+        let k = MatI8::from_fn(s, pdim, |_, _| rng.next_i8());
+        let v = MatI8::from_fn(s, pdim, |_, _| rng.next_i8());
+        let bias: Vec<i8> = rng.vec_i8(pdim);
+        let rq = RequantParams { mult: 1, shift: 6 };
+        let mut e1 = TileEngine::new(cfg);
+        let mut e2 = TileEngine::new(cfg);
+        let (o1, a1) = e1.attention_core(&q, &k, &v, rq, &bias, rq);
+        let (o2, a2) = e2.attention_core_reference(&q, &k, &v, rq, &bias, rq);
+        assert_eq!(o1, o2, "s={s} p={pdim}");
+        assert_eq!(a1, a2, "s={s} p={pdim}");
+        assert_eq!(e1.activity, e2.activity);
+    });
+}
+
+#[test]
+fn depth_guard_still_enforced() {
+    // K beyond the D=24-bit accumulation bound (max_dot_len = 511)
+    // must still panic at the engine boundary — the KC-slab blocking
+    // must not silently widen the admissible depth.
+    let cfg = ItaConfig::paper();
+    let max_k = cfg.pe_config().max_dot_len();
+    assert_eq!(max_k, 511, "paper design point depth bound");
+    let r = std::panic::catch_unwind(|| {
+        let mut eng = TileEngine::new(cfg);
+        let x = MatI8::zeros(2, max_k + 1);
+        let w = MatI8::zeros(max_k + 1, 2);
+        let bias = vec![0i8; 2];
+        eng.linear(&x, &w, &bias, RequantParams::identity());
+    });
+    assert!(r.is_err(), "K={} must exceed the depth guard", max_k + 1);
+
+    // And K exactly at the bound (> KC, so it exercises the two-slab
+    // path) is accepted and bit-identical to the oracle.
+    let mut rng = SplitMix64::new(5);
+    let x = MatI8::from_fn(3, max_k, |_, _| rng.next_i8());
+    let w = MatI8::from_fn(max_k, 4, |_, _| rng.next_i8());
+    let bias: Vec<i8> = rng.vec_i8(4);
+    let rq = RequantParams { mult: 1, shift: 10 };
+    let mut e1 = TileEngine::new(cfg);
+    let mut e2 = TileEngine::new(cfg);
+    assert_eq!(e1.linear(&x, &w, &bias, rq), e2.linear_reference(&x, &w, &bias, rq));
+}
+
+#[test]
+fn threaded_run_deterministic_at_paper_scale() {
+    // Paper-sized heads (M=64 softmax stripes) through the threaded
+    // executor: equal to run_serial and to the oracle reference, with
+    // identical merged Activity, across repeated runs.
+    let dims = ModelDims { s: 48, e: 64, p: 32, h: 4 };
+    let cfg = ItaConfig::paper();
+    let mut par = AttentionExecutor::new(cfg, dims, 77);
+    let mut ser = AttentionExecutor::new(cfg, dims, 77);
+    let x = gen_input(78, &dims);
+
+    let first = par.run(&x);
+    let serial = ser.run_serial(&x);
+    assert_eq!(first.out, serial.out);
+    assert_eq!(first.attn, serial.attn);
+    assert_eq!(par.engine.activity, ser.engine.activity);
+
+    let mut oracle_engine = TileEngine::new(cfg);
+    let oracle = run_attention_reference(&mut oracle_engine, &x, &par.weights, &par.requants);
+    assert_eq!(first.out, oracle.out);
+    assert_eq!(first.attn, oracle.attn);
+
+    for _ in 0..3 {
+        let again = par.run(&x);
+        assert_eq!(again.out, first.out);
+        assert_eq!(again.attn, first.attn);
+    }
+}
+
+#[test]
+fn plain_run_attention_unchanged_by_kernel_rework() {
+    // The golden free function other layers pin against: identical to
+    // its own pre-change implementation.
+    let dims = ModelDims { s: 16, e: 16, p: 8, h: 2 };
+    let w = ita::attention::gen_weights(42, &dims);
+    let rq = ita::attention::default_requants(&dims);
+    let x = gen_input(7, &dims);
+    let mut e1 = TileEngine::new(ItaConfig::tiny());
+    let mut e2 = TileEngine::new(ItaConfig::tiny());
+    let new = run_attention(&mut e1, &x, &w, &rq);
+    let old = run_attention_reference(&mut e2, &x, &w, &rq);
+    assert_eq!(new.out, old.out);
+    assert_eq!(new.attn, old.attn);
+    assert_eq!(e1.activity, e2.activity);
+}
