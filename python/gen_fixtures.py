@@ -1,0 +1,73 @@
+"""Generate the cross-language golden fixtures consumed by
+``rust/tests/golden_cross_language.rs``.
+
+Writes ``python/golden/softmax_fixtures.json``: a set of
+(seed, n, part) cases, each with the SplitMix64-generated int8 input
+row ``x`` and the integer streaming-softmax output ``p`` computed by
+the *Python* mirror (``compile.kernels.ref.ita_softmax_ref``). The Rust
+test regenerates ``x`` from the seed (pinning the RNG streams to each
+other) and re-runs ``ita_softmax_row``, asserting bit-identical ``p``.
+
+The fixture file is a build product, NOT checked in — the Rust test
+skips with a message when it is absent. Regenerate:
+
+    cd python && python gen_fixtures.py
+
+Regenerate deliberately only if the algorithm spec itself changes; the
+inline golden vectors embedded in both test files must be updated in
+the same commit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels.ref import ita_softmax_ref
+from compile.rng import i8_stream
+
+# (seed, n, part): lengths around the M=64 stripe width, part sizes
+# exercising single-pass, multi-stripe, and ragged-tail streaming.
+CASES = [
+    (2024, 96, 64),  # the inline golden pair both repos embed
+    (1, 64, 64),
+    (2, 64, 16),
+    (3, 128, 64),
+    (4, 200, 64),
+    (5, 256, 32),
+    (6, 17, 8),
+    (7, 1, 64),
+    (8, 96, 1),
+    (9, 255, 64),
+]
+
+
+def main() -> None:
+    import jax.numpy as jnp
+
+    fixtures = []
+    for seed, n, part in CASES:
+        x = i8_stream(seed, n)
+        p = np.asarray(ita_softmax_ref(jnp.asarray(x.astype(np.int32))[None, :], m_chunk=part))[0]
+        fixtures.append(
+            {
+                "seed": seed,
+                "n": n,
+                "part": part,
+                "x": [int(v) for v in x],
+                "p": [int(v) for v in p],
+            }
+        )
+
+    out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "softmax_fixtures.json")
+    with open(out_path, "w") as f:
+        json.dump({"generator": "python/gen_fixtures.py", "fixtures": fixtures}, f)
+    print(f"wrote {len(fixtures)} fixtures to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

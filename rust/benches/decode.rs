@@ -1,0 +1,73 @@
+//! Bench: incremental decode (KV cache + streaming-softmax row) vs
+//! full causal recompute — the per-step latency table quoted in
+//! EXPERIMENTS.md §Decode.
+//!
+//! At cache fill S, one decode step does O(S) work
+//! (H·(3·E·P + 2·(S+1)·P) + H·P·E useful MACs) while recomputing the
+//! grown sequence from scratch does O(S²); the printed per-step
+//! speedup is the serving argument for the KV-cache path. The decode
+//! side is measured via `truncate(S)` + `step_into` so every timed
+//! iteration replays an identical zero-allocation step at a fixed
+//! fill (`KvCache::truncate` leaves the prefix storage intact).
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, run_attention_causal, ModelDims};
+use ita::ita::datapath::TileEngine;
+use ita::ita::ItaConfig;
+use ita::util::bench::{bencher, black_box};
+
+fn main() {
+    let mut b = bencher();
+    let cfg = ItaConfig::paper();
+    let dims = ModelDims::compact(); // S=64 capacity, E=128, P=64, H=2
+    let mut de = DecodeEngine::new(cfg, dims, 42);
+    let x = gen_input(7, &dims);
+
+    println!(
+        "decode vs full recompute, dims S<= {} E={} P={} H={}\n",
+        dims.s, dims.e, dims.p, dims.h
+    );
+
+    let mut rows = Vec::new();
+    for &fill in &[15usize, 31, 47, 63] {
+        // Warm the caches to `fill` rows once; each timed iteration
+        // rolls back and replays the same step (bit-identical, O(S)).
+        de.reset();
+        de.prefill(&x.block_padded(0, 0, fill, dims.e));
+        let row = x.row(fill).to_vec();
+        let mut out = Vec::with_capacity(dims.e);
+        de.step_into(&row, &mut out); // scratch warm-up
+        let step_macs = (dims.h * (3 * dims.e * dims.p + 2 * (fill + 1) * dims.p)
+            + dims.h * dims.p * dims.e) as f64;
+        let step = b
+            .bench_throughput(&format!("decode step @S={fill}"), step_macs, "MAC", || {
+                de.truncate(fill);
+                de.step_into(black_box(&row), &mut out);
+                black_box(out[0]);
+            })
+            .median;
+
+        // Full-recompute baseline over the grown (fill+1)-row sequence.
+        let grown = x.block_padded(0, 0, fill + 1, dims.e);
+        let mut eng = TileEngine::new(cfg);
+        let full = b
+            .bench(&format!("full causal recompute @S={}", fill + 1), || {
+                black_box(run_attention_causal(&mut eng, black_box(&grown), &de.weights, &de.requants));
+            })
+            .median;
+        println!("  -> per-step speedup @S={}: {:.1}x (O(S) vs O(S^2))\n", fill, full / step);
+        rows.push((fill + 1, step, full));
+    }
+
+    // EXPERIMENTS.md table (paste-ready).
+    println!("| seq len | decode step | full recompute | speedup |");
+    println!("|--------:|------------:|---------------:|--------:|");
+    for (s, step, full) in rows {
+        println!(
+            "| {s:>7} | {:>9.1} us | {:>12.1} us | {:>6.1}x |",
+            step * 1e6,
+            full * 1e6,
+            full / step
+        );
+    }
+}

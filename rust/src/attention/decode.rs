@@ -1,0 +1,464 @@
+//! Incremental (autoregressive) decode: per-head KV caches plus a
+//! decode engine that computes one new token's attention in O(S) work
+//! per step — the serving-side expression of ITA's streaming softmax
+//! (paper §IV), whose per-row `MAX`/`Σ` state machine is exactly what
+//! append-only decode needs.
+//!
+//! # Dataflow per step (one head)
+//!
+//! 1. Project only the new row: `q/k/v = requant(x·W + b)` via
+//!    [`TileEngine::linear_row_pret`] (the weight-stationary transposed
+//!    weights are shared with the prefill path).
+//! 2. Append `k`/`v` to the head's [`KvCache`] (K row-major for
+//!    Q·Kᵀ-ready row dots; V packed transposed for the A·V dots).
+//! 3. Logit row against all cached keys, then the streaming softmax
+//!    over the completed row — DA in M-wide parts with the single-shift
+//!    renormalization `Σ >>= Δ >> 5` when a later part raises the row
+//!    maximum, DI, EN ([`TileEngine::softmax_row`]).
+//! 4. A·V against the cached Vᵀ pack, heads concatenated, output
+//!    projection.
+//!
+//! Every step is **bit-identical** to the matching row of re-running
+//! the full causal path ([`TileEngine::attention_core_causal`] through
+//! [`super::run_attention_causal`]) over the grown sequence — pinned by
+//! `tests/decode_parity.rs` — while doing O(S) instead of O(S²) work
+//! and allocating nothing in steady state (`tests/decode_alloc.rs`
+//! counts allocations under a counting global allocator).
+
+use super::{
+    concat_heads, default_requants, gen_weights, run_causal_heads, AttentionOutput,
+    AttentionWeights, ModelDims, RequantConfig, TransposedWeights,
+};
+use crate::ita::datapath::TileEngine;
+use crate::ita::ItaConfig;
+use crate::util::mat::MatI8;
+use std::sync::Arc;
+
+/// One head's append-only K/V store with fixed capacity.
+///
+/// K is kept row-major (one row per cached position, the layout Q·Kᵀ
+/// row dots want); V is kept transposed (P rows of S-capacity each, the
+/// layout the A·V row dots want), so a step's reads are all contiguous
+/// slices. [`KvCache::truncate`] rolls the logical length back without
+/// touching storage — the rollback primitive speculative decoding (and
+/// the decode bench) needs.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Cached keys: capacity×P row-major; rows `0..len` are valid.
+    k: MatI8,
+    /// Cached values, packed transposed: P×capacity; columns `0..len`
+    /// are valid.
+    vt: MatI8,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(capacity: usize, p: usize) -> Self {
+        Self { k: MatI8::zeros(capacity, p), vt: MatI8::zeros(p, capacity), len: 0 }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.k.rows()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one (key row, value row) pair. Panics when full — the
+    /// serving layer checks capacity before admitting a step.
+    pub fn push(&mut self, k_row: &[i8], v_row: &[i8]) {
+        assert!(self.len < self.capacity(), "KV cache full (capacity {})", self.capacity());
+        assert_eq!(k_row.len(), self.k.cols(), "key row width");
+        assert_eq!(v_row.len(), self.vt.rows(), "value row width");
+        self.k.row_mut(self.len).copy_from_slice(k_row);
+        for (j, &v) in v_row.iter().enumerate() {
+            self.vt.set(j, self.len, v);
+        }
+        self.len += 1;
+    }
+
+    /// Roll the logical length back to `len` (≤ current). Storage for
+    /// positions `0..len` is untouched, so re-appending reproduces the
+    /// original sequence bit-for-bit.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate beyond current length");
+        self.len = len;
+    }
+
+    /// Cached keys as a matrix (only rows `0..len()` are meaningful).
+    #[inline]
+    pub fn k_mat(&self) -> &MatI8 {
+        &self.k
+    }
+
+    /// Cached Vᵀ pack (only columns `0..len()` are meaningful).
+    #[inline]
+    pub fn vt_mat(&self) -> &MatI8 {
+        &self.vt
+    }
+
+    /// One cached key row.
+    #[inline]
+    pub fn k_row(&self, i: usize) -> &[i8] {
+        assert!(i < self.len, "key row {i} beyond cache length {}", self.len);
+        self.k.row(i)
+    }
+}
+
+/// Generation-capable attention engine: prefill once, then O(S)-work
+/// incremental steps against per-head KV caches. Capacity (and the
+/// deterministic requant derivation) comes from `dims` — `dims.s` is
+/// the maximum sequence length a session can grow to.
+pub struct DecodeEngine {
+    pub engine: TileEngine,
+    /// Shared with every other session serving the same model
+    /// (weights are read-only at serve time).
+    pub weights: Arc<AttentionWeights>,
+    pub weights_t: Arc<TransposedWeights>,
+    pub requants: RequantConfig,
+    pub dims: ModelDims,
+    caches: Vec<KvCache>,
+    // Flat scratch fields (disjoint borrows with `engine`/`caches`),
+    // all sized at construction so steps never allocate.
+    q_row: Vec<i8>,
+    k_row: Vec<i8>,
+    v_row: Vec<i8>,
+    logits: Vec<i8>,
+    /// Per-head probability row of the most recent step (exposed for
+    /// tests / the Fig. 5-style experiments).
+    attn_rows: Vec<Vec<u8>>,
+    concat: Vec<i8>,
+}
+
+impl DecodeEngine {
+    /// Deterministic construction mirroring [`super::AttentionExecutor::new`]:
+    /// the same seed serves the same model.
+    pub fn new(cfg: ItaConfig, dims: ModelDims, seed: u64) -> Self {
+        let weights = Arc::new(gen_weights(seed, &dims));
+        let weights_t = Arc::new(TransposedWeights::of(&weights));
+        Self::from_shared(cfg, dims, weights, weights_t, default_requants(&dims))
+    }
+
+    /// Build around an existing shared model (multi-session serving:
+    /// every session clones the `Arc`s instead of regenerating and
+    /// re-transposing the weights — only the KV caches and scratch are
+    /// per-session).
+    pub fn from_shared(
+        cfg: ItaConfig,
+        dims: ModelDims,
+        weights: Arc<AttentionWeights>,
+        weights_t: Arc<TransposedWeights>,
+        requants: RequantConfig,
+    ) -> Self {
+        assert!(dims.h >= 1, "at least one head");
+        assert_eq!(weights.heads.len(), dims.h, "weights/dims head count");
+        assert_eq!(weights_t.heads.len(), dims.h, "transposed weights/dims head count");
+        Self {
+            engine: TileEngine::new(cfg),
+            weights,
+            weights_t,
+            requants,
+            dims,
+            caches: (0..dims.h).map(|_| KvCache::new(dims.s, dims.p)).collect(),
+            q_row: vec![0; dims.p],
+            k_row: vec![0; dims.p],
+            v_row: vec![0; dims.p],
+            logits: Vec::with_capacity(dims.s),
+            attn_rows: (0..dims.h).map(|_| Vec::with_capacity(dims.s)).collect(),
+            concat: vec![0; dims.h * dims.p],
+        }
+    }
+
+    /// Current sequence length (cache fill).
+    pub fn len(&self) -> usize {
+        self.caches[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum sequence length (`dims.s`).
+    pub fn capacity(&self) -> usize {
+        self.dims.s
+    }
+
+    /// Per-head caches (read-only view).
+    pub fn caches(&self) -> &[KvCache] {
+        &self.caches
+    }
+
+    /// Probability row of the most recent step for `head` (length =
+    /// the sequence length at that step).
+    pub fn last_attn_row(&self, head: usize) -> &[u8] {
+        &self.attn_rows[head]
+    }
+
+    /// Roll every head's cache back to `len` (speculative-decode
+    /// rollback; also lets benches re-measure a step at a fixed fill).
+    pub fn truncate(&mut self, len: usize) {
+        for c in &mut self.caches {
+            c.truncate(len);
+        }
+    }
+
+    /// Empty all caches; the engine is ready for a fresh prefill.
+    pub fn reset(&mut self) {
+        self.truncate(0);
+    }
+
+    /// Prompt phase: run the full causal path over `x` (S₀×E, S₀ ≤
+    /// capacity), filling every head's cache with the projected K/V
+    /// rows. Output is bit-identical to
+    /// [`super::run_attention_causal`] over `x` (same kernels, cached
+    /// pre-transposed weights).
+    pub fn prefill(&mut self, x: &MatI8) -> AttentionOutput {
+        assert_eq!(x.cols(), self.dims.e, "prefill row width");
+        assert!(self.is_empty(), "prefill on a non-empty cache (reset() first)");
+        assert!(x.rows() <= self.capacity(), "prompt longer than cache capacity");
+        let rq = self.requants;
+        let caches = &mut self.caches;
+        let wt = &self.weights_t;
+        let (head_outputs, attn) =
+            run_causal_heads(&mut self.engine, &self.weights, &rq, |e, h, hw| {
+                let (wqt, wkt, wvt) = &wt.heads[h];
+                let q = e.linear_pret(x, wqt, &hw.bq, rq.q);
+                let k = e.linear_pret(x, wkt, &hw.bk, rq.k);
+                let v = e.linear_pret(x, wvt, &hw.bv, rq.v);
+                for r in 0..x.rows() {
+                    caches[h].push(k.row(r), v.row(r));
+                }
+                (q, k, v)
+            });
+        let out = self.engine.linear_pret(
+            &concat_heads(&head_outputs),
+            &self.weights_t.wot,
+            &self.weights.bo,
+            rq.o,
+        );
+        AttentionOutput { out, attn }
+    }
+
+    /// One decode step: append token row `x_row` (length E) and write
+    /// its output row (length E) into `out` — bit-identical to row
+    /// `len()` of the full causal recompute over the grown sequence.
+    /// O(S) work; no allocation once `out`'s capacity covers E.
+    pub fn step_into(&mut self, x_row: &[i8], out: &mut Vec<i8>) {
+        assert_eq!(x_row.len(), self.dims.e, "token row width");
+        assert!(self.len() < self.capacity(), "KV cache full");
+        let rq = self.requants;
+        let p = self.dims.p;
+        for (h, (hw, wts)) in self.weights.heads.iter().zip(&self.weights_t.heads).enumerate() {
+            let (wqt, wkt, wvt) = wts;
+            self.engine.linear_row_pret(x_row, wqt, &hw.bq, rq.q, &mut self.q_row);
+            self.engine.linear_row_pret(x_row, wkt, &hw.bk, rq.k, &mut self.k_row);
+            self.engine.linear_row_pret(x_row, wvt, &hw.bv, rq.v, &mut self.v_row);
+            self.caches[h].push(&self.k_row, &self.v_row);
+            let cache = &self.caches[h];
+            self.engine.logits_row_cached(
+                &self.q_row,
+                cache.k_mat(),
+                cache.len(),
+                rq.qk,
+                &mut self.logits,
+            );
+            self.engine.softmax_row(&self.logits, &mut self.attn_rows[h]);
+            self.engine.av_row_cached(
+                &self.attn_rows[h],
+                cache.vt_mat(),
+                &hw.bav,
+                rq.av,
+                &mut self.concat[h * p..(h + 1) * p],
+            );
+        }
+        self.engine.linear_row_pret(
+            &self.concat,
+            &self.weights_t.wot,
+            &self.weights.bo,
+            rq.o,
+            out,
+        );
+    }
+
+    /// Allocating convenience wrapper around [`DecodeEngine::step_into`].
+    pub fn step(&mut self, x_row: &[i8]) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.dims.e);
+        self.step_into(x_row, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{gen_input, run_attention_causal};
+    use crate::util::rng::SplitMix64;
+
+    fn dims() -> ModelDims {
+        ModelDims { s: 24, e: 16, p: 8, h: 2 }
+    }
+
+    #[test]
+    fn kv_cache_push_and_layouts() {
+        let mut c = KvCache::new(4, 3);
+        assert!(c.is_empty());
+        c.push(&[1, 2, 3], &[4, 5, 6]);
+        c.push(&[7, 8, 9], &[10, 11, 12]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.k_row(0), &[1, 2, 3]);
+        assert_eq!(c.k_row(1), &[7, 8, 9]);
+        // Vᵀ pack: column i holds value row i.
+        assert_eq!(c.vt_mat().get(0, 0), 4);
+        assert_eq!(c.vt_mat().get(2, 1), 12);
+    }
+
+    #[test]
+    fn kv_cache_truncate_preserves_prefix() {
+        let mut c = KvCache::new(4, 2);
+        c.push(&[1, 2], &[3, 4]);
+        c.push(&[5, 6], &[7, 8]);
+        c.truncate(1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.k_row(0), &[1, 2]);
+        c.push(&[9, 9], &[9, 9]); // overwrites position 1
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.k_row(1), &[9, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn kv_cache_rejects_overflow() {
+        let mut c = KvCache::new(1, 2);
+        c.push(&[1, 2], &[3, 4]);
+        c.push(&[5, 6], &[7, 8]);
+    }
+
+    #[test]
+    fn prefill_matches_full_causal_oracle() {
+        let d = dims();
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 5);
+        let x = gen_input(6, &d);
+        let got = de.prefill(&x);
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let want = run_attention_causal(&mut eng, &x, &de.weights, &de.requants);
+        assert_eq!(got.out, want.out);
+        assert_eq!(got.attn, want.attn);
+        assert_eq!(de.len(), d.s);
+        // Activity accounting identical too (same kernels, same order).
+        assert_eq!(de.engine.activity, eng.activity);
+    }
+
+    #[test]
+    fn steps_match_full_causal_rows() {
+        // Prefill 10 rows, then step the rest one by one: each step's
+        // output must equal the matching row of the full causal
+        // recompute, and the attention rows must match the unmasked
+        // prefix of the oracle's rows.
+        let d = dims();
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 7);
+        let x = gen_input(8, &d);
+        let p0 = 10;
+        de.prefill(&x.block_padded(0, 0, p0, d.e));
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let full = run_attention_causal(&mut eng, &x, &de.weights, &de.requants);
+        let mut out = Vec::new();
+        for r in p0..d.s {
+            de.step_into(x.row(r), &mut out);
+            assert_eq!(&out[..], full.out.row(r), "step at row {r}");
+            for h in 0..d.h {
+                let valid = r + 1;
+                assert_eq!(de.last_attn_row(h), &full.attn[h].row(r)[..valid], "attn h={h} r={r}");
+                assert!(full.attn[h].row(r)[valid..].iter().all(|&v| v == 0));
+            }
+        }
+        assert_eq!(de.len(), d.s);
+    }
+
+    #[test]
+    fn empty_prefill_then_steps_from_scratch() {
+        // A session may start with no prompt at all: the first step's
+        // row attends only to itself.
+        let d = ModelDims { s: 6, e: 16, p: 8, h: 2 };
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 11);
+        let pre = de.prefill(&MatI8::zeros(0, d.e));
+        assert_eq!(pre.out.shape(), (0, d.e));
+        let x = gen_input(12, &d);
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let full = run_attention_causal(&mut eng, &x, &de.weights, &de.requants);
+        let mut out = Vec::new();
+        for r in 0..d.s {
+            de.step_into(x.row(r), &mut out);
+            assert_eq!(&out[..], full.out.row(r), "row {r}");
+        }
+        // Row 0 attended only to itself with full mass.
+        assert!(full.attn[0].get(0, 0) >= 255);
+    }
+
+    #[test]
+    fn truncate_replay_is_deterministic() {
+        let d = dims();
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 13);
+        let x = gen_input(14, &d);
+        de.prefill(&x.block_padded(0, 0, 8, d.e));
+        let first = de.step(x.row(8));
+        // Roll back and replay the same token: bit-identical.
+        de.truncate(8);
+        let replay = de.step(x.row(8));
+        assert_eq!(first, replay);
+        // Reset + fresh prefill reproduces the same step too.
+        de.reset();
+        de.prefill(&x.block_padded(0, 0, 8, d.e));
+        assert_eq!(de.step(x.row(8)), first);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty cache")]
+    fn prefill_requires_empty_cache() {
+        let d = dims();
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 1);
+        let x = gen_input(2, &d);
+        de.prefill(&x.block_padded(0, 0, 2, d.e));
+        de.prefill(&x.block_padded(0, 0, 2, d.e));
+    }
+
+    #[test]
+    fn step_activity_is_o_of_s() {
+        // Useful MACs per step: 3·E·P + 2·valid·P per head, plus the
+        // H·P×E output projection — linear in the sequence length.
+        let d = dims();
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+        let x = gen_input(4, &d);
+        de.prefill(&x.block_padded(0, 0, 4, d.e));
+        de.engine.reset_activity();
+        let _ = de.step(x.row(4));
+        let valid = 5;
+        let per_head = 3 * d.e * d.p + 2 * valid * d.p;
+        let want = (d.h * per_head + d.h * d.p * d.e) as u64;
+        assert_eq!(de.engine.activity.macs, want);
+        assert_eq!(de.engine.activity.divisions, d.h as u64);
+        assert_eq!(de.engine.activity.softmax_elems, (2 * valid * d.h) as u64);
+    }
+
+    #[test]
+    fn deterministic_across_engines() {
+        let d = dims();
+        let mut a = DecodeEngine::new(ItaConfig::tiny(), d, 21);
+        let mut b = DecodeEngine::new(ItaConfig::tiny(), d, 21);
+        let mut rng = SplitMix64::new(22);
+        let x = gen_input(23, &d);
+        a.prefill(&x.block_padded(0, 0, 3, d.e));
+        b.prefill(&x.block_padded(0, 0, 3, d.e));
+        for _ in 0..5 {
+            let row = rng.vec_i8(d.e);
+            assert_eq!(a.step(&row), b.step(&row));
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! `O_h = requant(A·V + b_av)`; heads concatenated and projected with
 //! `W_o`. All tensors int8 (A: uint8 probabilities at scale 2^−8).
 
+pub mod decode;
 pub mod encoder;
 pub mod schedule;
 
@@ -158,11 +159,7 @@ pub fn run_attention(
         attn.push(a);
     }
     // Concatenate heads along the feature dimension, project.
-    let mut concat = head_outputs[0].clone();
-    for o in &head_outputs[1..] {
-        concat = concat.hcat(o);
-    }
-    let out = engine.linear(&concat, &w.wo, &w.bo, rq.o);
+    let out = engine.linear(&concat_heads(&head_outputs), &w.wo, &w.bo, rq.o);
     AttentionOutput { out, attn }
 }
 
@@ -192,6 +189,68 @@ pub fn run_attention_reference(
         concat = concat.hcat(o);
     }
     let out = engine.linear_reference(&concat, &w.wo, &w.bo, rq.o);
+    AttentionOutput { out, attn }
+}
+
+/// Shared body of the causal runners: per-head Q/K/V from `qkv`
+/// (which also gets the head index, so callers can tap the projected
+/// rows — the decode prefill fills its KV caches there), then the
+/// causal core. Returns per-head outputs and attention matrices.
+fn run_causal_heads(
+    engine: &mut TileEngine,
+    w: &AttentionWeights,
+    rq: &RequantConfig,
+    mut qkv: impl FnMut(&mut TileEngine, usize, &HeadWeights) -> (MatI8, MatI8, MatI8),
+) -> (Vec<MatI8>, Vec<MatU8>) {
+    let mut head_outputs = Vec::with_capacity(w.heads.len());
+    let mut attn = Vec::with_capacity(w.heads.len());
+    for (h, hw) in w.heads.iter().enumerate() {
+        let (q, k, v) = qkv(engine, h, hw);
+        let (o, a) = engine.attention_core_causal(&q, &k, &v, rq.qk, &hw.bav, rq.av);
+        head_outputs.push(o);
+        attn.push(a);
+    }
+    (head_outputs, attn)
+}
+
+/// Concatenate per-head outputs along the feature dimension in one
+/// pass (the pairwise `hcat` chain copies O(H²) data).
+fn concat_heads(parts: &[MatI8]) -> MatI8 {
+    let rows = parts[0].rows();
+    let total: usize = parts.iter().map(|p| p.cols()).sum();
+    let mut out = MatI8::zeros(rows, total);
+    for r in 0..rows {
+        let orow = out.row_mut(r);
+        let mut c0 = 0;
+        for p in parts {
+            orow[c0..c0 + p.cols()].copy_from_slice(p.row(r));
+            c0 += p.cols();
+        }
+    }
+    out
+}
+
+/// Causal (decoder) counterpart of [`run_attention`]: per head
+/// Q/K/V projections, the causal core (row r attends to columns 0..=r),
+/// concatenation, output projection. This is the **full-recompute
+/// oracle** the incremental decode path
+/// ([`decode::DecodeEngine`]) is pinned bit-identical to
+/// (`tests/decode_parity.rs`), and the "before" side of
+/// `benches/decode.rs`.
+pub fn run_attention_causal(
+    engine: &mut TileEngine,
+    x: &MatI8,
+    w: &AttentionWeights,
+    rq: &RequantConfig,
+) -> AttentionOutput {
+    let (head_outputs, attn) = run_causal_heads(engine, w, rq, |e, _h, hw| {
+        (
+            e.linear(x, &hw.wq, &hw.bq, rq.q),
+            e.linear(x, &hw.wk, &hw.bk, rq.k),
+            e.linear(x, &hw.wv, &hw.bv, rq.v),
+        )
+    });
+    let out = engine.linear(&concat_heads(&head_outputs), &w.wo, &w.bo, rq.o);
     AttentionOutput { out, attn }
 }
 
@@ -299,11 +358,7 @@ impl AttentionExecutor {
             head_outputs.push(o);
             attn.push(a);
         }
-        let mut concat = head_outputs[0].clone();
-        for o in &head_outputs[1..] {
-            concat = concat.hcat(o);
-        }
-        let out = self.engine.linear_pret(&concat, &wt.wot, &w.bo, rq.o);
+        let out = self.engine.linear_pret(&concat_heads(&head_outputs), &wt.wot, &w.bo, rq.o);
         AttentionOutput { out, attn }
     }
 
@@ -325,11 +380,25 @@ impl AttentionExecutor {
             head_outputs.push(o);
             attn.push(a);
         }
-        let mut concat = head_outputs[0].clone();
-        for o in &head_outputs[1..] {
-            concat = concat.hcat(o);
-        }
-        let out = engine.linear_pret(&concat, &wt.wot, &w.bo, rq.o);
+        let out = engine.linear_pret(&concat_heads(&head_outputs), &wt.wot, &w.bo, rq.o);
+        AttentionOutput { out, attn }
+    }
+
+    /// Causal execution on the shared engine with the pre-transposed
+    /// weight cache — bit-identical to [`run_attention_causal`] and the
+    /// full-recompute baseline for the decode bench.
+    pub fn run_causal(&mut self, x: &MatI8) -> AttentionOutput {
+        let (w, wt, rq) = (&self.weights, &self.weights_t, &self.requants);
+        let engine = &mut self.engine;
+        let (head_outputs, attn) = run_causal_heads(engine, w, rq, |e, h, hw| {
+            let (wqt, wkt, wvt) = &wt.heads[h];
+            (
+                e.linear_pret(x, wqt, &hw.bq, rq.q),
+                e.linear_pret(x, wkt, &hw.bk, rq.k),
+                e.linear_pret(x, wvt, &hw.bv, rq.v),
+            )
+        });
+        let out = engine.linear_pret(&concat_heads(&head_outputs), &wt.wot, &w.bo, rq.o);
         AttentionOutput { out, attn }
     }
 }
@@ -423,6 +492,40 @@ mod tests {
         assert_eq!(fast.out, oracle.out);
         assert_eq!(fast.attn, oracle.attn);
         assert_eq!(ex.engine.activity, engine.activity);
+    }
+
+    #[test]
+    fn run_causal_matches_plain_causal_runner() {
+        // Pre-transposed executor path vs the transpose-per-call
+        // reference: outputs, attention, and activity all identical.
+        let d = ModelDims { s: 24, e: 32, p: 16, h: 3 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 17);
+        let x = gen_input(18, &d);
+        let fast = ex.run_causal(&x);
+        let mut engine = TileEngine::new(ItaConfig::tiny());
+        let slow = run_attention_causal(&mut engine, &x, &ex.weights, &ex.requants);
+        assert_eq!(fast.out, slow.out);
+        assert_eq!(fast.attn, slow.attn);
+        assert_eq!(ex.engine.activity, engine.activity);
+        // Causal masking visible: strictly-upper entries are zero.
+        for h in 0..d.h {
+            for r in 0..d.s {
+                assert!(fast.attn[h].row(r)[r + 1..].iter().all(|&v| v == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn causal_full_row_equals_unmasked_last_row() {
+        // The last causal row attends to everything: it must equal the
+        // unmasked run's last row through the full multi-head pipeline.
+        let d = ModelDims { s: 16, e: 16, p: 8, h: 2 };
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, 19);
+        let x = gen_input(20, &d);
+        let causal = ex.run_causal(&x);
+        let mut ex2 = AttentionExecutor::new(ItaConfig::tiny(), d, 19);
+        let full = ex2.run_serial(&x);
+        assert_eq!(causal.out.row(d.s - 1), full.out.row(d.s - 1));
     }
 
     #[test]

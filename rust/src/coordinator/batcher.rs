@@ -125,6 +125,69 @@ mod tests {
     }
 
     #[test]
+    fn size_trigger_takes_precedence_over_wait_trigger() {
+        // A push that fills the batch flushes immediately even when the
+        // wait deadline has *also* expired — the size trigger fires in
+        // `push`, never deferring a full batch to the next poll.
+        let mut b = Batcher::new(2, Duration::from_millis(1));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        let late = t0 + Duration::from_secs(5); // way past the deadline
+        let batch = b.push(2, late).expect("size trigger fires in push");
+        assert_eq!(batch, vec![1, 2]);
+        // Nothing left for the time trigger.
+        assert!(b.poll(late).is_none());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn poll_with_empty_pending_is_none() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(1));
+        let t0 = Instant::now();
+        // Never pushed: no batch regardless of how late we poll.
+        assert!(b.poll(t0 + Duration::from_secs(10)).is_none());
+        // After a flush the stale `oldest` stamp must not resurrect an
+        // empty batch either.
+        b.push(1, t0);
+        assert_eq!(b.flush(), Some(vec![1]));
+        assert!(b.poll(t0 + Duration::from_secs(10)).is_none());
+        assert!(b.time_to_deadline(t0).is_none(), "deadline cleared with the batch");
+    }
+
+    #[test]
+    fn flush_is_unconditional_and_idempotent() {
+        // Shutdown path: flush returns whatever is pending regardless
+        // of age, then keeps returning None.
+        let mut b = Batcher::new(100, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        b.push(1, t0); // deadline nowhere near expired
+        assert_eq!(b.flush(), Some(vec![1]));
+        assert_eq!(b.flush(), None);
+        assert_eq!(b.flush(), None);
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn time_to_deadline_monotonically_non_increasing() {
+        // The dispatcher's sleep hint must shrink as time advances and
+        // bottom out at zero once the deadline passes (never wrap or
+        // grow) — otherwise the dispatcher could oversleep a due batch.
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(100, max_wait);
+        let t0 = Instant::now();
+        b.push(1, t0);
+        let mut prev = b.time_to_deadline(t0).unwrap();
+        assert!(prev <= max_wait);
+        for ms in [2u64, 5, 9, 10, 11, 500] {
+            let d = b.time_to_deadline(t0 + Duration::from_millis(ms)).unwrap();
+            assert!(d <= prev, "hint grew: {prev:?} -> {d:?} at +{ms}ms");
+            prev = d;
+        }
+        // Past the deadline the hint is exactly zero (saturating).
+        assert_eq!(b.time_to_deadline(t0 + Duration::from_secs(1)).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
     fn oldest_resets_per_batch() {
         let mut b = Batcher::new(2, Duration::from_millis(50));
         let t0 = Instant::now();

@@ -13,5 +13,8 @@ pub mod request;
 pub mod server;
 pub mod tracegen;
 
-pub use request::{InferenceRequest, InferenceResponse, SubmitError};
+pub use request::{
+    DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
+    SubmitError,
+};
 pub use server::Server;

@@ -32,6 +32,55 @@ pub struct InferenceResponse {
     pub batch_size: usize,
 }
 
+/// Identifier of one decode session (per-session KV-cache ownership).
+pub type SessionId = u64;
+
+/// Input of one decode-path request.
+#[derive(Debug, Clone)]
+pub enum DecodeInput {
+    /// Fill an *empty* session's KV caches with a prompt
+    /// (S₀×E, S₀ ≤ the session capacity). Response output: the S₀×E
+    /// causal attention output of the prompt.
+    Prefill(MatI8),
+    /// Append one token row (length E). Response output: the new
+    /// token's 1×E output row.
+    Step(Vec<i8>),
+}
+
+/// One incremental-decode request against an open session.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub id: u64,
+    pub session: SessionId,
+    pub input: DecodeInput,
+    pub enqueued: Instant,
+}
+
+impl DecodeRequest {
+    pub fn new(id: u64, session: SessionId, input: DecodeInput) -> Self {
+        Self { id, session, input, enqueued: Instant::now() }
+    }
+}
+
+/// Completed prefill or decode step with simulator-side accounting.
+#[derive(Debug, Clone)]
+pub struct DecodeResponse {
+    pub id: u64,
+    pub session: SessionId,
+    /// Prefill: the S₀×E causal output; Step: the 1×E output row.
+    pub output: MatI8,
+    /// Session KV-cache fill after this operation.
+    pub seq_len: usize,
+    /// Simulated accelerator cycles attributed to this operation.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy attributed to this operation (J).
+    pub sim_energy_j: f64,
+    /// Wall-clock latency through the coordinator.
+    pub latency: Duration,
+    /// Number of decode items in the batch this ran in.
+    pub batch_size: usize,
+}
+
 /// Submission failure modes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
@@ -41,6 +90,16 @@ pub enum SubmitError {
     Shutdown,
     /// Input shape does not match the served model.
     BadShape,
+    /// Decode request names a session that is not open.
+    UnknownSession,
+    /// The session already has a request in flight — decode steps are
+    /// autoregressive, so the client must await each response before
+    /// submitting the next (rejecting here keeps misuse deterministic
+    /// instead of silently reordering the sequence).
+    SessionBusy,
+    /// The session's KV cache cannot accept the request (capacity
+    /// exhausted, or a prefill on a non-empty session).
+    SessionFull,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -49,6 +108,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull => "queue full (backpressure)",
             SubmitError::Shutdown => "server is shut down",
             SubmitError::BadShape => "input shape mismatch",
+            SubmitError::UnknownSession => "decode session is not open",
+            SubmitError::SessionBusy => "decode session has a request in flight",
+            SubmitError::SessionFull => "decode session KV cache cannot accept the request",
         })
     }
 }
@@ -69,5 +131,15 @@ mod tests {
     #[test]
     fn submit_error_display() {
         assert_eq!(SubmitError::QueueFull.to_string(), "queue full (backpressure)");
+        assert_eq!(SubmitError::SessionBusy.to_string(), "decode session has a request in flight");
+        assert!(SubmitError::SessionFull.to_string().contains("KV cache"));
+    }
+
+    #[test]
+    fn decode_request_carries_session() {
+        let r = DecodeRequest::new(3, 9, DecodeInput::Step(vec![0i8; 4]));
+        assert_eq!(r.session, 9);
+        assert!(matches!(r.input, DecodeInput::Step(ref v) if v.len() == 4));
+        assert!(r.enqueued.elapsed() < Duration::from_secs(1));
     }
 }

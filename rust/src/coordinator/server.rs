@@ -9,13 +9,21 @@
 //! benefit modeled explicitly (weight streams amortized over a batch).
 
 use super::batcher::Batcher;
-use super::request::{InferenceRequest, InferenceResponse, SubmitError};
-use crate::attention::AttentionExecutor;
+use super::request::{
+    DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
+    SubmitError,
+};
+use crate::attention::decode::DecodeEngine;
+use crate::attention::{
+    default_requants, gen_weights, AttentionExecutor, AttentionWeights, RequantConfig,
+    TransposedWeights,
+};
 use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
 use crate::metrics::ServerMetrics;
 use crate::util::mat::MatI8;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -23,13 +31,46 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 type Job = (InferenceRequest, Sender<InferenceResponse>);
+type DecodeJob = (DecodeRequest, Sender<DecodeResponse>);
+
+/// One queued work item: the dynamic batcher forms mixed batches of
+/// one-shot inferences and decode-session operations (they share the
+/// model, so a mixed batch still amortizes the weight streams).
+enum Work {
+    Infer(Job),
+    Decode(DecodeJob),
+}
+
+/// One open decode session. The engine (and its KV caches) is owned by
+/// the table between requests and *taken* by the executing worker for
+/// the duration of one prefill/step — the `busy` flag guarantees at
+/// most one in-flight request per session, so ownership transfer is
+/// race-free and steps can never reorder.
+struct SessionSlot {
+    engine: Option<Box<DecodeEngine>>,
+    busy: bool,
+    /// Cache fill as of the last completed request (submit-side
+    /// capacity validation without touching the engine).
+    seq_len: usize,
+}
+
+type SessionTable = Mutex<HashMap<SessionId, SessionSlot>>;
 
 /// Handle to a running server.
 pub struct Server {
     /// `None` after shutdown — dropping the sender disconnects the
     /// dispatcher, which drains and stops the workers.
-    ingress: Mutex<Option<SyncSender<Job>>>,
+    ingress: Mutex<Option<SyncSender<Work>>>,
     next_id: AtomicU64,
+    next_session: AtomicU64,
+    sessions: Arc<SessionTable>,
+    /// The decode-path model, generated once and shared by every
+    /// session (weights are read-only at serve time): opening a
+    /// session costs only its KV caches and scratch, not a weight
+    /// regeneration + transpose.
+    decode_weights: Arc<AttentionWeights>,
+    decode_weights_t: Arc<TransposedWeights>,
+    decode_requants: RequantConfig,
     pub metrics: Arc<ServerMetrics>,
     pub config: SystemConfig,
     shutdown: Arc<AtomicBool>,
@@ -40,23 +81,37 @@ impl Server {
     /// Start dispatcher + workers.
     pub fn start(config: SystemConfig) -> Arc<Server> {
         let metrics = Arc::new(ServerMetrics::default());
-        let (ingress_tx, ingress_rx) = sync_channel::<Job>(config.server.queue_depth);
+        let (ingress_tx, ingress_rx) = sync_channel::<Work>(config.server.queue_depth);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<SessionTable> = Arc::new(Mutex::new(HashMap::new()));
 
         // Dispatcher -> workers channel sized to keep workers busy
         // without unbounded buildup.
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Job>>(config.server.workers * 2);
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Work>>(config.server.workers * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
         let mut threads = Vec::new();
         threads.push(spawn_dispatcher(config, ingress_rx, batch_tx, metrics.clone()));
         for worker_id in 0..config.server.workers {
-            threads.push(spawn_worker(config, worker_id, batch_rx.clone(), metrics.clone()));
+            threads.push(spawn_worker(
+                config,
+                worker_id,
+                batch_rx.clone(),
+                sessions.clone(),
+                metrics.clone(),
+            ));
         }
 
+        let decode_weights = Arc::new(gen_weights(config.model.seed, &config.model.dims));
+        let decode_weights_t = Arc::new(TransposedWeights::of(&decode_weights));
         Arc::new(Server {
             ingress: Mutex::new(Some(ingress_tx)),
             next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
+            sessions,
+            decode_weights,
+            decode_weights_t,
+            decode_requants: default_requants(&config.model.dims),
             metrics,
             config,
             shutdown,
@@ -78,7 +133,7 @@ impl Server {
         let req = InferenceRequest::new(id, input);
         let guard = self.ingress.lock().unwrap();
         let sender = guard.as_ref().ok_or(SubmitError::Shutdown)?;
-        match sender.try_send((req, tx)) {
+        match sender.try_send(Work::Infer((req, tx))) {
             Ok(()) => {
                 self.metrics.requests_accepted.inc();
                 Ok(rx)
@@ -95,6 +150,130 @@ impl Server {
     pub fn infer(&self, input: MatI8) -> Result<InferenceResponse, SubmitError> {
         let rx = self.submit(input)?;
         rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Open a decode session: a private [`DecodeEngine`] whose KV
+    /// caches persist across batched prefill/step requests. Capacity is
+    /// the served model's `dims.s`.
+    pub fn open_session(&self) -> Result<SessionId, SubmitError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
+        }
+        let engine = DecodeEngine::from_shared(
+            self.config.accelerator,
+            self.config.model.dims,
+            self.decode_weights.clone(),
+            self.decode_weights_t.clone(),
+            self.decode_requants,
+        );
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(id, SessionSlot { engine: Some(Box::new(engine)), busy: false, seq_len: 0 });
+        self.metrics.sessions_opened.inc();
+        Ok(id)
+    }
+
+    /// Close a session, freeing its caches. Returns `false` when the
+    /// session is unknown or still has a request in flight (await the
+    /// response first).
+    pub fn close_session(&self, id: SessionId) -> bool {
+        let mut table = self.sessions.lock().unwrap();
+        match table.get(&id) {
+            Some(slot) if !slot.busy => {
+                table.remove(&id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Current cache fill of a session (as of its last completed
+    /// request), or `None` for unknown sessions.
+    pub fn session_len(&self, id: SessionId) -> Option<usize> {
+        self.sessions.lock().unwrap().get(&id).map(|s| s.seq_len)
+    }
+
+    /// Submit a decode-path operation; non-blocking. At most one
+    /// request per session may be in flight (autoregressive order);
+    /// violations return [`SubmitError::SessionBusy`].
+    pub fn submit_decode(
+        &self,
+        session: SessionId,
+        input: DecodeInput,
+    ) -> Result<Receiver<DecodeResponse>, SubmitError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
+        }
+        let d = self.config.model.dims;
+        // Validate and mark busy under the table lock so concurrent
+        // submitters to one session serialize deterministically.
+        {
+            let mut table = self.sessions.lock().unwrap();
+            let slot = table.get_mut(&session).ok_or(SubmitError::UnknownSession)?;
+            if slot.busy {
+                return Err(SubmitError::SessionBusy);
+            }
+            match &input {
+                DecodeInput::Prefill(x) => {
+                    if x.cols() != d.e {
+                        return Err(SubmitError::BadShape);
+                    }
+                    if slot.seq_len != 0 || x.rows() > d.s {
+                        return Err(SubmitError::SessionFull);
+                    }
+                }
+                DecodeInput::Step(row) => {
+                    if row.len() != d.e {
+                        return Err(SubmitError::BadShape);
+                    }
+                    if slot.seq_len >= d.s {
+                        return Err(SubmitError::SessionFull);
+                    }
+                }
+            }
+            slot.busy = true;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = DecodeRequest::new(id, session, input);
+        let guard = self.ingress.lock().unwrap();
+        let Some(sender) = guard.as_ref() else {
+            self.unmark_busy(session);
+            return Err(SubmitError::Shutdown);
+        };
+        match sender.try_send(Work::Decode((req, tx))) {
+            Ok(()) => {
+                self.metrics.requests_accepted.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.requests_rejected.inc();
+                self.unmark_busy(session);
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.unmark_busy(session);
+                Err(SubmitError::Shutdown)
+            }
+        }
+    }
+
+    /// Blocking decode convenience.
+    pub fn decode(
+        &self,
+        session: SessionId,
+        input: DecodeInput,
+    ) -> Result<DecodeResponse, SubmitError> {
+        let rx = self.submit_decode(session, input)?;
+        rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    fn unmark_busy(&self, session: SessionId) {
+        if let Some(slot) = self.sessions.lock().unwrap().get_mut(&session) {
+            slot.busy = false;
+        }
     }
 
     /// Graceful shutdown: close the ingress, drain in-flight work,
@@ -114,15 +293,15 @@ impl Server {
 
 fn spawn_dispatcher(
     config: SystemConfig,
-    ingress: Receiver<Job>,
-    batch_tx: SyncSender<Vec<Job>>,
+    ingress: Receiver<Work>,
+    batch_tx: SyncSender<Vec<Work>>,
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ita-dispatcher".into())
         .spawn(move || {
             let max_wait = Duration::from_micros(config.server.max_wait_us);
-            let mut batcher: Batcher<Job> = Batcher::new(config.server.max_batch, max_wait);
+            let mut batcher: Batcher<Work> = Batcher::new(config.server.max_batch, max_wait);
             loop {
                 let timeout = batcher
                     .time_to_deadline(Instant::now())
@@ -151,7 +330,7 @@ fn spawn_dispatcher(
         .expect("spawn dispatcher")
 }
 
-fn send_batch(tx: &SyncSender<Vec<Job>>, batch: Vec<Job>, metrics: &ServerMetrics) {
+fn send_batch(tx: &SyncSender<Vec<Work>>, batch: Vec<Work>, metrics: &ServerMetrics) {
     metrics.batches_formed.inc();
     metrics.batch_fill_sum.add(batch.len() as u64);
     // Blocking send: backpressure propagates to the batcher, then to
@@ -162,7 +341,8 @@ fn send_batch(tx: &SyncSender<Vec<Job>>, batch: Vec<Job>, metrics: &ServerMetric
 fn spawn_worker(
     config: SystemConfig,
     worker_id: usize,
-    batch_rx: Arc<Mutex<Receiver<Vec<Job>>>>,
+    batch_rx: Arc<Mutex<Receiver<Vec<Work>>>>,
+    sessions: Arc<SessionTable>,
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -185,10 +365,138 @@ fn spawn_worker(
                         Err(_) => break,
                     }
                 };
-                process_batch(&config, &mut pool, batch, &metrics);
+                // Split the mixed batch: one-shot inferences fan out
+                // across the executor pool; decode items execute
+                // against their sessions' private caches.
+                let mut infer = Vec::new();
+                let mut decode = Vec::new();
+                for w in batch {
+                    match w {
+                        Work::Infer(job) => infer.push(job),
+                        Work::Decode(job) => decode.push(job),
+                    }
+                }
+                if !infer.is_empty() {
+                    process_batch(&config, &mut pool, infer, &metrics);
+                }
+                if !decode.is_empty() {
+                    process_decode_batch(&config, &sessions, decode, &metrics);
+                }
             }
         })
         .expect("spawn worker")
+}
+
+/// Execute a batch of decode operations. The submit-side `busy` flag
+/// guarantees at most one in-flight request per session, so every
+/// item in a batch belongs to a *different* session and owns a
+/// disjoint engine — the batch is embarrassingly parallel and fans
+/// out across scoped threads exactly like the infer path (round-robin
+/// by batch index, responses delivered in submission order). Energy
+/// is charged per operation from the engine's own incremental-dataflow
+/// [`Activity`] — no cross-request weight amortization, since each
+/// session streams against its own K/V state.
+fn process_decode_batch(
+    config: &SystemConfig,
+    sessions: &SessionTable,
+    batch: Vec<DecodeJob>,
+    metrics: &ServerMetrics,
+) {
+    let b = batch.len();
+    type Item = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>);
+    type Done = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>, Activity, MatI8);
+
+    // Take every engine in one lock pass. Items whose session vanished
+    // while queued (server teardown paths) drop their response channel,
+    // which surfaces as a recv error at the client.
+    let mut items: Vec<Item> = Vec::with_capacity(b);
+    {
+        let mut table = sessions.lock().unwrap();
+        for (req, tx) in batch {
+            if let Some(engine) = table.get_mut(&req.session).and_then(|slot| slot.engine.take()) {
+                items.push((req, tx, engine));
+            }
+        }
+    }
+
+    fn execute_one((req, tx, mut engine): Item) -> Done {
+        engine.engine.reset_activity();
+        let output = match &req.input {
+            DecodeInput::Prefill(x) => engine.prefill(x).out,
+            DecodeInput::Step(row) => {
+                let mut out = Vec::with_capacity(row.len());
+                engine.step_into(row, &mut out);
+                MatI8::from_vec(1, row.len(), out)
+            }
+        };
+        let activity = engine.engine.activity;
+        (req, tx, engine, activity, output)
+    }
+
+    let want = items.len().min(max_batch_parallelism(config.server.workers)).max(1);
+    let done: Vec<Done> = if items.len() <= 1 || want == 1 {
+        items.into_iter().map(execute_one).collect()
+    } else {
+        let n = items.len();
+        let mut assigned: Vec<Vec<(usize, Item)>> = (0..want).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            assigned[i % want].push((i, item));
+        }
+        let mut slots: Vec<Option<Done>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = assigned
+                .into_iter()
+                .map(|chunk| {
+                    s.spawn(move || {
+                        chunk
+                            .into_iter()
+                            .map(|(i, item)| (i, execute_one(item)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("decode worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("decode item processed")).collect()
+    };
+
+    for (req, tx, engine, activity, output) in done {
+        let seq_len = engine.len();
+        {
+            let mut table = sessions.lock().unwrap();
+            if let Some(slot) = table.get_mut(&req.session) {
+                slot.engine = Some(engine);
+                slot.seq_len = seq_len;
+                slot.busy = false;
+            }
+        }
+        let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total();
+        let cycles = activity.cycles + activity.stall_cycles;
+        metrics.sim_cycles.add(cycles);
+        metrics.sim_energy_pj.add((energy * 1e12) as u64);
+        if matches!(req.input, DecodeInput::Prefill(_)) {
+            metrics.prefills_completed.inc();
+        } else {
+            metrics.decode_steps_completed.inc();
+        }
+        metrics.requests_completed.inc();
+        let latency = req.enqueued.elapsed();
+        metrics.latency.observe(latency);
+        let _ = tx.send(DecodeResponse {
+            id: req.id,
+            session: req.session,
+            output,
+            seq_len,
+            sim_cycles: cycles,
+            sim_energy_j: energy,
+            latency,
+            batch_size: b,
+        });
+    }
 }
 
 /// Upper bound on one worker's request fan-out: the host cores are
@@ -412,6 +720,144 @@ mod tests {
             let _ = rx.recv();
         }
         assert_eq!(server.metrics.requests_rejected.get(), rejected);
+    }
+
+    #[test]
+    fn decode_session_matches_golden_and_full_recompute() {
+        use crate::attention::run_attention_causal;
+        use crate::ita::datapath::TileEngine;
+        let cfg = test_config();
+        let d = cfg.model.dims;
+        let server = Server::start(cfg);
+        let sid = server.open_session().unwrap();
+
+        let x = gen_input(31, &d);
+        let p0 = 6;
+        let pre = server
+            .decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, p0, d.e)))
+            .unwrap();
+        assert_eq!(pre.seq_len, p0);
+        assert!(pre.sim_cycles > 0 && pre.sim_energy_j > 0.0);
+
+        // Golden local engine: identical weights/seed/capacity.
+        let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+        let pre_golden = golden.prefill(&x.block_padded(0, 0, p0, d.e));
+        assert_eq!(pre.output, pre_golden.out);
+
+        let mut served_rows = Vec::new();
+        for r in p0..d.s {
+            let resp = server.decode(sid, DecodeInput::Step(x.row(r).to_vec())).unwrap();
+            assert_eq!(resp.seq_len, r + 1);
+            assert_eq!(resp.output.shape(), (1, d.e));
+            assert_eq!(resp.output.row(0), &golden.step(x.row(r))[..], "step {r}");
+            served_rows.push(resp.output);
+        }
+        assert_eq!(server.session_len(sid), Some(d.s));
+
+        // And the decode parity oracle: full causal recompute.
+        let mut eng = TileEngine::new(cfg.accelerator);
+        let full = run_attention_causal(&mut eng, &x, &golden.weights, &golden.requants);
+        for (i, r) in (p0..d.s).enumerate() {
+            assert_eq!(served_rows[i].row(0), full.out.row(r), "served step row {r}");
+        }
+        assert!(server.close_session(sid));
+        server.shutdown();
+    }
+
+    #[test]
+    fn decode_session_error_paths() {
+        let cfg = test_config();
+        let d = cfg.model.dims;
+        let server = Server::start(cfg);
+        // Unknown session.
+        assert_eq!(
+            server.submit_decode(999, DecodeInput::Step(vec![0; d.e])).unwrap_err(),
+            SubmitError::UnknownSession
+        );
+        let sid = server.open_session().unwrap();
+        // Bad shapes.
+        assert_eq!(
+            server.submit_decode(sid, DecodeInput::Step(vec![0; d.e + 1])).unwrap_err(),
+            SubmitError::BadShape
+        );
+        assert_eq!(
+            server.submit_decode(sid, DecodeInput::Prefill(MatI8::zeros(2, d.e + 1))).unwrap_err(),
+            SubmitError::BadShape
+        );
+        // Prompt longer than capacity.
+        assert_eq!(
+            server
+                .submit_decode(sid, DecodeInput::Prefill(MatI8::zeros(d.s + 1, d.e)))
+                .unwrap_err(),
+            SubmitError::SessionFull
+        );
+        // Fill to capacity, then one more step is rejected.
+        server.decode(sid, DecodeInput::Prefill(MatI8::zeros(d.s, d.e))).unwrap();
+        assert_eq!(
+            server.submit_decode(sid, DecodeInput::Step(vec![0; d.e])).unwrap_err(),
+            SubmitError::SessionFull
+        );
+        // Prefill on a non-empty session is rejected too.
+        assert_eq!(
+            server.submit_decode(sid, DecodeInput::Prefill(MatI8::zeros(1, d.e))).unwrap_err(),
+            SubmitError::SessionFull
+        );
+        assert!(server.close_session(sid));
+        assert!(!server.close_session(sid), "double close");
+        server.shutdown();
+        assert_eq!(server.open_session().unwrap_err(), SubmitError::Shutdown);
+    }
+
+    #[test]
+    fn decode_session_busy_rejects_second_in_flight() {
+        let mut cfg = test_config();
+        // Hold the batch open so the first step is still in flight for
+        // the second submit. The window must dwarf any plausible CI
+        // scheduling stall between the two adjacent submit calls —
+        // flaking requires the test thread to lose the CPU for >500ms
+        // mid-function.
+        cfg.server.max_wait_us = 500_000;
+        cfg.server.max_batch = 64;
+        let server = Server::start(cfg);
+        let d = cfg.model.dims;
+        let sid = server.open_session().unwrap();
+        let rx = server.submit_decode(sid, DecodeInput::Step(vec![1; d.e])).unwrap();
+        assert_eq!(
+            server.submit_decode(sid, DecodeInput::Step(vec![2; d.e])).unwrap_err(),
+            SubmitError::SessionBusy
+        );
+        // Busy sessions cannot be closed out from under the worker.
+        assert!(!server.close_session(sid));
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.seq_len, 1);
+        // After the response the session accepts work again.
+        server.decode(sid, DecodeInput::Step(vec![2; d.e])).unwrap();
+        assert_eq!(server.metrics.decode_steps_completed.get(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_infer_and_decode_batches() {
+        // Decode steps and one-shot inferences interleaved through the
+        // same batcher: both classes complete correctly.
+        let mut cfg = test_config();
+        cfg.server.max_wait_us = 5_000;
+        let server = Server::start(cfg);
+        let d = cfg.model.dims;
+        let sid = server.open_session().unwrap();
+        let x = gen_input(7, &d);
+        let mut exec = AttentionExecutor::new(cfg.accelerator, d, cfg.model.seed);
+        let want_infer = exec.run(&x).out;
+        let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+
+        for r in 0..6 {
+            let infer_rx = server.submit(x.clone()).unwrap();
+            let step_rx = server.submit_decode(sid, DecodeInput::Step(x.row(r).to_vec())).unwrap();
+            assert_eq!(infer_rx.recv().unwrap().output, want_infer);
+            assert_eq!(step_rx.recv().unwrap().output.row(0), &golden.step(x.row(r))[..]);
+        }
+        assert_eq!(server.metrics.decode_steps_completed.get(), 6);
+        server.shutdown();
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::simulator::{activity_for_matmul, MatmulDims};
 use super::softmax::{ita_softmax_row_masked_into, ita_softmax_rows, SoftmaxUnit};
 use super::{Activity, ItaConfig};
 use crate::util::gemm::{gemm_requant_pret, GemmScratch};
-use crate::util::mat::{matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
+use crate::util::mat::{dot_i8_i32, matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
 
 /// Reusable scratch arenas (§Perf): everything the hot path needs
 /// beyond its returned outputs lives here and is recycled across calls.
@@ -370,6 +370,106 @@ impl TileEngine {
         let out = requant_mat(&acc_av, bias_av, rq_av);
         (out, a)
     }
+
+    // --- §Decode: the incremental (KV-cached) dataflow -----------------
+    //
+    // Autoregressive decode feeds ONE new token row per step: the row
+    // methods below are the per-token counterparts of the matrix passes
+    // above, bit-identical to the corresponding row of the full causal
+    // computation (pinned by `tests/decode_parity.rs`). Activity is
+    // recorded with the same tile model ([`activity_for_matmul`]) at
+    // R = 1 — a single-row pass still occupies a full M-row tile, which
+    // is exactly the padding cost the incremental dataflow pays on the
+    // real array (and what makes cross-session step batching pay off).
+
+    /// One-row linear layer against a pre-transposed weight (`wt` = Wᵀ,
+    /// C×K): the per-token Q/K/V/output projection of the decode path.
+    /// Bit-identical to the matching row of [`TileEngine::linear_pret`].
+    /// `out` is resized in place (no allocation once its capacity
+    /// covers `wt.rows()`).
+    pub fn linear_row_pret(
+        &mut self,
+        x: &[i8],
+        wt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+        out: &mut Vec<i8>,
+    ) {
+        assert_eq!(x.len(), wt.cols(), "linear row dims (pre-transposed)");
+        assert_eq!(bias.len(), wt.rows(), "one bias per output column");
+        self.check_depth(wt.cols());
+        out.resize(wt.rows(), 0);
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = rq.apply_biased(dot_i8_i32(x, wt.row(c)), bias[c]);
+        }
+        let useful = (x.len() * wt.rows()) as u64;
+        self.record_matmul(1, x.len(), wt.rows(), useful);
+    }
+
+    /// The new token's logit row against the first `valid` cached key
+    /// rows (`k` holds one key row per cached position, the Q·Kᵀ-ready
+    /// layout): `out[c] = requant(q · k.row(c))`. Bit-identical to the
+    /// first `valid` logits of the causal core's row (the hardware's
+    /// bias port is unused in the QK pass, as in
+    /// [`TileEngine::attention_core_causal`]).
+    pub fn logits_row_cached(
+        &mut self,
+        q: &[i8],
+        k: &MatI8,
+        valid: usize,
+        rq: RequantParams,
+        out: &mut Vec<i8>,
+    ) {
+        assert_eq!(q.len(), k.cols(), "projection dim");
+        assert!(valid <= k.rows(), "valid beyond cache rows");
+        out.resize(valid, 0);
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = rq.apply(dot_i8_i32(q, k.row(c)));
+        }
+        let useful = (q.len() * valid) as u64;
+        self.record_matmul(1, q.len(), valid, useful);
+    }
+
+    /// Streaming softmax over one *completed* logit row: DA in M-wide
+    /// parts (renormalizing `Σ >>= Δ >> 5` when a later part raises the
+    /// row maximum), DI, then EN — the same [`super::softmax::RowState`]
+    /// machinery the causal core streams through, so the decode row is
+    /// bit-identical to the masked row of the full computation.
+    pub fn softmax_row(&mut self, logits: &[i8], out: &mut Vec<u8>) {
+        out.resize(logits.len(), 0);
+        ita_softmax_row_masked_into(logits, self.cfg.m, logits.len(), out);
+        // DA absorbs every logit once, EN normalizes each once more.
+        self.activity.softmax_elems += 2 * logits.len() as u64;
+        self.activity.divisions += 1;
+    }
+
+    /// A·V for one probability row against the cached Vᵀ pack (`vt` is
+    /// P×S-capacity; columns beyond `a.len()` are ignored):
+    /// `out[j] = requant(Σ_c a[c]·vt[j,c] + bias[j])`. Bit-identical to
+    /// the matching output row of the causal core (masked probabilities
+    /// are zero there and contribute nothing).
+    pub fn av_row_cached(
+        &mut self,
+        a: &[u8],
+        vt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+        out: &mut [i8],
+    ) {
+        let p = vt.rows();
+        assert_eq!(bias.len(), p, "one bias per output column");
+        assert_eq!(out.len(), p, "output row width");
+        let valid = a.len();
+        assert!(valid <= vt.cols(), "probability row beyond cache capacity");
+        for (j, o) in out.iter_mut().enumerate() {
+            let vrow = &vt.row(j)[..valid];
+            // Same auto-vectorizing shape as dot_i8_i32 (§Perf).
+            let acc: i32 = a.iter().zip(vrow).map(|(&x, &y)| x as i32 * y as i32).sum();
+            *o = rq.apply_biased(acc, bias[j]);
+        }
+        let useful = (valid * p) as u64;
+        self.record_matmul(1, valid, p, useful);
+    }
 }
 
 #[cfg(test)]
@@ -606,6 +706,89 @@ mod tests {
         assert_eq!(eng.activity.softmax_elems, (s * s * 2) as u64);
         assert_eq!(eng.activity.divisions, s as u64);
         assert_eq!(eng.activity.macs, (s * p * s + s * s * p) as u64);
+    }
+
+    #[test]
+    fn linear_row_matches_linear_pret_rows() {
+        // §Decode: the per-token projection must equal the matching row
+        // of the full matrix pass, bit for bit, including activity when
+        // summed over the same padded tile count.
+        forall("linear_row == linear_pret row", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let (r, k, c) = (g.usize_in(1, 20), g.usize_in(1, 48), g.usize_in(1, 24));
+            let mut rng = SplitMix64::new(g.u64());
+            let x = rand_mat(&mut rng, r, k);
+            let wt = rand_mat(&mut rng, c, k); // pre-transposed: C×K
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let full = e1.linear_pret(&x, &wt, &bias, rq());
+            let mut e2 = TileEngine::new(cfg);
+            let mut row = Vec::new();
+            for i in 0..r {
+                e2.linear_row_pret(x.row(i), &wt, &bias, rq(), &mut row);
+                assert_eq!(&row[..], full.row(i), "row {i} (r={r} k={k} c={c})");
+            }
+        });
+    }
+
+    #[test]
+    fn decode_row_pipeline_matches_causal_core_last_row() {
+        // §Decode: logits_row_cached → softmax_row → av_row_cached over
+        // the cached K / Vᵀ equals the last row of the full causal core.
+        forall("decode row == causal row", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let s = g.usize_in(1, 40);
+            let p = g.usize_in(1, 16);
+            let mut rng = SplitMix64::new(g.u64());
+            let q = rand_mat(&mut rng, s, p);
+            let k = rand_mat(&mut rng, s, p);
+            let v = rand_mat(&mut rng, s, p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+            let mut e1 = TileEngine::new(cfg);
+            let (o_full, a_full) = e1.attention_core_causal(&q, &k, &v, rq(), &bias, rq());
+
+            let mut e2 = TileEngine::new(cfg);
+            let vt = v.transpose(); // the cached Vᵀ pack
+            let mut logits = Vec::new();
+            let mut a_row = Vec::new();
+            let mut out = vec![0i8; p];
+            for r in 0..s {
+                let valid = r + 1;
+                e2.logits_row_cached(q.row(r), &k, valid, rq(), &mut logits);
+                e2.softmax_row(&logits, &mut a_row);
+                e2.av_row_cached(&a_row, &vt, &bias, rq(), &mut out);
+                assert_eq!(&a_row[..], &a_full.row(r)[..valid], "attn row {r}");
+                assert!(a_full.row(r)[valid..].iter().all(|&x| x == 0));
+                assert_eq!(&out[..], o_full.row(r), "out row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn decode_row_activity_counts() {
+        // One decode-row pass: exact useful MACs and softmax/divider
+        // events for the incremental dataflow.
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(9);
+        let (e, p, valid) = (16usize, 8usize, 5usize);
+        let x: Vec<i8> = rng.vec_i8(e);
+        let wt = rand_mat(&mut rng, p, e);
+        let k = rand_mat(&mut rng, 12, p);
+        let vt = rand_mat(&mut rng, p, 12);
+        let bias = vec![0i8; p];
+        let mut eng = TileEngine::new(cfg);
+        let mut qrow = Vec::new();
+        eng.linear_row_pret(&x, &wt, &bias, rq(), &mut qrow);
+        let mut logits = Vec::new();
+        eng.logits_row_cached(&qrow, &k, valid, rq(), &mut logits);
+        let mut arow = Vec::new();
+        eng.softmax_row(&logits, &mut arow);
+        let mut out = vec![0i8; p];
+        eng.av_row_cached(&arow, &vt, &bias, rq(), &mut out);
+        assert_eq!(eng.activity.macs, (e * p + p * valid + valid * p) as u64);
+        assert_eq!(eng.activity.softmax_elems, 2 * valid as u64);
+        assert_eq!(eng.activity.divisions, 1);
+        assert!(eng.activity.cycles > 0, "R=1 passes still occupy tiles");
     }
 
     #[test]

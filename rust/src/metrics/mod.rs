@@ -139,6 +139,12 @@ pub struct ServerMetrics {
     pub sim_cycles: Counter,
     /// Simulated accelerator energy in picojoules.
     pub sim_energy_pj: Counter,
+    /// Decode sessions opened over the server's lifetime.
+    pub sessions_opened: Counter,
+    /// Completed prompt prefills (decode path).
+    pub prefills_completed: Counter,
+    /// Completed incremental decode steps.
+    pub decode_steps_completed: Counter,
 }
 
 impl ServerMetrics {
@@ -155,6 +161,7 @@ impl ServerMetrics {
         format!(
             "requests: accepted={} rejected={} completed={}\n\
              batches: formed={} mean_fill={:.2}\n\
+             decode: sessions={} prefills={} steps={}\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              sim: cycles={} energy={:.3}uJ",
             self.requests_accepted.get(),
@@ -162,6 +169,9 @@ impl ServerMetrics {
             self.requests_completed.get(),
             self.batches_formed.get(),
             self.mean_batch_fill(),
+            self.sessions_opened.get(),
+            self.prefills_completed.get(),
+            self.decode_steps_completed.get(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),

@@ -15,6 +15,93 @@ use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
+/// Offline stand-in for the vendored `xla` bindings crate.
+///
+/// The `xla-runtime` feature keeps the whole PJRT integration surface
+/// *compiling* (CI builds and tests it on every push so the feature
+/// gate cannot rot) while the real bindings are not vendored in this
+/// image. Every execution entry point returns an explanatory error,
+/// and [`pjrt_enabled`] reports `false` so tests skip instead of
+/// failing. To wire up the real runtime: vendor the `xla` crate (+ the
+/// native `xla_extension` library), replace this module with
+/// `use xla;`, and flip `REAL_BINDINGS` handling in [`pjrt_enabled`].
+#[cfg(feature = "xla-runtime")]
+mod xla {
+    use crate::anyhow;
+    use crate::util::error::Result;
+
+    /// `false` in the shim; the real vendored bindings replace this
+    /// module entirely.
+    pub const REAL_BINDINGS: bool = false;
+
+    const MSG: &str = "xla bindings are a compile-surface shim: vendor the real `xla` crate \
+         and its xla_extension runtime to execute artifacts (see rust/src/runtime/mod.rs)";
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<Self> {
+            Err(anyhow!("{MSG}"))
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            Err(anyhow!("{MSG}"))
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<Self> {
+            Err(anyhow!("{MSG}"))
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> Self {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<BufferRef>>> {
+            Err(anyhow!("{MSG}"))
+        }
+    }
+
+    pub struct BufferRef;
+
+    impl BufferRef {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            Err(anyhow!("{MSG}"))
+        }
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1(_v: &[i32]) -> Self {
+            Literal
+        }
+
+        pub fn reshape(&self, _shape: &[i64]) -> Result<Literal> {
+            Err(anyhow!("{MSG}"))
+        }
+
+        pub fn to_tuple1(&self) -> Result<Literal> {
+            Err(anyhow!("{MSG}"))
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            Err(anyhow!("{MSG}"))
+        }
+    }
+}
+
 /// One artifact's metadata from the manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -169,13 +256,21 @@ impl Engine {
     }
 }
 
-/// True when this build can execute artifacts (the `xla-runtime`
-/// feature is enabled). Tests and tools that would otherwise call
-/// [`Runtime::cpu`] unconditionally gate on this so a default-feature
-/// build with `artifacts/` present skips gracefully instead of
-/// hitting the stub's error.
+/// True when this build can actually execute artifacts. Tests and
+/// tools that would otherwise call [`Runtime::cpu`] unconditionally
+/// gate on this so a build with `artifacts/` present skips gracefully
+/// instead of hitting an error. Note this is `false` even under the
+/// `xla-runtime` feature while the bindings are the offline compile-
+/// surface shim (see the `xla` module above).
+#[cfg(feature = "xla-runtime")]
 pub fn pjrt_enabled() -> bool {
-    cfg!(feature = "xla-runtime")
+    xla::REAL_BINDINGS
+}
+
+/// See the feature-enabled twin above.
+#[cfg(not(feature = "xla-runtime"))]
+pub fn pjrt_enabled() -> bool {
+    false
 }
 
 /// Stub runtime for builds without the `xla-runtime` feature: the

@@ -1,0 +1,77 @@
+//! Zero-steady-state-allocation acceptance for the decode hot path:
+//! after cache warm-up, a decode step performs **no heap allocation**
+//! (scratch rows and the logit/probability buffers are sized to the
+//! session capacity at construction; `Vec::resize` within capacity
+//! never reallocates).
+//!
+//! This file holds exactly ONE test on purpose: the counting global
+//! allocator is process-wide, and a sibling test allocating
+//! concurrently would pollute the counter.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, ModelDims};
+use ita::ita::ItaConfig;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator with an allocation-event counter (frees are not
+/// counted — only acquiring memory violates the steady-state contract).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn decode_steps_do_not_allocate_after_warmup() {
+    let d = ModelDims { s: 32, e: 32, p: 16, h: 2 };
+    let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+    let x = gen_input(4, &d);
+    de.prefill(&x.block_padded(0, 0, 8, d.e));
+
+    // Warm-up: the output buffer and any lazily grown engine scratch
+    // reach their steady-state footprint here.
+    let mut out = Vec::with_capacity(d.e);
+    de.step_into(x.row(8), &mut out);
+    de.truncate(8);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for r in 8..24 {
+        de.step_into(x.row(r), &mut out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "decode steps allocated {} time(s) after warm-up",
+        after - before
+    );
+
+    // The steps above were real work, not no-ops: cache grew and the
+    // output row is the causal output (sanity via a fresh engine).
+    assert_eq!(de.len(), 24);
+    let mut fresh = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+    fresh.prefill(&x.block_padded(0, 0, 8, d.e));
+    let mut want = Vec::new();
+    for r in 8..24 {
+        fresh.step_into(x.row(r), &mut want);
+    }
+    assert_eq!(out, want);
+}

@@ -1,0 +1,147 @@
+//! Decode parity — the incremental path's correctness oracle.
+//!
+//! Property: for random dimensions, seeds, and prefill/step splits,
+//! **prefill + K incremental decode steps is bit-identical to running
+//! the full causal path over the grown length-(P+K) sequence** —
+//! outputs AND per-head attention rows. This is what makes the KV-cache
+//! path a drop-in serving optimization rather than an approximation:
+//! the streaming softmax state machine (paper §IV) produces the same
+//! probabilities whether a row's logits arrive as tile stripes of the
+//! full recompute or as the decode step's cached-key row.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, run_attention_causal, AttentionExecutor, ModelDims};
+use ita::ita::datapath::TileEngine;
+use ita::ita::ItaConfig;
+use ita::util::prop::forall;
+
+#[test]
+fn prefill_plus_steps_bit_identical_to_full_causal_recompute() {
+    forall("decode == full causal", 40, |g| {
+        // Random shape; capacity = total grown length so the same
+        // ModelDims (and thus the same deterministic requant
+        // derivation) feeds both sides.
+        let s = g.usize_in(2, 40);
+        let d = ModelDims {
+            s,
+            e: g.usize_in(1, 32),
+            p: g.usize_in(1, 16),
+            h: g.usize_in(1, 3),
+        };
+        let seed = g.u64();
+        let p0 = g.usize_in(0, s - 1); // prefill length (may be empty)
+        let x = gen_input(seed ^ 0x9e37, &d);
+
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, seed);
+        let pre = de.prefill(&x.block_padded(0, 0, p0, d.e));
+
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let full = run_attention_causal(&mut eng, &x, &de.weights, &de.requants);
+
+        // Prefill rows match the oracle's first P rows. (The prefill
+        // attention matrices are P×P; the oracle's are S×S with zeros
+        // beyond each row's causal horizon r+1 ≤ P.)
+        for r in 0..p0 {
+            assert_eq!(pre.out.row(r), full.out.row(r), "prefill row {r} (d={d:?})");
+            for h in 0..d.h {
+                assert_eq!(
+                    pre.attn[h].row(r),
+                    &full.attn[h].row(r)[..p0],
+                    "prefill attn h={h} r={r}"
+                );
+                assert!(full.attn[h].row(r)[p0..].iter().all(|&v| v == 0));
+            }
+        }
+
+        // Each decode step matches the oracle's corresponding row.
+        let mut out = Vec::new();
+        for r in p0..s {
+            de.step_into(x.row(r), &mut out);
+            assert_eq!(&out[..], full.out.row(r), "step row {r} (p0={p0} d={d:?})");
+            let valid = r + 1;
+            for h in 0..d.h {
+                assert_eq!(
+                    de.last_attn_row(h),
+                    &full.attn[h].row(r)[..valid],
+                    "attn h={h} r={r} (p0={p0} d={d:?})"
+                );
+                assert!(
+                    full.attn[h].row(r)[valid..].iter().all(|&v| v == 0),
+                    "oracle attended beyond the causal horizon"
+                );
+            }
+        }
+        assert_eq!(de.len(), s);
+    });
+}
+
+#[test]
+fn parity_holds_across_prefill_split_points() {
+    // The same sequence split at every possible prefill point yields
+    // the same final-row output: where prefill ends and stepping
+    // begins is unobservable.
+    let d = ModelDims { s: 12, e: 16, p: 8, h: 2 };
+    let x = gen_input(77, &d);
+    let mut reference: Option<Vec<i8>> = None;
+    for p0 in 0..d.s {
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 42);
+        de.prefill(&x.block_padded(0, 0, p0, d.e));
+        let mut last = Vec::new();
+        for r in p0..d.s {
+            de.step_into(x.row(r), &mut last);
+        }
+        match &reference {
+            None => reference = Some(last.clone()),
+            Some(want) => assert_eq!(&last, want, "split at p0={p0} diverged"),
+        }
+    }
+}
+
+#[test]
+fn parity_against_executor_causal_path() {
+    // Cross-check the second full-recompute entry point: the
+    // pre-transposed AttentionExecutor::run_causal.
+    forall("decode == executor causal", 15, |g| {
+        let s = g.usize_in(2, 24);
+        let d = ModelDims { s, e: g.usize_in(2, 24), p: g.usize_in(2, 12), h: g.usize_in(1, 2) };
+        let seed = g.u64();
+        let x = gen_input(seed ^ 0xabcd, &d);
+        let mut ex = AttentionExecutor::new(ItaConfig::tiny(), d, seed);
+        let full = ex.run_causal(&x);
+
+        let mut de = DecodeEngine::new(ItaConfig::tiny(), d, seed);
+        let p0 = s / 2;
+        de.prefill(&x.block_padded(0, 0, p0, d.e));
+        let mut out = Vec::new();
+        for r in p0..s {
+            de.step_into(x.row(r), &mut out);
+            assert_eq!(&out[..], full.out.row(r), "row {r}");
+        }
+    });
+}
+
+#[test]
+fn per_step_work_is_linear_in_sequence_length() {
+    // O(S) acceptance: useful MACs of a step at fill S must grow
+    // linearly (3·E·P + 2·(S+1)·P per head + H·P·E projection), not
+    // quadratically like the full recompute.
+    let d = ModelDims { s: 32, e: 16, p: 8, h: 2 };
+    let x = gen_input(5, &d);
+    let mut de = DecodeEngine::new(ItaConfig::tiny(), d, 5);
+    de.prefill(&x.block_padded(0, 0, 0, d.e));
+    let mut out = Vec::new();
+    let mut prev = None;
+    for r in 0..d.s {
+        de.engine.reset_activity();
+        de.step_into(x.row(r), &mut out);
+        let macs = de.engine.activity.macs;
+        let valid = r + 1;
+        let want = (d.h * (3 * d.e * d.p + 2 * valid * d.p) + d.h * d.p * d.e) as u64;
+        assert_eq!(macs, want, "step at fill {r}");
+        if let Some(p) = prev {
+            // Exactly the marginal cost of one more cached position.
+            assert_eq!(macs - p, (2 * d.h * d.p) as u64);
+        }
+        prev = Some(macs);
+    }
+}

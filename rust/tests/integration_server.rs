@@ -2,9 +2,11 @@
 //! semantics, and end-to-end consistency between the served responses
 //! and the simulator's accounting.
 
-use ita::attention::{gen_input, AttentionExecutor, ModelDims};
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, run_attention_causal, AttentionExecutor, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
-use ita::coordinator::{Server, SubmitError};
+use ita::coordinator::{DecodeInput, Server, SubmitError};
+use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
 use std::sync::Arc;
 
@@ -85,6 +87,124 @@ fn shutdown_rejects_new_work() {
     assert!(server.infer(x.clone()).is_ok());
     server.shutdown();
     assert!(matches!(server.submit(x), Err(SubmitError::Shutdown)));
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    // Requests accepted before shutdown must all receive responses:
+    // the dispatcher drains the queued ingress items after the sender
+    // closes, flushes the partial batch, and the workers finish it.
+    // No response channel may be dropped.
+    let mut cfg = config(2, 4);
+    cfg.server.max_wait_us = 20_000; // keep items in the batcher when shutdown hits
+    let server = Server::start(cfg);
+    let x = gen_input(3, &cfg.model.dims);
+    let rxs: Vec<_> = (0..12).map(|_| server.submit(x.clone()).expect("accepted")).collect();
+    let accepted = rxs.len() as u64;
+    // Shut down while (most of) the burst is still queued or batching.
+    server.shutdown();
+    let mut drained = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().expect("in-flight request dropped during shutdown");
+        assert_eq!(resp.output.shape(), (16, 16));
+        drained += 1;
+    }
+    assert_eq!(drained, accepted);
+    assert_eq!(server.metrics.requests_completed.get(), accepted);
+    // Post-shutdown submissions are rejected with Shutdown.
+    assert!(matches!(server.submit(x), Err(SubmitError::Shutdown)));
+}
+
+#[test]
+fn shutdown_drains_in_flight_decode_requests() {
+    // Same drain guarantee for the decode path: a step accepted before
+    // shutdown completes and its session state stays consistent.
+    let mut cfg = config(1, 4);
+    cfg.server.max_wait_us = 20_000;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let sid = server.open_session().unwrap();
+    let x = gen_input(9, &d);
+    let rx = server.submit_decode(sid, DecodeInput::Step(x.row(0).to_vec())).unwrap();
+    server.shutdown();
+    let resp = rx.recv().expect("in-flight decode step dropped during shutdown");
+    assert_eq!(resp.seq_len, 1);
+    assert!(matches!(
+        server.submit_decode(sid, DecodeInput::Step(x.row(1).to_vec())),
+        Err(SubmitError::Shutdown)
+    ));
+}
+
+#[test]
+fn queue_full_rejections_reflected_in_metrics() {
+    // Backpressure bookkeeping end to end: every QueueFull returned to
+    // a submitter shows up in requests_rejected, and accepted+rejected
+    // covers the whole burst.
+    let mut cfg = config(1, 64);
+    cfg.server.queue_depth = 1;
+    cfg.server.max_wait_us = 50_000; // slow flush to force buildup
+    let server = Server::start(cfg);
+    let x = gen_input(7, &cfg.model.dims);
+    let mut rejected = 0u64;
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        match server.submit(x.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(rejected > 0, "bounded queue must reject under burst");
+    assert_eq!(server.metrics.requests_rejected.get(), rejected);
+    assert_eq!(server.metrics.requests_accepted.get(), rxs.len() as u64);
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_decode_sessions_stay_isolated() {
+    // Several sessions stepping concurrently (their steps land in
+    // shared batches): each session's served rows must equal its own
+    // golden DecodeEngine AND the full causal recompute of its own
+    // sequence — per-session cache ownership never bleeds across.
+    let cfg = config(2, 8);
+    let d = cfg.model.dims;
+    let server = Server::start(cfg);
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let server: Arc<Server> = server.clone();
+        threads.push(std::thread::spawn(move || {
+            let x = gen_input(200 + t, &d);
+            let sid = server.open_session().expect("session");
+            let p0 = 4 + t as usize; // different prefill lengths
+            server
+                .decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, p0, d.e)))
+                .expect("prefill");
+            let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+            golden.prefill(&x.block_padded(0, 0, p0, d.e));
+            let mut served = Vec::new();
+            for r in p0..d.s {
+                let resp = server.decode(sid, DecodeInput::Step(x.row(r).to_vec())).unwrap();
+                assert_eq!(resp.output.row(0), &golden.step(x.row(r))[..], "t={t} r={r}");
+                served.push(resp.output);
+            }
+            // Full-recompute oracle over this session's sequence.
+            let mut eng = TileEngine::new(cfg.accelerator);
+            let full = run_attention_causal(&mut eng, &x, &golden.weights, &golden.requants);
+            for (i, r) in (p0..d.s).enumerate() {
+                assert_eq!(served[i].row(0), full.out.row(r), "t={t} oracle row {r}");
+            }
+            assert!(server.close_session(sid));
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(server.metrics.sessions_opened.get(), 4);
+    assert_eq!(server.metrics.prefills_completed.get(), 4);
+    server.shutdown();
 }
 
 #[test]
