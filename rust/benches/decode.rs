@@ -1,6 +1,8 @@
 //! Bench: incremental decode (KV cache + streaming-softmax row) vs
 //! full causal recompute — the per-step latency table quoted in
-//! EXPERIMENTS.md §Decode.
+//! EXPERIMENTS.md §Decode, also written machine-readably to
+//! `BENCH_decode.json` (CI artifact) so the trajectory is tracked
+//! across PRs.
 //!
 //! At cache fill S, one decode step does O(S) work
 //! (H·(3·E·P + 2·(S+1)·P) + H·P·E useful MACs) while recomputing the
@@ -14,10 +16,11 @@ use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, run_attention_causal, ModelDims};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
-use ita::util::bench::{bencher, black_box};
+use ita::util::bench::{bencher, black_box, JsonReport};
 
 fn main() {
     let mut b = bencher();
+    let mut report = JsonReport::new("decode");
     let cfg = ItaConfig::paper();
     let dims = ModelDims::compact(); // S=64 capacity, E=128, P=64, H=2
     let mut de = DecodeEngine::new(cfg, dims, 42);
@@ -46,6 +49,7 @@ fn main() {
                 black_box(out[0]);
             })
             .median;
+        report.entry("decode step", &format!("S={fill},E=128,P=64,H=2"), b.results().last().unwrap(), None);
 
         // Full-recompute baseline over the grown (fill+1)-row sequence.
         let grown = x.block_padded(0, 0, fill + 1, dims.e);
@@ -55,6 +59,12 @@ fn main() {
                 black_box(run_attention_causal(&mut eng, black_box(&grown), &de.weights, &de.requants));
             })
             .median;
+        report.entry(
+            "full causal recompute",
+            &format!("S={},E=128,P=64,H=2", fill + 1),
+            b.results().last().unwrap(),
+            Some(full / step),
+        );
         println!("  -> per-step speedup @S={}: {:.1}x (O(S) vs O(S^2))\n", fill, full / step);
         rows.push((fill + 1, step, full));
     }
@@ -69,5 +79,10 @@ fn main() {
             full * 1e6,
             full / step
         );
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_decode.json: {e}"),
     }
 }

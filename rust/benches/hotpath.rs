@@ -1,20 +1,28 @@
 //! Bench: host-side hot paths — the targets of the §Perf optimization
-//! pass (EXPERIMENTS.md §Perf records before/after for each).
+//! passes (EXPERIMENTS.md §Perf records before/after for each).
 //!
-//! * integer softmax row (the L3 datapath inner loop),
-//! * int8 matmul — pre-change oracle vs blocked GEMM kernel,
+//! * integer softmax row — scalar lane ops vs the SIMD-dispatched path,
+//! * int8 matmul — pre-change oracle vs blocked-scalar (PR-1) vs
+//!   blocked-SIMD (this rework),
 //! * fused attention core — oracle vs scratch-arena blocked path,
-//! * full attention execution (S=64 compact workload) — oracle serial
-//!   vs blocked serial vs blocked + per-head threads,
+//! * full attention execution — compact (S=64) and Table-1
+//!   (S=256,E=256,P=64,H=4) workloads, scalar-forced vs dispatched,
 //! * analytic simulator,
 //! * coordinator round trip (single inference, warm server).
 //!
 //! The pre-change paths are the *retained* oracles
-//! (`matmul_i8`, `TileEngine::*_reference`, `run_attention_reference`),
-//! so every "before" number is measured in the same binary and the
-//! speedup lines below are computed, not asserted. Targets (this
-//! rework): ≥5× on matmul_i8(128³) single-threaded, ≥3× on
-//! run_attention(S=64,E=128,H=2).
+//! (`matmul_i8`, `TileEngine::*_reference`, `run_attention_reference`)
+//! and the PR-1 kernels are this binary's own blocked path with the
+//! dispatch forced to `KernelPath::Scalar` — so every "before" number
+//! is measured in the same binary and the speedup lines below are
+//! computed, never stale. Results are also written machine-readably to
+//! `BENCH_hotpath.json` (layer, shape, ns/iter, speedup-vs-reference);
+//! CI uploads it as an artifact so the perf trajectory is tracked
+//! across PRs.
+//!
+//! Targets: ≥5× oracle→blocked on matmul_i8(128³) single-threaded
+//! (PR-1), and the SIMD path beating the scalar blocked kernels on the
+//! Table-1 shapes (this rework — the acceptance line).
 
 use ita::attention::{gen_input, run_attention_reference, AttentionExecutor, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
@@ -22,45 +30,110 @@ use ita::coordinator::Server;
 use ita::ita::datapath::TileEngine;
 use ita::ita::requant::RequantParams;
 use ita::ita::simulator::Simulator;
-use ita::ita::softmax::ita_softmax_row;
+use ita::ita::softmax::ita_softmax_row_masked_into_with;
 use ita::ita::ItaConfig;
-use ita::util::bench::{bencher, black_box};
-use ita::util::gemm::{gemm_i32_pret, GemmScratch};
+use ita::util::bench::{bencher, black_box, JsonReport};
+use ita::util::gemm::{
+    active_kernel_path, detected_kernel_path, gemm_i32_pret, set_kernel_path, GemmScratch,
+    KernelPath,
+};
 use ita::util::mat::{matmul_i8, MatI32, MatI8};
 use ita::util::rng::SplitMix64;
 
 fn main() {
     let mut b = bencher();
+    let mut report = JsonReport::new("hotpath");
     let mut rng = SplitMix64::new(1);
+    let simd = detected_kernel_path();
+    println!(
+        "kernel dispatch: detected={} active={} (override via ITA_KERNEL=scalar|avx2)\n",
+        simd.name(),
+        active_kernel_path().name()
+    );
 
-    // --- softmax row ---------------------------------------------------
+    // --- softmax row: scalar lane ops vs dispatched SIMD -----------------
     let row256 = rng.vec_i8(256);
-    b.bench_throughput("ita_softmax_row(256, part=64)", 256.0, "elem", || {
-        black_box(ita_softmax_row(black_box(&row256), 64));
-    });
+    let mut prow = vec![0u8; 256];
+    let sm_scalar = b
+        .bench_throughput("ita_softmax_row(256, part=64) [scalar]", 256.0, "elem", || {
+            ita_softmax_row_masked_into_with(
+                black_box(&row256),
+                64,
+                256,
+                &mut prow,
+                KernelPath::Scalar,
+            );
+            black_box(prow[0]);
+        })
+        .median;
+    report.entry("softmax_row scalar", "256", b.results().last().unwrap(), None);
+    let sm_simd = b
+        .bench_throughput("ita_softmax_row(256, part=64) [dispatched]", 256.0, "elem", || {
+            ita_softmax_row_masked_into_with(black_box(&row256), 64, 256, &mut prow, simd);
+            black_box(prow[0]);
+        })
+        .median;
+    report.entry(
+        "softmax_row dispatched",
+        "256",
+        b.results().last().unwrap(),
+        Some(sm_scalar / sm_simd),
+    );
+    println!("  -> speedup softmax_row(256) simd vs scalar: {:.2}x\n", sm_scalar / sm_simd);
 
-    // --- int8 matmul: oracle vs blocked kernel ---------------------------
+    // --- int8 matmul: oracle vs blocked-scalar (PR-1) vs blocked-SIMD ----
     let a = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
     let w = MatI8::from_fn(128, 128, |_, _| rng.next_i8());
     let macs = (128 * 128 * 128) as f64;
-    let mm_old = b
+    let mm_oracle = b
         .bench_throughput("matmul_i8(128^3) [oracle pre-change]", macs, "MAC", || {
             black_box(matmul_i8(black_box(&a), black_box(&w)));
         })
         .median;
-    // New path as the engine runs it: per-call pack of Wᵀ into a reused
-    // buffer, then the blocked kernel with reused scratch/output.
+    report.entry("matmul_i8 oracle", "128x128x128", b.results().last().unwrap(), None);
+    // Blocked path as the engine runs it: per-call pack of Wᵀ into a
+    // reused buffer, then the blocked kernel with reused scratch/output
+    // — once with the dispatch forced to the PR-1 scalar micro-kernel,
+    // once on the detected SIMD path.
     let mut scratch = GemmScratch::default();
     let mut wt = MatI8::zeros(0, 0);
     let mut acc = MatI32::zeros(0, 0);
-    let mm_new = b
-        .bench_throughput("gemm_i32(128^3) [blocked]", macs, "MAC", || {
+    set_kernel_path(Some(KernelPath::Scalar));
+    let mm_scalar = b
+        .bench_throughput("gemm_i32(128^3) [blocked scalar = PR-1]", macs, "MAC", || {
             w.transpose_into(&mut wt);
             gemm_i32_pret(black_box(&a), &wt, &mut scratch, &mut acc);
             black_box(acc.get(0, 0));
         })
         .median;
-    println!("  -> speedup matmul_i8(128^3): {:.2}x (target >=5x)\n", mm_old / mm_new);
+    report.entry(
+        "gemm_i32 blocked scalar",
+        "128x128x128",
+        b.results().last().unwrap(),
+        Some(mm_oracle / mm_scalar),
+    );
+    set_kernel_path(Some(simd));
+    let mm_simd = b
+        .bench_throughput("gemm_i32(128^3) [blocked simd]", macs, "MAC", || {
+            w.transpose_into(&mut wt);
+            gemm_i32_pret(black_box(&a), &wt, &mut scratch, &mut acc);
+            black_box(acc.get(0, 0));
+        })
+        .median;
+    report.entry(
+        "gemm_i32 blocked simd",
+        "128x128x128",
+        b.results().last().unwrap(),
+        Some(mm_oracle / mm_simd),
+    );
+    set_kernel_path(None);
+    println!(
+        "  -> speedup matmul_i8(128^3): oracle->scalar {:.2}x (PR-1 target >=5x), \
+         scalar->simd {:.2}x, oracle->simd {:.2}x\n",
+        mm_oracle / mm_scalar,
+        mm_scalar / mm_simd,
+        mm_oracle / mm_simd
+    );
 
     // --- fused attention core: oracle vs blocked -------------------------
     let cfg = ItaConfig::paper();
@@ -85,6 +158,7 @@ fn main() {
             ));
         })
         .median;
+    report.entry("attention_core oracle", "S=64,P=64", b.results().last().unwrap(), None);
     let mut eng = TileEngine::new(cfg);
     let core_new = b
         .bench_throughput("attention_core(S=64,P=64) [blocked]", core_macs, "MAC", || {
@@ -98,9 +172,15 @@ fn main() {
             ));
         })
         .median;
+    report.entry(
+        "attention_core blocked",
+        "S=64,P=64",
+        b.results().last().unwrap(),
+        Some(core_old / core_new),
+    );
     println!("  -> speedup attention_core(S=64,P=64): {:.2}x\n", core_old / core_new);
 
-    // --- full attention (compact): oracle vs blocked vs threaded ----------
+    // --- full attention (compact): oracle vs blocked vs pooled heads ------
     let dims = ModelDims::compact();
     let mut exec = AttentionExecutor::new(cfg, dims, 42);
     let x = gen_input(7, &dims);
@@ -116,23 +196,78 @@ fn main() {
             ));
         })
         .median;
+    report.entry("run_attention oracle", "S=64,E=128,H=2", b.results().last().unwrap(), None);
     let attn_serial = b
         .bench_throughput("run_attention(S=64,E=128,H=2) [blocked serial]", attn_macs, "MAC", || {
             black_box(exec.run_serial(black_box(&x)));
         })
         .median;
+    report.entry(
+        "run_attention blocked serial",
+        "S=64,E=128,H=2",
+        b.results().last().unwrap(),
+        Some(attn_old / attn_serial),
+    );
     let attn_mt = b
-        .bench_throughput("run_attention(S=64,E=128,H=2) [blocked + threads]", attn_macs, "MAC", || {
+        .bench_throughput("run_attention(S=64,E=128,H=2) [blocked + pool]", attn_macs, "MAC", || {
             black_box(exec.run(black_box(&x)));
         })
         .median;
+    report.entry(
+        "run_attention pooled",
+        "S=64,E=128,H=2",
+        b.results().last().unwrap(),
+        Some(attn_old / attn_mt),
+    );
     println!(
         "  -> speedup run_attention kernels only (single-thread-normalized): {:.2}x",
         attn_old / attn_serial
     );
     println!(
-        "  -> speedup run_attention end to end (kernels + H-head threading): {:.2}x (target >=3x)\n",
+        "  -> speedup run_attention end to end (kernels + pooled heads): {:.2}x (target >=3x)\n",
         attn_old / attn_mt
+    );
+
+    // --- Table-1 shape (S=256,E=256,P=64,H=4): PR-1 scalar vs SIMD -------
+    // The acceptance line for this rework: the dispatched kernels must
+    // beat the PR-1 blocked kernels on the paper's benchmark shape.
+    let t1 = ModelDims { s: 256, e: 256, p: 64, h: 4 };
+    let mut exec_t1 = AttentionExecutor::new(cfg, t1, 42);
+    let xt1 = gen_input(9, &t1);
+    let t1_macs = t1.shape().total_macs() as f64;
+    set_kernel_path(Some(KernelPath::Scalar));
+    let t1_scalar = b
+        .bench_throughput(
+            "run_attention(S=256,E=256,P=64,H=4) [scalar = PR-1]",
+            t1_macs,
+            "MAC",
+            || {
+                black_box(exec_t1.run(black_box(&xt1)));
+            },
+        )
+        .median;
+    report.entry("run_attention table1 scalar", "S=256,E=256,P=64,H=4", b.results().last().unwrap(), None);
+    set_kernel_path(Some(simd));
+    let t1_simd = b
+        .bench_throughput(
+            "run_attention(S=256,E=256,P=64,H=4) [dispatched]",
+            t1_macs,
+            "MAC",
+            || {
+                black_box(exec_t1.run(black_box(&xt1)));
+            },
+        )
+        .median;
+    report.entry(
+        "run_attention table1 dispatched",
+        "S=256,E=256,P=64,H=4",
+        b.results().last().unwrap(),
+        Some(t1_scalar / t1_simd),
+    );
+    set_kernel_path(None);
+    println!(
+        "  -> speedup run_attention(Table-1 shape) simd vs PR-1 blocked: {:.2}x (target >1x)\n",
+        t1_scalar / t1_simd
     );
 
     // --- analytic simulator ------------------------------------------------
@@ -151,5 +286,11 @@ fn main() {
     b.bench("server.infer(compact) round trip", || {
         black_box(server.infer(x.clone()).unwrap());
     });
+    report.entry("server round trip", "compact", b.results().last().unwrap(), None);
     server.shutdown();
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    }
 }

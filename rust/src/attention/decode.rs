@@ -26,8 +26,8 @@
 //! counts allocations under a counting global allocator).
 
 use super::{
-    concat_heads, default_requants, gen_weights, run_causal_heads, AttentionOutput,
-    AttentionWeights, ModelDims, RequantConfig, TransposedWeights,
+    concat_heads, run_causal_heads, AttentionOutput, AttentionWeights, ModelDims, PackedWeights,
+    RequantConfig, TransposedWeights,
 };
 use crate::ita::datapath::TileEngine;
 use crate::ita::ItaConfig;
@@ -140,11 +140,19 @@ pub struct DecodeEngine {
 
 impl DecodeEngine {
     /// Deterministic construction mirroring [`super::AttentionExecutor::new`]:
-    /// the same seed serves the same model.
+    /// the same seed serves the same model — through the
+    /// [`PackedWeights`] cache, so a decode engine and an executor for
+    /// the same `(seed, dims)` share one generated-and-packed weight
+    /// set (§Perf: no per-engine regeneration or re-transpose).
     pub fn new(cfg: ItaConfig, dims: ModelDims, seed: u64) -> Self {
-        let weights = Arc::new(gen_weights(seed, &dims));
-        let weights_t = Arc::new(TransposedWeights::of(&weights));
-        Self::from_shared(cfg, dims, weights, weights_t, default_requants(&dims))
+        let packed = PackedWeights::shared(dims, seed);
+        Self::from_shared(
+            cfg,
+            dims,
+            packed.weights.clone(),
+            packed.weights_t.clone(),
+            packed.requants,
+        )
     }
 
     /// Build around an existing shared model (multi-session serving:

@@ -15,10 +15,13 @@ use crate::ita::datapath::TileEngine;
 use crate::ita::requant::RequantParams;
 use crate::ita::{Activity, ItaConfig};
 use crate::util::mat::{MatI8, MatU8};
+use crate::util::pool::{Task, WorkerPool};
 use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 /// Workload dimensions (paper Fig. 1 naming).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ModelDims {
     /// Sequence length.
     pub s: usize,
@@ -278,16 +281,70 @@ impl TransposedWeights {
     }
 }
 
+/// One fully-packed weight set: the generated weights, their
+/// once-packed transposes, and the derived requant parameters —
+/// everything request execution needs that is a pure function of
+/// `(seed, dims)`.
+///
+/// §Perf: instances live in a process-wide cache keyed by weight
+/// identity, so every executor, decode session, and coordinator worker
+/// serving the same model shares ONE packing pass (`Arc`-shared,
+/// read-only at serve time) instead of regenerating and re-transposing
+/// per engine — the software expression of ITA's weight-stationary
+/// buffer being written once and reused across tiles.
+#[derive(Debug)]
+pub struct PackedWeights {
+    pub dims: ModelDims,
+    pub seed: u64,
+    pub weights: Arc<AttentionWeights>,
+    pub weights_t: Arc<TransposedWeights>,
+    pub requants: RequantConfig,
+}
+
+impl PackedWeights {
+    /// Build (and pack) a weight set without touching the cache.
+    pub fn generate(dims: ModelDims, seed: u64) -> Arc<Self> {
+        let weights = Arc::new(gen_weights(seed, &dims));
+        let weights_t = Arc::new(TransposedWeights::of(&weights));
+        Arc::new(Self { dims, seed, weights, weights_t, requants: default_requants(&dims) })
+    }
+
+    /// The process-wide packed-weight cache: one entry per weight
+    /// identity `(seed, dims)`. Entries are held weakly — a model with
+    /// no remaining user costs nothing; a live one is packed exactly
+    /// once no matter how many executors/sessions serve it.
+    pub fn shared(dims: ModelDims, seed: u64) -> Arc<Self> {
+        type Cache = Mutex<HashMap<(u64, ModelDims), Weak<PackedWeights>>>;
+        static CACHE: OnceLock<Cache> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        if let Some(hit) = map.get(&(seed, dims)).and_then(Weak::upgrade) {
+            return hit;
+        }
+        // Generation under the lock keeps the cache single-assignment
+        // (two racing misses would otherwise pack twice and share
+        // nothing); model generation is fast relative to serving one
+        // request, so the brief critical section is acceptable.
+        let packed = Self::generate(dims, seed);
+        map.retain(|_, w| w.strong_count() > 0);
+        map.insert((seed, dims), Arc::downgrade(&packed));
+        packed
+    }
+}
+
 /// Convenience wrapper owning the engine.
 pub struct AttentionExecutor {
     pub engine: TileEngine,
-    /// One persistent engine per head for the threaded [`Self::run`]
+    /// One persistent engine per head for the pooled [`Self::run`]
     /// path: scratch arenas stay warm across calls (§Perf) and each
-    /// worker thread gets exclusive `&mut` access to its own engine.
+    /// pool task gets exclusive `&mut` access to its own engine.
     head_engines: Vec<TileEngine>,
-    pub weights: AttentionWeights,
-    /// Transposed copies for the hot path (built once).
-    pub weights_t: TransposedWeights,
+    /// Weight set shared via the [`PackedWeights`] cache — executors
+    /// serving the same `(seed, dims)` hold the same allocation.
+    pub weights: Arc<AttentionWeights>,
+    /// Transposed copies, packed once per weight set (not per
+    /// executor, not per call).
+    pub weights_t: Arc<TransposedWeights>,
     pub requants: RequantConfig,
     pub dims: ModelDims,
 }
@@ -295,8 +352,8 @@ pub struct AttentionExecutor {
 /// One head's full pipeline (projections + fused attention core) on
 /// that head's persistent engine. The engine's activity is reset on
 /// entry, so the returned copy is exactly this call's delta. Free
-/// function so the scoped workers in [`AttentionExecutor::run`] can
-/// call it without borrowing `self`.
+/// function so the pool tasks in [`AttentionExecutor::run`] can call
+/// it without borrowing `self`.
 fn run_head(
     engine: &mut TileEngine,
     x: &MatI8,
@@ -314,46 +371,59 @@ fn run_head(
 }
 
 impl AttentionExecutor {
+    /// Construct over the [`PackedWeights`] cache: the first executor
+    /// for a `(seed, dims)` pair generates and packs the model; every
+    /// subsequent one (coordinator pool growth, parallel tests) only
+    /// clones two `Arc`s and allocates its private engines.
     pub fn new(cfg: ItaConfig, dims: ModelDims, seed: u64) -> Self {
-        let weights = gen_weights(seed, &dims);
-        let weights_t = TransposedWeights::of(&weights);
+        Self::from_packed(cfg, PackedWeights::shared(dims, seed))
+    }
+
+    /// Construct around an explicit packed weight set.
+    pub fn from_packed(cfg: ItaConfig, packed: Arc<PackedWeights>) -> Self {
+        let dims = packed.dims;
         Self {
             engine: TileEngine::new(cfg),
             head_engines: (0..dims.h).map(|_| TileEngine::new(cfg)).collect(),
-            weights,
-            weights_t,
-            requants: default_requants(&dims),
+            weights: packed.weights.clone(),
+            weights_t: packed.weights_t.clone(),
+            requants: packed.requants,
             dims,
         }
     }
 
     /// Bit-identical to [`run_attention`] but uses the pre-transposed
-    /// weight cache and executes the H heads on scoped worker threads
-    /// (§Perf). Each worker owns a thread-private [`TileEngine`]; head
-    /// outputs and [`Activity`] counters are merged back in head order,
-    /// so the result — outputs AND accounting — is deterministic and
-    /// identical to [`AttentionExecutor::run_serial`] (asserted in
-    /// tests: `Activity` merging is a sum of event counters, which is
-    /// order-invariant).
+    /// weight cache and executes the H heads on the persistent
+    /// [`WorkerPool`] (§Perf — no thread spawn per call; PR-1 spawned
+    /// scoped threads per batch). Each pool task owns a task-private
+    /// [`TileEngine`]; head outputs and [`Activity`] counters are
+    /// merged back in head order, so the result — outputs AND
+    /// accounting — is deterministic and identical to
+    /// [`AttentionExecutor::run_serial`] (asserted in tests: `Activity`
+    /// merging is a sum of event counters, which is order-invariant).
     pub fn run(&mut self, x: &MatI8) -> AttentionOutput {
         if self.weights.heads.len() <= 1 {
             return self.run_serial(x);
         }
         let (w, wt, rq) = (&self.weights, &self.weights_t, self.requants);
 
-        let head_results: Vec<(MatI8, MatU8, Activity)> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .head_engines
-                .iter_mut()
-                .zip(w.heads.iter().zip(&wt.heads))
-                .map(|(eng, (hw, wts))| s.spawn(move || run_head(eng, x, hw, wts, rq)))
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("head worker panicked")).collect()
-        });
+        let mut head_results: Vec<Option<(MatI8, MatU8, Activity)>> =
+            (0..w.heads.len()).map(|_| None).collect();
+        let tasks: Vec<Task> = self
+            .head_engines
+            .iter_mut()
+            .zip(w.heads.iter().zip(&wt.heads))
+            .zip(head_results.iter_mut())
+            .map(|((eng, (hw, wts)), slot)| {
+                Box::new(move || *slot = Some(run_head(eng, x, hw, wts, rq))) as Task
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
 
         let mut head_outputs: Vec<MatI8> = Vec::with_capacity(head_results.len());
         let mut attn = Vec::with_capacity(head_results.len());
-        for (o, a, activity) in head_results {
+        for r in head_results {
+            let (o, a, activity) = r.expect("head task completed");
             self.engine.activity.add(&activity);
             head_outputs.push(o);
             attn.push(a);
@@ -421,6 +491,29 @@ mod tests {
         assert_eq!(a.heads[1].wv, b.heads[1].wv);
         let c = gen_weights(43, &d);
         assert_ne!(a.wo, c.wo, "different seeds differ");
+    }
+
+    #[test]
+    fn packed_weight_cache_shares_one_packing_per_identity() {
+        let d = tiny_dims();
+        let a = PackedWeights::shared(d, 7001);
+        let b = PackedWeights::shared(d, 7001);
+        // Same identity → the very same allocations (weights AND packs).
+        assert!(Arc::ptr_eq(&a, &b));
+        let ex1 = AttentionExecutor::new(ItaConfig::tiny(), d, 7001);
+        let ex2 = AttentionExecutor::new(ItaConfig::tiny(), d, 7001);
+        assert!(Arc::ptr_eq(&ex1.weights, &ex2.weights));
+        assert!(Arc::ptr_eq(&ex1.weights_t, &ex2.weights_t));
+        assert!(Arc::ptr_eq(&a.weights, &ex1.weights));
+        // Different seed or dims → distinct models.
+        let c = PackedWeights::shared(d, 7002);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_ne!(a.weights.wo, c.weights.wo);
+        let d2 = ModelDims { s: d.s + 1, ..d };
+        let e = PackedWeights::shared(d2, 7001);
+        assert!(!Arc::ptr_eq(&a.weights, &e.weights));
+        // And the packs really are the transposes of the weights.
+        assert_eq!(a.weights_t.wot, a.weights.wo.transpose());
     }
 
     #[test]

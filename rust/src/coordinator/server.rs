@@ -14,15 +14,13 @@ use super::request::{
     SubmitError,
 };
 use crate::attention::decode::DecodeEngine;
-use crate::attention::{
-    default_requants, gen_weights, AttentionExecutor, AttentionWeights, RequantConfig,
-    TransposedWeights,
-};
+use crate::attention::{AttentionExecutor, PackedWeights};
 use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
 use crate::metrics::ServerMetrics;
 use crate::util::mat::MatI8;
+use crate::util::pool::{Task, WorkerPool};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
@@ -64,13 +62,13 @@ pub struct Server {
     next_id: AtomicU64,
     next_session: AtomicU64,
     sessions: Arc<SessionTable>,
-    /// The decode-path model, generated once and shared by every
-    /// session (weights are read-only at serve time): opening a
-    /// session costs only its KV caches and scratch, not a weight
-    /// regeneration + transpose.
-    decode_weights: Arc<AttentionWeights>,
-    decode_weights_t: Arc<TransposedWeights>,
-    decode_requants: RequantConfig,
+    /// The served model, generated-and-packed once via the process
+    /// [`PackedWeights`] cache and shared by every decode session AND
+    /// every worker's executor pool (weights are read-only at serve
+    /// time): opening a session or growing an executor costs only KV
+    /// caches / engine scratch, never a weight regeneration +
+    /// re-transpose.
+    model: Arc<PackedWeights>,
     pub metrics: Arc<ServerMetrics>,
     pub config: SystemConfig,
     shutdown: Arc<AtomicBool>,
@@ -102,16 +100,13 @@ impl Server {
             ));
         }
 
-        let decode_weights = Arc::new(gen_weights(config.model.seed, &config.model.dims));
-        let decode_weights_t = Arc::new(TransposedWeights::of(&decode_weights));
+        let model = PackedWeights::shared(config.model.dims, config.model.seed);
         Arc::new(Server {
             ingress: Mutex::new(Some(ingress_tx)),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
             sessions,
-            decode_weights,
-            decode_weights_t,
-            decode_requants: default_requants(&config.model.dims),
+            model,
             metrics,
             config,
             shutdown,
@@ -162,9 +157,9 @@ impl Server {
         let engine = DecodeEngine::from_shared(
             self.config.accelerator,
             self.config.model.dims,
-            self.decode_weights.clone(),
-            self.decode_weights_t.clone(),
-            self.decode_requants,
+            self.model.weights.clone(),
+            self.model.weights_t.clone(),
+            self.model.requants,
         );
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
         self.sessions
@@ -391,9 +386,10 @@ fn spawn_worker(
 /// guarantees at most one in-flight request per session, so every
 /// item in a batch belongs to a *different* session and owns a
 /// disjoint engine — the batch is embarrassingly parallel and fans
-/// out across scoped threads exactly like the infer path (round-robin
-/// by batch index, responses delivered in submission order). Energy
-/// is charged per operation from the engine's own incremental-dataflow
+/// out across the persistent [`WorkerPool`] exactly like the infer
+/// path (round-robin by batch index, responses delivered in
+/// submission order; §Perf: no thread spawn per batch). Energy is
+/// charged per operation from the engine's own incremental-dataflow
 /// [`Activity`] — no cross-request weight amortization, since each
 /// session streams against its own K/V state.
 fn process_decode_batch(
@@ -442,25 +438,25 @@ fn process_decode_batch(
         for (i, item) in items.into_iter().enumerate() {
             assigned[i % want].push((i, item));
         }
+        // One pool task per chunk, each filling its own result buffer;
+        // merged back in submission order below (placement-invariant).
+        let mut outs: Vec<Vec<(usize, Done)>> = (0..want).map(|_| Vec::new()).collect();
+        let tasks: Vec<Task> = assigned
+            .into_iter()
+            .zip(outs.iter_mut())
+            .map(|(chunk, out)| {
+                Box::new(move || {
+                    for (i, item) in chunk {
+                        out.push((i, execute_one(item)));
+                    }
+                }) as Task
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
         let mut slots: Vec<Option<Done>> = (0..n).map(|_| None).collect();
-        std::thread::scope(|s| {
-            let handles: Vec<_> = assigned
-                .into_iter()
-                .map(|chunk| {
-                    s.spawn(move || {
-                        chunk
-                            .into_iter()
-                            .map(|(i, item)| (i, execute_one(item)))
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (i, r) in h.join().expect("decode worker panicked") {
-                    slots[i] = Some(r);
-                }
-            }
-        });
+        for (i, r) in outs.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
         slots.into_iter().map(|r| r.expect("decode item processed")).collect()
     };
 
@@ -511,11 +507,13 @@ fn max_batch_parallelism(workers: usize) -> usize {
 
 /// Execute a batch on one simulated accelerator and deliver responses.
 ///
-/// The requests fan out across the worker's executor pool on scoped
-/// threads (round-robin by batch index, results merged back in batch
-/// order — every executor simulates the *same* model, so placement
-/// cannot change outputs and the per-request Activity is computed
-/// request-locally; the batch totals below are order-invariant sums).
+/// The requests fan out across the worker's executor pool on the
+/// persistent [`WorkerPool`] (round-robin by batch index, results
+/// merged back in batch order — every executor simulates the *same*
+/// model, so placement cannot change outputs and the per-request
+/// Activity is computed request-locally; the batch totals below are
+/// order-invariant sums). §Perf: no scoped-thread spawn per batch,
+/// and the executors themselves share one [`PackedWeights`] set.
 ///
 /// Weight-stationary amortization: the batch shares every weight
 /// stream, so `weight_buf_writes` (and the matching I/O port energy)
@@ -558,33 +556,31 @@ fn process_batch(
             .collect()
     } else {
         // Round-robin the batch over `want` executors, keep indices so
-        // responses merge back in submission order.
+        // responses merge back in submission order. Each pool task
+        // owns one executor and fills its own result buffer.
         let mut assigned: Vec<Vec<(usize, Job)>> = (0..want).map(|_| Vec::new()).collect();
         for (i, job) in batch.into_iter().enumerate() {
             assigned[i % want].push((i, job));
         }
+        let mut outs: Vec<Vec<(usize, ReqResult)>> = (0..want).map(|_| Vec::new()).collect();
+        let tasks: Vec<Task> = pool
+            .iter_mut()
+            .zip(assigned)
+            .zip(outs.iter_mut())
+            .map(|((exec, jobs), out)| {
+                Box::new(move || {
+                    for (i, (req, tx)) in jobs {
+                        let (activity, req, res) = execute_one(exec, req);
+                        out.push((i, (activity, req, tx, res)));
+                    }
+                }) as Task
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
         let mut slots: Vec<Option<ReqResult>> = (0..b as usize).map(|_| None).collect();
-        std::thread::scope(|s| {
-            let handles: Vec<_> = pool
-                .iter_mut()
-                .zip(assigned)
-                .map(|(exec, jobs)| {
-                    s.spawn(move || {
-                        jobs.into_iter()
-                            .map(|(i, (req, tx))| {
-                                let (activity, req, out) = execute_one(exec, req);
-                                (i, (activity, req, tx, out))
-                            })
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (i, r) in h.join().expect("batch worker panicked") {
-                    slots[i] = Some(r);
-                }
-            }
-        });
+        for (i, r) in outs.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
         slots.into_iter().map(|r| r.expect("request processed")).collect()
     };
     // Batch-level activity with amortized weight traffic.
@@ -649,6 +645,23 @@ mod tests {
         assert_eq!(resp.output, want.out);
         assert!(resp.sim_cycles > 0);
         assert!(resp.sim_energy_j > 0.0);
+    }
+
+    #[test]
+    fn serving_shares_one_packed_weight_set() {
+        // The coordinator, its executors, and decode sessions must all
+        // resolve to the SAME packed model allocation (the §Perf
+        // packed-weight cache), not per-component regenerations.
+        let cfg = test_config();
+        let server = Server::start(cfg);
+        let packed = PackedWeights::shared(cfg.model.dims, cfg.model.seed);
+        assert!(Arc::ptr_eq(&server.model.weights, &packed.weights));
+        assert!(Arc::ptr_eq(&server.model.weights_t, &packed.weights_t));
+        let exec = AttentionExecutor::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+        assert!(Arc::ptr_eq(&exec.weights, &packed.weights));
+        let de = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+        assert!(Arc::ptr_eq(&de.weights, &packed.weights));
+        server.shutdown();
     }
 
     #[test]

@@ -11,11 +11,14 @@
 //! Pallas kernel and the JAX model must match this engine bit-for-bit
 //! (asserted by `rust/tests/cross_layer.rs`).
 //!
-//! §Perf: the steady-state compute runs on the cache-blocked kernels in
-//! [`crate::util::gemm`] with engine-owned scratch arenas — no
-//! allocation beyond the returned outputs, the A·V pass reuses a
-//! once-packed Vᵀ, and the requant epilogue is fused into the GEMM
-//! tile loop. The pre-change naive paths survive as
+//! §Perf: the steady-state compute runs on the cache-blocked,
+//! SIMD-dispatched kernels in [`crate::util::gemm`] (AVX2 micro-tiles
+//! with the scalar kernel as the portable fallback — see
+//! `KernelPath`) with engine-owned scratch arenas — no allocation
+//! beyond the returned outputs, the A·V pass reuses a once-packed Vᵀ,
+//! the requant epilogue is fused (and vectorized) into the GEMM tile
+//! loop, and the decode row kernels run on the same dispatched dots.
+//! The pre-change naive paths survive as
 //! [`TileEngine::linear_reference`] /
 //! [`TileEngine::attention_core_reference`], the oracles every new
 //! kernel is pinned bit-identical to.
@@ -24,8 +27,8 @@ use super::requant::{requant_mat, RequantParams};
 use super::simulator::{activity_for_matmul, MatmulDims};
 use super::softmax::{ita_softmax_row_masked_into, ita_softmax_rows, SoftmaxUnit};
 use super::{Activity, ItaConfig};
-use crate::util::gemm::{gemm_requant_pret, GemmScratch};
-use crate::util::mat::{dot_i8_i32, matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
+use crate::util::gemm::{active_kernel_path, dot_dispatch, gemm_requant_pret, GemmScratch};
+use crate::util::mat::{matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
 
 /// Reusable scratch arenas (§Perf): everything the hot path needs
 /// beyond its returned outputs lives here and is recycled across calls.
@@ -399,8 +402,11 @@ impl TileEngine {
         assert_eq!(bias.len(), wt.rows(), "one bias per output column");
         self.check_depth(wt.cols());
         out.resize(wt.rows(), 0);
+        // Dispatched SIMD dot (§Perf) — bit-identical to dot_i8_i32.
+        // The dispatch lookup is hoisted out of the column loop.
+        let path = active_kernel_path();
         for (c, o) in out.iter_mut().enumerate() {
-            *o = rq.apply_biased(dot_i8_i32(x, wt.row(c)), bias[c]);
+            *o = rq.apply_biased(dot_dispatch(path, x, wt.row(c)), bias[c]);
         }
         let useful = (x.len() * wt.rows()) as u64;
         self.record_matmul(1, x.len(), wt.rows(), useful);
@@ -423,8 +429,9 @@ impl TileEngine {
         assert_eq!(q.len(), k.cols(), "projection dim");
         assert!(valid <= k.rows(), "valid beyond cache rows");
         out.resize(valid, 0);
+        let path = active_kernel_path();
         for (c, o) in out.iter_mut().enumerate() {
-            *o = rq.apply(dot_i8_i32(q, k.row(c)));
+            *o = rq.apply(dot_dispatch(path, q, k.row(c)));
         }
         let useful = (q.len() * valid) as u64;
         self.record_matmul(1, q.len(), valid, useful);
@@ -461,11 +468,11 @@ impl TileEngine {
         assert_eq!(out.len(), p, "output row width");
         let valid = a.len();
         assert!(valid <= vt.cols(), "probability row beyond cache capacity");
+        let path = active_kernel_path();
         for (j, o) in out.iter_mut().enumerate() {
             let vrow = &vt.row(j)[..valid];
-            // Same auto-vectorizing shape as dot_i8_i32 (§Perf).
-            let acc: i32 = a.iter().zip(vrow).map(|(&x, &y)| x as i32 * y as i32).sum();
-            *o = rq.apply_biased(acc, bias[j]);
+            // Dispatched u8×i8 SIMD dot (§Perf), exact as the oracle.
+            *o = rq.apply_biased(dot_dispatch(path, a, vrow), bias[j]);
         }
         let useful = (valid * p) as u64;
         self.record_matmul(1, valid, p, useful);

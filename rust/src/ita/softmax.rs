@@ -35,6 +35,22 @@
 //! paper's datapath. The same arithmetic is mirrored in the Pallas
 //! kernel (`python/compile/kernels/ita_softmax.py`); the cross-layer
 //! tests assert bit-identical outputs.
+//!
+//! # §Perf: vectorized lane ops
+//!
+//! The DA term accumulation and the EN normalization are branch-free
+//! and lane-parallel: the 3-bit shift is `((max − x) as u8) >> 5` per
+//! byte, the DA term `2^(7−s)` is an 8-entry byte LUT
+//! (`shuffle_epi8`), and the EN output `min(Σ_inv >> (s+7), 255)` has
+//! only 8 possible values per row — another per-row byte LUT. The AVX2
+//! path ([`crate::util::gemm::KernelPath`] dispatch, scalar fallback
+//! retained) processes 32 logits per step and reduces DA terms with
+//! `sad_epu8`; chunk boundaries (and therefore the streaming
+//! renormalization events) are untouched, so every path is
+//! bit-identical to the scalar `RowState` walk. All hot callers go
+//! through the `_into` variants — no per-row allocation.
+
+use crate::util::gemm::{active_kernel_path, KernelPath};
 
 /// Quantization bit-width B. The architecture fixes B = 8; the shift
 /// amount `B - log2(B)` is then the constant 5 and the hardware takes
@@ -92,16 +108,26 @@ impl Default for RowState {
 }
 
 impl RowState {
-    /// **DA step**: absorb the next part (stripe) of the row.
+    /// **DA step**: absorb the next part (stripe) of the row, on the
+    /// process-active kernel path.
     ///
     /// Mirrors the hardware exactly: find the part's local maximum,
     /// renormalize the accumulated sum if the global maximum grew, then
     /// accumulate `2^(7 − shift)` per element.
     pub fn accumulate(&mut self, part: &[i8]) {
+        self.accumulate_with(part, active_kernel_path())
+    }
+
+    /// [`RowState::accumulate`] with an explicit kernel path (parity
+    /// tests pin the SIMD lane ops against `Scalar` through here).
+    /// Every path is bit-identical: the term sum is a commutative u32
+    /// add of identical LUT values, and the renormalization event
+    /// depends only on the part's maximum.
+    pub fn accumulate_with(&mut self, part: &[i8], path: KernelPath) {
         if part.is_empty() {
             return;
         }
-        let local_max = part.iter().copied().max().unwrap();
+        let local_max = lanes::row_max(path, part);
         if local_max > self.max {
             if self.count > 0 {
                 // Single-shift renormalization of the old partial sum —
@@ -113,10 +139,7 @@ impl RowState {
             }
             self.max = local_max;
         }
-        for &x in part {
-            let s = shift_of(self.max, x);
-            self.sum += 1u32 << (TERM_SCALE - s.min(TERM_SCALE));
-        }
+        self.sum += lanes::sum_terms(path, self.max, part);
         self.count += part.len() as u32;
         // Paper: accumulation is performed in 15-bit format. With terms
         // ≤ 2^7 and rows ≤ 256 elements the bound Σ ≤ 2^15 holds.
@@ -151,6 +174,191 @@ impl RowState {
         //   p_i = 2^(7-s)/Σ  ⇒  p_i·2^8 = 2^(15-s)/Σ = inv >> (s + 7).
         let v = (self.inv as u32) >> (s + (DIV_NUM_LOG2 - TERM_SCALE - PROB_BITS));
         v.min(u8::MAX as u32) as u8
+    }
+
+    /// **EN over a whole row** into a caller-provided buffer, on the
+    /// process-active kernel path. `inv >> (s + 7)` takes only 8
+    /// values per row, so the vectorized path is a per-row byte LUT.
+    #[inline]
+    pub fn normalize_row_into(&self, x: &[i8], out: &mut [u8]) {
+        self.normalize_row_into_with(x, out, active_kernel_path())
+    }
+
+    /// [`RowState::normalize_row_into`] with an explicit kernel path.
+    pub fn normalize_row_into_with(&self, x: &[i8], out: &mut [u8], path: KernelPath) {
+        debug_assert!(self.inverted, "EN before DI");
+        assert_eq!(x.len(), out.len(), "EN row length");
+        lanes::normalize_row(path, self.max, self.inv, x, out);
+    }
+}
+
+/// Lane-parallel softmax primitives with runtime dispatch: the scalar
+/// arms are the retained pre-change loops (and the portable fallback);
+/// the AVX2 arms are pinned bit-identical to them by the parity tests
+/// below and in `tests/kernel_parity.rs`.
+mod lanes {
+    use super::{shift_of, KernelPath, TERM_SCALE};
+
+    /// Maximum of a non-empty part.
+    #[inline]
+    pub fn row_max(path: KernelPath, part: &[i8]) -> i8 {
+        match path {
+            KernelPath::Scalar => scalar_max(part),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::row_max(part) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => scalar_max(part),
+        }
+    }
+
+    /// Σ 2^(7 − ((max − x) >> 5)) over the part — the DA contribution.
+    #[inline]
+    pub fn sum_terms(path: KernelPath, max: i8, part: &[i8]) -> u32 {
+        match path {
+            KernelPath::Scalar => scalar_sum_terms(max, part),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::sum_terms(max, part) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => scalar_sum_terms(max, part),
+        }
+    }
+
+    /// EN: `out[i] = min(inv >> (((max − x[i]) >> 5) + 7), 255)`.
+    #[inline]
+    pub fn normalize_row(path: KernelPath, max: i8, inv: u16, x: &[i8], out: &mut [u8]) {
+        match path {
+            KernelPath::Scalar => scalar_normalize_row(max, inv, x, out),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::normalize_row(max, inv, x, out) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => scalar_normalize_row(max, inv, x, out),
+        }
+    }
+
+    #[inline]
+    fn scalar_max(part: &[i8]) -> i8 {
+        debug_assert!(!part.is_empty());
+        part.iter().copied().max().unwrap()
+    }
+
+    #[inline]
+    fn scalar_sum_terms(max: i8, part: &[i8]) -> u32 {
+        let mut sum = 0u32;
+        for &x in part {
+            let s = shift_of(max, x);
+            sum += 1u32 << (TERM_SCALE - s.min(TERM_SCALE));
+        }
+        sum
+    }
+
+    #[inline]
+    fn scalar_normalize_row(max: i8, inv: u16, x: &[i8], out: &mut [u8]) {
+        for (&v, o) in x.iter().zip(out.iter_mut()) {
+            let s = shift_of(max, v);
+            *o = ((inv as u32) >> (s + TERM_SCALE)).min(u8::MAX as u32) as u8;
+        }
+    }
+
+    /// AVX2 lane ops. `unsafe` contract: the caller verified AVX2 at
+    /// runtime (the dispatch above only selects these when
+    /// [`crate::util::gemm::available_kernel_paths`] includes Avx2).
+    #[cfg(target_arch = "x86_64")]
+    mod avx2 {
+        use super::super::TERM_SCALE;
+        use std::arch::x86_64::*;
+
+        /// Per-byte 3-bit shift amounts `((max − x) as u8) >> 5` for 32
+        /// logits. The i8 subtraction wraps mod 256, and the true
+        /// difference is in [0, 255], so the wrapped byte IS the u8
+        /// difference; `srli_epi16 + and 0x07` keeps each byte's own
+        /// top-3 bits (cross-byte shift-ins land above bit 2).
+        #[inline(always)]
+        unsafe fn shifts32(maxv: __m256i, x: __m256i) -> __m256i {
+            let diff = _mm256_sub_epi8(maxv, x);
+            _mm256_and_si256(_mm256_srli_epi16(diff, 5), _mm256_set1_epi8(0x07))
+        }
+
+        /// Broadcast an 8-entry byte LUT into both 128-bit lanes (the
+        /// `shuffle_epi8` table layout).
+        #[inline(always)]
+        unsafe fn lut8(t: [u8; 8]) -> __m256i {
+            let mut b = [0u8; 32];
+            b[..8].copy_from_slice(&t);
+            b[16..24].copy_from_slice(&t);
+            _mm256_loadu_si256(b.as_ptr() as *const __m256i)
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn row_max(part: &[i8]) -> i8 {
+            debug_assert!(!part.is_empty());
+            let n = part.len();
+            let mut i = 0;
+            let mut m = i8::MIN;
+            if n >= 32 {
+                let mut mv = _mm256_set1_epi8(i8::MIN);
+                while i + 32 <= n {
+                    let x = _mm256_loadu_si256(part.as_ptr().add(i) as *const __m256i);
+                    mv = _mm256_max_epi8(mv, x);
+                    i += 32;
+                }
+                let mut buf = [0i8; 32];
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, mv);
+                m = buf.iter().copied().max().unwrap();
+            }
+            for &x in &part[i..] {
+                m = m.max(x);
+            }
+            m
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn sum_terms(max: i8, part: &[i8]) -> u32 {
+            let n = part.len();
+            let maxv = _mm256_set1_epi8(max);
+            // term LUT: s → 2^(7−s), s ∈ 0..=7.
+            let terms = lut8([128, 64, 32, 16, 8, 4, 2, 1]);
+            let zero = _mm256_setzero_si256();
+            let mut acc = _mm256_setzero_si256(); // 4 × u64 partial sums
+            let mut i = 0;
+            while i + 32 <= n {
+                let x = _mm256_loadu_si256(part.as_ptr().add(i) as *const __m256i);
+                let t = _mm256_shuffle_epi8(terms, shifts32(maxv, x));
+                // sad_epu8 vs 0 sums each 8-byte group exactly.
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(t, zero));
+                i += 32;
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let mut sum = lanes.iter().sum::<u64>() as u32;
+            for &x in &part[i..] {
+                let s = super::super::shift_of(max, x);
+                sum += 1u32 << (TERM_SCALE - s.min(TERM_SCALE));
+            }
+            sum
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn normalize_row(max: i8, inv: u16, x: &[i8], out: &mut [u8]) {
+            let n = x.len();
+            let maxv = _mm256_set1_epi8(max);
+            // Per-row EN LUT: s → min(inv >> (s+7), 255).
+            let mut t = [0u8; 8];
+            for (s, e) in t.iter_mut().enumerate() {
+                *e = ((inv as u32) >> (s as u32 + TERM_SCALE)).min(u8::MAX as u32) as u8;
+            }
+            let lut = lut8(t);
+            let mut i = 0;
+            while i + 32 <= n {
+                let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+                let v = _mm256_shuffle_epi8(lut, shifts32(maxv, xv));
+                _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, v);
+                i += 32;
+            }
+            for (j, &xv) in x.iter().enumerate().skip(i) {
+                let s = super::super::shift_of(max, xv);
+                out[j] = ((inv as u32) >> (s + TERM_SCALE)).min(u8::MAX as u32) as u8;
+            }
+        }
     }
 }
 
@@ -194,15 +402,18 @@ impl SoftmaxUnit {
 
 /// One-shot reference entry point: softmax over a full row of int8
 /// logits streamed in parts of `part` elements. This is what the tests
-/// compare against the float oracle and the Pallas kernel.
+/// compare against the float oracle and the Pallas kernel. Allocating
+/// convenience over [`ita_softmax_row_into`].
 pub fn ita_softmax_row(x: &[i8], part: usize) -> Vec<u8> {
-    assert!(part > 0);
-    let mut st = RowState::default();
-    for chunk in x.chunks(part) {
-        st.accumulate(chunk);
-    }
-    st.invert();
-    x.iter().map(|&v| st.normalize(v)).collect()
+    let mut out = vec![0u8; x.len()];
+    ita_softmax_row_into(x, part, &mut out);
+    out
+}
+
+/// Allocation-free unmasked row softmax: identical stream to
+/// [`ita_softmax_row`], written into a caller-provided row.
+pub fn ita_softmax_row_into(x: &[i8], part: usize, out: &mut [u8]) {
+    ita_softmax_row_masked_into(x, part, x.len(), out)
 }
 
 /// Masked streaming softmax (decoder support, paper §II-A: "In
@@ -221,8 +432,21 @@ pub fn ita_softmax_row_masked(x: &[i8], part: usize, valid: usize) -> Vec<u8> {
 
 /// Allocation-free variant of [`ita_softmax_row_masked`]: writes the
 /// probabilities into a caller-provided row (§Perf — the causal
-/// attention core streams rows straight into its output matrix).
+/// attention core streams rows straight into its output matrix), on
+/// the process-active kernel path.
 pub fn ita_softmax_row_masked_into(x: &[i8], part: usize, valid: usize, out: &mut [u8]) {
+    ita_softmax_row_masked_into_with(x, part, valid, out, active_kernel_path())
+}
+
+/// [`ita_softmax_row_masked_into`] with an explicit kernel path — the
+/// parity-test / bench entry point pinning SIMD against scalar.
+pub fn ita_softmax_row_masked_into_with(
+    x: &[i8],
+    part: usize,
+    valid: usize,
+    out: &mut [u8],
+    path: KernelPath,
+) {
     assert!(part > 0);
     assert_eq!(out.len(), x.len(), "output row length");
     let valid = valid.min(x.len());
@@ -237,23 +461,34 @@ pub fn ita_softmax_row_masked_into(x: &[i8], part: usize, valid: usize, out: &mu
             break; // fully masked stripe: the hardware gates it off
         }
         let w = (valid - c0).min(chunk.len());
-        st.accumulate(&chunk[..w]);
+        st.accumulate_with(&chunk[..w], path);
     }
     st.invert();
-    for (i, (&v, o)) in x.iter().zip(out.iter_mut()).enumerate() {
-        *o = if i < valid { st.normalize(v) } else { 0 };
-    }
+    st.normalize_row_into_with(&x[..valid], &mut out[..valid], path);
+    out[valid..].fill(0);
 }
 
 /// Full-matrix convenience: row-wise ITA softmax with streaming width
 /// `part` (use `part = x.cols()` for single-pass).
 pub fn ita_softmax_rows(x: &crate::util::mat::MatI8, part: usize) -> crate::util::mat::MatU8 {
-    let mut out = crate::util::mat::MatU8::zeros(x.rows(), x.cols());
-    for r in 0..x.rows() {
-        let row = ita_softmax_row(x.row(r), part);
-        out.row_mut(r).copy_from_slice(&row);
-    }
+    let mut out = crate::util::mat::MatU8::zeros(0, 0);
+    ita_softmax_rows_into(x, part, &mut out);
     out
+}
+
+/// Allocation-free full-matrix softmax: every row streams straight
+/// into the caller-owned output matrix (resized in place). §Perf: the
+/// attention cores route through here, so the per-row `Vec` the old
+/// [`ita_softmax_row`] loop allocated is gone from the hot path.
+pub fn ita_softmax_rows_into(
+    x: &crate::util::mat::MatI8,
+    part: usize,
+    out: &mut crate::util::mat::MatU8,
+) {
+    out.reset_for_overwrite(x.rows(), x.cols());
+    for r in 0..x.rows() {
+        ita_softmax_row_into(x.row(r), part, out.row_mut(r));
+    }
 }
 
 /// Dequantize an ITA probability row to f64 (scale 2^−8).
@@ -452,6 +687,69 @@ mod tests {
             assert!(mass > 0.4 && mass < 1.3, "valid={valid} mass={mass}");
             assert!(p[valid..].iter().all(|&v| v == 0), "masked tail must be zero");
         });
+    }
+
+    #[test]
+    fn vectorized_paths_bit_identical_to_scalar_rowstate() {
+        // The issue's softmax parity contract: every available kernel
+        // path produces the same max/Σ/Σ_inv state and the same EN
+        // bytes as the scalar RowState walk — across part widths that
+        // exercise the renormalization path, SIMD-width-straddling row
+        // lengths, and masked/partial rows.
+        use crate::util::gemm::{available_kernel_paths, KernelPath};
+        forall("softmax simd == scalar", 120, |g| {
+            let x = g.i8_vec(1, 200);
+            let part = [1usize, 7, 31, 32, 33, 64][g.usize_in(0, 5)];
+            let valid = match g.usize_in(0, 2) {
+                0 => x.len(),
+                1 => g.usize_in(0, x.len()),
+                _ => g.usize_in(1, x.len()),
+            };
+            let mut want = vec![0u8; x.len()];
+            ita_softmax_row_masked_into_with(&x, part, valid, &mut want, KernelPath::Scalar);
+            for path in available_kernel_paths() {
+                // Row state parity (DA over chunks).
+                let mut st_s = RowState::default();
+                let mut st_p = RowState::default();
+                for chunk in x.chunks(part) {
+                    st_s.accumulate_with(chunk, KernelPath::Scalar);
+                    st_p.accumulate_with(chunk, path);
+                }
+                assert_eq!(st_p.max, st_s.max, "path={path:?}");
+                assert_eq!(st_p.sum, st_s.sum, "path={path:?}");
+                st_s.invert();
+                st_p.invert();
+                assert_eq!(st_p.inv, st_s.inv, "path={path:?}");
+                // EN parity over the full row.
+                let mut en_s = vec![0u8; x.len()];
+                let mut en_p = vec![0u8; x.len()];
+                st_s.normalize_row_into_with(&x, &mut en_s, KernelPath::Scalar);
+                st_p.normalize_row_into_with(&x, &mut en_p, path);
+                assert_eq!(en_p, en_s, "path={path:?}");
+                // End-to-end masked row parity.
+                let mut got = vec![0u8; x.len()];
+                ita_softmax_row_masked_into_with(&x, part, valid, &mut got, path);
+                assert_eq!(got, want, "path={path:?} part={part} valid={valid}");
+            }
+        });
+    }
+
+    #[test]
+    fn into_variants_match_allocating_variants() {
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..20 {
+            let x = rng.vec_i8(97); // straddles the 32-lane width
+            let alloc = ita_softmax_row(&x, 32);
+            let mut into = vec![0u8; x.len()];
+            ita_softmax_row_into(&x, 32, &mut into);
+            assert_eq!(into, alloc);
+            let m = crate::util::mat::MatI8::from_vec(1, x.len(), x.clone());
+            let rows = ita_softmax_rows(&m, 32);
+            assert_eq!(rows.row(0), &alloc[..]);
+            let mut rows_into = crate::util::mat::MatU8::zeros(0, 0);
+            ita_softmax_rows_into(&m, 32, &mut rows_into);
+            assert_eq!(rows_into, rows);
+        }
     }
 
     #[test]

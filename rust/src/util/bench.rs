@@ -137,6 +137,76 @@ impl Bencher {
     }
 }
 
+/// Machine-readable bench results: one `BENCH_<name>.json` file per
+/// bench target with (layer, shape, ns/iter, speedup-vs-reference)
+/// entries, so the perf trajectory is tracked across PRs (CI uploads
+/// these as artifacts; EXPERIMENTS.md quotes them).
+pub struct JsonReport {
+    name: String,
+    entries: Vec<crate::util::json::Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one measured kernel/layer. `speedup_vs_reference` is the
+    /// measured ratio against the retained pre-change oracle (`None`
+    /// for entries with no oracle counterpart).
+    pub fn entry(
+        &mut self,
+        layer: &str,
+        shape: &str,
+        sample: &Sample,
+        speedup_vs_reference: Option<f64>,
+    ) {
+        use crate::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("layer".into(), Json::Str(layer.to_string()));
+        o.insert("shape".into(), Json::Str(shape.to_string()));
+        o.insert("bench".into(), Json::Str(sample.name.clone()));
+        o.insert("ns_per_iter".into(), Json::Num(sample.median * 1e9));
+        o.insert("mean_ns_per_iter".into(), Json::Num(sample.mean * 1e9));
+        if let Some((units, label)) = sample.units {
+            o.insert("units_per_sec".into(), Json::Num(units / sample.median));
+            o.insert("unit".into(), Json::Str(label.to_string()));
+        }
+        match speedup_vs_reference {
+            Some(s) => o.insert("speedup_vs_reference".into(), Json::Num(s)),
+            None => o.insert("speedup_vs_reference".into(), Json::Null),
+        };
+        self.entries.push(Json::Obj(o));
+    }
+
+    fn render(&self) -> String {
+        use crate::util::json::Json;
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("bench".into(), Json::Str(self.name.clone()));
+        top.insert(
+            "kernel_path".into(),
+            Json::Str(crate::util::gemm::active_kernel_path().name().to_string()),
+        );
+        top.insert("quick_mode".into(), Json::Bool(quick_requested()));
+        top.insert("entries".into(), Json::Arr(self.entries.clone()));
+        Json::Obj(top).to_string()
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`, returning the path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+
+    /// Write to `$ITA_BENCH_JSON_DIR` (default: current directory —
+    /// the workspace root under `cargo bench`).
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("ITA_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        self.write_to(std::path::Path::new(&dir))
+    }
+}
+
 /// True when the bench should run in quick mode (smoke testing).
 /// `ITA_BENCH_QUICK=1 cargo bench` or `cargo bench -- --quick`.
 pub fn quick_requested() -> bool {
@@ -166,6 +236,31 @@ mod tests {
         });
         assert!(s.median > 0.0 && s.median < 1e-3);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bencher { sample_target: 1e-4, samples: 3, warmup: 1e-3, results: vec![] };
+        let s = b.bench_throughput("jr", 64.0, "MAC", || {
+            black_box((0..32).sum::<u64>());
+        });
+        let mut report = JsonReport::new("testbench");
+        let sample = s.clone();
+        report.entry("gemm", "4x4x4", &sample, Some(2.5));
+        report.entry("softmax", "256", &sample, None);
+        let dir = std::env::temp_dir();
+        let path = report.write_to(&dir).expect("write report");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(j.get("bench").as_str(), Some("testbench"));
+        assert!(j.get("kernel_path").as_str().is_some());
+        let entries = j.get("entries").as_arr().expect("entries");
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("layer").as_str(), Some("gemm"));
+        assert!(entries[0].get("ns_per_iter").as_f64().unwrap() > 0.0);
+        assert_eq!(entries[0].get("speedup_vs_reference").as_f64(), Some(2.5));
+        assert_eq!(entries[1].get("speedup_vs_reference"), &crate::util::json::Json::Null);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -12,28 +12,48 @@
 //!   the K dimension walked in KC-deep slabs, so the right-operand rows
 //!   touched by a tile stay L1/L2-resident across the whole row block
 //!   (the software analogue of the weight-stationary buffer).
-//! * **MR×NR register micro-tiles** — each A-row slice is reused across
-//!   NR right-hand rows while LLVM vectorizes the inner dot (same
-//!   zip/map/sum shape as [`super::mat::dot_i8_i32`], which
-//!   `target-cpu=native` turns into packed integer MACs).
+//! * **Explicit SIMD micro-kernels with runtime dispatch** — the inner
+//!   dot products run on `core::arch::x86_64` AVX2 (16-lane widening
+//!   `madd_epi16` MACs, one A-row load amortized over NR=4 B-rows)
+//!   selected at runtime by CPUID, with the scalar `dot_widen` kernel
+//!   as the portable fallback. See [`KernelPath`] for the dispatch
+//!   table and the env/feature overrides that force-select a path.
 //! * **Caller-provided scratch and output** — steady-state calls do not
 //!   allocate: the accumulator tile lives in a reusable
 //!   [`GemmScratch`], outputs land in caller-owned matrices resized in
 //!   place, and pre-transposed ("packed") right operands are built once
-//!   per invocation with [`super::mat::Mat::transpose_into`].
-//! * **Fused requant epilogue** — the int8 result is written directly
-//!   from the i32 accumulator tile while it is still cache-hot, instead
-//!   of materializing the full i32 matrix and re-walking it.
+//!   per invocation with [`super::mat::Mat::transpose_into`] (or once
+//!   per *weight set* via `attention::PackedWeights`).
+//! * **Fused, vectorized requant epilogue** — the int8 result is
+//!   written directly from the i32 accumulator tile while it is still
+//!   cache-hot, 8 columns per step on the AVX2 path, instead of
+//!   materializing the full i32 matrix and re-walking it.
 //!
 //! Everything is **bit-identical** to the oracles: i32 accumulation of
-//! exact int products is associative, so any blocking order yields the
-//! same sums, and the epilogue applies the identical
-//! [`RequantParams::apply_biased`] the oracle path applies. Property
-//! tests below (and `tests/kernel_parity.rs`) pin this across ragged
-//! shapes.
+//! exact int products is associative, so any blocking or lane order
+//! yields the same sums, and the epilogue applies the identical
+//! [`RequantParams::apply_biased`] arithmetic in i64. Property tests
+//! below (and `tests/kernel_parity.rs`) pin this across ragged shapes
+//! **and every available dispatch path**.
+//!
+//! # Why widening `madd_epi16`, not `maddubs`
+//!
+//! The classic AVX2 int8 trick — `_mm256_maddubs_epi16(abs(a),
+//! sign(b, a))` for i8×i8, or `maddubs(a, b)` directly for u8×i8 — is
+//! **not** bit-exact on full-range inputs: `sign_epi8` cannot represent
+//! `+128` (so `a < 0, b = −128` products flip sign), and the u8×i8 form
+//! saturates its pairwise i16 sum at `255·127·2 > i16::MAX`. Since this
+//! crate's contract is bit-identity to the scalar oracles on *all*
+//! inputs, both micro-kernels instead widen the 8-bit lanes to i16
+//! (`cvtepi8/cvtepu8`) and use `_mm256_madd_epi16`, which is exact:
+//! every product fits i16×i16→i32 and the pairwise sum cannot saturate.
+//! Still 16 MACs per madd — ~2 such instructions per cycle on any AVX2
+//! core, an order of magnitude over the scalar loop.
 
 use super::mat::{Mat, MatI32, MatI8};
 use crate::ita::requant::RequantParams;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 /// Row-block height: output rows processed per tile.
 pub const MC: usize = 64;
@@ -43,19 +63,168 @@ pub const MC: usize = 64;
 pub const KC: usize = 256;
 /// Column-block width: right-operand rows kept hot per tile.
 pub const NC: usize = 64;
-/// Register micro-tile: MR A-rows × NR B-rows per inner step.
+/// Register micro-tile: MR A-rows × NR B-rows per inner step. NR = 4
+/// is also the SIMD micro-kernel's fan-out (one A-vector load feeds
+/// four B-row MACs).
 const MR: usize = 4;
 const NR: usize = 4;
+
+// --------------------------------------------------------------------
+// Runtime kernel dispatch
+// --------------------------------------------------------------------
+
+/// One entry of the kernel dispatch table. `Scalar` is the portable
+/// pre-change kernel (the PR-1 blocked micro-tile with the
+/// auto-vectorizing `dot_widen` inner loop); `Avx2` is the explicit
+/// `core::arch::x86_64` micro-kernel suite (widening `madd_epi16`
+/// dots + vectorized requant epilogue + softmax lane ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable scalar/auto-vectorized fallback. Always available.
+    Scalar,
+    /// Explicit AVX2 int8/u8 micro-kernels (x86-64 with AVX2 only).
+    Avx2,
+}
+
+impl KernelPath {
+    /// Short stable name (used by `ITA_KERNEL`, bench reports, CI).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Best path this host supports, by CPUID probe (cached by
+/// [`active_kernel_path`]). The `scalar-kernels` cargo feature pins
+/// this to `Scalar` at compile time (the "feature override").
+pub fn detected_kernel_path() -> KernelPath {
+    if cfg!(feature = "scalar-kernels") {
+        return KernelPath::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelPath::Avx2;
+        }
+    }
+    KernelPath::Scalar
+}
+
+/// Every path the current host can execute, scalar first. Parity tests
+/// iterate this so the SIMD kernels are pinned to the oracle wherever
+/// they can actually run.
+pub fn available_kernel_paths() -> Vec<KernelPath> {
+    let mut v = vec![KernelPath::Scalar];
+    if detected_kernel_path() == KernelPath::Avx2 {
+        v.push(KernelPath::Avx2);
+    }
+    v
+}
+
+// Programmatic override (benches/tests): 0 = unset, 1 = scalar,
+// 2 = avx2. Process-global; results are bit-identical across paths, so
+// concurrent readers can never observe a numeric difference.
+static PATH_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static ENV_OVERRIDE: OnceLock<Option<KernelPath>> = OnceLock::new();
+static DETECTED: OnceLock<KernelPath> = OnceLock::new();
+
+/// Force-select the dispatch path for this process (`None` restores
+/// auto-detection). Benches use this to measure scalar-vs-SIMD in one
+/// binary; CI forces the scalar fallback via `ITA_KERNEL=scalar`
+/// instead so the fallback leg cannot rot.
+pub fn set_kernel_path(p: Option<KernelPath>) {
+    let code = match p {
+        None => 0,
+        Some(KernelPath::Scalar) => 1,
+        Some(KernelPath::Avx2) => 2,
+    };
+    PATH_OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+fn parse_env_override() -> Option<KernelPath> {
+    match std::env::var("ITA_KERNEL") {
+        Err(_) => None,
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(KernelPath::Scalar),
+            "avx2" | "simd" => Some(KernelPath::Avx2),
+            other => panic!(
+                "ITA_KERNEL={other:?} not recognized (expected auto|scalar|avx2); \
+                 refusing to guess which kernel path you meant"
+            ),
+        },
+    }
+}
+
+/// A forced path must actually be executable on this host — forcing
+/// AVX2 on a host without it must fail loudly, not fall back silently
+/// (the CI leg that forces a path relies on this).
+fn checked(p: KernelPath) -> KernelPath {
+    if p == KernelPath::Avx2 && *DETECTED.get_or_init(detected_kernel_path) != KernelPath::Avx2 {
+        panic!("kernel path forced to avx2 but this host/build does not support it");
+    }
+    p
+}
+
+/// The dispatch table lookup every kernel entry point performs:
+/// programmatic override > `ITA_KERNEL` env override > CPUID probe.
+pub fn active_kernel_path() -> KernelPath {
+    match PATH_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return checked(KernelPath::Scalar),
+        2 => return checked(KernelPath::Avx2),
+        _ => {}
+    }
+    if let Some(p) = *ENV_OVERRIDE.get_or_init(parse_env_override) {
+        return checked(p);
+    }
+    *DETECTED.get_or_init(detected_kernel_path)
+}
+
+// --------------------------------------------------------------------
+// Micro-kernels
+// --------------------------------------------------------------------
 
 /// Left-operand element: i8 activations or u8 attention probabilities.
 pub trait GemmLhs: Copy + Default {
     fn widen(self) -> i32;
+
+    /// Exact widening dot against one packed i8 row on `path`.
+    fn dot(path: KernelPath, a: &[Self], b: &[i8]) -> i32;
+
+    /// Exact widening dots of one A-row against four packed B-rows,
+    /// **added into** `acc[0..4]` — the SIMD micro-tile primitive (the
+    /// A-row vector loads are shared across the four MACs).
+    fn dot4_into(path: KernelPath, a: &[Self], b: [&[i8]; 4], acc: &mut [i32]);
 }
 
 impl GemmLhs for i8 {
     #[inline(always)]
     fn widen(self) -> i32 {
         self as i32
+    }
+
+    #[inline]
+    fn dot(path: KernelPath, a: &[Self], b: &[i8]) -> i32 {
+        match path {
+            KernelPath::Scalar => dot_widen(a, b),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::dot_i8(a, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => dot_widen(a, b),
+        }
+    }
+
+    #[inline]
+    fn dot4_into(path: KernelPath, a: &[Self], b: [&[i8]; 4], acc: &mut [i32]) {
+        match path {
+            KernelPath::Scalar => dot4_widen(a, b, acc),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::dot4_i8(a, b, acc) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => dot4_widen(a, b, acc),
+        }
     }
 }
 
@@ -64,7 +233,256 @@ impl GemmLhs for u8 {
     fn widen(self) -> i32 {
         self as i32
     }
+
+    #[inline]
+    fn dot(path: KernelPath, a: &[Self], b: &[i8]) -> i32 {
+        match path {
+            KernelPath::Scalar => dot_widen(a, b),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::dot_u8(a, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => dot_widen(a, b),
+        }
+    }
+
+    #[inline]
+    fn dot4_into(path: KernelPath, a: &[Self], b: [&[i8]; 4], acc: &mut [i32]) {
+        match path {
+            KernelPath::Scalar => dot4_widen(a, b, acc),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { avx2::dot4_u8(a, b, acc) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelPath::Avx2 => dot4_widen(a, b, acc),
+        }
+    }
 }
+
+/// Dispatched exact dot product — the row-kernel primitive the decode
+/// path (`TileEngine::linear_row_pret` / `logits_row_cached` /
+/// `av_row_cached`) runs on. Bit-identical to
+/// [`super::mat::dot_i8_i32`] on every path.
+#[inline]
+pub fn dot_dispatch<L: GemmLhs>(path: KernelPath, a: &[L], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    L::dot(path, a, b)
+}
+
+/// [`dot_dispatch`] on the process-active path.
+#[inline]
+pub fn dot_auto<L: GemmLhs>(a: &[L], b: &[i8]) -> i32 {
+    dot_dispatch(active_kernel_path(), a, b)
+}
+
+/// Exact widening dot product — the scalar fallback kernel (the
+/// zip/map/sum shape `target-cpu=native` auto-vectorizes, §Perf).
+#[inline(always)]
+fn dot_widen<L: GemmLhs>(a: &[L], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x.widen() * y as i32).sum()
+}
+
+/// Scalar 1×4 micro-tile (fallback for [`GemmLhs::dot4_into`]).
+#[inline(always)]
+fn dot4_widen<L: GemmLhs>(a: &[L], b: [&[i8]; 4], acc: &mut [i32]) {
+    for (c, bc) in b.iter().enumerate() {
+        acc[c] += dot_widen(a, bc);
+    }
+}
+
+/// Requantize one accumulator row into int8 with a per-column bias —
+/// the fused epilogue body. On the AVX2 path this runs 8 columns per
+/// step in i64 lanes (exactly `apply_biased`'s arithmetic: wrapping
+/// i32 bias add, i64 multiply, round-to-nearest arithmetic shift,
+/// clamp); the scalar path is the literal per-element loop.
+#[inline]
+pub fn requant_row_into(
+    path: KernelPath,
+    rq: RequantParams,
+    acc: &[i32],
+    bias: &[i8],
+    out: &mut [i8],
+) {
+    debug_assert_eq!(acc.len(), bias.len());
+    debug_assert_eq!(acc.len(), out.len());
+    match path {
+        KernelPath::Scalar => requant_row_scalar(rq, acc, bias, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 => unsafe { avx2::requant_row(rq, acc, bias, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelPath::Avx2 => requant_row_scalar(rq, acc, bias, out),
+    }
+}
+
+/// The scalar epilogue loop — the single source both fallback arms of
+/// [`requant_row_into`] route through.
+#[inline]
+fn requant_row_scalar(rq: RequantParams, acc: &[i32], bias: &[i8], out: &mut [i8]) {
+    for ((&a, &b), o) in acc.iter().zip(bias).zip(out.iter_mut()) {
+        *o = rq.apply_biased(a, b);
+    }
+}
+
+/// The AVX2 micro-kernel suite. Every function is bit-identical to its
+/// scalar counterpart (exact i16-widening MACs, wrapping i32/i64 adds
+/// — a commutative group, so lane order is invisible even on
+/// overflow). `unsafe` contract: caller verified AVX2 at runtime
+/// ([`active_kernel_path`] / [`available_kernel_paths`]).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::RequantParams;
+    use std::arch::x86_64::*;
+
+    /// Load 16 i8 and sign-extend to 16 i16 lanes.
+    #[inline(always)]
+    unsafe fn widen16_i8(p: *const i8) -> __m256i {
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// Load 16 u8 and zero-extend to 16 i16 lanes.
+    #[inline(always)]
+    unsafe fn widen16_u8(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// Horizontal wrapping sum of 8 i32 lanes.
+    #[inline(always)]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b0100_1110));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b1011_0001));
+        _mm_cvtsi128_si32(s)
+    }
+
+    macro_rules! dot_impl {
+        ($dot:ident, $dot4:ident, $lhs:ty, $widen:ident) => {
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $dot(a: &[$lhs], b: &[i8]) -> i32 {
+                debug_assert_eq!(a.len(), b.len());
+                let n = a.len();
+                let mut acc = _mm256_setzero_si256();
+                let mut i = 0;
+                while i + 16 <= n {
+                    let av = $widen(a.as_ptr().add(i));
+                    let bv = widen16_i8(b.as_ptr().add(i));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+                    i += 16;
+                }
+                let mut s = hsum_epi32(acc);
+                while i < n {
+                    s = s.wrapping_add(
+                        (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32),
+                    );
+                    i += 1;
+                }
+                s
+            }
+
+            /// One A-row against four B-rows, added into `acc[0..4]`:
+            /// the A vector loads amortize over the 4 MAC streams.
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $dot4(a: &[$lhs], b: [&[i8]; 4], acc: &mut [i32]) {
+                let n = a.len();
+                debug_assert!(acc.len() >= 4);
+                debug_assert!(b.iter().all(|r| r.len() == n));
+                let mut s0 = _mm256_setzero_si256();
+                let mut s1 = _mm256_setzero_si256();
+                let mut s2 = _mm256_setzero_si256();
+                let mut s3 = _mm256_setzero_si256();
+                let mut i = 0;
+                while i + 16 <= n {
+                    let av = $widen(a.as_ptr().add(i));
+                    s0 = _mm256_add_epi32(
+                        s0,
+                        _mm256_madd_epi16(av, widen16_i8(b[0].as_ptr().add(i))),
+                    );
+                    s1 = _mm256_add_epi32(
+                        s1,
+                        _mm256_madd_epi16(av, widen16_i8(b[1].as_ptr().add(i))),
+                    );
+                    s2 = _mm256_add_epi32(
+                        s2,
+                        _mm256_madd_epi16(av, widen16_i8(b[2].as_ptr().add(i))),
+                    );
+                    s3 = _mm256_add_epi32(
+                        s3,
+                        _mm256_madd_epi16(av, widen16_i8(b[3].as_ptr().add(i))),
+                    );
+                    i += 16;
+                }
+                let mut r = [hsum_epi32(s0), hsum_epi32(s1), hsum_epi32(s2), hsum_epi32(s3)];
+                while i < n {
+                    let x = *a.get_unchecked(i) as i32;
+                    for (c, bc) in b.iter().enumerate() {
+                        r[c] = r[c].wrapping_add(x * (*bc.get_unchecked(i) as i32));
+                    }
+                    i += 1;
+                }
+                for c in 0..4 {
+                    acc[c] = acc[c].wrapping_add(r[c]);
+                }
+            }
+        };
+    }
+
+    dot_impl!(dot_i8, dot4_i8, i8, widen16_i8);
+    dot_impl!(dot_u8, dot4_u8, u8, widen16_u8);
+
+    /// Vectorized fused requant epilogue: 8 columns per iteration.
+    /// Mirrors `RequantParams::apply_biased` exactly — the bias add is
+    /// a wrapping i32 add (as the scalar release build performs), the
+    /// multiply/round/shift runs in i64 lanes (`mul_epi32` sign-extends
+    /// the low 32 bits, exact for any i32×u8 product), and the
+    /// arithmetic 64-bit right shift is emulated with
+    /// `srl | (sign_mask << (64 − shift))` since AVX2 lacks
+    /// `srai_epi64`. Shift counts ≥ 64 in `sll`/`srl` yield 0, so the
+    /// `shift == 0` case needs no branch.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn requant_row(rq: RequantParams, acc: &[i32], bias: &[i8], out: &mut [i8]) {
+        debug_assert_eq!(acc.len(), bias.len());
+        debug_assert_eq!(acc.len(), out.len());
+        let n = acc.len();
+        let mult = _mm256_set1_epi64x(rq.mult as i64);
+        let round = if rq.shift == 0 { 0 } else { 1i64 << (rq.shift.min(63) - 1) };
+        let roundv = _mm256_set1_epi64x(round);
+        let srl_cnt = _mm_cvtsi32_si128(rq.shift as i32);
+        let sll_cnt = _mm_cvtsi32_si128(64 - rq.shift as i32);
+        let lo = _mm256_set1_epi64x(i8::MIN as i64);
+        let hi = _mm256_set1_epi64x(i8::MAX as i64);
+        let zero = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let b = _mm256_cvtepi8_epi32(_mm_loadl_epi64(bias.as_ptr().add(i) as *const __m128i));
+            let x = _mm256_add_epi32(a, b); // wrapping, as scalar release
+            let halves = [
+                _mm256_cvtepi32_epi64(_mm256_castsi256_si128(x)),
+                _mm256_cvtepi32_epi64(_mm256_extracti128_si256(x, 1)),
+            ];
+            for (h, xh) in halves.into_iter().enumerate() {
+                let prod = _mm256_mul_epi32(xh, mult);
+                let r = _mm256_add_epi64(prod, roundv);
+                let srl = _mm256_srl_epi64(r, srl_cnt);
+                let sign = _mm256_cmpgt_epi64(zero, r);
+                let sra = _mm256_or_si256(srl, _mm256_sll_epi64(sign, sll_cnt));
+                let c = _mm256_blendv_epi8(sra, hi, _mm256_cmpgt_epi64(sra, hi));
+                let c = _mm256_blendv_epi8(c, lo, _mm256_cmpgt_epi64(lo, c));
+                let mut lanes = [0i64; 4];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, c);
+                for (j, &v) in lanes.iter().enumerate() {
+                    *out.get_unchecked_mut(i + 4 * h + j) = v as i8;
+                }
+            }
+            i += 8;
+        }
+        for j in i..n {
+            out[j] = rq.apply_biased(acc[j], bias[j]);
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Blocked driver
+// --------------------------------------------------------------------
 
 /// Reusable scratch arena: owns the i32 accumulator tile so that
 /// steady-state GEMM calls perform no allocation. One per engine (or
@@ -75,18 +493,13 @@ pub struct GemmScratch {
     acc: Vec<i32>,
 }
 
-/// Exact widening dot product (auto-vectorizing shape, §Perf).
-#[inline(always)]
-fn dot_widen<L: GemmLhs>(a: &[L], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(&x, &y)| x.widen() * y as i32).sum()
-}
-
 /// Blocked GEMM driver against a **pre-transposed** right operand
 /// (`bt` holds Bᵀ: one row per output column). Calls `epilogue` once
 /// per finished MC×NC tile with `(row0, col0, rows, cols, acc_tile)`;
-/// `acc_tile` is row-major with stride `cols`.
+/// `acc_tile` is row-major with stride `cols`. The inner micro-tile
+/// runs on the selected [`KernelPath`].
 fn gemm_blocked<L: GemmLhs>(
+    path: KernelPath,
     a: &Mat<L>,
     bt: &MatI8,
     scratch: &mut GemmScratch,
@@ -116,9 +529,19 @@ fn gemm_blocked<L: GemmLhs>(
                         for r in 0..mr {
                             let arow = &a.row(ic + ir + r)[pc..pc + kcb];
                             let base = (ir + r) * ncb + jr;
-                            for c in 0..nr {
-                                let brow = &bt.row(jc + jr + c)[pc..pc + kcb];
-                                tile[base + c] += dot_widen(arow, brow);
+                            if nr == NR {
+                                let b = [
+                                    &bt.row(jc + jr)[pc..pc + kcb],
+                                    &bt.row(jc + jr + 1)[pc..pc + kcb],
+                                    &bt.row(jc + jr + 2)[pc..pc + kcb],
+                                    &bt.row(jc + jr + 3)[pc..pc + kcb],
+                                ];
+                                L::dot4_into(path, arow, b, &mut tile[base..base + NR]);
+                            } else {
+                                for c in 0..nr {
+                                    let brow = &bt.row(jc + jr + c)[pc..pc + kcb];
+                                    tile[base + c] += L::dot(path, arow, brow);
+                                }
                             }
                         }
                         jr += NR;
@@ -131,9 +554,11 @@ fn gemm_blocked<L: GemmLhs>(
     }
 }
 
-/// Blocked i32 GEMM against a pre-transposed right operand, writing the
-/// full accumulator matrix into caller-owned `out` (resized in place).
-pub fn gemm_i32_pret<L: GemmLhs>(
+/// [`gemm_i32_pret`] with an explicit kernel path (parity tests and
+/// the bench's scalar-vs-SIMD comparison; normal callers use the
+/// dispatched variant).
+pub fn gemm_i32_pret_with<L: GemmLhs>(
+    path: KernelPath,
     a: &Mat<L>,
     bt: &MatI8,
     scratch: &mut GemmScratch,
@@ -141,19 +566,28 @@ pub fn gemm_i32_pret<L: GemmLhs>(
 ) {
     // The tile epilogues below cover every output element.
     out.reset_for_overwrite(a.rows(), bt.rows());
-    gemm_blocked(a, bt, scratch, |ic, jc, mcb, ncb, tile| {
+    gemm_blocked(path, a, bt, scratch, |ic, jc, mcb, ncb, tile| {
         for r in 0..mcb {
             out.row_mut(ic + r)[jc..jc + ncb].copy_from_slice(&tile[r * ncb..(r + 1) * ncb]);
         }
     });
 }
 
-/// Blocked GEMM with the **fused requant epilogue**: int8 output is
-/// produced directly from the cache-hot i32 accumulator tile with the
-/// per-output-column bias, exactly as
-/// `requant_mat(&matmul(a, b), bias, rq)` would — without ever
-/// materializing the i32 matrix. `out` is resized in place.
-pub fn gemm_requant_pret<L: GemmLhs>(
+/// Blocked i32 GEMM against a pre-transposed right operand, writing the
+/// full accumulator matrix into caller-owned `out` (resized in place).
+/// Runs on the active dispatch path.
+pub fn gemm_i32_pret<L: GemmLhs>(
+    a: &Mat<L>,
+    bt: &MatI8,
+    scratch: &mut GemmScratch,
+    out: &mut MatI32,
+) {
+    gemm_i32_pret_with(active_kernel_path(), a, bt, scratch, out)
+}
+
+/// [`gemm_requant_pret`] with an explicit kernel path.
+pub fn gemm_requant_pret_with<L: GemmLhs>(
+    path: KernelPath,
     a: &Mat<L>,
     bt: &MatI8,
     bias: &[i8],
@@ -164,15 +598,34 @@ pub fn gemm_requant_pret<L: GemmLhs>(
     assert_eq!(bias.len(), bt.rows(), "one bias per output column");
     // The tile epilogues below cover every output element.
     out.reset_for_overwrite(a.rows(), bt.rows());
-    gemm_blocked(a, bt, scratch, |ic, jc, mcb, ncb, tile| {
+    gemm_blocked(path, a, bt, scratch, |ic, jc, mcb, ncb, tile| {
         for r in 0..mcb {
-            let orow = &mut out.row_mut(ic + r)[jc..jc + ncb];
-            let trow = &tile[r * ncb..(r + 1) * ncb];
-            for c in 0..ncb {
-                orow[c] = rq.apply_biased(trow[c], bias[jc + c]);
-            }
+            requant_row_into(
+                path,
+                rq,
+                &tile[r * ncb..(r + 1) * ncb],
+                &bias[jc..jc + ncb],
+                &mut out.row_mut(ic + r)[jc..jc + ncb],
+            );
         }
     });
+}
+
+/// Blocked GEMM with the **fused requant epilogue**: int8 output is
+/// produced directly from the cache-hot i32 accumulator tile with the
+/// per-output-column bias, exactly as
+/// `requant_mat(&matmul(a, b), bias, rq)` would — without ever
+/// materializing the i32 matrix. `out` is resized in place. Runs on
+/// the active dispatch path.
+pub fn gemm_requant_pret<L: GemmLhs>(
+    a: &Mat<L>,
+    bt: &MatI8,
+    bias: &[i8],
+    rq: RequantParams,
+    scratch: &mut GemmScratch,
+    out: &mut MatI8,
+) {
+    gemm_requant_pret_with(active_kernel_path(), a, bt, bias, rq, scratch, out)
 }
 
 #[cfg(test)]
@@ -188,50 +641,56 @@ mod tests {
     }
 
     /// Ragged shapes around the block boundaries plus the degenerate
-    /// row/column vectors the issue calls out.
+    /// row/column vectors and empty-K cases the issue calls out.
     fn ragged_shape(g: &mut crate::util::prop::Gen) -> (usize, usize, usize) {
-        match g.usize_in(0, 4) {
+        match g.usize_in(0, 5) {
             0 => (1, g.usize_in(1, 2 * NC + 3), g.usize_in(1, 40)), // 1×N
             1 => (g.usize_in(1, 2 * MC + 3), 1, g.usize_in(1, 40)), // N×1
             2 => (MC + 1, NC + 1, KC + 1), // every block ragged by one
+            3 => (g.usize_in(1, 20), g.usize_in(1, 20), 0), // K = 0
             _ => (g.usize_in(1, 90), g.usize_in(1, 90), g.usize_in(1, 70)),
         }
     }
 
     #[test]
-    fn blocked_i8_bit_identical_to_oracle() {
-        forall("gemm i8 == dot_i8_i32 oracle", 40, |g| {
+    fn blocked_i8_bit_identical_to_oracle_on_every_path() {
+        forall("gemm i8 == dot_i8_i32 oracle (all paths)", 40, |g| {
             let (m, n, k) = ragged_shape(g);
             let mut rng = SplitMix64::new(g.u64());
             let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
             let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+            let want = matmul_i8_pret(&a, &bt);
             let mut scratch = GemmScratch::default();
             let mut got = MatI32::zeros(0, 0);
-            gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
-            assert_eq!(got, matmul_i8_pret(&a, &bt), "m={m} n={n} k={k}");
+            for path in available_kernel_paths() {
+                gemm_i32_pret_with(path, &a, &bt, &mut scratch, &mut got);
+                assert_eq!(got, want, "path={path:?} m={m} n={n} k={k}");
+            }
         });
     }
 
     #[test]
-    fn fused_requant_bit_identical_to_two_pass_oracle() {
-        forall("gemm+requant == matmul;requant_mat", 40, |g| {
+    fn fused_requant_bit_identical_to_two_pass_oracle_on_every_path() {
+        forall("gemm+requant == matmul;requant_mat (all paths)", 40, |g| {
             let (m, n, k) = ragged_shape(g);
             let p = rq(g);
             let mut rng = SplitMix64::new(g.u64());
             let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
             let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
             let bias: Vec<i8> = rng.vec_i8(n);
+            let want = requant_mat(&matmul_i8_pret(&a, &bt), &bias, p);
             let mut scratch = GemmScratch::default();
             let mut got = MatI8::zeros(0, 0);
-            gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut got);
-            let want = requant_mat(&matmul_i8_pret(&a, &bt), &bias, p);
-            assert_eq!(got, want, "m={m} n={n} k={k} rq={p:?}");
+            for path in available_kernel_paths() {
+                gemm_requant_pret_with(path, &a, &bt, &bias, p, &mut scratch, &mut got);
+                assert_eq!(got, want, "path={path:?} m={m} n={n} k={k} rq={p:?}");
+            }
         });
     }
 
     #[test]
-    fn blocked_u8_i8_bit_identical_to_oracle() {
-        forall("gemm u8·i8 == matmul_u8_i8 oracle", 40, |g| {
+    fn blocked_u8_i8_bit_identical_to_oracle_on_every_path() {
+        forall("gemm u8·i8 == matmul_u8_i8 oracle (all paths)", 40, |g| {
             let (m, n, k) = ragged_shape(g);
             let p = rq(g);
             let mut rng = SplitMix64::new(g.u64());
@@ -239,29 +698,89 @@ mod tests {
             let b = MatI8::from_fn(k, n, |_, _| rng.next_i8());
             let bias: Vec<i8> = rng.vec_i8(n);
             let bt = b.transpose(); // the once-packed Vᵀ the engine reuses
-            let mut scratch = GemmScratch::default();
-            let mut got_acc = MatI32::zeros(0, 0);
-            gemm_i32_pret(&a, &bt, &mut scratch, &mut got_acc);
             let want_acc = matmul_u8_i8(&a, &b);
-            assert_eq!(got_acc, want_acc, "m={m} n={n} k={k}");
-            let mut got = MatI8::zeros(0, 0);
-            gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut got);
-            assert_eq!(got, requant_mat(&want_acc, &bias, p));
+            let want = requant_mat(&want_acc, &bias, p);
+            let mut scratch = GemmScratch::default();
+            for path in available_kernel_paths() {
+                let mut got_acc = MatI32::zeros(0, 0);
+                gemm_i32_pret_with(path, &a, &bt, &mut scratch, &mut got_acc);
+                assert_eq!(got_acc, want_acc, "path={path:?} m={m} n={n} k={k}");
+                let mut got = MatI8::zeros(0, 0);
+                gemm_requant_pret_with(path, &a, &bt, &bias, p, &mut scratch, &mut got);
+                assert_eq!(got, want, "path={path:?}");
+            }
         });
     }
 
     #[test]
-    fn k_spanning_multiple_depth_slabs_is_exact() {
+    fn dispatched_dot_matches_oracle_on_every_path() {
+        forall("dot_dispatch == dot_i8_i32", 60, |g| {
+            // Lengths straddling the 16-lane SIMD width, incl. 0.
+            let n = match g.usize_in(0, 3) {
+                0 => g.usize_in(0, 15),
+                1 => 16,
+                _ => g.usize_in(17, 200),
+            };
+            let mut rng = SplitMix64::new(g.u64());
+            let a = rng.vec_i8(n);
+            let b = rng.vec_i8(n);
+            let au: Vec<u8> = a.iter().map(|&x| x as u8).collect();
+            let want = crate::util::mat::dot_i8_i32(&a, &b);
+            let want_u: i32 = au.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            for path in available_kernel_paths() {
+                assert_eq!(dot_dispatch(path, &a, &b), want, "i8 path={path:?} n={n}");
+                assert_eq!(dot_dispatch(path, &au, &b), want_u, "u8 path={path:?} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn vectorized_requant_epilogue_matches_apply_biased() {
+        // Direct row-level pin of the SIMD epilogue, including the
+        // shift = 0 branchless case, large shifts, and extreme accs.
+        forall("requant_row_into == apply_biased", 80, |g| {
+            let n = g.usize_in(0, 40);
+            let p = RequantParams {
+                mult: g.i8_in(1, 127) as u8,
+                shift: [0u8, 1, 7, 14, 24, 31][g.usize_in(0, 5)],
+            };
+            let mut rng = SplitMix64::new(g.u64());
+            // Keep 128 clear of the i32 edges: apply_biased's bias add
+            // is a debug-checked i32 add and the oracle loop must not
+            // trap on test data the kernels would simply wrap.
+            let acc: Vec<i32> = (0..n)
+                .map(|_| match rng.next_below(4) {
+                    0 => i32::MAX - 128 - rng.next_below(1000) as i32,
+                    1 => i32::MIN + 128 + rng.next_below(1000) as i32,
+                    _ => rng.next_u64() as i32 >> rng.next_below(16),
+                })
+                .collect();
+            let bias = rng.vec_i8(n);
+            let want: Vec<i8> =
+                acc.iter().zip(&bias).map(|(&a, &b)| p.apply_biased(a, b)).collect();
+            for path in available_kernel_paths() {
+                let mut got = vec![0i8; n];
+                requant_row_into(path, p, &acc, &bias, &mut got);
+                assert_eq!(got, want, "path={path:?} rq={p:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn k_spanning_multiple_depth_slabs_is_exact_on_every_path() {
         // K > KC forces the two-slab accumulation path; the D=24-bit
         // guard upstream allows K up to 511, so 300 is a legal depth.
         let mut rng = SplitMix64::new(7);
         let (m, n, k) = (5, 6, KC + 44);
         let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
         let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+        let want = matmul_i8_pret(&a, &bt);
         let mut scratch = GemmScratch::default();
-        let mut got = MatI32::zeros(0, 0);
-        gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
-        assert_eq!(got, matmul_i8_pret(&a, &bt));
+        for path in available_kernel_paths() {
+            let mut got = MatI32::zeros(0, 0);
+            gemm_i32_pret_with(path, &a, &bt, &mut scratch, &mut got);
+            assert_eq!(got, want, "path={path:?}");
+        }
     }
 
     #[test]
@@ -292,11 +811,33 @@ mod tests {
         let bias = vec![10i8, -20, 30];
         let p = RequantParams { mult: 1, shift: 0 };
         let mut scratch = GemmScratch::default();
-        let mut out = MatI8::zeros(0, 0);
-        gemm_requant_pret(&a, &bt, &bias, p, &mut scratch, &mut out);
-        assert_eq!(out.shape(), (2, 3));
-        for r in 0..2 {
-            assert_eq!(out.row(r), &[10, -20, 30]);
+        for path in available_kernel_paths() {
+            let mut out = MatI8::zeros(0, 0);
+            gemm_requant_pret_with(path, &a, &bt, &bias, p, &mut scratch, &mut out);
+            assert_eq!(out.shape(), (2, 3), "path={path:?}");
+            for r in 0..2 {
+                assert_eq!(out.row(r), &[10, -20, 30], "path={path:?}");
+            }
         }
+    }
+
+    #[test]
+    fn programmatic_override_selects_and_restores() {
+        // set_kernel_path forces the dispatch table entry; None
+        // restores env-or-detected selection. (Bit-identity across
+        // paths means a concurrently running test can never observe a
+        // numeric difference from this temporary override.) The
+        // restored expectation honors ITA_KERNEL so this test also
+        // passes on the CI scalar-forced leg.
+        set_kernel_path(Some(KernelPath::Scalar));
+        assert_eq!(active_kernel_path(), KernelPath::Scalar);
+        set_kernel_path(None);
+        let expect = match std::env::var("ITA_KERNEL").as_deref() {
+            Ok("scalar") => KernelPath::Scalar,
+            Ok("avx2") | Ok("simd") => KernelPath::Avx2,
+            _ => detected_kernel_path(),
+        };
+        assert_eq!(active_kernel_path(), expect);
+        assert!(available_kernel_paths().contains(&active_kernel_path()));
     }
 }

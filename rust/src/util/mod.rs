@@ -6,14 +6,16 @@
 //! for cross-layer tests), matrices ([`mat`]), statistics ([`stats`]),
 //! JSON ([`json`]), table/CSV rendering ([`table`]), property testing
 //! ([`prop`]), a micro-benchmark harness ([`bench`]), anyhow-style
-//! error plumbing ([`error`]) and the cache-blocked integer GEMM
-//! kernels ([`gemm`]) behind the hot compute path.
+//! error plumbing ([`error`]), the SIMD-dispatched cache-blocked
+//! integer GEMM kernels ([`gemm`]) behind the hot compute path, and
+//! the persistent worker pool ([`pool`]) the fan-out paths run on.
 
 pub mod bench;
 pub mod error;
 pub mod gemm;
 pub mod json;
 pub mod mat;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

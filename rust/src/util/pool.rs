@@ -1,0 +1,387 @@
+//! Persistent worker pool — replaces the per-batch
+//! `std::thread::scope` spawns on the serving hot paths.
+//!
+//! PR-1/PR-2 fanned work out (attention heads, coordinator batch
+//! items) with scoped threads, paying a thread spawn + join per batch
+//! in steady state. This pool spawns its threads **once** and feeds
+//! them through a channel-style injector; a batch fan-out is then one
+//! enqueue + condvar round trip.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::run`] takes a vector of boxed closures that may
+//! **borrow** caller stack data ([`Task<'a>`]), executes them across
+//! the pool, and blocks until every task finished. Three properties
+//! make this sound and deadlock-free:
+//!
+//! * **Blocking scope**: `run` does not return until all of its tasks
+//!   completed (panicking tasks included — every execution is wrapped
+//!   in `catch_unwind` and counted). The lifetime erasure to
+//!   `'static` below is justified by exactly this guarantee: no task,
+//!   and no borrow it captured, can outlive the `run` call.
+//! * **Caller participation**: the submitting thread drains its own
+//!   scope queue alongside the workers. Even with zero pool threads —
+//!   or with every pool thread blocked inside a *nested* `run` — the
+//!   caller itself makes progress, so nested fan-out (a coordinator
+//!   batch item whose executor fans out per head) cannot deadlock.
+//! * **Deterministic results**: tasks write into caller-owned slots,
+//!   so placement (which thread ran which task) is invisible; the
+//!   tests pin output equality against serial execution.
+//!
+//! # Shutdown
+//!
+//! [`WorkerPool::shutdown`] (also invoked by `Drop`) closes the
+//! injector, lets workers finish any advertised scopes, and joins all
+//! threads — a drained shutdown, never an abort. The process-wide
+//! [`WorkerPool::global`] pool lives for the process and is sized to
+//! the host parallelism.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One unit of pool work. May borrow data outliving the `run` call
+/// that submits it (enforced by `run`'s blocking contract).
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared state of one `run` invocation: its task queue and the
+/// completion barrier.
+struct ScopeState {
+    queue: Mutex<VecDeque<StaticTask>>,
+    /// Tasks not yet *completed* (queued or running).
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeState {
+    fn new(tasks: VecDeque<StaticTask>) -> Self {
+        let n = tasks.len();
+        Self {
+            queue: Mutex::new(tasks),
+            pending: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Pop-and-execute until the scope queue is empty. Panics are
+    /// contained (recorded + re-raised by the owning `run`).
+    fn drain(&self) {
+        loop {
+            let task = self.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => self.execute(t),
+                None => return,
+            }
+        }
+    }
+
+    fn execute(&self, task: StaticTask) {
+        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+            self.panicked.store(true, Ordering::Release);
+        }
+        let mut p = self.pending.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait_all(&self) {
+        let mut p = self.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.done.wait(p).unwrap();
+        }
+    }
+}
+
+/// The injector the workers block on: a queue of scope handles plus
+/// the shutdown flag.
+struct Injector {
+    queue: Mutex<InjectorQueue>,
+    available: Condvar,
+}
+
+struct InjectorQueue {
+    scopes: VecDeque<Arc<ScopeState>>,
+    shutdown: bool,
+}
+
+impl Injector {
+    fn advertise(&self, scope: &Arc<ScopeState>, copies: usize) {
+        let mut q = self.queue.lock().unwrap();
+        for _ in 0..copies {
+            q.scopes.push_back(scope.clone());
+        }
+        drop(q);
+        self.available.notify_all();
+    }
+
+    /// Worker side: next scope handle, or `None` once shut down and
+    /// drained.
+    fn next(&self) -> Option<Arc<ScopeState>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(s) = q.scopes.pop_front() {
+                return Some(s);
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = self.available.wait(q).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.queue.lock().unwrap().shutdown = true;
+        self.available.notify_all();
+    }
+}
+
+/// A fixed set of persistent worker threads executing [`Task`] batches.
+pub struct WorkerPool {
+    injector: Arc<Injector>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` named workers (0 is legal: every `run` then
+    /// executes entirely on the calling thread).
+    pub fn new(threads: usize, name: &str) -> Self {
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(InjectorQueue { scopes: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let inj = injector.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(scope) = inj.next() {
+                            scope.drain();
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { injector, handles: Mutex::new(handles), threads }
+    }
+
+    /// The process-wide pool, spawned once, sized to the host
+    /// parallelism. All steady-state fan-out (attention heads,
+    /// coordinator batches) runs here — no per-batch thread spawns.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            WorkerPool::new(n, "ita-pool")
+        })
+    }
+
+    /// Worker thread count (the caller participates too, so up to
+    /// `threads + 1` tasks of one scope progress concurrently).
+    pub fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `tasks` across the pool (and this thread), returning
+    /// when **all** completed. If any task panicked, re-panics after
+    /// the whole scope finished — partial effects of the surviving
+    /// tasks are still visible, matching `thread::scope` join
+    /// semantics.
+    pub fn run<'a>(&self, tasks: Vec<Task<'a>>) {
+        match tasks.len() {
+            0 => return,
+            1 => {
+                // Singleton fast path: no handle traffic, direct call
+                // (panic propagates natively).
+                for t in tasks {
+                    t();
+                }
+                return;
+            }
+            _ => {}
+        }
+        let n = tasks.len();
+        // SAFETY: the tasks are erased to 'static but this function
+        // does not return until `pending == 0`, i.e. until every task
+        // has been popped AND finished executing (panics are caught
+        // and counted). After that point the scope queue is empty, so
+        // the Arc a worker may still briefly hold contains no borrowed
+        // data. Hence no task — and no borrow it captured — outlives
+        // the true lifetime 'a of this call.
+        let tasks: VecDeque<StaticTask> = tasks
+            .into_iter()
+            .map(|t| unsafe { std::mem::transmute::<Task<'a>, StaticTask>(t) })
+            .collect();
+        let scope = Arc::new(ScopeState::new(tasks));
+        // One handle per task, capped at the worker count — workers
+        // that arrive after the queue drained just drop the handle.
+        self.injector.advertise(&scope, (n - 1).min(self.threads));
+        scope.drain();
+        scope.wait_all();
+        if scope.panicked.load(Ordering::Acquire) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Drained shutdown: close the injector, let workers finish any
+    /// advertised scopes, join every thread. Idempotent.
+    pub fn shutdown(&self) {
+        self.injector.close();
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_with_borrowed_slots() {
+        let pool = WorkerPool::new(3, "t-basic");
+        let n = 64;
+        let mut slots = vec![0usize; n];
+        let tasks: Vec<Task> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| Box::new(move || *s = i * i) as Task)
+            .collect();
+        pool.run(tasks);
+        for (i, &s) in slots.iter().enumerate() {
+            assert_eq!(s, i * i);
+        }
+    }
+
+    #[test]
+    fn zero_thread_pool_executes_on_caller() {
+        // Caller participation alone must complete the scope.
+        let pool = WorkerPool::new(0, "t-zero");
+        let mut hits = vec![false; 8];
+        let me = std::thread::current().id();
+        let ran_on: Vec<_> = hits
+            .iter_mut()
+            .map(|h| {
+                Box::new(move || {
+                    *h = true;
+                    assert_eq!(std::thread::current().id(), me);
+                }) as Task
+            })
+            .collect();
+        pool.run(ran_on);
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        // Saturate the pool with outer tasks that each fan out again:
+        // nested scopes progress because their submitters drain them.
+        let pool = Arc::new(WorkerPool::new(2, "t-nested"));
+        let total = Arc::new(AtomicUsize::new(0));
+        let outer: Vec<Task> = (0..8)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                Box::new(move || {
+                    let inner: Vec<Task> = (0..8)
+                        .map(|_| {
+                            let total = total.clone();
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            }) as Task
+                        })
+                        .collect();
+                    pool.run(inner);
+                }) as Task
+            })
+            .collect();
+        pool.run(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn panic_propagates_after_scope_completes() {
+        let pool = WorkerPool::new(2, "t-panic");
+        let survivors = Arc::new(AtomicUsize::new(0));
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task> = (0..6)
+                .map(|i| {
+                    let survivors = survivors.clone();
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("boom");
+                        }
+                        survivors.fetch_add(1, Ordering::Relaxed);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(result.is_err(), "run must re-panic");
+        // Every non-panicking task still ran to completion first.
+        assert_eq!(survivors.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn shutdown_drains_and_joins() {
+        let pool = WorkerPool::new(3, "t-shutdown");
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let tasks: Vec<Task> = (0..16)
+                .map(|_| {
+                    let count = count.clone();
+                    Box::new(move || {
+                        count.fetch_add(1, Ordering::Relaxed);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+        // After shutdown, run still completes via caller participation.
+        let mut x = 0;
+        pool.run(vec![Box::new(|| x = 1) as Task, Box::new(|| ()) as Task]);
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn results_independent_of_placement() {
+        // Same work through pools of different widths → same slots.
+        let mut reference = vec![0u64; 40];
+        for (i, s) in reference.iter_mut().enumerate() {
+            *s = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        }
+        for threads in [0, 1, 4] {
+            let pool = WorkerPool::new(threads, "t-det");
+            let mut slots = vec![0u64; 40];
+            let tasks: Vec<Task> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| {
+                    Box::new(move || *s = (i as u64).wrapping_mul(0x9E3779B97F4A7C15)) as Task
+                })
+                .collect();
+            pool.run(tasks);
+            assert_eq!(slots, reference, "threads={threads}");
+        }
+    }
+}

@@ -2,11 +2,16 @@
 //! after cache warm-up, a decode step performs **no heap allocation**
 //! (scratch rows and the logit/probability buffers are sized to the
 //! session capacity at construction; `Vec::resize` within capacity
-//! never reallocates).
+//! never reallocates) — and a bounded-allocation acceptance for the
+//! full batch path: a pooled `AttentionExecutor::run` allocates only
+//! its returned outputs plus a constant amount of fan-out plumbing,
+//! the same count on every steady-state call (no per-call growth, no
+//! thread-spawn allocations).
 //!
 //! This file holds exactly ONE test on purpose: the counting global
 //! allocator is process-wide, and a sibling test allocating
-//! concurrently would pollute the counter.
+//! concurrently would pollute the counter — both measurements run
+//! sequentially inside the single test below.
 
 use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, ModelDims};
@@ -74,4 +79,37 @@ fn decode_steps_do_not_allocate_after_warmup() {
         fresh.step_into(x.row(r), &mut want);
     }
     assert_eq!(out, want);
+
+    // ---- Full AttentionExecutor::run batch (pooled heads) -----------
+    // run() must allocate, necessarily: it returns fresh output and
+    // attention matrices, and the pool fan-out boxes one closure per
+    // head. The steady-state contract is that this count is CONSTANT —
+    // identical on every call after warm-up (engine scratch arenas and
+    // pool plumbing at capacity; no per-call growth, no thread spawns)
+    // — and small.
+    let mut ex = ita::attention::AttentionExecutor::new(ItaConfig::tiny(), d, 3);
+    // Warm-up: global pool threads spawn, scratch arenas and the pool
+    // injector reach steady-state capacity.
+    let warm = ex.run(&x);
+    let _ = ex.run(&x);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let r1 = ex.run(&x);
+    let mid = ALLOCS.load(Ordering::SeqCst);
+    let r2 = ex.run(&x);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    // Drop the results OUTSIDE the measured windows (frees are not
+    // counted, but keeping them alive keeps the windows clean).
+    assert_eq!(r1.out, warm.out);
+    assert_eq!(r2.out, warm.out);
+    let (run1, run2) = (mid - before, after - mid);
+    assert_eq!(
+        run1, run2,
+        "steady-state run() alloc count must not vary call to call ({run1} vs {run2})"
+    );
+    assert!(
+        run1 <= 120,
+        "run() allocated {run1} times — outputs + fan-out plumbing should stay <= 120; \
+         did a per-call pack or spawn sneak back into the hot path?"
+    );
 }

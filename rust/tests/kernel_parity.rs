@@ -1,8 +1,11 @@
-//! Kernel-parity contract for the blocked GEMM rework: every new-path
-//! output is **bit-identical** to the retained pre-change oracles
-//! (`dot_i8_i32`-based matmuls + `requant_mat`), across ragged shapes,
-//! and the multi-threaded execution paths are deterministic and equal
-//! to the serial ones — output and merged `Activity` alike.
+//! Kernel-parity contract for the blocked GEMM rework and the SIMD
+//! dispatch rework on top of it: every new-path output is
+//! **bit-identical** to the retained pre-change oracles
+//! (`dot_i8_i32`-based matmuls + `requant_mat`), across ragged shapes
+//! **and every forced kernel-path selection** (scalar fallback, AVX2
+//! when the host has it), and the pooled execution paths are
+//! deterministic and equal to the serial ones — output and merged
+//! `Activity` alike.
 
 use ita::attention::{
     gen_input, run_attention, run_attention_reference, AttentionExecutor, ModelDims,
@@ -10,7 +13,10 @@ use ita::attention::{
 use ita::ita::datapath::TileEngine;
 use ita::ita::requant::{requant_mat, RequantParams};
 use ita::ita::ItaConfig;
-use ita::util::gemm::{gemm_i32_pret, gemm_requant_pret, GemmScratch, KC, MC, NC};
+use ita::util::gemm::{
+    available_kernel_paths, gemm_i32_pret, gemm_i32_pret_with, gemm_requant_pret,
+    set_kernel_path, GemmScratch, KC, MC, NC,
+};
 use ita::util::mat::{matmul_i8_pret, matmul_u8_i8, MatI32, MatI8, MatU8};
 use ita::util::prop::forall;
 use ita::util::rng::SplitMix64;
@@ -18,10 +24,11 @@ use ita::util::rng::SplitMix64;
 #[test]
 fn gemm_matches_oracle_on_block_boundary_shapes() {
     // Deterministic sweep of the shapes where blocking bugs live:
-    // exact multiples of the block sizes, one off either side, and the
-    // degenerate row/column vectors.
+    // exact multiples of the block sizes, one off either side, the
+    // degenerate row/column vectors, and K = 0 — on EVERY kernel path
+    // this host can execute (scalar fallback + SIMD).
     let edges = [1, 2, MC - 1, MC, MC + 1, NC + 1, 2 * NC + 3];
-    let depths = [1, 2, 63, 64, 65, KC - 1, KC, KC + 1, KC + 100];
+    let depths = [0, 1, 2, 15, 16, 17, 63, 64, 65, KC - 1, KC, KC + 1, KC + 100];
     let mut rng = SplitMix64::new(0xB10C);
     let mut scratch = GemmScratch::default();
     let mut got = MatI32::zeros(0, 0);
@@ -30,10 +37,58 @@ fn gemm_matches_oracle_on_block_boundary_shapes() {
             let n = edges[(m + k) % edges.len()];
             let a = MatI8::from_fn(m, k, |_, _| rng.next_i8());
             let bt = MatI8::from_fn(n, k, |_, _| rng.next_i8());
+            let want = matmul_i8_pret(&a, &bt);
             gemm_i32_pret(&a, &bt, &mut scratch, &mut got);
-            assert_eq!(got, matmul_i8_pret(&a, &bt), "m={m} n={n} k={k}");
+            assert_eq!(got, want, "dispatched m={m} n={n} k={k}");
+            for path in available_kernel_paths() {
+                gemm_i32_pret_with(path, &a, &bt, &mut scratch, &mut got);
+                assert_eq!(got, want, "path={path:?} m={m} n={n} k={k}");
+            }
         }
     }
+}
+
+#[test]
+fn full_pipeline_bit_identical_across_forced_kernel_paths() {
+    // Force each executable dispatch path process-wide and run the
+    // whole attention pipeline (pooled heads, packed weights, fused
+    // cores): outputs and Activity must equal the naive oracle and
+    // each other bit for bit. This is the test the CI scalar-forced
+    // leg exists for — the fallback can never rot unnoticed.
+    let dims = ModelDims { s: 33, e: 48, p: 17, h: 3 };
+    let cfg = ItaConfig::tiny();
+    let x = gen_input(91, &dims);
+    let mut ex = AttentionExecutor::new(cfg, dims, 90);
+    let mut oracle_engine = TileEngine::new(cfg);
+    let oracle = run_attention_reference(&mut oracle_engine, &x, &ex.weights, &ex.requants);
+
+    let mut causal_ref = None;
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+        let got = ex.run(&x);
+        assert_eq!(got.out, oracle.out, "path={path:?}");
+        assert_eq!(got.attn, oracle.attn, "path={path:?}");
+        // Causal + decode: pin every forced path to the first one
+        // (scalar comes first in available_kernel_paths()).
+        let causal = ex.run_causal(&x);
+        let mut de = ita::attention::decode::DecodeEngine::new(cfg, dims, 90);
+        de.prefill(&x.block_padded(0, 0, 8, dims.e));
+        let mut steps = Vec::new();
+        let mut out = Vec::new();
+        for r in 8..dims.s {
+            de.step_into(x.row(r), &mut out);
+            steps.push(out.clone());
+        }
+        match &causal_ref {
+            None => causal_ref = Some((causal.out, causal.attn, steps)),
+            Some((o, a, s)) => {
+                assert_eq!(&causal.out, o, "causal out path={path:?}");
+                assert_eq!(&causal.attn, a, "causal attn path={path:?}");
+                assert_eq!(&steps, s, "decode steps path={path:?}");
+            }
+        }
+    }
+    set_kernel_path(None);
 }
 
 #[test]
