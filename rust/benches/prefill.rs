@@ -1,0 +1,89 @@
+//! Bench: fused multi-session prefill vs independent per-session
+//! prefills (§Prefill-batching) — the weight-stream amortization table
+//! quoted in EXPERIMENTS.md, also written machine-readably to
+//! `BENCH_prefill.json` (CI artifact).
+//!
+//! At N sessions on the Table-1 shape, the independent path streams
+//! every projection weight N times (3·H + 1 GEMM calls per session);
+//! the fused path stacks all prompt rows and streams each weight once
+//! (3·H + 1 GEMMs total), so the projection phase's memory traffic —
+//! and its share of wall time — is amortized N-fold while the
+//! per-session causal cores (O(S²) logits/softmax/A·V) are unchanged.
+//! Every timed iteration resets the session caches and replays the
+//! identical prefill; outputs are bit-identical across the two paths
+//! (pinned by tests/prefill_fused.rs), so the ratio is pure dataflow.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{fused_prefill, gen_input, ModelDims};
+use ita::ita::ItaConfig;
+use ita::util::bench::{bencher, black_box, JsonReport};
+use ita::util::mat::MatI8;
+
+fn main() {
+    let mut b = bencher();
+    let mut report = JsonReport::new("prefill");
+    let cfg = ItaConfig::paper();
+    // Table-1 shape: S=256, E=256, P=64, H=4; every session prefills a
+    // full-capacity prompt (the heaviest, most weight-hungry case).
+    let dims = ModelDims { s: 256, e: 256, p: 64, h: 4 };
+    let shape = format!("S={},E={},P={},H={}", dims.s, dims.e, dims.p, dims.h);
+
+    println!("fused vs independent prefill, {shape}, full-capacity prompts\n");
+
+    let mut rows = Vec::new();
+    for &n in &[1usize, 2, 4, 8] {
+        let mut engines: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(cfg, dims, 42)).collect();
+        let prompts: Vec<MatI8> = (0..n as u64).map(|i| gen_input(7 + i, &dims)).collect();
+
+        let indep = b
+            .bench(&format!("independent prefill xN @N={n}"), || {
+                for (eng, p) in engines.iter_mut().zip(&prompts) {
+                    eng.reset();
+                    black_box(eng.prefill(black_box(p)).out.get(0, 0));
+                }
+            })
+            .median;
+        report.entry("independent prefill", &format!("N={n},{shape}"), b.results().last().unwrap(), None);
+
+        let fused = b
+            .bench(&format!("fused prefill @N={n}"), || {
+                for eng in engines.iter_mut() {
+                    eng.reset();
+                }
+                let mut refs: Vec<&mut DecodeEngine> = engines.iter_mut().collect();
+                let inputs: Vec<&MatI8> = prompts.iter().collect();
+                let r = fused_prefill(&mut refs, &inputs);
+                black_box(r.outputs[0].out.get(0, 0));
+            })
+            .median;
+        report.entry(
+            "fused prefill",
+            &format!("N={n},{shape}"),
+            b.results().last().unwrap(),
+            Some(indep / fused),
+        );
+        println!(
+            "  -> prefill batching speedup @N={n}: {:.2}x (one weight stream vs {n})\n",
+            indep / fused
+        );
+        rows.push((n, fused, indep));
+    }
+
+    // EXPERIMENTS.md table (paste-ready).
+    println!("| sessions | fused prefill | independent | speedup |");
+    println!("|---------:|--------------:|------------:|--------:|");
+    for (n, fused, indep) in rows {
+        println!(
+            "| {n:>8} | {:>10.1} us | {:>8.1} us | {:>6.2}x |",
+            fused * 1e6,
+            indep * 1e6,
+            indep / fused
+        );
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_prefill.json: {e}"),
+    }
+}

@@ -30,8 +30,9 @@ use super::{
     RequantConfig, TransposedWeights,
 };
 use crate::ita::datapath::TileEngine;
-use crate::ita::ItaConfig;
-use crate::util::mat::MatI8;
+use crate::ita::{Activity, ItaConfig};
+use crate::util::mat::{MatI8, MatU8};
+use crate::util::pool::{Task, WorkerPool};
 use std::sync::Arc;
 
 /// One head's append-only K/V store with fixed capacity.
@@ -255,6 +256,48 @@ impl DecodeEngine {
         AttentionOutput { out, attn }
     }
 
+    /// Prompt phase from **pre-projected** per-head Q/K/V matrices
+    /// (§Prefill-batching): the fused multi-session prefill computes
+    /// one stacked GEMM per projection weight across all sessions, then
+    /// hands each session its row slices here. This method still owns
+    /// everything per-session — it fills the KV caches from the K/V
+    /// rows and runs the causal logits → streaming softmax → A·V core
+    /// per head on the session's own engine — so its outputs (and the
+    /// caches it leaves behind) are bit-identical to
+    /// [`DecodeEngine::prefill`] over the same prompt.
+    ///
+    /// Returns the concatenated head outputs (S₀×H·P — the fused
+    /// caller stacks these for the one shared output projection) and
+    /// the per-head attention matrices. Only the causal-core activity
+    /// lands on `self.engine`; the caller attributes each session's
+    /// share of the fused projection passes.
+    pub fn prefill_from_projected(
+        &mut self,
+        qkv: &[(MatI8, MatI8, MatI8)],
+    ) -> (MatI8, Vec<MatU8>) {
+        assert_eq!(qkv.len(), self.dims.h, "one Q/K/V triple per head");
+        assert!(self.is_empty(), "prefill on a non-empty cache (reset() first)");
+        let rows = qkv[0].0.rows();
+        assert!(rows <= self.capacity(), "prompt longer than cache capacity");
+        let rq = self.requants;
+        let weights = self.weights.clone();
+        let mut head_outputs = Vec::with_capacity(self.dims.h);
+        let mut attn = Vec::with_capacity(self.dims.h);
+        for (h, ((q, k, v), hw)) in qkv.iter().zip(weights.heads.iter()).enumerate() {
+            assert_eq!(q.rows(), rows, "head {h} Q rows");
+            assert_eq!(k.rows(), rows, "head {h} K rows");
+            assert_eq!(v.rows(), rows, "head {h} V rows");
+            assert_eq!(q.cols(), self.dims.p, "head {h} projection width");
+            for r in 0..rows {
+                self.caches[h].push(k.row(r), v.row(r));
+            }
+            let (o, a) = self.engine.attention_core_causal(q, k, v, rq.qk, &hw.bav, rq.av);
+            head_outputs.push(o);
+            attn.push(a);
+        }
+        (concat_heads(&head_outputs), attn)
+    }
+
     /// One decode step: append token row `x_row` (length E) and write
     /// its output row (length E) into `out` — bit-identical to row
     /// `len()` of the full causal recompute over the grown sequence.
@@ -302,6 +345,213 @@ impl DecodeEngine {
         self.step_into(x_row, &mut out);
         out
     }
+}
+
+/// Result of one [`fused_prefill`] pass.
+pub struct FusedPrefillResult {
+    /// Per-session causal outputs in input order — bit-identical to
+    /// what each session's independent [`DecodeEngine::prefill`] would
+    /// have returned.
+    pub outputs: Vec<AttentionOutput>,
+    /// The batch-shared activity: the once-per-batch projection weight
+    /// streams (3·H + 1 weight matrices, `weight_buf_writes` only).
+    /// Everything per-session lands on each engine's
+    /// `engine.activity`, which this call resets and repopulates.
+    pub shared: Activity,
+}
+
+/// Fused multi-session prefill (§Prefill-batching): stack the prompt
+/// rows of N sessions serving the **same** [`PackedWeights`] into one
+/// tall activation matrix and run a **single** blocked GEMM per
+/// projection weight (per head Wq/Wk/Wv, plus Wo for the output
+/// projection) via [`TileEngine::linear_pret_multi`] — N prefills cost
+/// one weight stream per matrix instead of N. Everything that is
+/// per-session — KV-cache fills, causal logits, streaming softmax,
+/// A·V — still runs on each session's own engine
+/// ([`DecodeEngine::prefill_from_projected`]), so every output, cache,
+/// and attention row is bit-identical to N independent prefills
+/// (pinned by `tests/prefill_fused.rs` across ragged lengths and all
+/// dispatch paths).
+///
+/// Execution fans out over the process [`WorkerPool`]: first one task
+/// per head for the fused Q/K/V projections, then one task per
+/// session for the causal cores, then the single fused output
+/// projection — the per-session stage pipelines behind the shared
+/// GEMMs without any per-batch thread spawns.
+///
+/// Accounting: each engine's activity is reset and left holding that
+/// session's share of the whole pass — its causal core plus its
+/// row-slice share of every projection GEMM, weight streams excluded.
+/// The streams are charged once per batch in
+/// [`FusedPrefillResult::shared`] (the M-row tile-padding argument:
+/// fusion amortizes the weight streams; each sequence keeps its own
+/// row-tile padding so per-session charges are composition-invariant).
+pub fn fused_prefill(
+    engines: &mut [&mut DecodeEngine],
+    inputs: &[&MatI8],
+) -> FusedPrefillResult {
+    let n = engines.len();
+    assert_eq!(n, inputs.len(), "one prompt per session");
+    assert!(n >= 1, "fused prefill needs at least one session");
+    let dims = engines[0].dims;
+    let cfg = engines[0].engine.cfg;
+    let rq = engines[0].requants;
+    let weights = engines[0].weights.clone();
+    let weights_t = engines[0].weights_t.clone();
+    for (i, (e, x)) in engines.iter().zip(inputs).enumerate() {
+        assert!(
+            Arc::ptr_eq(&e.weights, &weights) && Arc::ptr_eq(&e.weights_t, &weights_t),
+            "fused prefill requires every session to share one packed model (session {i})"
+        );
+        // The per-sequence Activity shares are computed with one tile
+        // geometry — a session with a different ItaConfig would be
+        // silently mis-charged, so reject it loudly.
+        assert!(
+            e.engine.cfg == cfg,
+            "fused prefill requires every session to share one ItaConfig (session {i})"
+        );
+        assert!(e.is_empty(), "fused prefill on a non-empty cache (session {i}; reset() first)");
+        assert_eq!(x.cols(), dims.e, "prompt row width (session {i})");
+        assert!(x.rows() <= e.capacity(), "prompt longer than cache capacity (session {i})");
+    }
+
+    let lens: Vec<usize> = inputs.iter().map(|x| x.rows()).collect();
+    let mut offsets = Vec::with_capacity(n);
+    let mut m_total = 0usize;
+    for &l in &lens {
+        offsets.push(m_total);
+        m_total += l;
+    }
+    let mut x_all = MatI8::zeros(m_total, dims.e);
+    for (x, &off) in inputs.iter().zip(&offsets) {
+        for r in 0..x.rows() {
+            x_all.row_mut(off + r).copy_from_slice(x.row(r));
+        }
+    }
+
+    // ---- Stage 1: one fused GEMM per projection weight --------------
+    // One pool task per head (its three weight matrices are streamed
+    // back to back on a task-private engine); the per-sequence /
+    // shared Activity splits merge afterwards — pure counter sums, so
+    // placement is invisible.
+    struct HeadProj {
+        q: MatI8,
+        k: MatI8,
+        v: MatI8,
+        per_seq: Vec<Activity>,
+        shared: Activity,
+    }
+    let mut head_slots: Vec<Option<HeadProj>> = (0..dims.h).map(|_| None).collect();
+    {
+        let (x_all, lens, w, wt) = (&x_all, &lens[..], &weights, &weights_t);
+        let tasks: Vec<Task> = head_slots
+            .iter_mut()
+            .enumerate()
+            .map(|(h, slot)| {
+                Box::new(move || {
+                    let mut eng = TileEngine::new(cfg);
+                    let mut per_seq = vec![Activity::default(); n];
+                    let mut shared = Activity::default();
+                    let hw = &w.heads[h];
+                    let (wqt, wkt, wvt) = &wt.heads[h];
+                    let q = eng
+                        .linear_pret_multi(x_all, lens, wqt, &hw.bq, rq.q, &mut per_seq, &mut shared);
+                    let k = eng
+                        .linear_pret_multi(x_all, lens, wkt, &hw.bk, rq.k, &mut per_seq, &mut shared);
+                    let v = eng
+                        .linear_pret_multi(x_all, lens, wvt, &hw.bv, rq.v, &mut per_seq, &mut shared);
+                    *slot = Some(HeadProj { q, k, v, per_seq, shared });
+                }) as Task
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
+    }
+    let heads: Vec<HeadProj> =
+        head_slots.into_iter().map(|s| s.expect("head projection task completed")).collect();
+    let mut per_seq = vec![Activity::default(); n];
+    let mut shared = Activity::default();
+    for hp in &heads {
+        for (acc, a) in per_seq.iter_mut().zip(&hp.per_seq) {
+            acc.add(a);
+        }
+        shared.add(&hp.shared);
+    }
+
+    // ---- Stage 2: per-session causal cores, fanned out --------------
+    // Each task owns one session's engine exclusively; the row slices
+    // are cut task-locally so the copies parallelize too. The slice
+    // copies are O(Sᵢ·P) per head — ~E× smaller than the O(Sᵢ·E·P)
+    // GEMM that produced the rows — the price of keeping the bit-exact
+    // causal core's whole-matrix API instead of threading row ranges
+    // through it.
+    struct SessionOut {
+        concat: MatI8,
+        attn: Vec<MatU8>,
+    }
+    let mut session_slots: Vec<Option<SessionOut>> = (0..n).map(|_| None).collect();
+    {
+        let heads = &heads;
+        let tasks: Vec<Task> = engines
+            .iter_mut()
+            .zip(session_slots.iter_mut())
+            .enumerate()
+            .map(|(i, (eng, slot))| {
+                let (off, len) = (offsets[i], lens[i]);
+                Box::new(move || {
+                    eng.engine.reset_activity();
+                    let qkv: Vec<(MatI8, MatI8, MatI8)> = heads
+                        .iter()
+                        .map(|hp| {
+                            (
+                                hp.q.block_padded(off, 0, len, dims.p),
+                                hp.k.block_padded(off, 0, len, dims.p),
+                                hp.v.block_padded(off, 0, len, dims.p),
+                            )
+                        })
+                        .collect();
+                    let (concat, attn) = eng.prefill_from_projected(&qkv);
+                    *slot = Some(SessionOut { concat, attn });
+                }) as Task
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
+    }
+    let session_outs: Vec<SessionOut> =
+        session_slots.into_iter().map(|s| s.expect("session causal task completed")).collect();
+
+    // ---- Stage 3: the one fused output projection -------------------
+    let mut concat_all = MatI8::zeros(m_total, dims.h * dims.p);
+    for (s, &off) in session_outs.iter().zip(&offsets) {
+        for r in 0..s.concat.rows() {
+            concat_all.row_mut(off + r).copy_from_slice(s.concat.row(r));
+        }
+    }
+    let mut eng_o = TileEngine::new(cfg);
+    let mut per_seq_o = vec![Activity::default(); n];
+    let out_all = eng_o.linear_pret_multi(
+        &concat_all,
+        &lens,
+        &weights_t.wot,
+        &weights.bo,
+        rq.o,
+        &mut per_seq_o,
+        &mut shared,
+    );
+    for (acc, a) in per_seq.iter_mut().zip(&per_seq_o) {
+        acc.add(a);
+    }
+
+    // Attribute each session's projection shares onto its engine (the
+    // causal-core activity is already there) and assemble the outputs.
+    let mut outputs = Vec::with_capacity(n);
+    for (i, (eng, sess)) in engines.iter_mut().zip(session_outs).enumerate() {
+        eng.engine.activity.add(&per_seq[i]);
+        outputs.push(AttentionOutput {
+            out: out_all.block_padded(offsets[i], 0, lens[i], dims.e),
+            attn: sess.attn,
+        });
+    }
+    FusedPrefillResult { outputs, shared }
 }
 
 #[cfg(test)]
@@ -453,6 +703,124 @@ mod tests {
         assert_eq!(de.engine.activity.macs, want);
         assert_eq!(de.engine.activity.divisions, d.h as u64);
         assert_eq!(de.engine.activity.softmax_elems, (2 * valid * d.h) as u64);
+    }
+
+    #[test]
+    fn prefill_from_projected_matches_plain_prefill() {
+        // Feeding prefill the pre-projected Q/K/V by hand must leave
+        // caches, attention, and concatenated head outputs identical
+        // to the self-projecting path.
+        let d = dims();
+        let mut plain = DecodeEngine::new(ItaConfig::tiny(), d, 31);
+        let mut proj = DecodeEngine::new(ItaConfig::tiny(), d, 31);
+        let x = gen_input(32, &d).block_padded(0, 0, 9, d.e);
+        let want = plain.prefill(&x);
+
+        let rq = proj.requants;
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let qkv: Vec<(MatI8, MatI8, MatI8)> = proj
+            .weights
+            .heads
+            .iter()
+            .zip(&proj.weights_t.heads)
+            .map(|(hw, (wqt, wkt, wvt))| {
+                (
+                    eng.linear_pret(&x, wqt, &hw.bq, rq.q),
+                    eng.linear_pret(&x, wkt, &hw.bk, rq.k),
+                    eng.linear_pret(&x, wvt, &hw.bv, rq.v),
+                )
+            })
+            .collect();
+        let (concat, attn) = proj.prefill_from_projected(&qkv);
+        assert_eq!(attn, want.attn);
+        // Output projection of the concat equals the plain output.
+        let got = eng.linear_pret(&concat, &proj.weights_t.wot, &proj.weights.bo, rq.o);
+        assert_eq!(got, want.out);
+        // Caches identical: the next step from both engines agrees.
+        assert_eq!(proj.len(), plain.len());
+        let row = gen_input(33, &d);
+        assert_eq!(proj.step(row.row(0)), plain.step(row.row(0)));
+    }
+
+    #[test]
+    fn fused_prefill_bit_identical_to_independent_prefills() {
+        // Three sessions, ragged lengths (one empty): fused outputs,
+        // attention rows, cache fills, and the first post-prefill step
+        // all equal the independent per-session path.
+        let d = dims();
+        let lens = [5usize, 0, 11];
+        let mut fused: Vec<DecodeEngine> =
+            (0..3).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 51)).collect();
+        let mut indep: Vec<DecodeEngine> =
+            (0..3).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 51)).collect();
+        let prompts: Vec<MatI8> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| gen_input(60 + i as u64, &d).block_padded(0, 0, l, d.e))
+            .collect();
+
+        let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+        let inputs: Vec<&MatI8> = prompts.iter().collect();
+        let result = fused_prefill(&mut refs, &inputs);
+
+        let x_next = gen_input(77, &d);
+        for i in 0..3 {
+            let want = indep[i].prefill(&prompts[i]);
+            assert_eq!(result.outputs[i].out, want.out, "session {i} output");
+            assert_eq!(result.outputs[i].attn, want.attn, "session {i} attention");
+            assert_eq!(fused[i].len(), indep[i].len(), "session {i} cache fill");
+            assert_eq!(
+                fused[i].step(x_next.row(lens[i])),
+                indep[i].step(x_next.row(lens[i])),
+                "session {i} first step after prefill"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_prefill_streams_each_weight_once() {
+        // The acceptance assertion: N fused sessions charge exactly
+        // one projection weight stream per weight matrix (3·H + 1),
+        // and each session's activity equals its independent prefill
+        // minus exactly those streams — everything else bit-equal.
+        use crate::ita::simulator::{activity_for_matmul, MatmulDims};
+        let d = dims();
+        let n = 3;
+        let lens = [4usize, 9, 6];
+        let cfg = ItaConfig::tiny();
+        let mut fused: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(cfg, d, 81)).collect();
+        let prompts: Vec<MatI8> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| gen_input(90 + i as u64, &d).block_padded(0, 0, l, d.e))
+            .collect();
+        let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+        let inputs: Vec<&MatI8> = prompts.iter().collect();
+        let result = fused_prefill(&mut refs, &inputs);
+
+        // One stream per weight matrix: 3·H projections (E→P) + Wo
+        // ((H·P)→E), independent of the session count.
+        let proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.e, c: d.p }, 0);
+        let out_proj =
+            activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.h * d.p, c: d.e }, 0);
+        let streams_once =
+            3 * d.h as u64 * proj.weight_buf_writes + out_proj.weight_buf_writes;
+        assert_eq!(result.shared.weight_buf_writes, streams_once);
+        assert_eq!(result.shared.macs, 0);
+        assert_eq!(result.shared.cycles, 0);
+
+        for i in 0..n {
+            let mut indep = DecodeEngine::new(cfg, d, 81);
+            indep.engine.reset_activity();
+            indep.prefill(&prompts[i]);
+            let mut fused_act = fused[i].engine.activity;
+            fused_act.weight_buf_writes += streams_once;
+            assert_eq!(
+                fused_act, indep.engine.activity,
+                "session {i}: fused share must be independent-minus-streams exactly"
+            );
+        }
     }
 
     #[test]

@@ -11,6 +11,14 @@ pub mod decode;
 pub mod encoder;
 pub mod schedule;
 
+// The fused multi-session prefill entry points (§Prefill-batching):
+// stack N sessions' prompt rows into one GEMM per projection weight.
+// Re-exported here because they operate at the same altitude as
+// `AttentionExecutor`/`run_attention_causal` — whole-model passes over
+// the packed weight set — even though the per-session state they fill
+// lives in `decode`.
+pub use decode::{fused_prefill, FusedPrefillResult};
+
 use crate::ita::datapath::TileEngine;
 use crate::ita::requant::RequantParams;
 use crate::ita::{Activity, ItaConfig};

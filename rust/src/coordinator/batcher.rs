@@ -7,6 +7,16 @@
 //! The policy is the classic latency/throughput trade: flush a batch
 //! when it reaches `max_batch` or when the oldest member has waited
 //! `max_wait`.
+//!
+//! Items come in two classes (§Prefill-batching): **patient** items
+//! (decode steps, one-shot inferences) wait out the batching window so
+//! more peers can join; **eager** items (session prefills) must not be
+//! held back by it — a prefill already amortizes its weight streams by
+//! *fusing* with whatever other prefills are pending right now, so
+//! once the ingress queue goes momentarily quiet there is nothing to
+//! wait for. A batch containing only eager items flushes on the very
+//! first poll and zeroes the dispatcher's sleep hint; one patient item
+//! restores the normal deadline discipline for the whole batch.
 
 use std::time::{Duration, Instant};
 
@@ -15,6 +25,10 @@ use std::time::{Duration, Instant};
 #[derive(Debug)]
 pub struct Batcher<T> {
     pending: Vec<T>,
+    /// Pending items content to wait out `max_wait`. When zero (and
+    /// `pending` is non-empty) the batch is all-eager and flushes on
+    /// the next poll.
+    patient: usize,
     oldest: Option<Instant>,
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -23,13 +37,35 @@ pub struct Batcher<T> {
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
-        Self { pending: Vec::with_capacity(max_batch), oldest: None, max_batch, max_wait }
+        Self {
+            pending: Vec::with_capacity(max_batch),
+            patient: 0,
+            oldest: None,
+            max_batch,
+            max_wait,
+        }
     }
 
-    /// Add an item; returns a full batch if the size trigger fired.
+    /// Add a patient item; returns a full batch if the size trigger
+    /// fired.
     pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        self.push_impl(item, now, false)
+    }
+
+    /// Add an eager item (a prefill): it still batches with anything
+    /// already pending — and the size trigger still fires in push —
+    /// but it never waits out the batching window on its own (see
+    /// [`Batcher::poll`] / [`Batcher::time_to_deadline`]).
+    pub fn push_eager(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        self.push_impl(item, now, true)
+    }
+
+    fn push_impl(&mut self, item: T, now: Instant, eager: bool) -> Option<Vec<T>> {
         if self.pending.is_empty() {
             self.oldest = Some(now);
+        }
+        if !eager {
+            self.patient += 1;
         }
         self.pending.push(item);
         if self.pending.len() >= self.max_batch {
@@ -38,12 +74,19 @@ impl<T> Batcher<T> {
         None
     }
 
-    /// Flush if the oldest item exceeded the wait budget.
+    /// Flush if the oldest item exceeded the wait budget — or
+    /// immediately when every pending item is eager (an all-prefill
+    /// batch has nothing to gain from waiting: the ingress queue was
+    /// already drained into it before the dispatcher polled).
     pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if self.patient == 0 {
+            return Some(self.take());
+        }
         match self.oldest {
-            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.max_wait => {
-                Some(self.take())
-            }
+            Some(t0) if now.duration_since(t0) >= self.max_wait => Some(self.take()),
             _ => None,
         }
     }
@@ -58,7 +101,14 @@ impl<T> Batcher<T> {
     }
 
     /// Time until the wait trigger fires (for the dispatcher's sleep).
+    /// Zero for an all-eager batch, so the dispatcher's next
+    /// `recv_timeout` still drains any already-queued ingress items
+    /// into the batch (a same-instant prefill burst coalesces) but
+    /// never sleeps a due all-prefill batch.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        if !self.pending.is_empty() && self.patient == 0 {
+            return Some(Duration::ZERO);
+        }
         self.oldest.map(|t0| {
             let waited = now.duration_since(t0);
             self.max_wait.saturating_sub(waited)
@@ -75,6 +125,7 @@ impl<T> Batcher<T> {
 
     fn take(&mut self) -> Vec<T> {
         self.oldest = None;
+        self.patient = 0;
         std::mem::take(&mut self.pending)
     }
 }
@@ -185,6 +236,76 @@ mod tests {
         }
         // Past the deadline the hint is exactly zero (saturating).
         assert_eq!(b.time_to_deadline(t0 + Duration::from_secs(1)).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn all_eager_batch_flushes_on_first_poll() {
+        // An all-prefill batch must not wait out the batching window:
+        // poll flushes it immediately, long before the deadline.
+        let mut b = Batcher::new(100, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        assert!(b.push_eager(1, t0).is_none());
+        assert!(b.push_eager(2, t0).is_none());
+        // Sleep hint is zero so the dispatcher cannot oversleep it.
+        assert_eq!(b.time_to_deadline(t0), Some(Duration::ZERO));
+        assert_eq!(b.poll(t0), Some(vec![1, 2]), "eager batch held back by the wait path");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn one_patient_item_restores_the_wait_discipline() {
+        // Eager items ride along with patient ones: a mixed batch
+        // keeps the normal deadline (steps/infers still benefit from
+        // letting peers join).
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(100, max_wait);
+        let t0 = Instant::now();
+        b.push_eager(1, t0);
+        b.push(2, t0); // patient
+        b.push_eager(3, t0);
+        assert!(b.poll(t0).is_none(), "mixed batch flushed early");
+        let hint = b.time_to_deadline(t0).unwrap();
+        assert!(hint > Duration::ZERO && hint <= max_wait);
+        assert_eq!(b.poll(t0 + Duration::from_millis(11)), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn eager_state_resets_with_the_batch() {
+        // The patient count is per-batch: an eager-only flush must not
+        // leave the next (patient) batch thinking it is all-eager, and
+        // a patient flush must not make a later eager batch wait.
+        let mut b = Batcher::new(100, Duration::from_millis(50));
+        let t0 = Instant::now();
+        b.push_eager(1, t0);
+        assert_eq!(b.poll(t0), Some(vec![1]));
+        b.push(2, t0);
+        assert!(b.poll(t0).is_none(), "patient batch inherited eagerness");
+        assert_eq!(b.flush(), Some(vec![2]));
+        b.push_eager(3, t0);
+        assert_eq!(b.poll(t0), Some(vec![3]), "eager batch inherited patience");
+    }
+
+    #[test]
+    fn eager_push_still_honors_the_size_trigger() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        assert!(b.push_eager(1, t0).is_none());
+        assert_eq!(b.push_eager(2, t0), Some(vec![1, 2]), "size trigger fires in push");
+        assert!(b.is_empty());
+        assert!(b.time_to_deadline(t0).is_none(), "deadline cleared with the batch");
+    }
+
+    #[test]
+    fn empty_batcher_has_no_eager_deadline() {
+        // The zero sleep hint applies only while eager items are
+        // actually pending — an empty batcher must not spin the
+        // dispatcher.
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(5));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push_eager(1, t0);
+        assert_eq!(b.poll(t0), Some(vec![1]));
+        assert!(b.time_to_deadline(t0).is_none(), "stale zero hint after flush");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::request::{
     DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
     SubmitError,
 };
-use crate::attention::decode::DecodeEngine;
+use crate::attention::decode::{fused_prefill, DecodeEngine};
 use crate::attention::{AttentionExecutor, PackedWeights};
 use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
@@ -304,7 +304,23 @@ fn spawn_dispatcher(
                 match ingress.recv_timeout(timeout) {
                     Ok(job) => {
                         metrics.queue_depth.set(batcher.len() as u64 + 1);
-                        if let Some(batch) = batcher.push(job, Instant::now()) {
+                        // Prefills are eager (§Prefill-batching): they
+                        // fuse with whatever other prefills are queued
+                        // *right now*, so an all-prefill batch flushes
+                        // as soon as the ingress queue goes quiet
+                        // instead of waiting out the decode window.
+                        // Steps and one-shot inferences stay patient.
+                        let eager = matches!(
+                            &job,
+                            Work::Decode((req, _)) if matches!(req.input, DecodeInput::Prefill(_))
+                        );
+                        let now = Instant::now();
+                        let flushed = if eager {
+                            batcher.push_eager(job, now)
+                        } else {
+                            batcher.push(job, now)
+                        };
+                        if let Some(batch) = flushed {
                             send_batch(&batch_tx, batch, &metrics);
                         }
                     }
@@ -382,16 +398,34 @@ fn spawn_worker(
         .expect("spawn worker")
 }
 
+/// One decode item in flight through a worker: request, response
+/// channel, and the session engine taken from the table.
+type DecodeItem = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>);
+/// Executed decode item: the per-session [`Activity`], the output, and
+/// any batch-shared energy share (joules) not visible in the activity
+/// — the fused-prefill weight streams are charged once per batch and
+/// split evenly across its members.
+type DecodeDone =
+    (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>, Activity, MatI8, f64);
+
 /// Execute a batch of decode operations. The submit-side `busy` flag
 /// guarantees at most one in-flight request per session, so every
 /// item in a batch belongs to a *different* session and owns a
-/// disjoint engine — the batch is embarrassingly parallel and fans
-/// out across the persistent [`WorkerPool`] exactly like the infer
-/// path (round-robin by batch index, responses delivered in
-/// submission order; §Perf: no thread spawn per batch). Energy is
-/// charged per operation from the engine's own incremental-dataflow
-/// [`Activity`] — no cross-request weight amortization, since each
-/// session streams against its own K/V state.
+/// disjoint engine.
+///
+/// The **prefill-aggregation stage** (§Prefill-batching): when the
+/// batch holds ≥ 2 pending prefills (necessarily against the same
+/// [`PackedWeights`]: the server serves one model), they execute as
+/// one [`fused_prefill`] pass — a single projection GEMM per weight
+/// matrix instead of one per session. The remaining items (steps, or
+/// a lone prefill) fan out per session across the persistent
+/// [`WorkerPool`] exactly like the infer path, in the SAME pool scope
+/// as the fused task, so a batch's O(S) steps never serialize behind
+/// a long multi-session prefill (round-robin by batch index,
+/// responses merged in submission order; §Perf: no thread spawn per
+/// batch). Energy is charged per operation from each engine's own
+/// incremental-dataflow [`Activity`]; fused prefills additionally
+/// carry an even split of the once-per-batch weight-stream energy.
 fn process_decode_batch(
     config: &SystemConfig,
     sessions: &SessionTable,
@@ -399,13 +433,11 @@ fn process_decode_batch(
     metrics: &ServerMetrics,
 ) {
     let b = batch.len();
-    type Item = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>);
-    type Done = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>, Activity, MatI8);
 
     // Take every engine in one lock pass. Items whose session vanished
     // while queued (server teardown paths) drop their response channel,
     // which surfaces as a recv error at the client.
-    let mut items: Vec<Item> = Vec::with_capacity(b);
+    let mut items: Vec<DecodeItem> = Vec::with_capacity(b);
     {
         let mut table = sessions.lock().unwrap();
         for (req, tx) in batch {
@@ -415,7 +447,18 @@ fn process_decode_batch(
         }
     }
 
-    fn execute_one((req, tx, mut engine): Item) -> Done {
+    // Prefill-aggregation stage: peel off the batch's prefills when
+    // there are at least two to fuse; a lone prefill stays on the
+    // per-session path (fusing it would only add stacking overhead).
+    let n_prefills =
+        items.iter().filter(|(req, ..)| matches!(req.input, DecodeInput::Prefill(_))).count();
+    let (prefills, rest): (Vec<DecodeItem>, Vec<DecodeItem>) = if n_prefills >= 2 {
+        items.into_iter().partition(|(req, ..)| matches!(req.input, DecodeInput::Prefill(_)))
+    } else {
+        (Vec::new(), items)
+    };
+
+    fn execute_one((req, tx, mut engine): DecodeItem) -> DecodeDone {
         engine.engine.reset_activity();
         let output = match &req.input {
             DecodeInput::Prefill(x) => engine.prefill(x).out,
@@ -426,24 +469,29 @@ fn process_decode_batch(
             }
         };
         let activity = engine.engine.activity;
-        (req, tx, engine, activity, output)
+        (req, tx, engine, activity, output, 0.0)
     }
 
-    let want = items.len().min(max_batch_parallelism(config.server.workers)).max(1);
-    let done: Vec<Done> = if items.len() <= 1 || want == 1 {
-        items.into_iter().map(execute_one).collect()
-    } else {
-        let n = items.len();
-        let mut assigned: Vec<Vec<(usize, Item)>> = (0..want).map(|_| Vec::new()).collect();
-        for (i, item) in items.into_iter().enumerate() {
-            assigned[i % want].push((i, item));
-        }
-        // One pool task per chunk, each filling its own result buffer;
-        // merged back in submission order below (placement-invariant).
-        let mut outs: Vec<Vec<(usize, Done)>> = (0..want).map(|_| Vec::new()).collect();
-        let tasks: Vec<Task> = assigned
+    // One pool scope runs the fused-prefill pass AND the per-session
+    // fan-out concurrently — every item owns a disjoint engine, and a
+    // batch's O(S) steps must not serialize behind a long multi-session
+    // prefill. The fused task's own nested fan-outs are deadlock-free
+    // by the pool's caller-participation contract. Per-item results
+    // keep their submission indices and merge back in order below
+    // (placement-invariant).
+    let n_rest = rest.len();
+    let want = n_rest.min(max_batch_parallelism()).max(1);
+    let mut assigned: Vec<Vec<(usize, DecodeItem)>> = (0..want).map(|_| Vec::new()).collect();
+    for (i, item) in rest.into_iter().enumerate() {
+        assigned[i % want].push((i, item));
+    }
+    let mut outs: Vec<Vec<(usize, DecodeDone)>> = (0..want).map(|_| Vec::new()).collect();
+    let mut fused_done: Vec<DecodeDone> = Vec::new();
+    {
+        let mut tasks: Vec<Task> = assigned
             .into_iter()
             .zip(outs.iter_mut())
+            .filter(|(chunk, _)| !chunk.is_empty())
             .map(|(chunk, out)| {
                 Box::new(move || {
                     for (i, item) in chunk {
@@ -452,15 +500,24 @@ fn process_decode_batch(
                 }) as Task
             })
             .collect();
-        WorkerPool::global().run(tasks);
-        let mut slots: Vec<Option<Done>> = (0..n).map(|_| None).collect();
-        for (i, r) in outs.into_iter().flatten() {
-            slots[i] = Some(r);
+        if !prefills.is_empty() {
+            let fused_done = &mut fused_done;
+            tasks.push(Box::new(move || {
+                *fused_done = execute_fused_prefills(config, prefills, metrics);
+            }) as Task);
         }
-        slots.into_iter().map(|r| r.expect("decode item processed")).collect()
-    };
+        WorkerPool::global().run(tasks);
+    }
 
-    for (req, tx, engine, activity, output) in done {
+    let mut done: Vec<DecodeDone> = Vec::with_capacity(n_rest + fused_done.len());
+    done.extend(fused_done);
+    let mut slots: Vec<Option<DecodeDone>> = (0..n_rest).map(|_| None).collect();
+    for (i, r) in outs.into_iter().flatten() {
+        slots[i] = Some(r);
+    }
+    done.extend(slots.into_iter().map(|r| r.expect("decode item processed")));
+
+    for (req, tx, engine, activity, output, shared_energy_j) in done {
         let seq_len = engine.len();
         {
             let mut table = sessions.lock().unwrap();
@@ -470,7 +527,8 @@ fn process_decode_batch(
                 slot.busy = false;
             }
         }
-        let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total();
+        let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total()
+            + shared_energy_j;
         let cycles = activity.cycles + activity.stall_cycles;
         metrics.sim_cycles.add(cycles);
         metrics.sim_energy_pj.add((energy * 1e12) as u64);
@@ -495,14 +553,59 @@ fn process_decode_batch(
     }
 }
 
-/// Upper bound on one worker's request fan-out: the host cores are
-/// shared by all `workers` threads (which themselves fan out per
-/// head), so each worker gets an even share rather than the full
-/// machine — otherwise wide batches oversubscribe the host by
-/// workers × cores × heads.
-fn max_batch_parallelism(workers: usize) -> usize {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    (cores / workers.max(1)).max(1)
+/// The prefill-aggregation stage body: run ≥ 2 pending prefills as one
+/// [`fused_prefill`] pass. Each engine comes back holding its
+/// session's [`Activity`] share; the once-per-batch weight-stream
+/// energy is split evenly across the fused members (mirroring the
+/// infer path's per-request energy split of its amortized batch
+/// total).
+fn execute_fused_prefills(
+    config: &SystemConfig,
+    mut items: Vec<DecodeItem>,
+    metrics: &ServerMetrics,
+) -> Vec<DecodeDone> {
+    let n = items.len();
+    debug_assert!(n >= 2);
+    let result = {
+        let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
+        let mut inputs: Vec<&MatI8> = Vec::with_capacity(n);
+        for (req, _tx, engine) in items.iter_mut() {
+            let DecodeInput::Prefill(x) = &req.input else {
+                unreachable!("the aggregation stage only receives prefills")
+            };
+            inputs.push(x);
+            engines.push(&mut **engine);
+        }
+        fused_prefill(&mut engines, &inputs)
+    };
+    metrics.fused_prefill_batches.inc();
+    metrics.fused_prefill_sessions.add(n as u64);
+    let shared_energy =
+        EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
+    let share = shared_energy / n as f64;
+    items
+        .into_iter()
+        .zip(result.outputs)
+        .map(|((req, tx, engine), out)| {
+            let activity = engine.engine.activity;
+            (req, tx, engine, activity, out.out, share)
+        })
+        .collect()
+}
+
+/// Pool-aware adaptive upper bound on one worker's request fan-out
+/// (ROADMAP item, replaces the static cores-divided-by-workers split):
+/// ask the shared [`WorkerPool`] how many of its threads are idle
+/// *right now* and fan out that wide, plus one for the submitting
+/// thread (it always drains its own scope). Fused prefills and decode
+/// steps landing on different coordinator workers thus share the pool
+/// without oversubscribing it — the first fan-out claims the idle
+/// threads, a concurrent one sees fewer and sizes down, and as batches
+/// drain the bound recovers. The reading is a sizing heuristic only:
+/// placement is invisible to results (pool determinism tests), so a
+/// stale reading costs at most some parallelism, never correctness.
+fn max_batch_parallelism() -> usize {
+    WorkerPool::global().idle_workers() + 1
 }
 
 /// Execute a batch on one simulated accelerator and deliver responses.
@@ -525,7 +628,7 @@ fn process_batch(
     metrics: &ServerMetrics,
 ) {
     let b = batch.len() as u64;
-    let want = batch.len().min(max_batch_parallelism(config.server.workers)).max(1);
+    let want = batch.len().min(max_batch_parallelism()).max(1);
     while pool.len() < want {
         pool.push(AttentionExecutor::new(
             config.accelerator,
@@ -775,6 +878,131 @@ mod tests {
         }
         assert!(server.close_session(sid));
         server.shutdown();
+    }
+
+    #[test]
+    fn fused_prefill_burst_matches_independent_golden_engines() {
+        // Deterministic fusion: a patient one-shot infer anchors the
+        // forming batch (eager prefills alone would flush as soon as
+        // the ingress queue went quiet), and max_batch is sized so the
+        // size trigger fires exactly when the last prefill lands —
+        // one mixed batch of [infer, 4 prefills], whose prefills MUST
+        // take the fused path. The wait window only has to dwarf the
+        // five adjacent submit calls, as in the session-busy test.
+        let mut cfg = test_config();
+        cfg.server.max_batch = 5;
+        cfg.server.max_wait_us = 500_000;
+        let server = Server::start(cfg);
+        let d = cfg.model.dims;
+        let lens = [3usize, 7, 1, 5];
+        let sids: Vec<_> = lens.iter().map(|_| server.open_session().unwrap()).collect();
+        let prompts: Vec<MatI8> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| gen_input(100 + i as u64, &d).block_padded(0, 0, l, d.e))
+            .collect();
+
+        let infer_rx = server.submit(gen_input(7, &d)).unwrap();
+        let rxs: Vec<_> = sids
+            .iter()
+            .zip(&prompts)
+            .map(|(&sid, p)| server.submit_decode(sid, DecodeInput::Prefill(p.clone())).unwrap())
+            .collect();
+
+        for ((rx, p), &sid) in rxs.into_iter().zip(&prompts).zip(&sids) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.seq_len, p.rows());
+            let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+            let want = golden.prefill(p);
+            assert_eq!(resp.output, want.out, "session {sid} diverged from golden prefill");
+            assert_eq!(resp.batch_size, 4, "all four prefills in one decode batch");
+            assert!(resp.sim_energy_j > 0.0 && resp.sim_cycles > 0);
+        }
+        let _ = infer_rx.recv().unwrap();
+        assert_eq!(server.metrics.fused_prefill_batches.get(), 1);
+        assert_eq!(server.metrics.fused_prefill_sessions.get(), 4);
+        assert_eq!(server.metrics.prefills_completed.get(), 4);
+
+        // Fused sessions keep stepping bit-identically (cache parity).
+        let x = gen_input(999, &d);
+        for (&sid, p) in sids.iter().zip(&prompts) {
+            let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+            golden.prefill(p);
+            let resp = server.decode(sid, DecodeInput::Step(x.row(p.rows()).to_vec())).unwrap();
+            assert_eq!(
+                resp.output.row(0),
+                &golden.step(x.row(p.rows()))[..],
+                "post-fused-prefill step on session {sid}"
+            );
+            assert!(server.close_session(sid));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_prefill_and_step_batches_stay_correct() {
+        // Steps and prefills interleaved through the same batcher: the
+        // aggregation stage peels prefills off, steps ride the
+        // per-session fan-out, and both classes match their goldens.
+        let mut cfg = test_config();
+        cfg.server.max_batch = 8;
+        cfg.server.max_wait_us = 5_000;
+        let server = Server::start(cfg);
+        let d = cfg.model.dims;
+        let x = gen_input(41, &d);
+
+        // Two stepping sessions warmed by prefill...
+        let stepping: Vec<_> = (0..2).map(|_| server.open_session().unwrap()).collect();
+        let mut goldens: Vec<_> = (0..2)
+            .map(|_| DecodeEngine::new(cfg.accelerator, d, cfg.model.seed))
+            .collect();
+        for (&sid, golden) in stepping.iter().zip(&mut goldens) {
+            let p = x.block_padded(0, 0, 4, d.e);
+            let resp = server.decode(sid, DecodeInput::Prefill(p.clone())).unwrap();
+            assert_eq!(resp.output, golden.prefill(&p).out);
+        }
+        // ...then steps racing fresh prefills on other sessions.
+        for r in 4..10 {
+            let fresh: Vec<_> = (0..2).map(|_| server.open_session().unwrap()).collect();
+            let step_rxs: Vec<_> = stepping
+                .iter()
+                .map(|&sid| server.submit_decode(sid, DecodeInput::Step(x.row(r).to_vec())).unwrap())
+                .collect();
+            let pre_rxs: Vec<_> = fresh
+                .iter()
+                .enumerate()
+                .map(|(i, &sid)| {
+                    let p = gen_input(500 + r as u64 + i as u64, &d).block_padded(0, 0, 3, d.e);
+                    (server.submit_decode(sid, DecodeInput::Prefill(p.clone())).unwrap(), p)
+                })
+                .collect();
+            for (rx, golden) in step_rxs.into_iter().zip(&mut goldens) {
+                assert_eq!(rx.recv().unwrap().output.row(0), &golden.step(x.row(r))[..]);
+            }
+            for (rx, p) in pre_rxs {
+                let mut g = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+                assert_eq!(rx.recv().unwrap().output, g.prefill(&p).out);
+            }
+            for sid in fresh {
+                assert!(server.close_session(sid));
+            }
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn adaptive_parallelism_stays_within_pool_bounds() {
+        // The pool-aware bound: at least the caller itself, at most
+        // every pool thread plus the caller — whatever the pool's
+        // instantaneous occupancy.
+        for _ in 0..50 {
+            let p = max_batch_parallelism();
+            assert!(p >= 1, "fan-out bound lost the caller");
+            assert!(
+                p <= WorkerPool::global().parallelism() + 1,
+                "fan-out bound exceeds pool width"
+            );
+        }
     }
 
     #[test]

@@ -115,6 +115,69 @@ impl TileEngine {
         out
     }
 
+    /// Multi-sequence linear layer over vertically-stacked sequences
+    /// (§Prefill-batching): `x` holds the rows of `lens.len()`
+    /// sequences back to back (`lens[i]` rows each, summing to
+    /// `x.rows()`), and the pre-transposed weight matrix is streamed
+    /// **once** for the whole stack — one blocked GEMM instead of one
+    /// per sequence. This is the fused-prefill building block: N
+    /// pending prefills pay one weight stream per projection matrix.
+    ///
+    /// Numerics: bit-identical, row for row, to calling
+    /// [`TileEngine::linear_pret`] on each sequence separately — every
+    /// output element is one row·column dot whose accumulation order
+    /// depends only on the K blocking, so which other rows share the
+    /// stack is invisible (the same row-independence
+    /// `linear_row_pret` already relies on).
+    ///
+    /// Accounting (the M-row tile-padding argument, EXPERIMENTS.md
+    /// §Prefill-batching): each sequence still pays its **own**
+    /// R=lens[i] row-tile padding — per-sequence charges stay
+    /// independent of batch composition, so attribution is
+    /// order-invariant and sums stay comparable across batch shapes —
+    /// while the weight stream (`weight_buf_writes`) is charged once
+    /// per weight matrix into `shared` instead of once per sequence.
+    /// `per_seq[i]` receives sequence i's share (stream excluded);
+    /// the engine's own activity records the batch total (all
+    /// per-sequence shares plus the single stream).
+    pub fn linear_pret_multi(
+        &mut self,
+        x: &MatI8,
+        lens: &[usize],
+        wt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+        per_seq: &mut [Activity],
+        shared: &mut Activity,
+    ) -> MatI8 {
+        assert_eq!(x.cols(), wt.cols(), "linear dims (pre-transposed)");
+        assert_eq!(lens.iter().sum::<usize>(), x.rows(), "lens must tile the stacked rows");
+        assert_eq!(lens.len(), per_seq.len(), "one Activity slot per sequence");
+        self.check_depth(wt.cols());
+        let mut out = MatI8::zeros(0, 0);
+        gemm_requant_pret(x, wt, bias, rq, &mut self.scratch.gemm, &mut out);
+        let (k, c) = (x.cols(), wt.rows());
+        for (i, &r) in lens.iter().enumerate() {
+            if r == 0 {
+                continue;
+            }
+            let mut a =
+                activity_for_matmul(&self.cfg, MatmulDims { r, k, c }, (r * k * c) as u64);
+            a.weight_buf_writes = 0;
+            per_seq[i].add(&a);
+            self.activity.add(&a);
+        }
+        if x.rows() > 0 {
+            // The single weight stream of the fused pass (R=0 keeps
+            // every row-dependent field zero; only `weight_buf_writes`
+            // survives). An all-empty stack streams nothing.
+            let stream = activity_for_matmul(&self.cfg, MatmulDims { r: 0, k, c }, 0);
+            shared.add(&stream);
+            self.activity.add(&stream);
+        }
+        out
+    }
+
     /// Pre-change linear: naive oracle matmul plus a separate requant
     /// pass. Retained as the bit-exactness oracle — tests pin
     /// [`TileEngine::linear`] to it, and `benches/hotpath.rs` uses it
@@ -734,6 +797,68 @@ mod tests {
             for i in 0..r {
                 e2.linear_row_pret(x.row(i), &wt, &bias, rq(), &mut row);
                 assert_eq!(&row[..], full.row(i), "row {i} (r={r} k={k} c={c})");
+            }
+        });
+    }
+
+    #[test]
+    fn multi_sequence_linear_matches_per_sequence_rows() {
+        // §Prefill-batching: one fused GEMM over stacked sequences is
+        // bit-identical per row to independent linear_pret calls, and
+        // the accounting attributes everything per-sequence except the
+        // single shared weight stream.
+        forall("linear_pret_multi == per-seq linear_pret", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let n = g.usize_in(1, 5);
+            let (k, c) = (g.usize_in(1, 48), g.usize_in(1, 24));
+            let mut rng = SplitMix64::new(g.u64());
+            let lens: Vec<usize> = (0..n).map(|_| g.usize_in(0, 20)).collect();
+            let total: usize = lens.iter().sum();
+            let x = rand_mat(&mut rng, total, k);
+            let wt = rand_mat(&mut rng, c, k);
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+
+            let mut fused_eng = TileEngine::new(cfg);
+            let mut per_seq = vec![Activity::default(); n];
+            let mut shared = Activity::default();
+            let fused =
+                fused_eng.linear_pret_multi(&x, &lens, &wt, &bias, rq(), &mut per_seq, &mut shared);
+            assert_eq!(fused.shape(), (total, c));
+
+            // One weight stream for the whole stack: the R=0 pass is
+            // the stream alone (every row-dependent field zero).
+            let stream = activity_for_matmul(&cfg, MatmulDims { r: 0, k, c }, 0);
+            let mut indep_total = Activity::default();
+            let mut off = 0;
+            for (i, &len) in lens.iter().enumerate() {
+                let xi = x.block_padded(off, 0, len, k);
+                let mut e = TileEngine::new(cfg);
+                let want = e.linear_pret(&xi, &wt, &bias, rq());
+                for r in 0..len {
+                    assert_eq!(fused.row(off + r), want.row(r), "seq {i} row {r}");
+                }
+                // Per-sequence share == the independent pass minus its
+                // weight stream, field for field (an independent pass
+                // charges one stream even at len 0).
+                let mut share = per_seq[i];
+                share.weight_buf_writes += stream.weight_buf_writes;
+                assert_eq!(share, e.activity, "seq {i} activity share");
+                indep_total.add(&e.activity);
+                off += len;
+            }
+
+            if total > 0 {
+                assert_eq!(shared.weight_buf_writes, stream.weight_buf_writes);
+                assert_eq!(shared.cycles, 0, "the stream itself costs no row cycles");
+                // The engine total is exactly N-1 streams cheaper than
+                // N independent passes, identical everywhere else.
+                let mut engine_plus_saved = fused_eng.activity;
+                engine_plus_saved.weight_buf_writes += (n as u64 - 1) * stream.weight_buf_writes;
+                assert_eq!(engine_plus_saved, indep_total);
+            } else {
+                assert_eq!(shared, Activity::default(), "empty stack streams nothing");
+                // Independent empty passes still charge a stream each.
+                assert_eq!(indep_total.weight_buf_writes, n as u64 * stream.weight_buf_writes);
             }
         });
     }

@@ -145,6 +145,12 @@ pub struct ServerMetrics {
     pub prefills_completed: Counter,
     /// Completed incremental decode steps.
     pub decode_steps_completed: Counter,
+    /// Fused multi-session prefill passes executed (≥ 2 prefills
+    /// stacked into one projection GEMM per weight matrix).
+    pub fused_prefill_batches: Counter,
+    /// Prefills that rode a fused pass (each saved its own set of
+    /// projection weight streams).
+    pub fused_prefill_sessions: Counter,
 }
 
 impl ServerMetrics {
@@ -161,7 +167,7 @@ impl ServerMetrics {
         format!(
             "requests: accepted={} rejected={} completed={}\n\
              batches: formed={} mean_fill={:.2}\n\
-             decode: sessions={} prefills={} steps={}\n\
+             decode: sessions={} prefills={} (fused={} in {} passes) steps={}\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              sim: cycles={} energy={:.3}uJ",
             self.requests_accepted.get(),
@@ -171,6 +177,8 @@ impl ServerMetrics {
             self.mean_batch_fill(),
             self.sessions_opened.get(),
             self.prefills_completed.get(),
+            self.fused_prefill_sessions.get(),
+            self.fused_prefill_batches.get(),
             self.decode_steps_completed.get(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),

@@ -38,7 +38,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -105,6 +105,10 @@ impl ScopeState {
 struct Injector {
     queue: Mutex<InjectorQueue>,
     available: Condvar,
+    /// Pool threads currently draining a scope (occupancy signal for
+    /// the pool-aware batch sizing — callers participating in their
+    /// own scopes are not counted, only the pool's threads).
+    busy: AtomicUsize,
 }
 
 struct InjectorQueue {
@@ -157,6 +161,7 @@ impl WorkerPool {
         let injector = Arc::new(Injector {
             queue: Mutex::new(InjectorQueue { scopes: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
+            busy: AtomicUsize::new(0),
         });
         let handles = (0..threads)
             .map(|i| {
@@ -165,7 +170,9 @@ impl WorkerPool {
                     .name(format!("{name}-{i}"))
                     .spawn(move || {
                         while let Some(scope) = inj.next() {
+                            inj.busy.fetch_add(1, Ordering::Relaxed);
                             scope.drain();
+                            inj.busy.fetch_sub(1, Ordering::Relaxed);
                         }
                     })
                     .expect("spawn pool worker")
@@ -189,6 +196,26 @@ impl WorkerPool {
     /// `threads + 1` tasks of one scope progress concurrently).
     pub fn parallelism(&self) -> usize {
         self.threads
+    }
+
+    /// Pool threads currently executing scope work. A point-in-time
+    /// occupancy signal, not a synchronization primitive: a worker
+    /// counts as busy from scope pickup until its local drain returns
+    /// (callers draining their own scopes are not pool threads and are
+    /// never counted). Callers use this to *size* fan-out adaptively;
+    /// correctness never depends on the reading (placement is
+    /// invisible — see the determinism tests).
+    pub fn busy_workers(&self) -> usize {
+        self.injector.busy.load(Ordering::Relaxed).min(self.threads)
+    }
+
+    /// Pool threads not currently executing scope work — the adaptive
+    /// upper bound for new fan-out (ROADMAP: pool-aware batch sizing).
+    /// The submitting thread always participates in its own scope, so
+    /// a caller's usable parallelism is `idle_workers() + 1` even when
+    /// this returns 0.
+    pub fn idle_workers(&self) -> usize {
+        self.threads - self.busy_workers()
     }
 
     /// Execute `tasks` across the pool (and this thread), returning
@@ -361,6 +388,53 @@ mod tests {
         let mut x = 0;
         pool.run(vec![Box::new(|| x = 1) as Task, Box::new(|| ()) as Task]);
         assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn occupancy_reports_busy_and_idle_workers() {
+        // Block both pool workers (plus the submitting thread) on a
+        // shared barrier: occupancy must read 2 busy / 0 idle while
+        // they hold, and return to 0 busy / 2 idle after the scope
+        // completes. Polling loops bound the inherent scheduling
+        // nondeterminism — the assertions themselves are exact.
+        use std::sync::Barrier;
+        let pool = Arc::new(WorkerPool::new(2, "t-occupancy"));
+        assert_eq!(pool.busy_workers(), 0);
+        assert_eq!(pool.idle_workers(), 2);
+
+        // 3 tasks (2 workers + the caller) + this test thread.
+        let gate = Arc::new(Barrier::new(4));
+        let submitter = {
+            let pool = pool.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let tasks: Vec<Task> = (0..3)
+                    .map(|_| {
+                        let gate = gate.clone();
+                        Box::new(move || {
+                            gate.wait();
+                        }) as Task
+                    })
+                    .collect();
+                pool.run(tasks);
+            })
+        };
+
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.busy_workers() < 2 {
+            assert!(std::time::Instant::now() < deadline, "workers never picked up the scope");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.busy_workers(), 2);
+        assert_eq!(pool.idle_workers(), 0);
+
+        gate.wait(); // release all three tasks
+        submitter.join().unwrap();
+        while pool.busy_workers() > 0 {
+            assert!(std::time::Instant::now() < deadline, "busy count never drained");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.idle_workers(), 2);
     }
 
     #[test]

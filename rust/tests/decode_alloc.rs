@@ -112,4 +112,58 @@ fn decode_steps_do_not_allocate_after_warmup() {
         "run() allocated {run1} times — outputs + fan-out plumbing should stay <= 120; \
          did a per-call pack or spawn sneak back into the hot path?"
     );
+
+    // ---- Fused multi-session prefill (§Prefill-batching) ------------
+    // The fused path allocates during the prefill itself, necessarily
+    // (stacked activations, projection outputs, cache-free result
+    // matrices — exactly like the independent prefill it replaces).
+    // The steady-state contract it must NOT degrade is per-session
+    // decode: after a fused prefill warmed each session, every
+    // subsequent step on every fused engine performs ZERO heap
+    // allocations — the fusion touches only the prompt phase, never
+    // the step scratch sized at construction.
+    let mut fused: Vec<DecodeEngine> =
+        (0..3).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 3)).collect();
+    let prompts: Vec<_> = [4usize, 8, 6]
+        .iter()
+        .map(|&l| x.block_padded(0, 0, l, d.e))
+        .collect();
+    {
+        let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+        let inputs: Vec<_> = prompts.iter().collect();
+        let _ = ita::attention::fused_prefill(&mut refs, &inputs);
+    }
+    // Warm-up step per session (output buffer + lazy engine scratch),
+    // then rolled back so the measured steps do identical work.
+    let mut outs: Vec<Vec<i8>> = (0..3).map(|_| Vec::with_capacity(d.e)).collect();
+    for ((eng, out), p) in fused.iter_mut().zip(&mut outs).zip(&prompts) {
+        eng.step_into(x.row(p.rows()), out);
+        eng.truncate(p.rows());
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for ((eng, out), p) in fused.iter_mut().zip(&mut outs).zip(&prompts) {
+        for r in p.rows()..p.rows() + 8 {
+            eng.step_into(x.row(r), out);
+        }
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steps after a fused prefill allocated {} time(s) — the fused path leaked \
+         per-session steady-state allocation",
+        after - before
+    );
+    // The steps were real work: outputs match fresh independent
+    // engines driven identically.
+    for (i, (eng, p)) in fused.iter().zip(&prompts).enumerate() {
+        assert_eq!(eng.len(), p.rows() + 8, "session {i} cache fill");
+    }
+    let mut check = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+    check.prefill(&prompts[2]);
+    let mut want = Vec::new();
+    for r in prompts[2].rows()..prompts[2].rows() + 8 {
+        check.step_into(x.row(r), &mut want);
+    }
+    assert_eq!(outs[2], want);
 }

@@ -1,0 +1,152 @@
+//! Fused multi-session prefill parity — the §Prefill-batching
+//! correctness oracle.
+//!
+//! Property: for random session counts, ragged prompt lengths
+//! (including empty prompts), random model shapes, and **every kernel
+//! path this host can execute**, stacking N sessions' prefills into
+//! one GEMM per projection weight ([`ita::attention::fused_prefill`])
+//! is **bit-identical** to running the N prefills independently —
+//! outputs, per-head attention rows, KV-cache contents, and the first
+//! post-prefill decode steps. The weight-stream accounting (one stream
+//! per weight matrix per batch, regardless of N) is asserted at the
+//! same time, since it is the entire point of the fusion.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating property lives in a single #[test] (this binary's
+//! other tests do not touch the override) and restores auto-detection
+//! before returning — the same discipline `tests/kernel_parity.rs`
+//! uses.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{fused_prefill, gen_input, ModelDims};
+use ita::ita::simulator::{activity_for_matmul, MatmulDims};
+use ita::ita::ItaConfig;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+use ita::util::prop::forall;
+
+#[test]
+fn fused_prefill_bit_identical_across_sessions_lengths_and_paths() {
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+        forall(&format!("fused == sequential prefill [{}]", path.name()), 12, |g| {
+            let s = g.usize_in(2, 24);
+            let d = ModelDims {
+                s,
+                e: g.usize_in(1, 24),
+                p: g.usize_in(1, 12),
+                h: g.usize_in(1, 3),
+            };
+            let seed = g.u64();
+            let n = g.usize_in(1, 5);
+            // Ragged lengths, biased to include empties and full fills.
+            let lens: Vec<usize> = (0..n)
+                .map(|_| match g.usize_in(0, 4) {
+                    0 => 0,
+                    1 => s,
+                    _ => g.usize_in(1, s),
+                })
+                .collect();
+            let prompts: Vec<MatI8> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| gen_input(seed ^ (0x9e37 + i as u64), &d).block_padded(0, 0, l, d.e))
+                .collect();
+
+            let mut fused: Vec<DecodeEngine> =
+                (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, seed)).collect();
+            let mut indep: Vec<DecodeEngine> =
+                (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, seed)).collect();
+
+            let result = {
+                let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+                let inputs: Vec<&MatI8> = prompts.iter().collect();
+                fused_prefill(&mut refs, &inputs)
+            };
+
+            let next = gen_input(seed ^ 0xabcd, &d);
+            for i in 0..n {
+                indep[i].engine.reset_activity();
+                let want = indep[i].prefill(&prompts[i]);
+                assert_eq!(
+                    result.outputs[i].out, want.out,
+                    "session {i} output (n={n} lens={lens:?} d={d:?} path={})",
+                    path.name()
+                );
+                assert_eq!(result.outputs[i].attn, want.attn, "session {i} attention rows");
+                // Cache parity, directly on the stored K / Vᵀ content.
+                assert_eq!(fused[i].len(), indep[i].len(), "session {i} cache fill");
+                for h in 0..d.h {
+                    let (fc, ic) = (&fused[i].caches()[h], &indep[i].caches()[h]);
+                    for r in 0..fc.len() {
+                        assert_eq!(fc.k_row(r), ic.k_row(r), "session {i} head {h} K row {r}");
+                    }
+                    assert_eq!(fc.vt_mat(), ic.vt_mat(), "session {i} head {h} Vᵀ pack");
+                }
+                // First post-prefill step: the serving-visible proof
+                // the caches are interchangeable. (Activity parity has
+                // its own property below — here the engines keep
+                // stepping, which grows their counters.)
+                if lens[i] < s {
+                    assert_eq!(
+                        fused[i].step(next.row(lens[i])),
+                        indep[i].step(next.row(lens[i])),
+                        "session {i} first step after prefill"
+                    );
+                }
+            }
+        });
+    }
+    set_kernel_path(None);
+}
+
+#[test]
+fn fused_prefill_weight_stream_accounting_is_one_stream_per_weight() {
+    // The acceptance criterion, as a property over random shapes and
+    // session counts: a fused batch streams each of its 3·H + 1 weight
+    // matrices exactly once (`shared`), and each session's activity is
+    // its independent prefill minus exactly those streams — every
+    // other counter bit-equal.
+    forall("fused prefill streams each weight once", 20, |g| {
+        let s = g.usize_in(2, 20);
+        let d = ModelDims { s, e: g.usize_in(1, 20), p: g.usize_in(1, 10), h: g.usize_in(1, 3) };
+        let seed = g.u64();
+        let n = g.usize_in(1, 4);
+        // At least one non-empty prompt so the batch streams at all.
+        let lens: Vec<usize> =
+            (0..n).map(|i| if i == 0 { g.usize_in(1, s) } else { g.usize_in(0, s) }).collect();
+        let prompts: Vec<MatI8> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| gen_input(seed ^ (31 + i as u64), &d).block_padded(0, 0, l, d.e))
+            .collect();
+        let cfg = ItaConfig::tiny();
+        let mut fused: Vec<DecodeEngine> = (0..n).map(|_| DecodeEngine::new(cfg, d, seed)).collect();
+        let result = {
+            let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+            let inputs: Vec<&MatI8> = prompts.iter().collect();
+            fused_prefill(&mut refs, &inputs)
+        };
+
+        let proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.e, c: d.p }, 0);
+        let out_proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.h * d.p, c: d.e }, 0);
+        let streams_once = 3 * d.h as u64 * proj.weight_buf_writes + out_proj.weight_buf_writes;
+        assert_eq!(
+            result.shared.weight_buf_writes, streams_once,
+            "one stream per weight matrix, independent of n={n} (lens={lens:?} d={d:?})"
+        );
+        assert_eq!(result.shared.macs, 0, "streams carry no compute");
+        assert_eq!(result.shared.cycles, 0, "streams carry no row cycles");
+
+        for i in 0..n {
+            let mut indep = DecodeEngine::new(cfg, d, seed);
+            indep.prefill(&prompts[i]);
+            let mut fused_act = fused[i].engine.activity;
+            fused_act.weight_buf_writes += streams_once;
+            assert_eq!(
+                fused_act, indep.engine.activity,
+                "session {i}: share must be independent-minus-streams (lens={lens:?} d={d:?})"
+            );
+        }
+    });
+}
