@@ -12,11 +12,20 @@
 //! iteration replays an identical zero-allocation step at a fixed
 //! fill (`KvCache::truncate` leaves the prefix storage intact).
 
-use ita::attention::decode::DecodeEngine;
+//! §Step-batching addendum: the same file also measures the fused
+//! decode tick ([`FusedStepBatch`]) against N independent steps at
+//! N ∈ {1, 2, 4, 8} sessions on the Table-1 shape — one stacked
+//! row-GEMM per projection weight vs N R=1 passes (each of which
+//! pays a full M-row tile and its own weight stream). Emitted into
+//! `BENCH_decode.json` alongside the per-step rows, so the CI
+//! bench-smoke leg tracks both.
+
+use ita::attention::decode::{DecodeEngine, FusedStepBatch};
 use ita::attention::{gen_input, run_attention_causal, ModelDims};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
 use ita::util::bench::{bencher, black_box, JsonReport};
+use ita::util::pool::{Task, WorkerPool};
 
 fn main() {
     let mut b = bencher();
@@ -78,6 +87,103 @@ fn main() {
             step * 1e6,
             full * 1e6,
             full / step
+        );
+    }
+
+    // ---- fused tick vs independent steps (§Step-batching) -----------
+    // Table-1 shape, every session at the same mid-capacity fill (the
+    // fill only scales the per-session O(S) tails, which fusion leaves
+    // untouched; the amortized quantity — projection weight streams
+    // and R=1 tile padding — is fill-independent). Each timed
+    // iteration rolls every cache back and replays the identical tick
+    // (bit-identical across the two paths, pinned by
+    // tests/step_fused.rs). The independent baseline fans the N steps
+    // out across the SAME worker pool, one boxed task per session —
+    // exactly the coordinator's pre-fusion per-session path — so both
+    // sides get thread-level parallelism and the ratio isolates the
+    // fusion win (stacked GEMM + single weight stream), not pool
+    // usage. (At N=1 the fused tick still head-parallelizes its
+    // projections, which a lone step_into cannot — expect >1x there,
+    // not parity.)
+    let t1 = ModelDims { s: 256, e: 256, p: 64, h: 4 };
+    let shape = format!("S={},E={},P={},H={}", t1.s, t1.e, t1.p, t1.h);
+    let fill = t1.s / 2;
+    println!("\nfused vs independent decode steps, {shape}, fill {fill}\n");
+    let mut fused_rows = Vec::new();
+    for &n in &[1usize, 2, 4, 8] {
+        let mut engines: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(cfg, t1, 42)).collect();
+        let inputs: Vec<_> = (0..n as u64).map(|i| gen_input(7 + i, &t1)).collect();
+        for (eng, x) in engines.iter_mut().zip(&inputs) {
+            eng.prefill(&x.block_padded(0, 0, fill, t1.e));
+        }
+        let step_rows: Vec<Vec<i8>> = inputs.iter().map(|x| x.row(fill).to_vec()).collect();
+        let mut outs: Vec<Vec<i8>> = (0..n).map(|_| Vec::with_capacity(t1.e)).collect();
+
+        let indep = b
+            .bench(&format!("independent steps (pooled) @N={n}"), || {
+                let tasks: Vec<Task> = engines
+                    .iter_mut()
+                    .zip(&step_rows)
+                    .zip(&mut outs)
+                    .map(|((eng, row), out)| {
+                        Box::new(move || {
+                            eng.truncate(fill);
+                            eng.step_into(black_box(row), out);
+                        }) as Task
+                    })
+                    .collect();
+                WorkerPool::global().run(tasks);
+                black_box(outs[0][0]);
+            })
+            .median;
+        report.entry(
+            "independent steps (pooled)",
+            &format!("N={n},{shape}"),
+            b.results().last().unwrap(),
+            None,
+        );
+
+        let mut batch = FusedStepBatch::new();
+        let row_refs: Vec<&[i8]> = step_rows.iter().map(|r| &r[..]).collect();
+        // Session refs hoisted OUT of the timed closure: the fused
+        // side's steady-state contract is zero allocations per tick,
+        // and the measurement should reflect it. (The independent
+        // baseline DOES box one pool task per session per iteration —
+        // deliberately: that is the coordinator's real pre-fusion
+        // dispatch cost, part of what fusion removes.)
+        let mut refs: Vec<&mut DecodeEngine> = engines.iter_mut().collect();
+        let fused = b
+            .bench(&format!("fused step tick @N={n}"), || {
+                for eng in refs.iter_mut() {
+                    eng.truncate(fill);
+                }
+                batch.tick(&mut refs, black_box(&row_refs));
+                black_box(batch.out_row(0)[0]);
+            })
+            .median;
+        report.entry(
+            "fused step tick",
+            &format!("N={n},{shape}"),
+            b.results().last().unwrap(),
+            Some(indep / fused),
+        );
+        println!(
+            "  -> step batching speedup @N={n}: {:.2}x (one weight stream vs {n})\n",
+            indep / fused
+        );
+        fused_rows.push((n, fused, indep));
+    }
+
+    // EXPERIMENTS.md table (paste-ready).
+    println!("| sessions | fused tick | independent | speedup |");
+    println!("|---------:|-----------:|------------:|--------:|");
+    for (n, fused, indep) in fused_rows {
+        println!(
+            "| {n:>8} | {:>7.1} us | {:>8.1} us | {:>6.2}x |",
+            fused * 1e6,
+            indep * 1e6,
+            indep / fused
         );
     }
 

@@ -26,13 +26,13 @@
 //! counts allocations under a counting global allocator).
 
 use super::{
-    concat_heads, run_causal_heads, AttentionOutput, AttentionWeights, ModelDims, PackedWeights,
-    RequantConfig, TransposedWeights,
+    concat_heads, run_causal_heads, AttentionOutput, AttentionWeights, HeadWeights, ModelDims,
+    PackedWeights, RequantConfig, TransposedWeights,
 };
 use crate::ita::datapath::TileEngine;
 use crate::ita::{Activity, ItaConfig};
 use crate::util::mat::{MatI8, MatU8};
-use crate::util::pool::{Task, WorkerPool};
+use crate::util::pool::{DisjointSlots, IndexedScope, Task, WorkerPool};
 use std::sync::Arc;
 
 /// One head's append-only K/V store with fixed capacity.
@@ -312,21 +312,16 @@ impl DecodeEngine {
             self.engine.linear_row_pret(x_row, wqt, &hw.bq, rq.q, &mut self.q_row);
             self.engine.linear_row_pret(x_row, wkt, &hw.bk, rq.k, &mut self.k_row);
             self.engine.linear_row_pret(x_row, wvt, &hw.bv, rq.v, &mut self.v_row);
-            self.caches[h].push(&self.k_row, &self.v_row);
-            let cache = &self.caches[h];
-            self.engine.logits_row_cached(
+            attend_tail(
+                &mut self.engine,
+                &mut self.caches[h],
+                hw,
+                &rq,
                 &self.q_row,
-                cache.k_mat(),
-                cache.len(),
-                rq.qk,
+                &self.k_row,
+                &self.v_row,
                 &mut self.logits,
-            );
-            self.engine.softmax_row(&self.logits, &mut self.attn_rows[h]);
-            self.engine.av_row_cached(
-                &self.attn_rows[h],
-                cache.vt_mat(),
-                &hw.bav,
-                rq.av,
+                &mut self.attn_rows[h],
                 &mut self.concat[h * p..(h + 1) * p],
             );
         }
@@ -345,6 +340,77 @@ impl DecodeEngine {
         self.step_into(x_row, &mut out);
         out
     }
+
+    /// The attend half of one step, from **pre-projected** per-head
+    /// Q/K/V rows (§Step-batching): the fused tick computed this
+    /// step's q/k/v in one stacked R=N GEMM per weight; `qkv[h]` holds
+    /// that batch-wide N×P stack for head `h` and `row` is this
+    /// session's row in it. Runs everything per-session — cache
+    /// append, logit row against the cached keys, streaming softmax,
+    /// A·V against the cached Vᵀ pack — through the exact same tail
+    /// ([`attend_tail`]) as [`DecodeEngine::step_into`], so caches,
+    /// attention rows, and the concat scratch come out bit-identical.
+    /// The concatenated head outputs land in [`DecodeEngine::last_concat`];
+    /// the caller owns the (fused) output projection. Only the tail's
+    /// activity lands on `self.engine` — the caller attributes this
+    /// session's share of the fused projection passes.
+    pub fn step_from_projected(&mut self, qkv: &[(MatI8, MatI8, MatI8)], row: usize) {
+        assert_eq!(qkv.len(), self.dims.h, "one stacked Q/K/V triple per head");
+        assert!(self.len() < self.capacity(), "KV cache full");
+        let rq = self.requants;
+        let p = self.dims.p;
+        for (h, ((q, k, v), hw)) in qkv.iter().zip(self.weights.heads.iter()).enumerate() {
+            assert!(row < q.rows(), "head {h} row {row} beyond stacked Q rows");
+            assert_eq!(k.rows(), q.rows(), "head {h} K rows");
+            assert_eq!(v.rows(), q.rows(), "head {h} V rows");
+            assert_eq!(q.cols(), p, "head {h} projection width");
+            attend_tail(
+                &mut self.engine,
+                &mut self.caches[h],
+                hw,
+                &rq,
+                q.row(row),
+                k.row(row),
+                v.row(row),
+                &mut self.logits,
+                &mut self.attn_rows[h],
+                &mut self.concat[h * p..(h + 1) * p],
+            );
+        }
+    }
+
+    /// Concatenated head outputs (H·P) of the most recent step — the
+    /// input row of the output projection. Exposed for the fused-step
+    /// caller, which stacks these rows across sessions for the one
+    /// shared output projection.
+    pub fn last_concat(&self) -> &[i8] {
+        &self.concat
+    }
+}
+
+/// The per-head O(S) cache-attention tail of one decode step: cache
+/// append, logit row vs the cached keys, streaming softmax, A·V vs
+/// the cached Vᵀ pack. ONE body shared by [`DecodeEngine::step_into`]
+/// (which projected q/k/v itself) and
+/// [`DecodeEngine::step_from_projected`] (whose projections came from
+/// the fused stacked GEMM) — bit-identical tails by construction.
+#[allow(clippy::too_many_arguments)]
+fn attend_tail(
+    engine: &mut TileEngine,
+    cache: &mut KvCache,
+    hw: &HeadWeights,
+    rq: &RequantConfig,
+    q_row: &[i8],
+    k_row: &[i8],
+    v_row: &[i8],
+    logits: &mut Vec<i8>,
+    attn_row: &mut Vec<u8>,
+    concat_slot: &mut [i8],
+) {
+    cache.push(k_row, v_row);
+    engine.logits_row_cached(q_row, cache.k_mat(), cache.len(), rq.qk, logits);
+    engine.softmax_row(logits, attn_row);
+    engine.av_row_cached(attn_row, cache.vt_mat(), &hw.bav, rq.av, concat_slot);
 }
 
 /// Result of one [`fused_prefill`] pass.
@@ -552,6 +618,258 @@ pub fn fused_prefill(
         });
     }
     FusedPrefillResult { outputs, shared }
+}
+
+/// Reusable scratch + entry point of the fused decode tick
+/// (§Step-batching): N sessions' pending token rows, all against the
+/// **same** [`PackedWeights`], stacked into one N-row matrix and run
+/// through **one** blocked GEMM per projection weight
+/// ([`TileEngine::linear_rows_pret_multi`]) instead of N separate
+/// R=1 row passes — the decode-side completion of the fused-prefill
+/// rework (N concurrent sessions used to re-stream all 3·H + 1 weight
+/// matrices every tick).
+///
+/// # Dataflow per tick
+///
+/// 1. Stack the N token rows into `x_all` (N×E).
+/// 2. **Stage 1** — per head, one task on the [`WorkerPool`]: three
+///    fused R=N GEMMs (Wq/Wk/Wv) producing the stacked N×P Q/K/V.
+/// 3. **Stage 2** — per session, one task: the O(S) cache-attention
+///    tail on the session's own engine
+///    ([`DecodeEngine::step_from_projected`]): cache append, logit
+///    row, streaming softmax, A·V.
+/// 4. **Stage 3** — gather the concat rows (N×H·P) and run the one
+///    fused output projection (Wo), scattering each session's output
+///    row into `out_all`.
+///
+/// Everything is **bit-identical** to N independent
+/// [`DecodeEngine::step_into`] calls — outputs, attention rows, cache
+/// bytes, and every subsequent step — pinned by `tests/step_fused.rs`
+/// across ragged cache fills and all dispatch paths.
+///
+/// Accounting mirrors the fused-prefill split: each engine's activity
+/// is reset and left holding exactly its session's share (its tail
+/// plus its R=1 slice of every projection pass, streams excluded);
+/// the 3·H + 1 weight streams are charged **once per tick** into
+/// [`FusedStepBatch::shared`].
+///
+/// §Perf: every buffer lives here and is grown on first use, and the
+/// pool fan-outs ride the allocation-free [`IndexedScope`] path — a
+/// steady-state tick performs **zero heap allocations**
+/// (`tests/decode_alloc.rs`), so the coordinator keeps one of these
+/// per worker and ticks at line rate.
+pub struct FusedStepBatch {
+    /// N×E stacked token rows.
+    x_all: MatI8,
+    /// Per head: the batch-wide stacked N×P Q/K/V of stage 1.
+    qkv: Vec<(MatI8, MatI8, MatI8)>,
+    /// Per head: the task-private engine running its three GEMMs.
+    head_engines: Vec<TileEngine>,
+    /// Per head: (per-session shares, stream-only share) of stage 1.
+    head_acc: Vec<(Vec<Activity>, Activity)>,
+    /// N×(H·P) gathered concat rows; N×E fused output.
+    concat_all: MatI8,
+    out_all: MatI8,
+    /// Merged per-session projection shares (stages 1 + 3).
+    per_seq: Vec<Activity>,
+    shared: Activity,
+    /// Engine of the fused output projection (created on first tick —
+    /// the ItaConfig arrives with the engines).
+    out_engine: Option<TileEngine>,
+    /// Reusable allocation-free fan-out handle.
+    scope: IndexedScope,
+}
+
+impl FusedStepBatch {
+    pub fn new() -> Self {
+        Self {
+            x_all: MatI8::zeros(0, 0),
+            qkv: Vec::new(),
+            head_engines: Vec::new(),
+            head_acc: Vec::new(),
+            concat_all: MatI8::zeros(0, 0),
+            out_all: MatI8::zeros(0, 0),
+            per_seq: Vec::new(),
+            shared: Activity::default(),
+            out_engine: None,
+            scope: IndexedScope::new(),
+        }
+    }
+
+    /// Run one fused tick: session `i` consumes token row `rows[i]`.
+    /// Afterwards [`FusedStepBatch::out_row`]`(i)` holds its output
+    /// row, [`FusedStepBatch::shared`] the once-per-tick weight-stream
+    /// activity, and each engine's activity its own share (see the
+    /// type docs).
+    pub fn tick(&mut self, engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) {
+        let n = engines.len();
+        assert_eq!(n, rows.len(), "one token row per session");
+        assert!(n >= 1, "fused step needs at least one session");
+        let dims = engines[0].dims;
+        let cfg = engines[0].engine.cfg;
+        let rq = engines[0].requants;
+        let weights = engines[0].weights.clone();
+        let weights_t = engines[0].weights_t.clone();
+        for (i, (e, row)) in engines.iter().zip(rows).enumerate() {
+            assert!(
+                Arc::ptr_eq(&e.weights, &weights) && Arc::ptr_eq(&e.weights_t, &weights_t),
+                "fused step requires every session to share one packed model (session {i})"
+            );
+            // One tile geometry for the per-session shares — a session
+            // with a different ItaConfig would be silently mis-charged.
+            assert!(
+                e.engine.cfg == cfg,
+                "fused step requires every session to share one ItaConfig (session {i})"
+            );
+            assert!(e.len() < e.capacity(), "KV cache full (session {i})");
+            assert_eq!(row.len(), dims.e, "token row width (session {i})");
+        }
+
+        // Scratch sizing: allocates only while n / dims still grow —
+        // a steady-state tick reuses everything below.
+        self.x_all.reset_for_overwrite(n, dims.e);
+        for (i, row) in rows.iter().enumerate() {
+            self.x_all.row_mut(i).copy_from_slice(row);
+        }
+        if self.head_engines.first().map(|e| e.cfg != cfg).unwrap_or(false)
+            || self.out_engine.as_ref().map(|e| e.cfg != cfg).unwrap_or(false)
+        {
+            // Scratch reused across models with different tile
+            // geometry (tests; multi-model hosts): rebuild engines.
+            self.head_engines.clear();
+            self.out_engine = None;
+        }
+        while self.qkv.len() < dims.h {
+            self.qkv.push((MatI8::zeros(0, 0), MatI8::zeros(0, 0), MatI8::zeros(0, 0)));
+        }
+        while self.head_engines.len() < dims.h {
+            self.head_engines.push(TileEngine::new(cfg));
+        }
+        while self.head_acc.len() < dims.h {
+            self.head_acc.push((Vec::new(), Activity::default()));
+        }
+        for (per_seq, stream) in &mut self.head_acc[..dims.h] {
+            per_seq.clear();
+            per_seq.resize(n, Activity::default());
+            *stream = Activity::default();
+        }
+        self.shared = Activity::default();
+
+        // ---- Stage 1: one fused R=N GEMM per projection weight ------
+        // One index per head; its three weight matrices are streamed
+        // back to back on its persistent engine. Indexed fan-out:
+        // executors claim head indices, DisjointSlots turns claim
+        // uniqueness into disjoint &mut access (no boxed tasks — the
+        // zero-alloc contract).
+        {
+            let qkv = DisjointSlots::new(&mut self.qkv[..dims.h]);
+            let engs = DisjointSlots::new(&mut self.head_engines[..dims.h]);
+            let accs = DisjointSlots::new(&mut self.head_acc[..dims.h]);
+            let x_all = &self.x_all;
+            let (w, wt) = (&weights, &weights_t);
+            WorkerPool::global().run_indexed(&self.scope, dims.h, &|h| {
+                // SAFETY: run_indexed hands index h to exactly one
+                // executor; each slot is touched only at its own h.
+                let (q, k, v) = unsafe { qkv.slot(h) };
+                let eng = unsafe { engs.slot(h) };
+                let (per_seq, stream) = unsafe { accs.slot(h) };
+                eng.reset_activity();
+                let hw = &w.heads[h];
+                let (wqt, wkt, wvt) = &wt.heads[h];
+                eng.linear_rows_pret_multi(x_all, wqt, &hw.bq, rq.q, per_seq, stream, q);
+                eng.linear_rows_pret_multi(x_all, wkt, &hw.bk, rq.k, per_seq, stream, k);
+                eng.linear_rows_pret_multi(x_all, wvt, &hw.bv, rq.v, per_seq, stream, v);
+            });
+        }
+        self.per_seq.clear();
+        self.per_seq.resize(n, Activity::default());
+        for (per_seq_h, stream_h) in &self.head_acc[..dims.h] {
+            for (acc, a) in self.per_seq.iter_mut().zip(per_seq_h) {
+                acc.add(a);
+            }
+            self.shared.add(stream_h);
+        }
+
+        // ---- Stage 2: per-session O(S) cache-attention tails --------
+        // One index per session; each executor owns that session's
+        // engine exclusively and reads the shared Q/K/V stacks.
+        {
+            let qkv = &self.qkv[..dims.h];
+            let engs = DisjointSlots::new(engines);
+            WorkerPool::global().run_indexed(&self.scope, n, &|i| {
+                // SAFETY: one executor per session index.
+                let eng = unsafe { engs.slot(i) };
+                eng.engine.reset_activity();
+                eng.step_from_projected(qkv, i);
+            });
+        }
+        self.concat_all.reset_for_overwrite(n, dims.h * dims.p);
+        for (i, eng) in engines.iter().enumerate() {
+            self.concat_all.row_mut(i).copy_from_slice(eng.last_concat());
+        }
+
+        // ---- Stage 3: the one fused output projection ---------------
+        let out_engine = self.out_engine.get_or_insert_with(|| TileEngine::new(cfg));
+        out_engine.reset_activity();
+        out_engine.linear_rows_pret_multi(
+            &self.concat_all,
+            &weights_t.wot,
+            &weights.bo,
+            rq.o,
+            &mut self.per_seq,
+            &mut self.shared,
+            &mut self.out_all,
+        );
+
+        // Attribute each session's projection shares onto its engine
+        // (the tail activity is already there).
+        for (i, eng) in engines.iter_mut().enumerate() {
+            eng.engine.activity.add(&self.per_seq[i]);
+        }
+    }
+
+    /// Session `i`'s output row (length E) of the most recent tick.
+    pub fn out_row(&self, i: usize) -> &[i8] {
+        self.out_all.row(i)
+    }
+
+    /// The batch-shared activity of the most recent tick: the
+    /// once-per-tick projection weight streams (3·H + 1 matrices,
+    /// `weight_buf_writes` only) — the decode mirror of
+    /// [`FusedPrefillResult::shared`].
+    pub fn shared(&self) -> &Activity {
+        &self.shared
+    }
+}
+
+impl Default for FusedStepBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Result of one [`fused_step`] convenience call.
+pub struct FusedStepResult {
+    /// Per-session output rows (length E each), in input order —
+    /// bit-identical to what each session's independent
+    /// [`DecodeEngine::step`] would have returned.
+    pub outputs: Vec<Vec<i8>>,
+    /// The once-per-tick weight-stream activity (see
+    /// [`FusedStepBatch::shared`]).
+    pub shared: Activity,
+}
+
+/// Convenience wrapper mirroring [`fused_prefill`]: one fused decode
+/// tick through a throwaway [`FusedStepBatch`]. Serving paths that
+/// tick repeatedly should hold a `FusedStepBatch` instead (its warm
+/// scratch makes steady-state ticks allocation-free).
+pub fn fused_step(engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) -> FusedStepResult {
+    let mut batch = FusedStepBatch::new();
+    batch.tick(engines, rows);
+    FusedStepResult {
+        outputs: (0..rows.len()).map(|i| batch.out_row(i).to_vec()).collect(),
+        shared: batch.shared,
+    }
 }
 
 #[cfg(test)]
@@ -821,6 +1139,192 @@ mod tests {
                 "session {i}: fused share must be independent-minus-streams exactly"
             );
         }
+    }
+
+    #[test]
+    fn fused_step_bit_identical_to_independent_steps() {
+        // Three sessions at ragged cache fills (incl. one at S=1 right
+        // after prefill and one empty): a fused tick's outputs,
+        // attention rows, cache fills, and the NEXT independent step
+        // all equal the per-session step_into path.
+        let d = dims();
+        let lens = [5usize, 1, 0];
+        let mut fused: Vec<DecodeEngine> =
+            (0..3).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 91)).collect();
+        let mut indep: Vec<DecodeEngine> =
+            (0..3).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 91)).collect();
+        for (i, &l) in lens.iter().enumerate() {
+            let prompt = gen_input(70 + i as u64, &d).block_padded(0, 0, l, d.e);
+            fused[i].prefill(&prompt);
+            indep[i].prefill(&prompt);
+        }
+        let x = gen_input(88, &d);
+        let rows: Vec<&[i8]> = (0..3).map(|i| x.row(lens[i])).collect();
+
+        let result = {
+            let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+            fused_step(&mut refs, &rows)
+        };
+
+        let mut want = Vec::new();
+        for i in 0..3 {
+            indep[i].step_into(rows[i], &mut want);
+            assert_eq!(result.outputs[i], want, "session {i} output");
+            assert_eq!(fused[i].len(), indep[i].len(), "session {i} cache fill");
+            for h in 0..d.h {
+                assert_eq!(
+                    fused[i].last_attn_row(h),
+                    indep[i].last_attn_row(h),
+                    "session {i} head {h} attention row"
+                );
+            }
+            // The serving-visible cache proof: the following step
+            // agrees bit for bit.
+            let next = x.row(lens[i] + 1);
+            assert_eq!(fused[i].step(next), indep[i].step(next), "session {i} next step");
+        }
+    }
+
+    #[test]
+    fn fused_step_batch_reuses_scratch_across_ticks() {
+        // One FusedStepBatch driving several consecutive ticks (the
+        // coordinator's steady state): every tick stays bit-identical
+        // to the independent path as the caches grow.
+        let d = dims();
+        let n = 3;
+        let mut fused: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 93)).collect();
+        let mut indep: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 93)).collect();
+        for (i, eng) in fused.iter_mut().chain(indep.iter_mut()).enumerate() {
+            let prompt = gen_input(40 + (i % n) as u64, &d).block_padded(0, 0, 2 + i % n, d.e);
+            eng.prefill(&prompt);
+        }
+        let mut batch = FusedStepBatch::new();
+        let mut want = Vec::new();
+        for t in 0..6u64 {
+            let x = gen_input(200 + t, &d);
+            let rows: Vec<&[i8]> = (0..n).map(|i| x.row(i)).collect();
+            {
+                let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+                batch.tick(&mut refs, &rows);
+            }
+            for i in 0..n {
+                indep[i].step_into(rows[i], &mut want);
+                assert_eq!(batch.out_row(i), &want[..], "tick {t} session {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_streams_each_weight_once() {
+        // The acceptance assertion, at the unit level: one tick
+        // charges exactly one weight stream per 3·H + 1 weight
+        // matrices into `shared`, and each session's engine activity
+        // equals its independent step minus exactly those streams —
+        // every other counter bit-equal.
+        use crate::ita::simulator::{activity_for_matmul, MatmulDims};
+        let d = dims();
+        let n = 3;
+        let cfg = ItaConfig::tiny();
+        let lens = [4usize, 1, 7];
+        let mut fused: Vec<DecodeEngine> = (0..n).map(|_| DecodeEngine::new(cfg, d, 95)).collect();
+        let mut indep: Vec<DecodeEngine> = (0..n).map(|_| DecodeEngine::new(cfg, d, 95)).collect();
+        for (i, &l) in lens.iter().enumerate() {
+            let prompt = gen_input(50 + i as u64, &d).block_padded(0, 0, l, d.e);
+            fused[i].prefill(&prompt);
+            indep[i].prefill(&prompt);
+        }
+        let x = gen_input(77, &d);
+        let rows: Vec<&[i8]> = (0..n).map(|i| x.row(lens[i])).collect();
+        let result = {
+            let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+            fused_step(&mut refs, &rows)
+        };
+
+        let proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.e, c: d.p }, 0);
+        let out_proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.h * d.p, c: d.e }, 0);
+        let streams_once =
+            3 * d.h as u64 * proj.weight_buf_writes + out_proj.weight_buf_writes;
+        assert_eq!(result.shared.weight_buf_writes, streams_once);
+        assert_eq!(result.shared.macs, 0);
+        assert_eq!(result.shared.cycles, 0);
+
+        let mut out = Vec::new();
+        for i in 0..n {
+            indep[i].engine.reset_activity();
+            indep[i].step_into(rows[i], &mut out);
+            let mut fused_act = fused[i].engine.activity;
+            fused_act.weight_buf_writes += streams_once;
+            assert_eq!(
+                fused_act, indep[i].engine.activity,
+                "session {i}: fused share must be independent-minus-streams exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_step_single_session_matches_plain_step() {
+        // N=1 is legal (the coordinator never routes it here, but the
+        // library contract holds): one session's fused tick equals its
+        // plain step, with the stream split still moved to `shared`.
+        let d = dims();
+        let mut a = DecodeEngine::new(ItaConfig::tiny(), d, 97);
+        let mut b = DecodeEngine::new(ItaConfig::tiny(), d, 97);
+        let x = gen_input(98, &d);
+        a.prefill(&x.block_padded(0, 0, 6, d.e));
+        b.prefill(&x.block_padded(0, 0, 6, d.e));
+        let result = {
+            let mut refs: Vec<&mut DecodeEngine> = vec![&mut a];
+            fused_step(&mut refs, &[x.row(6)])
+        };
+        assert_eq!(result.outputs[0], b.step(x.row(6)));
+        assert!(result.shared.weight_buf_writes > 0);
+    }
+
+    #[test]
+    fn step_from_projected_matches_step_into() {
+        // Hand-projecting q/k/v and feeding the attend half must leave
+        // the engine (cache, attention rows, concat scratch) identical
+        // to the self-projecting step.
+        let d = dims();
+        let mut plain = DecodeEngine::new(ItaConfig::tiny(), d, 99);
+        let mut proj = DecodeEngine::new(ItaConfig::tiny(), d, 99);
+        let x = gen_input(100, &d);
+        plain.prefill(&x.block_padded(0, 0, 5, d.e));
+        proj.prefill(&x.block_padded(0, 0, 5, d.e));
+        let row = x.row(5);
+        let mut out = Vec::new();
+        plain.step_into(row, &mut out);
+
+        let rq = proj.requants;
+        let mut eng = TileEngine::new(ItaConfig::tiny());
+        let x_row = MatI8::from_vec(1, d.e, row.to_vec());
+        let qkv: Vec<(MatI8, MatI8, MatI8)> = proj
+            .weights
+            .heads
+            .iter()
+            .zip(&proj.weights_t.heads)
+            .map(|(hw, (wqt, wkt, wvt))| {
+                (
+                    eng.linear_pret(&x_row, wqt, &hw.bq, rq.q),
+                    eng.linear_pret(&x_row, wkt, &hw.bk, rq.k),
+                    eng.linear_pret(&x_row, wvt, &hw.bv, rq.v),
+                )
+            })
+            .collect();
+        proj.step_from_projected(&qkv, 0);
+        assert_eq!(proj.last_concat(), plain.last_concat(), "concat scratch");
+        for h in 0..d.h {
+            assert_eq!(proj.last_attn_row(h), plain.last_attn_row(h), "head {h}");
+        }
+        // Output projection over the concat equals the plain output.
+        let mut got = Vec::new();
+        eng.linear_row_pret(proj.last_concat(), &proj.weights_t.wot, &proj.weights.bo, rq.o, &mut got);
+        assert_eq!(got, out);
+        // Caches agree: the next step from both engines matches.
+        assert_eq!(proj.len(), plain.len());
+        assert_eq!(proj.step(x.row(6)), plain.step(x.row(6)));
     }
 
     #[test]

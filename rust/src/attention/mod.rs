@@ -11,13 +11,14 @@ pub mod decode;
 pub mod encoder;
 pub mod schedule;
 
-// The fused multi-session prefill entry points (§Prefill-batching):
-// stack N sessions' prompt rows into one GEMM per projection weight.
+// The fused multi-session entry points (§Prefill-batching /
+// §Step-batching): stack N sessions' prompt rows (prefill) or pending
+// token rows (decode tick) into one GEMM per projection weight.
 // Re-exported here because they operate at the same altitude as
 // `AttentionExecutor`/`run_attention_causal` — whole-model passes over
 // the packed weight set — even though the per-session state they fill
 // lives in `decode`.
-pub use decode::{fused_prefill, FusedPrefillResult};
+pub use decode::{fused_prefill, fused_step, FusedPrefillResult, FusedStepBatch, FusedStepResult};
 
 use crate::ita::datapath::TileEngine;
 use crate::ita::requant::RequantParams;

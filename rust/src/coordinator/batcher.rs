@@ -17,6 +17,17 @@
 //! wait for. A batch containing only eager items flushes on the very
 //! first poll and zeroes the dispatcher's sleep hint; one patient item
 //! restores the normal deadline discipline for the whole batch.
+//!
+//! Decode **steps** staying patient is load-bearing for
+//! §Step-batching, not an accident: every step of a *distinct*
+//! session that joins the window rides the same fused tick downstream
+//! (one stacked row-GEMM per weight for the whole group), so waiting
+//! converts directly into weight-stream amortization. A step can
+//! never fuse with its *own* session's next step anyway — the
+//! submit-side busy flag forbids a second in-flight step per session,
+//! which is also what keeps same-session ordering trivially safe
+//! under fusion. Prefills remain the only eager class: their fusion
+//! peers are whatever is already queued, never future arrivals.
 
 use std::time::{Duration, Instant};
 
@@ -306,6 +317,35 @@ mod tests {
         b.push_eager(1, t0);
         assert_eq!(b.poll(t0), Some(vec![1]));
         assert!(b.time_to_deadline(t0).is_none(), "stale zero hint after flush");
+    }
+
+    #[test]
+    fn step_burst_coalesces_within_the_window_for_fusion() {
+        // §Step-batching: patient items (decode steps) arriving within
+        // the window form ONE batch — the group the downstream fused
+        // tick stacks into a single row-GEMM per weight. An early poll
+        // must not split them; the deadline (or the size trigger)
+        // flushes them together.
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(100, max_wait);
+        let t0 = Instant::now();
+        for (i, dt) in [0u64, 2, 4, 6].into_iter().enumerate() {
+            assert!(b.push(i, t0 + Duration::from_millis(dt)).is_none());
+            assert!(
+                b.poll(t0 + Duration::from_millis(dt)).is_none(),
+                "window split a coalescing step burst"
+            );
+        }
+        assert_eq!(
+            b.poll(t0 + Duration::from_millis(11)),
+            Some(vec![0, 1, 2, 3]),
+            "the whole burst flushes as one fusable group"
+        );
+        // And the size trigger still flushes a full burst immediately.
+        let mut b = Batcher::new(3, max_wait);
+        b.push(10, t0);
+        b.push(11, t0);
+        assert_eq!(b.push(12, t0), Some(vec![10, 11, 12]));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::request::{
     DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
     SubmitError,
 };
-use crate::attention::decode::{fused_prefill, DecodeEngine};
+use crate::attention::decode::{fused_prefill, DecodeEngine, FusedStepBatch};
 use crate::attention::{AttentionExecutor, PackedWeights};
 use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
@@ -367,6 +367,9 @@ fn spawn_worker(
                 config.model.dims,
                 config.model.seed,
             )];
+            // Fused-tick scratch (§Step-batching): one per worker, so
+            // steady-state decode batches tick without allocating.
+            let mut step_batch = FusedStepBatch::new();
             loop {
                 // Take one batch (workers race on the shared receiver).
                 let batch = {
@@ -391,7 +394,7 @@ fn spawn_worker(
                     process_batch(&config, &mut pool, infer, &metrics);
                 }
                 if !decode.is_empty() {
-                    process_decode_batch(&config, &sessions, decode, &metrics);
+                    process_decode_batch(&config, &sessions, decode, &metrics, &mut step_batch);
                 }
             }
         })
@@ -413,24 +416,36 @@ type DecodeDone =
 /// item in a batch belongs to a *different* session and owns a
 /// disjoint engine.
 ///
-/// The **prefill-aggregation stage** (§Prefill-batching): when the
-/// batch holds ≥ 2 pending prefills (necessarily against the same
-/// [`PackedWeights`]: the server serves one model), they execute as
-/// one [`fused_prefill`] pass — a single projection GEMM per weight
-/// matrix instead of one per session. The remaining items (steps, or
-/// a lone prefill) fan out per session across the persistent
-/// [`WorkerPool`] exactly like the infer path, in the SAME pool scope
-/// as the fused task, so a batch's O(S) steps never serialize behind
-/// a long multi-session prefill (round-robin by batch index,
-/// responses merged in submission order; §Perf: no thread spawn per
-/// batch). Energy is charged per operation from each engine's own
-/// incremental-dataflow [`Activity`]; fused prefills additionally
-/// carry an even split of the once-per-batch weight-stream energy.
+/// Two aggregation stages peel fusable groups off the batch:
+///
+/// * **Prefill aggregation** (§Prefill-batching): ≥ 2 pending
+///   prefills (necessarily against the same [`PackedWeights`]: the
+///   server serves one model) execute as one [`fused_prefill`] pass —
+///   a single projection GEMM per weight matrix instead of one per
+///   session.
+/// * **Step aggregation** (§Step-batching): ≥ 2 pending decode steps
+///   — all of *distinct* sessions, by the busy flag, so their rows
+///   stack — execute as one [`FusedStepBatch::tick`]: a single
+///   stacked row-GEMM per weight matrix instead of N R=1 passes, with
+///   the per-session O(S) cache-attention tails fanned out inside the
+///   tick. Same-session ordering is untouched: a session's next step
+///   cannot even be submitted until this one's response lands.
+///
+/// The remaining items (a lone prefill, a lone step) fan out per
+/// session across the persistent [`WorkerPool`] exactly like the
+/// infer path, in the SAME pool scope as the fused tasks, so nothing
+/// serializes behind a long multi-session pass (round-robin by batch
+/// index, responses merged in submission order; §Perf: no thread
+/// spawn per batch). Energy is charged per operation from each
+/// engine's own incremental-dataflow [`Activity`]; fused members
+/// additionally carry an even split of their group's once-per-batch
+/// weight-stream energy.
 fn process_decode_batch(
     config: &SystemConfig,
     sessions: &SessionTable,
     batch: Vec<DecodeJob>,
     metrics: &ServerMetrics,
+    step_batch: &mut FusedStepBatch,
 ) {
     let b = batch.len();
 
@@ -447,16 +462,31 @@ fn process_decode_batch(
         }
     }
 
-    // Prefill-aggregation stage: peel off the batch's prefills when
-    // there are at least two to fuse; a lone prefill stays on the
-    // per-session path (fusing it would only add stacking overhead).
-    let n_prefills =
-        items.iter().filter(|(req, ..)| matches!(req.input, DecodeInput::Prefill(_))).count();
-    let (prefills, rest): (Vec<DecodeItem>, Vec<DecodeItem>) = if n_prefills >= 2 {
-        items.into_iter().partition(|(req, ..)| matches!(req.input, DecodeInput::Prefill(_)))
-    } else {
-        (Vec::new(), items)
-    };
+    // Aggregation stages: peel off the batch's prefills / steps when
+    // there are at least two of a kind to fuse; a lone member stays on
+    // the per-session path (fusing it would only add stacking
+    // overhead).
+    let is_prefill = |req: &DecodeRequest| matches!(req.input, DecodeInput::Prefill(_));
+    let n_prefills = items.iter().filter(|(req, ..)| is_prefill(req)).count();
+    let n_steps = items.len() - n_prefills;
+    let fuse_prefills = n_prefills >= 2;
+    let fuse_steps = n_steps >= 2;
+    let mut prefills: Vec<DecodeItem> = Vec::new();
+    let mut steps: Vec<DecodeItem> = Vec::new();
+    let mut rest: Vec<DecodeItem> = Vec::new();
+    for item in items {
+        if is_prefill(&item.0) {
+            if fuse_prefills {
+                prefills.push(item);
+            } else {
+                rest.push(item);
+            }
+        } else if fuse_steps {
+            steps.push(item);
+        } else {
+            rest.push(item);
+        }
+    }
 
     fn execute_one((req, tx, mut engine): DecodeItem) -> DecodeDone {
         engine.engine.reset_activity();
@@ -472,13 +502,13 @@ fn process_decode_batch(
         (req, tx, engine, activity, output, 0.0)
     }
 
-    // One pool scope runs the fused-prefill pass AND the per-session
-    // fan-out concurrently — every item owns a disjoint engine, and a
-    // batch's O(S) steps must not serialize behind a long multi-session
-    // prefill. The fused task's own nested fan-outs are deadlock-free
-    // by the pool's caller-participation contract. Per-item results
-    // keep their submission indices and merge back in order below
-    // (placement-invariant).
+    // One pool scope runs the fused-prefill pass, the fused step tick,
+    // AND the per-session fan-out concurrently — every item owns a
+    // disjoint engine, and a batch's lone items must not serialize
+    // behind a long multi-session pass. The fused tasks' own nested
+    // fan-outs are deadlock-free by the pool's caller-participation
+    // contract. Per-item results keep their submission indices and
+    // merge back in order below (placement-invariant).
     let n_rest = rest.len();
     let want = n_rest.min(max_batch_parallelism()).max(1);
     let mut assigned: Vec<Vec<(usize, DecodeItem)>> = (0..want).map(|_| Vec::new()).collect();
@@ -487,6 +517,7 @@ fn process_decode_batch(
     }
     let mut outs: Vec<Vec<(usize, DecodeDone)>> = (0..want).map(|_| Vec::new()).collect();
     let mut fused_done: Vec<DecodeDone> = Vec::new();
+    let mut fused_step_done: Vec<DecodeDone> = Vec::new();
     {
         let mut tasks: Vec<Task> = assigned
             .into_iter()
@@ -506,11 +537,19 @@ fn process_decode_batch(
                 *fused_done = execute_fused_prefills(config, prefills, metrics);
             }) as Task);
         }
+        if !steps.is_empty() {
+            let fused_step_done = &mut fused_step_done;
+            tasks.push(Box::new(move || {
+                *fused_step_done = execute_fused_steps(config, steps, metrics, step_batch);
+            }) as Task);
+        }
         WorkerPool::global().run(tasks);
     }
 
-    let mut done: Vec<DecodeDone> = Vec::with_capacity(n_rest + fused_done.len());
+    let mut done: Vec<DecodeDone> =
+        Vec::with_capacity(n_rest + fused_done.len() + fused_step_done.len());
     done.extend(fused_done);
+    done.extend(fused_step_done);
     let mut slots: Vec<Option<DecodeDone>> = (0..n_rest).map(|_| None).collect();
     for (i, r) in outs.into_iter().flatten() {
         slots[i] = Some(r);
@@ -589,6 +628,51 @@ fn execute_fused_prefills(
         .map(|((req, tx, engine), out)| {
             let activity = engine.engine.activity;
             (req, tx, engine, activity, out.out, share)
+        })
+        .collect()
+}
+
+/// The step-aggregation stage body (§Step-batching): run ≥ 2 pending
+/// decode steps — distinct sessions, same served model — as one
+/// [`FusedStepBatch::tick`]: a single stacked row-GEMM per projection
+/// weight instead of one R=1 pass per session. Each engine comes back
+/// holding its session's [`Activity`] share; the once-per-tick
+/// weight-stream energy is split evenly across the fused members
+/// (mirroring the fused-prefill split). The worker-owned `batch`
+/// scratch keeps steady-state ticks allocation-free.
+fn execute_fused_steps(
+    config: &SystemConfig,
+    mut items: Vec<DecodeItem>,
+    metrics: &ServerMetrics,
+    batch: &mut FusedStepBatch,
+) -> Vec<DecodeDone> {
+    let n = items.len();
+    debug_assert!(n >= 2);
+    {
+        let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
+        let mut rows: Vec<&[i8]> = Vec::with_capacity(n);
+        for (req, _tx, engine) in items.iter_mut() {
+            let DecodeInput::Step(row) = &req.input else {
+                unreachable!("the step-aggregation stage only receives steps")
+            };
+            rows.push(row);
+            engines.push(&mut **engine);
+        }
+        batch.tick(&mut engines, &rows);
+    }
+    metrics.fused_step_batches.inc();
+    metrics.fused_step_sessions.add(n as u64);
+    let shared_energy =
+        EnergyBreakdown::for_activity(&config.accelerator, batch.shared()).total();
+    let share = shared_energy / n as f64;
+    items
+        .into_iter()
+        .enumerate()
+        .map(|(i, (req, tx, engine))| {
+            let activity = engine.engine.activity;
+            let row = batch.out_row(i);
+            let out = MatI8::from_vec(1, row.len(), row.to_vec());
+            (req, tx, engine, activity, out, share)
         })
         .collect()
 }
@@ -934,6 +1018,66 @@ mod tests {
                 &golden.step(x.row(p.rows()))[..],
                 "post-fused-prefill step on session {sid}"
             );
+            assert!(server.close_session(sid));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn fused_step_burst_matches_independent_golden_engines() {
+        // Deterministic step fusion: four sessions are prefilled (each
+        // awaited, so each rides its own batch), then four steps are
+        // submitted back to back with max_batch = 4 — the size trigger
+        // fires exactly when the last step lands, forming one decode
+        // batch whose steps MUST take the fused tick. Outputs, cache
+        // state (via follow-up steps), and the fused metrics are all
+        // pinned against independent golden engines.
+        let mut cfg = test_config();
+        cfg.server.max_batch = 4;
+        cfg.server.max_wait_us = 500_000;
+        let server = Server::start(cfg);
+        let d = cfg.model.dims;
+        let lens = [3usize, 7, 1, 5];
+        let sids: Vec<_> = lens.iter().map(|_| server.open_session().unwrap()).collect();
+        let mut goldens: Vec<_> = lens
+            .iter()
+            .map(|_| DecodeEngine::new(cfg.accelerator, d, cfg.model.seed))
+            .collect();
+        for ((&sid, &l), golden) in sids.iter().zip(&lens).zip(&mut goldens) {
+            let p = gen_input(300 + l as u64, &d).block_padded(0, 0, l, d.e);
+            let resp = server.decode(sid, DecodeInput::Prefill(p.clone())).unwrap();
+            assert_eq!(resp.output, golden.prefill(&p).out);
+        }
+        assert_eq!(server.metrics.fused_step_batches.get(), 0);
+
+        // Two fused ticks in a row: caches left by the first must feed
+        // the second bit-identically.
+        let x = gen_input(777, &d);
+        for tick in 0..2u64 {
+            let rxs: Vec<_> = sids
+                .iter()
+                .zip(&lens)
+                .map(|(&sid, &l)| {
+                    let row = x.row((l + tick as usize) % d.s).to_vec();
+                    (server.submit_decode(sid, DecodeInput::Step(row.clone())).unwrap(), row)
+                })
+                .collect();
+            for (((rx, row), golden), &l) in rxs.into_iter().zip(&mut goldens).zip(&lens) {
+                let resp = rx.recv().unwrap();
+                assert_eq!(resp.seq_len, l + 1 + tick as usize);
+                assert_eq!(resp.batch_size, 4, "all four steps in one decode batch");
+                assert_eq!(
+                    resp.output.row(0),
+                    &golden.step(&row)[..],
+                    "tick {tick} diverged from the independent golden step"
+                );
+                assert!(resp.sim_energy_j > 0.0 && resp.sim_cycles > 0);
+            }
+        }
+        assert_eq!(server.metrics.fused_step_batches.get(), 2);
+        assert_eq!(server.metrics.fused_step_sessions.get(), 8);
+        assert_eq!(server.metrics.decode_steps_completed.get(), 8);
+        for sid in sids {
             assert!(server.close_session(sid));
         }
         server.shutdown();

@@ -178,6 +178,60 @@ impl TileEngine {
         out
     }
 
+    /// Multi-session single-row linear layer (§Step-batching): `x`
+    /// holds N sessions' pending **token rows** (one row per session,
+    /// N×K) and the pre-transposed weight matrix is streamed **once**
+    /// for the whole stack — the R=1-per-session specialization of
+    /// [`TileEngine::linear_pret_multi`], which is where the fused
+    /// decode tick gets its win: N independent steps each pay a full
+    /// M-row tile pass *and* a weight stream for a single row, while
+    /// the stacked pass pays one stream total and one R=N GEMM.
+    ///
+    /// Numerics: row `i` of the output is bit-identical to
+    /// [`TileEngine::linear_row_pret`] over `x.row(i)` (row dots are
+    /// independent; i32 accumulation of exact int8 products is
+    /// associative, so K-blocking is invisible).
+    ///
+    /// Accounting mirrors `linear_pret_multi`'s composition-invariant
+    /// split: every session is charged its **own** R=1 tile pass
+    /// (exactly what its independent `linear_row_pret` would record)
+    /// minus the weight stream, which lands once in `shared`. `out` is
+    /// caller-provided and resized in place — a warm steady-state call
+    /// allocates nothing (the fused tick's zero-alloc contract).
+    pub fn linear_rows_pret_multi(
+        &mut self,
+        x: &MatI8,
+        wt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+        per_row: &mut [Activity],
+        shared: &mut Activity,
+        out: &mut MatI8,
+    ) {
+        assert_eq!(x.cols(), wt.cols(), "linear dims (pre-transposed)");
+        assert_eq!(x.rows(), per_row.len(), "one Activity slot per session row");
+        self.check_depth(wt.cols());
+        gemm_requant_pret(x, wt, bias, rq, &mut self.scratch.gemm, out);
+        let (k, c) = (x.cols(), wt.rows());
+        if x.rows() > 0 {
+            // Every session's share is the same R=1 pass — compute it
+            // once, attribute it N times (stream excluded).
+            let mut row_pass =
+                activity_for_matmul(&self.cfg, MatmulDims { r: 1, k, c }, (k * c) as u64);
+            row_pass.weight_buf_writes = 0;
+            for pr in per_row.iter_mut() {
+                pr.add(&row_pass);
+                self.activity.add(&row_pass);
+            }
+            // The single weight stream of the fused pass (R=0 keeps
+            // every row-dependent field zero). An empty stack streams
+            // nothing.
+            let stream = activity_for_matmul(&self.cfg, MatmulDims { r: 0, k, c }, 0);
+            shared.add(&stream);
+            self.activity.add(&stream);
+        }
+    }
+
     /// Pre-change linear: naive oracle matmul plus a separate requant
     /// pass. Retained as the bit-exactness oracle — tests pin
     /// [`TileEngine::linear`] to it, and `benches/hotpath.rs` uses it
@@ -861,6 +915,83 @@ mod tests {
                 assert_eq!(indep_total.weight_buf_writes, n as u64 * stream.weight_buf_writes);
             }
         });
+    }
+
+    #[test]
+    fn multi_row_linear_matches_per_row_kernel_and_ones_lens() {
+        // §Step-batching: the stacked N-row pass is bit-identical per
+        // row to linear_row_pret, equals linear_pret_multi with
+        // lens=[1;N] everywhere (outputs AND all three accounting
+        // views), and each row's share is its independent
+        // linear_row_pret activity minus exactly one weight stream.
+        forall("linear_rows_pret_multi == per-row linear_row_pret", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let n = g.usize_in(1, 8);
+            let (k, c) = (g.usize_in(1, 48), g.usize_in(1, 24));
+            let mut rng = SplitMix64::new(g.u64());
+            let x = rand_mat(&mut rng, n, k);
+            let wt = rand_mat(&mut rng, c, k);
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+
+            let mut fused_eng = TileEngine::new(cfg);
+            let mut per_row = vec![Activity::default(); n];
+            let mut shared = Activity::default();
+            let mut fused = MatI8::zeros(0, 0);
+            fused_eng.linear_rows_pret_multi(
+                &x, &wt, &bias, rq(), &mut per_row, &mut shared, &mut fused,
+            );
+            assert_eq!(fused.shape(), (n, c));
+
+            let stream = activity_for_matmul(&cfg, MatmulDims { r: 0, k, c }, 0);
+            assert_eq!(shared.weight_buf_writes, stream.weight_buf_writes);
+            assert_eq!(shared.cycles, 0, "the stream itself costs no row cycles");
+            assert_eq!(shared.macs, 0, "the stream carries no compute");
+
+            let mut row_out = Vec::new();
+            for i in 0..n {
+                let mut e = TileEngine::new(cfg);
+                e.linear_row_pret(x.row(i), &wt, &bias, rq(), &mut row_out);
+                assert_eq!(&row_out[..], fused.row(i), "row {i} (n={n} k={k} c={c})");
+                let mut share = per_row[i];
+                share.weight_buf_writes += stream.weight_buf_writes;
+                assert_eq!(share, e.activity, "row {i} activity share");
+            }
+
+            // Equivalent to the general multi-sequence pass at
+            // lens=[1;N] — same output, same per-sequence shares, same
+            // shared stream, same engine total.
+            let lens = vec![1usize; n];
+            let mut gen_eng = TileEngine::new(cfg);
+            let mut gen_per_seq = vec![Activity::default(); n];
+            let mut gen_shared = Activity::default();
+            let general =
+                gen_eng.linear_pret_multi(&x, &lens, &wt, &bias, rq(), &mut gen_per_seq, &mut gen_shared);
+            assert_eq!(general, fused);
+            assert_eq!(gen_per_seq, per_row);
+            assert_eq!(gen_shared, shared);
+            assert_eq!(gen_eng.activity, fused_eng.activity);
+        });
+    }
+
+    #[test]
+    fn multi_row_linear_reuses_caller_output_across_shapes() {
+        // The caller-provided out matrix is resized in place — shape
+        // changes between calls must not leak stale values.
+        let cfg = ItaConfig::tiny();
+        let mut rng = SplitMix64::new(29);
+        let mut eng = TileEngine::new(cfg);
+        let mut out = MatI8::zeros(0, 0);
+        for &(n, k, c) in &[(4usize, 16usize, 8usize), (2, 8, 12), (6, 24, 4)] {
+            let x = rand_mat(&mut rng, n, k);
+            let wt = rand_mat(&mut rng, c, k);
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+            let mut per_row = vec![Activity::default(); n];
+            let mut shared = Activity::default();
+            eng.linear_rows_pret_multi(&x, &wt, &bias, rq(), &mut per_row, &mut shared, &mut out);
+            let mut oracle = TileEngine::new(cfg);
+            let want = oracle.linear_pret(&x, &wt, &bias, rq());
+            assert_eq!(out, want, "shape ({n},{k},{c})");
+        }
     }
 
     #[test]

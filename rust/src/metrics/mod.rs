@@ -151,6 +151,12 @@ pub struct ServerMetrics {
     /// Prefills that rode a fused pass (each saved its own set of
     /// projection weight streams).
     pub fused_prefill_sessions: Counter,
+    /// Fused decode ticks executed (≥ 2 steps of distinct sessions
+    /// stacked into one row-GEMM per weight matrix — §Step-batching).
+    pub fused_step_batches: Counter,
+    /// Decode steps that rode a fused tick (each saved its own set of
+    /// projection weight streams).
+    pub fused_step_sessions: Counter,
 }
 
 impl ServerMetrics {
@@ -167,7 +173,8 @@ impl ServerMetrics {
         format!(
             "requests: accepted={} rejected={} completed={}\n\
              batches: formed={} mean_fill={:.2}\n\
-             decode: sessions={} prefills={} (fused={} in {} passes) steps={}\n\
+             decode: sessions={} prefills={} (fused={} in {} passes) \
+             steps={} (fused={} in {} ticks)\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              sim: cycles={} energy={:.3}uJ",
             self.requests_accepted.get(),
@@ -180,6 +187,8 @@ impl ServerMetrics {
             self.fused_prefill_sessions.get(),
             self.fused_prefill_batches.get(),
             self.decode_steps_completed.get(),
+            self.fused_step_sessions.get(),
+            self.fused_step_batches.get(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
@@ -242,6 +251,12 @@ mod tests {
         m.batch_fill_sum.add(10);
         assert!((m.mean_batch_fill() - 5.0).abs() < 1e-9);
         assert!(m.report().contains("mean_fill=5.00"));
+        // The fused decode counters render symmetrically with the
+        // fused-prefill pair.
+        m.decode_steps_completed.add(6);
+        m.fused_step_sessions.add(4);
+        m.fused_step_batches.add(2);
+        assert!(m.report().contains("steps=6 (fused=4 in 2 ticks)"));
     }
 
     #[test]

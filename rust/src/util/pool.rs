@@ -28,6 +28,21 @@
 //!   so placement (which thread ran which task) is invisible; the
 //!   tests pin output equality against serial execution.
 //!
+//! # Indexed scopes (§Step-batching)
+//!
+//! [`WorkerPool::run`] boxes one closure per task — fine for batch
+//! fan-outs that allocate anyway, but it disqualifies the pool from
+//! allocation-free hot paths (the fused decode tick must perform
+//! ZERO steady-state heap allocations, `tests/decode_alloc.rs`).
+//! [`WorkerPool::run_indexed`] is the allocation-free variant: the
+//! caller supplies ONE shared closure and a count, executors *claim
+//! indices* from a counter instead of popping boxes, and the scope
+//! handle itself ([`IndexedScope`]) is owned by the caller and reused
+//! across calls — a steady-state fan-out costs two mutex/condvar
+//! round trips and nothing on the heap. [`DisjointSlots`] is the
+//! caller-side companion that turns the claim-uniqueness guarantee
+//! into disjoint `&mut` access from the shared closure.
+//!
 //! # Shutdown
 //!
 //! [`WorkerPool::shutdown`] (also invoked by `Drop`) closes the
@@ -37,6 +52,7 @@
 //! the host parallelism.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -100,6 +116,168 @@ impl ScopeState {
     }
 }
 
+/// One tick's worth of index-fed work: the erased pointer to the
+/// caller's shared closure plus the claim counter. Both live inside
+/// one mutex so a claim can never pair an old closure with a new
+/// counter (or vice versa) — the hazard a lock-free split would have.
+struct IndexedWork {
+    /// Erased `&(dyn Fn(usize) + Sync)` of the *current*
+    /// [`WorkerPool::run_indexed`] call. Only dereferenced for indices
+    /// claimed under the lock while that call is still blocked on
+    /// `pending`, which keeps every borrow the closure captured alive.
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: usize,
+}
+
+// SAFETY: the raw pointer crosses threads only inside the blocking
+// window of the `run_indexed` call that published it (claims stop at
+// `n`, the call waits for all `n` executions); the pointee is `Sync`,
+// so concurrent shared calls from many threads are sound.
+unsafe impl Send for IndexedWork {}
+
+/// Shared state of one [`IndexedScope`]: the current work slot (None
+/// between calls) and the completion barrier.
+struct IndexedState {
+    work: Mutex<Option<IndexedWork>>,
+    /// Claimed-or-unclaimed indices not yet *executed*.
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl IndexedState {
+    /// Claim-and-execute until the slot is empty or exhausted.
+    /// Executors arriving between calls (stale advertisements) see
+    /// `None`/exhausted and leave immediately.
+    fn drain(&self) {
+        loop {
+            let (f, i) = {
+                let mut slot = self.work.lock().unwrap();
+                match slot.as_mut() {
+                    Some(w) if w.next < w.n => {
+                        let i = w.next;
+                        w.next += 1;
+                        (w.f, i)
+                    }
+                    _ => return,
+                }
+            };
+            // SAFETY: index `i` was claimed under the lock from the
+            // current slot, so `f` belongs to a `run_indexed` call
+            // still blocked on `pending` — its borrows are alive.
+            let f = unsafe { &*f };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            let mut p = self.pending.lock().unwrap();
+            *p -= 1;
+            if *p == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    fn wait_all(&self) {
+        let mut p = self.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.done.wait(p).unwrap();
+        }
+    }
+}
+
+/// Caller-owned, reusable handle for [`WorkerPool::run_indexed`]
+/// fan-outs. Construct once (one allocation), then every fan-out
+/// through it is heap-free — the scope is advertised to the pool by
+/// reference-count bump only. Not re-entrant: a closure running under
+/// a scope must not call `run_indexed` on the *same* scope (assert-
+/// guarded); nesting across distinct scopes is fine and deadlock-free
+/// by caller participation.
+pub struct IndexedScope {
+    state: Arc<IndexedState>,
+}
+
+impl IndexedScope {
+    pub fn new() -> Self {
+        Self {
+            state: Arc::new(IndexedState {
+                work: Mutex::new(None),
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panicked: AtomicBool::new(false),
+            }),
+        }
+    }
+}
+
+impl Default for IndexedScope {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Caller-side companion of [`WorkerPool::run_indexed`]: wraps a
+/// `&mut [T]` so the *shared* `Fn(usize)` closure can hand out
+/// disjoint `&mut` elements. Soundness rests on the claim counter:
+/// `run_indexed` gives each index to exactly one executor, so
+/// `slot(i)` inside the closure (called only for the executor's own
+/// claimed index) never aliases.
+pub struct DisjointSlots<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: `&mut T` access is only reachable through the unsafe
+// `slot`, whose contract (at most one concurrent executor per index)
+// makes the references disjoint; `T: Send` lets them cross threads.
+unsafe impl<T: Send> Sync for DisjointSlots<'_, T> {}
+unsafe impl<T: Send> Send for DisjointSlots<'_, T> {}
+
+impl<'a, T> DisjointSlots<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    ///
+    /// Each index must be accessed by at most one executor at a time —
+    /// exactly what `run_indexed`'s claim counter provides when the
+    /// closure only touches `slot(i)` for its own index `i`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "slot {i} beyond {} elements", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// What the injector hands a worker: either a boxed-task scope
+/// ([`WorkerPool::run`]) or an index-fed one
+/// ([`WorkerPool::run_indexed`]).
+enum ScopeHandle {
+    Boxed(Arc<ScopeState>),
+    Indexed(Arc<IndexedState>),
+}
+
+impl ScopeHandle {
+    fn drain(&self) {
+        match self {
+            ScopeHandle::Boxed(s) => s.drain(),
+            ScopeHandle::Indexed(s) => s.drain(),
+        }
+    }
+}
+
 /// The injector the workers block on: a queue of scope handles plus
 /// the shutdown flag.
 struct Injector {
@@ -112,15 +290,15 @@ struct Injector {
 }
 
 struct InjectorQueue {
-    scopes: VecDeque<Arc<ScopeState>>,
+    scopes: VecDeque<ScopeHandle>,
     shutdown: bool,
 }
 
 impl Injector {
-    fn advertise(&self, scope: &Arc<ScopeState>, copies: usize) {
+    fn advertise(&self, copy: impl Fn() -> ScopeHandle, copies: usize) {
         let mut q = self.queue.lock().unwrap();
         for _ in 0..copies {
-            q.scopes.push_back(scope.clone());
+            q.scopes.push_back(copy());
         }
         drop(q);
         self.available.notify_all();
@@ -128,7 +306,7 @@ impl Injector {
 
     /// Worker side: next scope handle, or `None` once shut down and
     /// drained.
-    fn next(&self) -> Option<Arc<ScopeState>> {
+    fn next(&self) -> Option<ScopeHandle> {
         let mut q = self.queue.lock().unwrap();
         loop {
             if let Some(s) = q.scopes.pop_front() {
@@ -251,10 +429,70 @@ impl WorkerPool {
         let scope = Arc::new(ScopeState::new(tasks));
         // One handle per task, capped at the worker count — workers
         // that arrive after the queue drained just drop the handle.
-        self.injector.advertise(&scope, (n - 1).min(self.threads));
+        self.injector
+            .advertise(|| ScopeHandle::Boxed(scope.clone()), (n - 1).min(self.threads));
         scope.drain();
         scope.wait_all();
         if scope.panicked.load(Ordering::Acquire) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Allocation-free fan-out (§Step-batching): execute `f(0..n)`
+    /// across the pool (and this thread) through the caller-owned,
+    /// reusable `scope`, returning when **all** indices completed.
+    /// Executors claim indices from a shared counter instead of
+    /// popping boxed tasks, so a steady-state call performs **zero
+    /// heap allocations** — the property the fused decode tick's
+    /// zero-alloc contract rests on (`tests/decode_alloc.rs`).
+    ///
+    /// Semantics otherwise mirror [`WorkerPool::run`]: the call blocks
+    /// until every index finished (panicking indices included — the
+    /// scope completes, then re-panics), results are written into
+    /// caller-owned slots so placement is invisible (pair with
+    /// [`DisjointSlots`] for disjoint `&mut` access), and nested
+    /// fan-out on *other* scopes is deadlock-free by caller
+    /// participation. Re-entering the *same* scope from inside `f` is
+    /// a programmer error and asserts.
+    pub fn run_indexed(&self, scope: &IndexedScope, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        match n {
+            0 => return,
+            1 => {
+                // Singleton fast path: direct call, panic propagates
+                // natively (mirrors run()'s singleton path).
+                f(0);
+                return;
+            }
+            _ => {}
+        }
+        let state = &scope.state;
+        {
+            let mut slot = state.work.lock().unwrap();
+            assert!(
+                slot.is_none(),
+                "IndexedScope is not re-entrant (nested run_indexed on the same scope)"
+            );
+            *state.pending.lock().unwrap() = n;
+            // SAFETY (lifetime erasure): the pointer is published only
+            // for the duration of this call — claims stop at `n`, the
+            // call blocks until all `n` executed, and the slot is
+            // cleared before returning — so no executor dereferences
+            // it after `f`'s borrows end (same contract as run()'s
+            // 'static transmute).
+            let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                    f,
+                )
+            };
+            *slot = Some(IndexedWork { f: f_static as *const _, n, next: 0 });
+        }
+        self.injector
+            .advertise(|| ScopeHandle::Indexed(state.clone()), (n - 1).min(self.threads));
+        state.drain();
+        state.wait_all();
+        *state.work.lock().unwrap() = None;
+        // Reset the flag so the scope stays reusable after a panic.
+        if state.panicked.swap(false, Ordering::AcqRel) {
             panic!("worker pool task panicked");
         }
     }
@@ -435,6 +673,118 @@ mod tests {
             std::thread::yield_now();
         }
         assert_eq!(pool.idle_workers(), 2);
+    }
+
+    #[test]
+    fn run_indexed_executes_every_index_with_disjoint_slots() {
+        let pool = WorkerPool::new(3, "t-indexed");
+        let scope = IndexedScope::new();
+        for &n in &[2usize, 7, 64] {
+            let mut slots = vec![0usize; n];
+            {
+                let cells = DisjointSlots::new(&mut slots);
+                pool.run_indexed(&scope, n, &|i| {
+                    // SAFETY: run_indexed hands index i to exactly one
+                    // executor.
+                    *unsafe { cells.slot(i) } = i * i + 1;
+                });
+            }
+            for (i, &s) in slots.iter().enumerate() {
+                assert_eq!(s, i * i + 1, "n={n} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_indexed_singleton_and_empty_fast_paths() {
+        let pool = WorkerPool::new(2, "t-indexed-fast");
+        let scope = IndexedScope::new();
+        let flag = AtomicUsize::new(0);
+        pool.run_indexed(&scope, 1, &|i| {
+            assert_eq!(i, 0);
+            flag.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(flag.load(Ordering::Relaxed), 1);
+        pool.run_indexed(&scope, 0, &|_| panic!("n=0 must not execute"));
+    }
+
+    #[test]
+    fn run_indexed_zero_thread_pool_executes_on_caller() {
+        let pool = WorkerPool::new(0, "t-indexed-zero");
+        let scope = IndexedScope::new();
+        let count = AtomicUsize::new(0);
+        let me = std::thread::current().id();
+        pool.run_indexed(&scope, 8, &|_| {
+            assert_eq!(std::thread::current().id(), me);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn run_indexed_scope_reusable_across_varied_widths() {
+        // The scope (and its advertised handles) must stay coherent
+        // across back-to-back ticks of different widths — stale
+        // handles from an earlier tick may arrive at any time and must
+        // either help the current tick or leave without effect.
+        let pool = Arc::new(WorkerPool::new(4, "t-indexed-reuse"));
+        let scope = IndexedScope::new();
+        let total = AtomicUsize::new(0);
+        let mut expect = 0usize;
+        for round in 0..200usize {
+            let n = 2 + round % 7;
+            expect += n;
+            pool.run_indexed(&scope, n, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn run_indexed_panic_propagates_and_scope_survives() {
+        let pool = WorkerPool::new(2, "t-indexed-panic");
+        let scope = IndexedScope::new();
+        let survivors = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(&scope, 6, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err(), "run_indexed must re-panic");
+        assert_eq!(survivors.load(Ordering::Relaxed), 5, "non-panicking indices complete");
+        // The scope is clean and reusable afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run_indexed(&scope, 4, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn run_indexed_nested_inside_boxed_scope_does_not_deadlock() {
+        // The fused decode tick runs run_indexed from inside a pool
+        // task (the coordinator's step-aggregation task) — saturate
+        // that shape.
+        let pool = Arc::new(WorkerPool::new(2, "t-indexed-nested"));
+        let total = Arc::new(AtomicUsize::new(0));
+        let outer: Vec<Task> = (0..6)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                Box::new(move || {
+                    let scope = IndexedScope::new();
+                    pool.run_indexed(&scope, 8, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }) as Task
+            })
+            .collect();
+        pool.run(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 48);
     }
 
     #[test]

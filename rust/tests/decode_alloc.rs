@@ -166,4 +166,53 @@ fn decode_steps_do_not_allocate_after_warmup() {
         check.step_into(x.row(r), &mut want);
     }
     assert_eq!(outs[2], want);
+
+    // ---- Fused decode tick (§Step-batching) -------------------------
+    // The headline zero-alloc contract of this rework: a fused tick
+    // across 3 sessions performs ZERO steady-state heap allocations —
+    // the stacked activations, per-head Q/K/V, concat/output matrices,
+    // and Activity slots all live in the worker-owned FusedStepBatch
+    // scratch, and the pool fan-outs ride the allocation-free
+    // IndexedScope path (no boxed tasks). One warm-up tick sizes
+    // everything; the 8 measured ticks that follow must not touch the
+    // heap at all.
+    let mut batch = ita::attention::FusedStepBatch::new();
+    {
+        let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+        let rows: Vec<&[i8]> = (0..3).map(|_| x.row(0)).collect();
+        batch.tick(&mut refs, &rows); // warm-up: scratch reaches capacity
+    }
+    // The session-ref vec is measurement plumbing, built OUTSIDE the
+    // window (the coordinator reuses its own item buffers similarly).
+    let row_refs: Vec<&[i8]> = (16..24).map(|r| x.row(r)).collect();
+    let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for row in &row_refs {
+        let rows = [*row, *row, *row];
+        batch.tick(&mut refs, &rows);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "fused decode ticks allocated {} time(s) after warm-up — the §Step-batching \
+         zero-alloc contract broke (boxed pool tasks? scratch regrowth?)",
+        after - before
+    );
+    // The ticks were real work: caches grew and every output row
+    // equals an independent engine replaying the same feed.
+    for (i, (eng, p)) in fused.iter().zip(&prompts).enumerate() {
+        assert_eq!(eng.len(), p.rows() + 8 + 9, "session {i} cache fill after ticks");
+    }
+    let mut check = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+    check.prefill(&prompts[1]);
+    let mut want = Vec::new();
+    for r in prompts[1].rows()..prompts[1].rows() + 8 {
+        check.step_into(x.row(r), &mut want);
+    }
+    check.step_into(x.row(0), &mut want);
+    for row in &row_refs {
+        check.step_into(row, &mut want);
+    }
+    assert_eq!(batch.out_row(1), &want[..], "session 1 final fused output row");
 }

@@ -1,0 +1,230 @@
+//! Fused decode-tick parity — the §Step-batching correctness oracle.
+//!
+//! Property: for random session counts, ragged cache fills (including
+//! a session at S=1 right after its prefill and a promptless session
+//! at S=0), random model shapes, and **every kernel path this host
+//! can execute**, stacking N sessions' pending token rows into one
+//! row-GEMM per projection weight ([`ita::attention::fused_step`] /
+//! [`ita::attention::FusedStepBatch`]) is **bit-identical** to running
+//! the N steps independently — output rows, per-head attention rows,
+//! KV-cache contents, and every subsequent step. The weight-stream
+//! accounting (one stream per 3·H + 1 weight matrices per tick,
+//! regardless of N) is asserted at the same time, since it is the
+//! entire point of the fusion.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating property lives in a single #[test] (this binary's
+//! other tests do not touch the override) and restores auto-detection
+//! before returning — the same discipline `tests/prefill_fused.rs`
+//! uses.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{fused_step, FusedStepBatch, ModelDims};
+use ita::ita::simulator::{activity_for_matmul, MatmulDims};
+use ita::ita::ItaConfig;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+use ita::util::prop::forall;
+use ita::util::rng::SplitMix64;
+
+/// Build `n` session pairs (fused, independent) over one shared model,
+/// each prefilled to its ragged fill. Fills are biased to include the
+/// issue's edge cases: a session at S=1 right after prefill, and an
+/// empty S=0 session whose first-ever step attends only to itself.
+fn session_pairs(
+    cfg: ItaConfig,
+    d: &ModelDims,
+    seed: u64,
+    fills: &[usize],
+) -> (Vec<DecodeEngine>, Vec<DecodeEngine>) {
+    let mut fused = Vec::with_capacity(fills.len());
+    let mut indep = Vec::with_capacity(fills.len());
+    for (i, &fill) in fills.iter().enumerate() {
+        let mut a = DecodeEngine::new(cfg, *d, seed);
+        let mut b = DecodeEngine::new(cfg, *d, seed);
+        let mut rng = SplitMix64::new(seed ^ (0x51ab + i as u64));
+        let prompt = MatI8::from_vec(fill, d.e, rng.vec_i8(fill * d.e));
+        a.prefill(&prompt);
+        b.prefill(&prompt);
+        fused.push(a);
+        indep.push(b);
+    }
+    (fused, indep)
+}
+
+#[test]
+fn fused_step_bit_identical_across_sessions_fills_and_paths() {
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+        forall(&format!("fused tick == independent steps [{}]", path.name()), 12, |g| {
+            let s = g.usize_in(3, 24);
+            let d = ModelDims {
+                s,
+                e: g.usize_in(1, 24),
+                p: g.usize_in(1, 12),
+                h: g.usize_in(1, 3),
+            };
+            let seed = g.u64();
+            let n = g.usize_in(1, 5);
+            // Ragged fills: S−2 leaves room for the tick AND one
+            // follow-up step; slots 0/1 pin the S=1-after-prefill and
+            // S=0 edge cases whenever the batch is wide enough.
+            let fills: Vec<usize> = (0..n)
+                .map(|i| match i {
+                    0 => 1,
+                    1 => 0,
+                    _ => g.usize_in(0, s - 2),
+                })
+                .collect();
+            let cfg = ItaConfig::tiny();
+            let (mut fused, mut indep) = session_pairs(cfg, &d, seed, &fills);
+
+            let mut rng = SplitMix64::new(seed ^ 0x7ead);
+            let rows: Vec<Vec<i8>> = (0..n).map(|_| rng.vec_i8(d.e)).collect();
+            let row_refs: Vec<&[i8]> = rows.iter().map(|r| &r[..]).collect();
+            let result = {
+                let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+                fused_step(&mut refs, &row_refs)
+            };
+
+            let mut want = Vec::new();
+            for i in 0..n {
+                indep[i].step_into(&rows[i], &mut want);
+                assert_eq!(
+                    result.outputs[i], want,
+                    "session {i} output (n={n} fills={fills:?} d={d:?} path={})",
+                    path.name()
+                );
+                assert_eq!(fused[i].len(), indep[i].len(), "session {i} cache fill");
+                for h in 0..d.h {
+                    assert_eq!(
+                        fused[i].last_attn_row(h),
+                        indep[i].last_attn_row(h),
+                        "session {i} head {h} attention row"
+                    );
+                    // Cache parity, directly on the stored K / Vᵀ
+                    // content.
+                    let (fc, ic) = (&fused[i].caches()[h], &indep[i].caches()[h]);
+                    for r in 0..fc.len() {
+                        assert_eq!(fc.k_row(r), ic.k_row(r), "session {i} head {h} K row {r}");
+                    }
+                    assert_eq!(fc.vt_mat(), ic.vt_mat(), "session {i} head {h} Vᵀ pack");
+                }
+                // The serving-visible proof the caches are
+                // interchangeable: the next (independent) step agrees.
+                let next = rng.vec_i8(d.e);
+                assert_eq!(
+                    fused[i].step(&next),
+                    indep[i].step(&next),
+                    "session {i} step after the fused tick"
+                );
+            }
+        });
+    }
+    set_kernel_path(None);
+}
+
+#[test]
+fn fused_step_weight_stream_accounting_is_one_stream_per_weight() {
+    // The acceptance criterion, as a property over random shapes and
+    // session counts: a fused tick streams each of its 3·H + 1 weight
+    // matrices exactly once (`shared`), and each session's activity is
+    // its independent step minus exactly those streams — every other
+    // counter bit-equal.
+    forall("fused tick streams each weight once", 20, |g| {
+        let s = g.usize_in(3, 20);
+        let d = ModelDims { s, e: g.usize_in(1, 20), p: g.usize_in(1, 10), h: g.usize_in(1, 3) };
+        let seed = g.u64();
+        let n = g.usize_in(1, 4);
+        let fills: Vec<usize> = (0..n).map(|_| g.usize_in(0, s - 1)).collect();
+        let cfg = ItaConfig::tiny();
+        let (mut fused, mut indep) = session_pairs(cfg, &d, seed, &fills);
+
+        let mut rng = SplitMix64::new(seed ^ 0xfeed);
+        let rows: Vec<Vec<i8>> = (0..n).map(|_| rng.vec_i8(d.e)).collect();
+        let row_refs: Vec<&[i8]> = rows.iter().map(|r| &r[..]).collect();
+        let result = {
+            let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+            fused_step(&mut refs, &row_refs)
+        };
+
+        // One stream per weight matrix: 3·H projections (E→P) + Wo
+        // ((H·P)→E), independent of the session count.
+        let proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.e, c: d.p }, 0);
+        let out_proj = activity_for_matmul(&cfg, MatmulDims { r: 0, k: d.h * d.p, c: d.e }, 0);
+        let streams_once = 3 * d.h as u64 * proj.weight_buf_writes + out_proj.weight_buf_writes;
+        assert_eq!(
+            result.shared.weight_buf_writes, streams_once,
+            "one stream per weight matrix, independent of n={n} (fills={fills:?} d={d:?})"
+        );
+        assert_eq!(result.shared.macs, 0, "streams carry no compute");
+        assert_eq!(result.shared.cycles, 0, "streams carry no row cycles");
+
+        let mut out = Vec::new();
+        for i in 0..n {
+            indep[i].engine.reset_activity();
+            indep[i].step_into(&rows[i], &mut out);
+            let mut fused_act = fused[i].engine.activity;
+            fused_act.weight_buf_writes += streams_once;
+            assert_eq!(
+                fused_act,
+                indep[i].engine.activity,
+                "session {i}: share must be independent-minus-streams (fills={fills:?} d={d:?})"
+            );
+        }
+    });
+}
+
+#[test]
+fn fused_ticks_compose_with_fused_prefill_and_plain_steps() {
+    // The serving lifecycle end to end: fused prefill → fused ticks
+    // interleaved with plain steps, one reused scratch throughout —
+    // the whole trajectory stays bit-identical to a fully independent
+    // replay.
+    use ita::attention::fused_prefill;
+    let d = ModelDims { s: 20, e: 16, p: 8, h: 2 };
+    let cfg = ItaConfig::tiny();
+    let n = 3;
+    let seed = 4242u64;
+    let mut fused: Vec<DecodeEngine> = (0..n).map(|_| DecodeEngine::new(cfg, d, seed)).collect();
+    let mut indep: Vec<DecodeEngine> = (0..n).map(|_| DecodeEngine::new(cfg, d, seed)).collect();
+    let mut rng = SplitMix64::new(7);
+    let prompts: Vec<MatI8> = [2usize, 0, 4]
+        .iter()
+        .map(|&l| MatI8::from_vec(l, d.e, rng.vec_i8(l * d.e)))
+        .collect();
+    {
+        let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+        let inputs: Vec<&MatI8> = prompts.iter().collect();
+        fused_prefill(&mut refs, &inputs);
+    }
+    for (eng, p) in indep.iter_mut().zip(&prompts) {
+        eng.prefill(p);
+    }
+
+    let mut batch = FusedStepBatch::new();
+    let mut want = Vec::new();
+    for t in 0..8usize {
+        let rows: Vec<Vec<i8>> = (0..n).map(|_| rng.vec_i8(d.e)).collect();
+        if t % 3 == 2 {
+            // Plain per-session steps between ticks: the fused path
+            // must leave nothing behind that a plain step trips over.
+            for (i, (f, ind)) in fused.iter_mut().zip(indep.iter_mut()).enumerate() {
+                assert_eq!(f.step(&rows[i]), ind.step(&rows[i]), "t={t} session {i} plain");
+            }
+        } else {
+            let row_refs: Vec<&[i8]> = rows.iter().map(|r| &r[..]).collect();
+            {
+                let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
+                batch.tick(&mut refs, &row_refs);
+            }
+            for i in 0..n {
+                indep[i].step_into(&rows[i], &mut want);
+                assert_eq!(batch.out_row(i), &want[..], "t={t} session {i} fused");
+            }
+        }
+    }
+    for i in 0..n {
+        assert_eq!(fused[i].len(), indep[i].len(), "session {i} final fill");
+    }
+}
