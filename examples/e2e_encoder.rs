@@ -57,7 +57,13 @@ fn main() {
     let cfg = SystemConfig {
         accelerator: acc,
         model: ModelConfig { dims, ffn, layers: 2, seed: meta.seed },
-        server: ServerConfig { workers: 4, max_batch: 8, max_wait_us: 200, queue_depth: 256 },
+        server: ServerConfig {
+            workers: 4,
+            max_batch: 8,
+            max_wait_us: 200,
+            queue_depth: 256,
+            ..ServerConfig::default()
+        },
     };
     let server = Server::start(cfg);
     let n_requests = 256usize;
@@ -79,8 +85,10 @@ fn main() {
             }
         }
     }
-    let responses: Vec<_> =
-        handles.into_iter().map(|(idx, rx)| (idx, rx.recv().expect("response"))).collect();
+    let responses: Vec<_> = handles
+        .into_iter()
+        .map(|(idx, rx)| (idx, rx.recv().expect("response").expect("request completed")))
+        .collect();
     let wall = t0.elapsed();
 
     // Verify every distinct input's served output against the PJRT

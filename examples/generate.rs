@@ -70,7 +70,7 @@ fn generate_fused(cfg: ItaConfig, dims: ModelDims, p0: usize, steps: usize, n: u
         let rows: Vec<&[i8]> = next.iter().map(|r| &r[..]).collect();
         {
             let mut refs: Vec<&mut DecodeEngine> = engines.iter_mut().collect();
-            batch.tick(&mut refs, &rows);
+            assert!(batch.tick(&mut refs, &rows).ok(), "fault-free tick poisoned a session");
         }
         for (i, eng) in engines.iter().enumerate() {
             total_energy += EnergyBreakdown::for_activity(&cfg, &eng.engine.activity).total();

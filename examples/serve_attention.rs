@@ -22,7 +22,13 @@ fn main() {
     let cfg = SystemConfig {
         accelerator: ItaConfig::paper(),
         model: ModelConfig { dims, ffn: 4 * dims.e, layers: 1, seed: 42 },
-        server: ServerConfig { workers, max_batch: 8, max_wait_us: 150, queue_depth: 64 },
+        server: ServerConfig {
+            workers,
+            max_batch: 8,
+            max_wait_us: 150,
+            queue_depth: 64,
+            ..ServerConfig::default()
+        },
     };
     println!(
         "serving S={} E={} attention on {workers} simulated ITA instances, {n} requests",
@@ -50,7 +56,7 @@ fn main() {
     }
     let mut batch_hist = std::collections::BTreeMap::<usize, u64>::new();
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("request completed");
         *batch_hist.entry(resp.batch_size).or_default() += 1;
     }
     let wall = t0.elapsed();

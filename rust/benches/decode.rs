@@ -158,7 +158,8 @@ fn main() {
                 for eng in refs.iter_mut() {
                     eng.truncate(fill);
                 }
-                batch.tick(&mut refs, black_box(&row_refs));
+                let report = batch.tick(&mut refs, black_box(&row_refs));
+                black_box(report.ok());
                 black_box(batch.out_row(0)[0]);
             })
             .median;

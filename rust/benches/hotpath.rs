@@ -280,7 +280,13 @@ fn main() {
     let sys = SystemConfig {
         accelerator: cfg,
         model: ModelConfig { dims, ffn: 256, layers: 1, seed: 42 },
-        server: ServerConfig { workers: 2, max_batch: 8, max_wait_us: 50, queue_depth: 64 },
+        server: ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 50,
+            queue_depth: 64,
+            ..ServerConfig::default()
+        },
     };
     let server = Server::start(sys);
     b.bench("server.infer(compact) round trip", || {

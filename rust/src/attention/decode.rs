@@ -32,7 +32,7 @@ use super::{
 use crate::ita::datapath::TileEngine;
 use crate::ita::{Activity, ItaConfig};
 use crate::util::mat::{MatI8, MatU8};
-use crate::util::pool::{DisjointSlots, IndexedScope, Task, WorkerPool};
+use crate::util::pool::{DisjointSlots, IndexedScope, ScopeFailure, Task, WorkerPool};
 use std::sync::Arc;
 
 /// One head's append-only K/V store with fixed capacity.
@@ -126,6 +126,11 @@ pub struct DecodeEngine {
     pub weights_t: Arc<TransposedWeights>,
     pub requants: RequantConfig,
     pub dims: ModelDims,
+    /// Fault-injection targeting tag (chaos harness): the coordinator
+    /// sets this to the owning session id so a `decode.step.tail`
+    /// failpoint can single out one session inside a fused tick.
+    /// Inert (0, never read) unless the `failpoints` feature is on.
+    pub fail_tag: u64,
     caches: Vec<KvCache>,
     // Flat scratch fields (disjoint borrows with `engine`/`caches`),
     // all sized at construction so steps never allocate.
@@ -176,6 +181,7 @@ impl DecodeEngine {
             weights_t,
             requants,
             dims,
+            fail_tag: 0,
             caches: (0..dims.h).map(|_| KvCache::new(dims.s, dims.p)).collect(),
             q_row: vec![0; dims.p],
             k_row: vec![0; dims.p],
@@ -305,6 +311,7 @@ impl DecodeEngine {
     pub fn step_into(&mut self, x_row: &[i8], out: &mut Vec<i8>) {
         assert_eq!(x_row.len(), self.dims.e, "token row width");
         assert!(self.len() < self.capacity(), "KV cache full");
+        let _ = crate::util::failpoint::hit("decode.step.tail", self.fail_tag);
         let rq = self.requants;
         let p = self.dims.p;
         for (h, (hw, wts)) in self.weights.heads.iter().zip(&self.weights_t.heads).enumerate() {
@@ -357,6 +364,7 @@ impl DecodeEngine {
     pub fn step_from_projected(&mut self, qkv: &[(MatI8, MatI8, MatI8)], row: usize) {
         assert_eq!(qkv.len(), self.dims.h, "one stacked Q/K/V triple per head");
         assert!(self.len() < self.capacity(), "KV cache full");
+        let _ = crate::util::failpoint::hit("decode.step.tail", self.fail_tag);
         let rq = self.requants;
         let p = self.dims.p;
         for (h, ((q, k, v), hw)) in qkv.iter().zip(self.weights.heads.iter()).enumerate() {
@@ -701,7 +709,16 @@ impl FusedStepBatch {
     /// row, [`FusedStepBatch::shared`] the once-per-tick weight-stream
     /// activity, and each engine's activity its own share (see the
     /// type docs).
-    pub fn tick(&mut self, engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) {
+    ///
+    /// Fault containment: a panic inside one session's stage-2 attend
+    /// tail is caught and reported in [`TickReport::poisoned`] instead
+    /// of unwinding the tick — every *other* session's tail still runs
+    /// on its own engine against the same stage-1 projections, and the
+    /// stage-3 output projection is row-independent, so survivor
+    /// outputs are bit-identical to a fault-free tick (pinned by
+    /// `tests/chaos.rs`). Panics outside stage 2 (shared projection
+    /// GEMMs — nothing session-specific can fail there) still unwind.
+    pub fn tick(&mut self, engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) -> TickReport {
         let n = engines.len();
         assert_eq!(n, rows.len(), "one token row per session");
         assert!(n >= 1, "fused step needs at least one session");
@@ -792,19 +809,27 @@ impl FusedStepBatch {
 
         // ---- Stage 2: per-session O(S) cache-attention tails --------
         // One index per session; each executor owns that session's
-        // engine exclusively and reads the shared Q/K/V stacks.
-        {
+        // engine exclusively and reads the shared Q/K/V stacks. A
+        // panicking tail is contained to its own index: the try_ scope
+        // still completes every other session, and the failed indices
+        // come back for the caller to quarantine.
+        let failure: Option<ScopeFailure> = {
             let qkv = &self.qkv[..dims.h];
             let engs = DisjointSlots::new(engines);
-            WorkerPool::global().run_indexed(&self.scope, n, &|i| {
-                // SAFETY: one executor per session index.
-                let eng = unsafe { engs.slot(i) };
-                eng.engine.reset_activity();
-                eng.step_from_projected(qkv, i);
-            });
-        }
+            WorkerPool::global()
+                .try_run_indexed(&self.scope, n, &|i| {
+                    // SAFETY: one executor per session index.
+                    let eng = unsafe { engs.slot(i) };
+                    eng.engine.reset_activity();
+                    eng.step_from_projected(qkv, i);
+                })
+                .err()
+        };
         self.concat_all.reset_for_overwrite(n, dims.h * dims.p);
         for (i, eng) in engines.iter().enumerate() {
+            // A poisoned session's concat scratch holds stale bytes —
+            // its stage-3 row computes garbage that nobody reads; the
+            // GEMM is row-independent, so survivor rows are unaffected.
             self.concat_all.row_mut(i).copy_from_slice(eng.last_concat());
         }
 
@@ -822,10 +847,12 @@ impl FusedStepBatch {
         );
 
         // Attribute each session's projection shares onto its engine
-        // (the tail activity is already there).
+        // (the tail activity is already there). Poisoned engines are
+        // charged too — their owner discards them anyway.
         for (i, eng) in engines.iter_mut().enumerate() {
             eng.engine.activity.add(&self.per_seq[i]);
         }
+        TickReport { poisoned: failure.map(|f| f.indices).unwrap_or_default() }
     }
 
     /// Session `i`'s output row (length E) of the most recent tick.
@@ -848,6 +875,28 @@ impl Default for FusedStepBatch {
     }
 }
 
+/// Fault report of one [`FusedStepBatch::tick`]. The fault-free case
+/// carries an empty (never-allocated) `Vec`, preserving the tick's
+/// zero-allocation contract.
+#[must_use = "a tick may have poisoned sessions; check ok() / poisoned"]
+#[derive(Debug, Default)]
+pub struct TickReport {
+    /// Batch indices whose stage-2 attend tail panicked. Those
+    /// sessions' engines are left with partially-advanced KV caches
+    /// (the tail pushes K/V *before* computing — see [`attend_tail`])
+    /// and their `out_row` slots hold garbage; the caller must discard
+    /// the engines. All other indices are untouched by the failure and
+    /// bit-identical to a fault-free tick.
+    pub poisoned: Vec<usize>,
+}
+
+impl TickReport {
+    /// True when every session in the tick completed.
+    pub fn ok(&self) -> bool {
+        self.poisoned.is_empty()
+    }
+}
+
 /// Result of one [`fused_step`] convenience call.
 pub struct FusedStepResult {
     /// Per-session output rows (length E each), in input order —
@@ -865,7 +914,8 @@ pub struct FusedStepResult {
 /// scratch makes steady-state ticks allocation-free).
 pub fn fused_step(engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) -> FusedStepResult {
     let mut batch = FusedStepBatch::new();
-    batch.tick(engines, rows);
+    let report = batch.tick(engines, rows);
+    assert!(report.ok(), "fused_step tick poisoned sessions {:?}", report.poisoned);
     FusedStepResult {
         outputs: (0..rows.len()).map(|i| batch.out_row(i).to_vec()).collect(),
         shared: batch.shared,
@@ -1207,7 +1257,7 @@ mod tests {
             let rows: Vec<&[i8]> = (0..n).map(|i| x.row(i)).collect();
             {
                 let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
-                batch.tick(&mut refs, &rows);
+                assert!(batch.tick(&mut refs, &rows).ok(), "fault-free tick {t}");
             }
             for i in 0..n {
                 indep[i].step_into(rows[i], &mut want);

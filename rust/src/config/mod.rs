@@ -24,6 +24,8 @@
 //! max_batch = 8
 //! max_wait_us = 200
 //! queue_depth = 64
+//! session_ttl_ms = 0
+//! watchdog_us = 500000
 //! ```
 
 pub mod toml;
@@ -61,11 +63,24 @@ pub struct ServerConfig {
     pub max_wait_us: u64,
     /// Bounded request-queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Evict decode sessions idle (not busy, no traffic) longer than
+    /// this many milliseconds. 0 disables eviction.
+    pub session_ttl_ms: u64,
+    /// Watchdog threshold: a batch taking longer than this many
+    /// microseconds to process counts as a slow tick in the metrics.
+    pub watchdog_us: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers: 2, max_batch: 8, max_wait_us: 200, queue_depth: 64 }
+        Self {
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 200,
+            queue_depth: 64,
+            session_ttl_ms: 0,
+            watchdog_us: 500_000,
+        }
     }
 }
 
@@ -186,6 +201,14 @@ impl SystemConfig {
             max_wait_us: get_usize(&doc, "server", "max_wait_us", def.server.max_wait_us as usize)?
                 as u64,
             queue_depth: get_usize(&doc, "server", "queue_depth", def.server.queue_depth)?,
+            session_ttl_ms: get_usize(
+                &doc,
+                "server",
+                "session_ttl_ms",
+                def.server.session_ttl_ms as usize,
+            )? as u64,
+            watchdog_us: get_usize(&doc, "server", "watchdog_us", def.server.watchdog_us as usize)?
+                as u64,
         };
 
         let cfg = Self { accelerator: acc, model, server };
@@ -263,6 +286,19 @@ mod tests {
         assert_eq!(cfg.model.dims.s, 128);
         assert_eq!(cfg.model.dims.h, 4);
         assert_eq!(cfg.server.workers, 4);
+        // Fault-containment knobs default off / generous.
+        assert_eq!(cfg.server.session_ttl_ms, 0);
+        assert_eq!(cfg.server.watchdog_us, 500_000);
+    }
+
+    #[test]
+    fn parse_fault_containment_knobs() {
+        let cfg = SystemConfig::from_toml(
+            "[server]\nsession_ttl_ms = 2500\nwatchdog_us = 1000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.session_ttl_ms, 2500);
+        assert_eq!(cfg.server.watchdog_us, 1000);
     }
 
     #[test]

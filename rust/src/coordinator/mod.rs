@@ -14,7 +14,7 @@ pub mod server;
 pub mod tracegen;
 
 pub use request::{
-    DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
-    SubmitError,
+    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, InferenceRequest, InferenceResponse,
+    InferenceResult, SessionId, SubmitError, SubmitOptions,
 };
 pub use server::Server;

@@ -3,17 +3,41 @@
 use crate::util::mat::MatI8;
 use std::time::{Duration, Instant};
 
+/// Per-submission options. Extend via `..Default::default()`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Drop the request (with [`SubmitError::DeadlineExceeded`]) if it
+    /// has not *started compute* by this instant. `None` = no deadline.
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOptions {
+    /// Options carrying a deadline `timeout` from now.
+    pub fn deadline_in(timeout: Duration) -> Self {
+        Self { deadline: Some(Instant::now() + timeout) }
+    }
+}
+
+/// What a submitter's response channel resolves to: the response, or
+/// the in-flight failure that terminated the request (deadline, cancel,
+/// session poisoning, shutdown).
+pub type InferenceResult = Result<InferenceResponse, SubmitError>;
+/// Decode-path analogue of [`InferenceResult`].
+pub type DecodeResult = Result<DecodeResponse, SubmitError>;
+
 /// One attention-inference request (an S×E int8 activation matrix).
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
     pub input: MatI8,
     pub enqueued: Instant,
+    /// Shed (never computed) if still queued past this instant.
+    pub deadline: Option<Instant>,
 }
 
 impl InferenceRequest {
     pub fn new(id: u64, input: MatI8) -> Self {
-        Self { id, input, enqueued: Instant::now() }
+        Self { id, input, enqueued: Instant::now(), deadline: None }
     }
 }
 
@@ -54,11 +78,13 @@ pub struct DecodeRequest {
     pub session: SessionId,
     pub input: DecodeInput,
     pub enqueued: Instant,
+    /// Shed (never computed) if still queued past this instant.
+    pub deadline: Option<Instant>,
 }
 
 impl DecodeRequest {
     pub fn new(id: u64, session: SessionId, input: DecodeInput) -> Self {
-        Self { id, session, input, enqueued: Instant::now() }
+        Self { id, session, input, enqueued: Instant::now(), deadline: None }
     }
 }
 
@@ -81,7 +107,11 @@ pub struct DecodeResponse {
     pub batch_size: usize,
 }
 
-/// Submission failure modes.
+/// Submission and in-flight failure modes.
+///
+/// `#[non_exhaustive]`: downstream matches must carry a wildcard arm,
+/// so future fault classes can be added without a breaking change.
+#[non_exhaustive]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     /// Bounded queue is full — backpressure.
@@ -100,6 +130,18 @@ pub enum SubmitError {
     /// The session's KV cache cannot accept the request (capacity
     /// exhausted, or a prefill on a non-empty session).
     SessionFull,
+    /// The request's deadline passed before compute started; the work
+    /// was shed, never executed.
+    DeadlineExceeded,
+    /// The caller abandoned the request (dropped its receiver) before
+    /// compute started, or the request was lost to an injected ingress
+    /// fault; the work was shed.
+    Cancelled,
+    /// A fault (panic) mid-operation left this session's KV cache in an
+    /// undefined state. The session is quarantined: every subsequent
+    /// request on it fails with this error until it is closed. Other
+    /// sessions are unaffected.
+    SessionPoisoned,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -111,6 +153,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::UnknownSession => "decode session is not open",
             SubmitError::SessionBusy => "decode session has a request in flight",
             SubmitError::SessionFull => "decode session KV cache cannot accept the request",
+            SubmitError::DeadlineExceeded => "request deadline exceeded before compute",
+            SubmitError::Cancelled => "request was cancelled before compute",
+            SubmitError::SessionPoisoned => "decode session was poisoned by a failed request",
         })
     }
 }
@@ -133,6 +178,21 @@ mod tests {
         assert_eq!(SubmitError::QueueFull.to_string(), "queue full (backpressure)");
         assert_eq!(SubmitError::SessionBusy.to_string(), "decode session has a request in flight");
         assert!(SubmitError::SessionFull.to_string().contains("KV cache"));
+        assert_eq!(
+            SubmitError::DeadlineExceeded.to_string(),
+            "request deadline exceeded before compute"
+        );
+        assert_eq!(SubmitError::Cancelled.to_string(), "request was cancelled before compute");
+        assert!(SubmitError::SessionPoisoned.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn submit_options_deadline() {
+        assert!(SubmitOptions::default().deadline.is_none());
+        let opts = SubmitOptions::deadline_in(Duration::from_millis(50));
+        let d = opts.deadline.expect("deadline set");
+        assert!(d > Instant::now());
+        assert!(d <= Instant::now() + Duration::from_millis(60));
     }
 
     #[test]

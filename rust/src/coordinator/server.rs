@@ -10,8 +10,8 @@
 
 use super::batcher::Batcher;
 use super::request::{
-    DecodeInput, DecodeRequest, DecodeResponse, InferenceRequest, InferenceResponse, SessionId,
-    SubmitError,
+    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, InferenceRequest, InferenceResponse,
+    InferenceResult, SessionId, SubmitError, SubmitOptions,
 };
 use crate::attention::decode::{fused_prefill, DecodeEngine, FusedStepBatch};
 use crate::attention::{AttentionExecutor, PackedWeights};
@@ -19,17 +19,23 @@ use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
 use crate::metrics::ServerMetrics;
+use crate::util::failpoint;
 use crate::util::mat::MatI8;
+use crate::util::oneshot;
 use crate::util::pool::{Task, WorkerPool};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-type Job = (InferenceRequest, Sender<InferenceResponse>);
-type DecodeJob = (DecodeRequest, Sender<DecodeResponse>);
+/// Response channels carry a `Result`: in-flight failures (deadline,
+/// cancellation, poisoning, shutdown) arrive as explicit
+/// [`SubmitError`]s instead of bare channel disconnects.
+type Job = (InferenceRequest, oneshot::Sender<InferenceResult>);
+type DecodeJob = (DecodeRequest, oneshot::Sender<DecodeResult>);
 
 /// One queued work item: the dynamic batcher forms mixed batches of
 /// one-shot inferences and decode-session operations (they share the
@@ -50,9 +56,24 @@ struct SessionSlot {
     /// Cache fill as of the last completed request (submit-side
     /// capacity validation without touching the engine).
     seq_len: usize,
+    /// A request against this session panicked mid-compute: the KV
+    /// cache may be partially advanced, so the engine was discarded
+    /// and further submits are rejected with
+    /// [`SubmitError::SessionPoisoned`]. Close and reopen to recover.
+    poisoned: bool,
+    /// Last accept/complete on this session (idle-TTL eviction).
+    last_used: Instant,
 }
 
 type SessionTable = Mutex<HashMap<SessionId, SessionSlot>>;
+
+/// Session-table lock that survives a poisoned mutex: a worker panic
+/// while holding the table must not wedge every subsequent submit —
+/// the table's invariants are maintained per-slot, not across the
+/// critical section.
+fn lock_table(t: &SessionTable) -> std::sync::MutexGuard<'_, HashMap<SessionId, SessionSlot>> {
+    t.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Handle to a running server.
 pub struct Server {
@@ -89,7 +110,13 @@ impl Server {
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
         let mut threads = Vec::new();
-        threads.push(spawn_dispatcher(config, ingress_rx, batch_tx, metrics.clone()));
+        threads.push(spawn_dispatcher(
+            config,
+            ingress_rx,
+            batch_tx,
+            sessions.clone(),
+            metrics.clone(),
+        ));
         for worker_id in 0..config.server.workers {
             threads.push(spawn_worker(
                 config,
@@ -115,18 +142,42 @@ impl Server {
     }
 
     /// Submit an inference; non-blocking. Returns the response channel.
-    pub fn submit(&self, input: MatI8) -> Result<Receiver<InferenceResponse>, SubmitError> {
+    pub fn submit(&self, input: MatI8) -> Result<oneshot::Receiver<InferenceResult>, SubmitError> {
+        self.submit_with(input, SubmitOptions::default())
+    }
+
+    /// [`Server::submit`] with per-request options (deadline). A
+    /// request whose deadline has already passed is rejected here;
+    /// one that expires while queued is shed by the worker before
+    /// compute and its waiter receives
+    /// [`SubmitError::DeadlineExceeded`]. Dropping the returned
+    /// receiver cancels the request: the worker sheds it before
+    /// compute and counts it in `requests_cancelled`.
+    pub fn submit_with(
+        &self,
+        input: MatI8,
+        opts: SubmitOptions,
+    ) -> Result<oneshot::Receiver<InferenceResult>, SubmitError> {
         if self.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Shutdown);
+        }
+        if opts.deadline.is_some_and(|dl| Instant::now() >= dl) {
+            self.metrics.deadlines_expired.inc();
+            return Err(SubmitError::DeadlineExceeded);
         }
         let d = self.config.model.dims;
         if input.shape() != (d.s, d.e) {
             return Err(SubmitError::BadShape);
         }
+        if failpoint::hit("server.ingress.full", 0) {
+            self.metrics.requests_rejected.inc();
+            return Err(SubmitError::QueueFull);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = std::sync::mpsc::channel();
-        let req = InferenceRequest::new(id, input);
-        let guard = self.ingress.lock().unwrap();
+        let (tx, rx) = oneshot::channel();
+        let mut req = InferenceRequest::new(id, input);
+        req.deadline = opts.deadline;
+        let guard = self.ingress.lock().unwrap_or_else(|e| e.into_inner());
         let sender = guard.as_ref().ok_or(SubmitError::Shutdown)?;
         match sender.try_send(Work::Infer((req, tx))) {
             Ok(()) => {
@@ -141,10 +192,32 @@ impl Server {
         }
     }
 
-    /// Blocking submit-and-wait convenience.
+    /// Blocking submit-and-wait convenience. A bare channel disconnect
+    /// (the request was discarded without a verdict — only possible
+    /// under injected ingress faults) surfaces as
+    /// [`SubmitError::Cancelled`].
     pub fn infer(&self, input: MatI8) -> Result<InferenceResponse, SubmitError> {
         let rx = self.submit(input)?;
-        rx.recv().map_err(|_| SubmitError::Shutdown)
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(SubmitError::Cancelled),
+        }
+    }
+
+    /// Blocking inference bounded by `timeout`: never blocks past it.
+    /// The deadline rides the request, so an expired item is also shed
+    /// server-side before compute instead of occupying a batch slot.
+    pub fn infer_timeout(
+        &self,
+        input: MatI8,
+        timeout: Duration,
+    ) -> Result<InferenceResponse, SubmitError> {
+        let rx = self.submit_with(input, SubmitOptions::deadline_in(timeout))?;
+        match rx.recv_timeout(timeout) {
+            Ok(res) => res,
+            Err(oneshot::RecvTimeoutError::Timeout) => Err(SubmitError::DeadlineExceeded),
+            Err(oneshot::RecvTimeoutError::Disconnected) => Err(SubmitError::Cancelled),
+        }
     }
 
     /// Open a decode session: a private [`DecodeEngine`] whose KV
@@ -162,19 +235,26 @@ impl Server {
             self.model.requants,
         );
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        self.sessions
-            .lock()
-            .unwrap()
-            .insert(id, SessionSlot { engine: Some(Box::new(engine)), busy: false, seq_len: 0 });
+        lock_table(&self.sessions).insert(
+            id,
+            SessionSlot {
+                engine: Some(Box::new(engine)),
+                busy: false,
+                seq_len: 0,
+                poisoned: false,
+                last_used: Instant::now(),
+            },
+        );
         self.metrics.sessions_opened.inc();
         Ok(id)
     }
 
     /// Close a session, freeing its caches. Returns `false` when the
     /// session is unknown or still has a request in flight (await the
-    /// response first).
+    /// response first). Poisoned sessions close normally — that is
+    /// the recovery path.
     pub fn close_session(&self, id: SessionId) -> bool {
-        let mut table = self.sessions.lock().unwrap();
+        let mut table = lock_table(&self.sessions);
         match table.get(&id) {
             Some(slot) if !slot.busy => {
                 table.remove(&id);
@@ -187,7 +267,19 @@ impl Server {
     /// Current cache fill of a session (as of its last completed
     /// request), or `None` for unknown sessions.
     pub fn session_len(&self, id: SessionId) -> Option<usize> {
-        self.sessions.lock().unwrap().get(&id).map(|s| s.seq_len)
+        lock_table(&self.sessions).get(&id).map(|s| s.seq_len)
+    }
+
+    /// Evict idle (not busy) sessions older than the configured TTL
+    /// right now, regardless of the dispatcher's sweep cadence.
+    /// With `session_ttl_ms = 0` this evicts every idle session.
+    /// Returns the number evicted.
+    pub fn evict_idle_now(&self) -> usize {
+        evict_idle(
+            &self.sessions,
+            Duration::from_millis(self.config.server.session_ttl_ms),
+            &self.metrics,
+        )
     }
 
     /// Submit a decode-path operation; non-blocking. At most one
@@ -197,16 +289,39 @@ impl Server {
         &self,
         session: SessionId,
         input: DecodeInput,
-    ) -> Result<Receiver<DecodeResponse>, SubmitError> {
+    ) -> Result<oneshot::Receiver<DecodeResult>, SubmitError> {
+        self.submit_decode_with(session, input, SubmitOptions::default())
+    }
+
+    /// [`Server::submit_decode`] with per-request options (deadline).
+    /// Deadline/cancellation semantics match [`Server::submit_with`];
+    /// a shed decode item also releases the session's busy flag.
+    pub fn submit_decode_with(
+        &self,
+        session: SessionId,
+        input: DecodeInput,
+        opts: SubmitOptions,
+    ) -> Result<oneshot::Receiver<DecodeResult>, SubmitError> {
         if self.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Shutdown);
+        }
+        if opts.deadline.is_some_and(|dl| Instant::now() >= dl) {
+            self.metrics.deadlines_expired.inc();
+            return Err(SubmitError::DeadlineExceeded);
+        }
+        if failpoint::hit("server.ingress.full", 0) {
+            self.metrics.requests_rejected.inc();
+            return Err(SubmitError::QueueFull);
         }
         let d = self.config.model.dims;
         // Validate and mark busy under the table lock so concurrent
         // submitters to one session serialize deterministically.
         {
-            let mut table = self.sessions.lock().unwrap();
+            let mut table = lock_table(&self.sessions);
             let slot = table.get_mut(&session).ok_or(SubmitError::UnknownSession)?;
+            if slot.poisoned {
+                return Err(SubmitError::SessionPoisoned);
+            }
             if slot.busy {
                 return Err(SubmitError::SessionBusy);
             }
@@ -229,11 +344,13 @@ impl Server {
                 }
             }
             slot.busy = true;
+            slot.last_used = Instant::now();
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = std::sync::mpsc::channel();
-        let req = DecodeRequest::new(id, session, input);
-        let guard = self.ingress.lock().unwrap();
+        let (tx, rx) = oneshot::channel();
+        let mut req = DecodeRequest::new(id, session, input);
+        req.deadline = opts.deadline;
+        let guard = self.ingress.lock().unwrap_or_else(|e| e.into_inner());
         let Some(sender) = guard.as_ref() else {
             self.unmark_busy(session);
             return Err(SubmitError::Shutdown);
@@ -255,47 +372,90 @@ impl Server {
         }
     }
 
-    /// Blocking decode convenience.
+    /// Blocking decode convenience. Disconnect semantics match
+    /// [`Server::infer`].
     pub fn decode(
         &self,
         session: SessionId,
         input: DecodeInput,
     ) -> Result<DecodeResponse, SubmitError> {
         let rx = self.submit_decode(session, input)?;
-        rx.recv().map_err(|_| SubmitError::Shutdown)
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(SubmitError::Cancelled),
+        }
+    }
+
+    /// Blocking decode bounded by `timeout`: never blocks past it.
+    /// On timeout the session may still be busy until the worker sheds
+    /// or completes the in-flight item (autoregressive order holds).
+    pub fn decode_timeout(
+        &self,
+        session: SessionId,
+        input: DecodeInput,
+        timeout: Duration,
+    ) -> Result<DecodeResponse, SubmitError> {
+        let rx = self.submit_decode_with(session, input, SubmitOptions::deadline_in(timeout))?;
+        match rx.recv_timeout(timeout) {
+            Ok(res) => res,
+            Err(oneshot::RecvTimeoutError::Timeout) => Err(SubmitError::DeadlineExceeded),
+            Err(oneshot::RecvTimeoutError::Disconnected) => Err(SubmitError::Cancelled),
+        }
     }
 
     fn unmark_busy(&self, session: SessionId) {
-        if let Some(slot) = self.sessions.lock().unwrap().get_mut(&session) {
+        if let Some(slot) = lock_table(&self.sessions).get_mut(&session) {
             slot.busy = false;
         }
     }
 
     /// Graceful shutdown: close the ingress, drain in-flight work,
-    /// join all threads.
+    /// join all threads. Idempotent and race-safe: concurrent callers
+    /// all return once teardown completes (the first taker drops the
+    /// ingress sender, the first drainer joins the threads, the rest
+    /// see empty state and fall through). Requests still queued are
+    /// drained normally; any that cannot be delivered to a worker
+    /// receive an explicit [`SubmitError::Shutdown`] rather than a
+    /// bare disconnect.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
         // Dropping the sender disconnects the dispatcher's receive
         // loop, which flushes the batcher and exits; dropping its
         // batch sender then stops the workers.
-        self.ingress.lock().unwrap().take();
-        let mut threads = self.threads.lock().unwrap();
+        self.ingress.lock().unwrap_or_else(|e| e.into_inner()).take();
+        let mut threads = self.threads.lock().unwrap_or_else(|e| e.into_inner());
         for t in threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
+/// Evict idle (not busy) sessions older than `ttl`. Returns the count
+/// (also added to `sessions_evicted`).
+fn evict_idle(sessions: &SessionTable, ttl: Duration, metrics: &ServerMetrics) -> usize {
+    let now = Instant::now();
+    let mut table = lock_table(sessions);
+    let before = table.len();
+    table.retain(|_, slot| slot.busy || now.duration_since(slot.last_used) < ttl);
+    let evicted = before - table.len();
+    if evicted > 0 {
+        metrics.sessions_evicted.add(evicted as u64);
+    }
+    evicted
+}
+
 fn spawn_dispatcher(
     config: SystemConfig,
     ingress: Receiver<Work>,
     batch_tx: SyncSender<Vec<Work>>,
+    sessions: Arc<SessionTable>,
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ita-dispatcher".into())
         .spawn(move || {
             let max_wait = Duration::from_micros(config.server.max_wait_us);
+            let ttl = Duration::from_millis(config.server.session_ttl_ms);
             let mut batcher: Batcher<Work> = Batcher::new(config.server.max_batch, max_wait);
             loop {
                 let timeout = batcher
@@ -303,6 +463,20 @@ fn spawn_dispatcher(
                     .unwrap_or(Duration::from_millis(50));
                 match ingress.recv_timeout(timeout) {
                     Ok(job) => {
+                        // Injected ingress fault: an accepted job
+                        // vanishes after the queue. The response sender
+                        // drops unsent — blocking waiters observe
+                        // `Cancelled` — and a decode item's busy flag
+                        // is released so its session is not wedged.
+                        if failpoint::hit("server.ingress.drop", 0) {
+                            if let Work::Decode((req, _)) = &job {
+                                if let Some(slot) = lock_table(&sessions).get_mut(&req.session) {
+                                    slot.busy = false;
+                                }
+                            }
+                            metrics.ingress_dropped.inc();
+                            continue;
+                        }
                         metrics.queue_depth.set(batcher.len() as u64 + 1);
                         // Prefills are eager (§Prefill-batching): they
                         // fuse with whatever other prefills are queued
@@ -328,6 +502,9 @@ fn spawn_dispatcher(
                         if let Some(batch) = batcher.poll(Instant::now()) {
                             send_batch(&batch_tx, batch, &metrics);
                         }
+                        if !ttl.is_zero() {
+                            evict_idle(&sessions, ttl, &metrics);
+                        }
                     }
                     Err(RecvTimeoutError::Disconnected) => {
                         if let Some(batch) = batcher.flush() {
@@ -346,7 +523,20 @@ fn send_batch(tx: &SyncSender<Vec<Work>>, batch: Vec<Work>, metrics: &ServerMetr
     metrics.batch_fill_sum.add(batch.len() as u64);
     // Blocking send: backpressure propagates to the batcher, then to
     // the bounded ingress queue, then to submitters.
-    let _ = tx.send(batch);
+    if let Err(std::sync::mpsc::SendError(batch)) = tx.send(batch) {
+        // Workers already gone (shutdown race): waiters get an
+        // explicit verdict, never a bare disconnect.
+        for w in batch {
+            match w {
+                Work::Infer((_, tx)) => {
+                    let _ = tx.send(Err(SubmitError::Shutdown));
+                }
+                Work::Decode((_, tx)) => {
+                    let _ = tx.send(Err(SubmitError::Shutdown));
+                }
+            }
+        }
+    }
 }
 
 fn spawn_worker(
@@ -370,15 +560,21 @@ fn spawn_worker(
             // Fused-tick scratch (§Step-batching): one per worker, so
             // steady-state decode batches tick without allocating.
             let mut step_batch = FusedStepBatch::new();
+            let watchdog = Duration::from_micros(config.server.watchdog_us);
             loop {
                 // Take one batch (workers race on the shared receiver).
                 let batch = {
-                    let rx = batch_rx.lock().unwrap();
+                    let rx = batch_rx.lock().unwrap_or_else(|e| e.into_inner());
                     match rx.recv() {
                         Ok(b) => b,
                         Err(_) => break,
                     }
                 };
+                // Injected slow-worker fault (chaos harness): stalls
+                // this batch so deadline shedding / timeout paths can
+                // be exercised deterministically.
+                let _ = failpoint::hit("server.worker.slow", 0);
+                let t0 = Instant::now();
                 // Split the mixed batch: one-shot inferences fan out
                 // across the executor pool; decode items execute
                 // against their sessions' private caches.
@@ -396,20 +592,104 @@ fn spawn_worker(
                 if !decode.is_empty() {
                     process_decode_batch(&config, &sessions, decode, &metrics, &mut step_batch);
                 }
+                // Tick watchdog: record every pass, flag the slow ones.
+                let took = t0.elapsed();
+                metrics.tick_duration.observe(took);
+                if took > watchdog {
+                    metrics.slow_ticks.inc();
+                }
             }
         })
         .expect("spawn worker")
 }
 
+/// RAII custody of one session's `busy` flag while its engine is out
+/// of the table. Exactly one of [`BusyGuard::finish`] (restore the
+/// engine, release busy) or [`BusyGuard::poison`] (quarantine the
+/// session) runs per item; if neither does — the guard is dropped
+/// mid-unwind with the engine lost — `Drop` poisons the session, so a
+/// panic can never leak a permanently-busy slot.
+struct BusyGuard<'a> {
+    sessions: &'a SessionTable,
+    metrics: &'a ServerMetrics,
+    session: SessionId,
+    armed: bool,
+}
+
+impl<'a> BusyGuard<'a> {
+    fn new(sessions: &'a SessionTable, metrics: &'a ServerMetrics, session: SessionId) -> Self {
+        Self { sessions, metrics, session, armed: true }
+    }
+
+    /// Normal completion: hand the engine back and release the slot.
+    fn finish(mut self, engine: Box<DecodeEngine>) {
+        let seq_len = engine.len();
+        let mut table = lock_table(self.sessions);
+        if let Some(slot) = table.get_mut(&self.session) {
+            slot.engine = Some(engine);
+            slot.seq_len = seq_len;
+            slot.busy = false;
+            slot.last_used = Instant::now();
+        }
+        self.armed = false;
+    }
+
+    /// Quarantine: the engine's KV cache can no longer be trusted
+    /// (mid-operation panic), so the slot keeps no engine, rejects
+    /// further submits with [`SubmitError::SessionPoisoned`], and
+    /// waits to be closed.
+    fn poison(mut self) {
+        Self::poison_slot(self.sessions, self.metrics, self.session);
+        self.armed = false;
+    }
+
+    fn poison_slot(sessions: &SessionTable, metrics: &ServerMetrics, session: SessionId) {
+        let mut table = lock_table(sessions);
+        if let Some(slot) = table.get_mut(&session) {
+            slot.engine = None;
+            slot.poisoned = true;
+            slot.busy = false;
+            slot.last_used = Instant::now();
+        }
+        metrics.sessions_poisoned.inc();
+    }
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            Self::poison_slot(self.sessions, self.metrics, self.session);
+        }
+    }
+}
+
 /// One decode item in flight through a worker: request, response
-/// channel, and the session engine taken from the table.
-type DecodeItem = (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>);
-/// Executed decode item: the per-session [`Activity`], the output, and
-/// any batch-shared energy share (joules) not visible in the activity
-/// — the fused-prefill weight streams are charged once per batch and
-/// split evenly across its members.
-type DecodeDone =
-    (DecodeRequest, Sender<DecodeResponse>, Box<DecodeEngine>, Activity, MatI8, f64);
+/// channel, the session engine taken from the table, and the busy-flag
+/// guard that must be discharged exactly once.
+struct LiveItem<'a> {
+    req: DecodeRequest,
+    tx: oneshot::Sender<DecodeResult>,
+    engine: Box<DecodeEngine>,
+    guard: BusyGuard<'a>,
+}
+
+/// Verdict of executing one decode item. `share` is any batch-shared
+/// energy (joules) not visible in the per-session activity — the
+/// fused weight streams are charged once per batch and split evenly
+/// across its surviving members.
+enum Outcome {
+    Done { engine: Box<DecodeEngine>, activity: Activity, output: MatI8, share: f64 },
+    /// The item panicked mid-compute (engine discarded) — quarantine.
+    Poisoned,
+}
+
+/// Executed decode item awaiting merge.
+struct DoneItem<'a> {
+    req: DecodeRequest,
+    tx: oneshot::Sender<DecodeResult>,
+    guard: BusyGuard<'a>,
+    outcome: Outcome,
+}
 
 /// Execute a batch of decode operations. The submit-side `busy` flag
 /// guarantees at most one in-flight request per session, so every
@@ -449,15 +729,51 @@ fn process_decode_batch(
 ) {
     let b = batch.len();
 
-    // Take every engine in one lock pass. Items whose session vanished
-    // while queued (server teardown paths) drop their response channel,
-    // which surfaces as a recv error at the client.
-    let mut items: Vec<DecodeItem> = Vec::with_capacity(b);
+    // Shed-and-take pass under one table lock: expired deadlines and
+    // cancelled (receiver-dropped) items are dropped before compute
+    // with their busy flag released; poisoned sessions answer
+    // `SessionPoisoned`; vanished sessions answer `UnknownSession`.
+    // Survivors take their engine out of the table under a BusyGuard.
+    let mut items: Vec<LiveItem> = Vec::with_capacity(b);
     {
-        let mut table = sessions.lock().unwrap();
+        let now = Instant::now();
+        let mut table = lock_table(sessions);
         for (req, tx) in batch {
-            if let Some(engine) = table.get_mut(&req.session).and_then(|slot| slot.engine.take()) {
-                items.push((req, tx, engine));
+            if req.deadline.is_some_and(|dl| now >= dl) {
+                if let Some(slot) = table.get_mut(&req.session) {
+                    slot.busy = false;
+                }
+                metrics.deadlines_expired.inc();
+                let _ = tx.send(Err(SubmitError::DeadlineExceeded));
+                continue;
+            }
+            if tx.is_cancelled() {
+                if let Some(slot) = table.get_mut(&req.session) {
+                    slot.busy = false;
+                }
+                metrics.requests_cancelled.inc();
+                continue;
+            }
+            match table.get_mut(&req.session) {
+                None => {
+                    let _ = tx.send(Err(SubmitError::UnknownSession));
+                }
+                Some(slot) => match slot.engine.take() {
+                    Some(mut engine) => {
+                        // Tag the engine so an injected fault can
+                        // target one session out of a fused tick.
+                        engine.fail_tag = req.session;
+                        let guard = BusyGuard::new(sessions, metrics, req.session);
+                        items.push(LiveItem { req, tx, engine, guard });
+                    }
+                    None => {
+                        // Engine gone but the slot survives: treat as
+                        // poisoned rather than wedging the waiter.
+                        slot.busy = false;
+                        slot.poisoned = true;
+                        let _ = tx.send(Err(SubmitError::SessionPoisoned));
+                    }
+                },
             }
         }
     }
@@ -467,15 +783,15 @@ fn process_decode_batch(
     // the per-session path (fusing it would only add stacking
     // overhead).
     let is_prefill = |req: &DecodeRequest| matches!(req.input, DecodeInput::Prefill(_));
-    let n_prefills = items.iter().filter(|(req, ..)| is_prefill(req)).count();
+    let n_prefills = items.iter().filter(|it| is_prefill(&it.req)).count();
     let n_steps = items.len() - n_prefills;
     let fuse_prefills = n_prefills >= 2;
     let fuse_steps = n_steps >= 2;
-    let mut prefills: Vec<DecodeItem> = Vec::new();
-    let mut steps: Vec<DecodeItem> = Vec::new();
-    let mut rest: Vec<DecodeItem> = Vec::new();
+    let mut prefills: Vec<LiveItem> = Vec::new();
+    let mut steps: Vec<LiveItem> = Vec::new();
+    let mut rest: Vec<LiveItem> = Vec::new();
     for item in items {
-        if is_prefill(&item.0) {
+        if is_prefill(&item.req) {
             if fuse_prefills {
                 prefills.push(item);
             } else {
@@ -488,18 +804,35 @@ fn process_decode_batch(
         }
     }
 
-    fn execute_one((req, tx, mut engine): DecodeItem) -> DecodeDone {
-        engine.engine.reset_activity();
-        let output = match &req.input {
-            DecodeInput::Prefill(x) => engine.prefill(x).out,
-            DecodeInput::Step(row) => {
-                let mut out = Vec::with_capacity(row.len());
-                engine.step_into(row, &mut out);
-                MatI8::from_vec(1, row.len(), out)
-            }
-        };
-        let activity = engine.engine.activity;
-        (req, tx, engine, activity, output, 0.0)
+    fn execute_one(item: LiveItem<'_>) -> DoneItem<'_> {
+        let LiveItem { req, tx, mut engine, guard } = item;
+        // Panic containment: a mid-operation panic (the KV cache may be
+        // partially advanced) discards the engine and poisons ONLY this
+        // session — the worker, its batch peers, and the server stay up.
+        // The closure moves the engine (a panic drops it mid-unwind)
+        // and only borrows the request, which survives either way.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            engine.engine.reset_activity();
+            let output = match &req.input {
+                DecodeInput::Prefill(x) => engine.prefill(x).out,
+                DecodeInput::Step(row) => {
+                    let mut out = Vec::with_capacity(row.len());
+                    engine.step_into(row, &mut out);
+                    MatI8::from_vec(1, row.len(), out)
+                }
+            };
+            let activity = engine.engine.activity;
+            (engine, activity, output)
+        }));
+        match result {
+            Ok((engine, activity, output)) => DoneItem {
+                req,
+                tx,
+                guard,
+                outcome: Outcome::Done { engine, activity, output, share: 0.0 },
+            },
+            Err(_) => DoneItem { req, tx, guard, outcome: Outcome::Poisoned },
+        }
     }
 
     // One pool scope runs the fused-prefill pass, the fused step tick,
@@ -511,13 +844,13 @@ fn process_decode_batch(
     // merge back in order below (placement-invariant).
     let n_rest = rest.len();
     let want = n_rest.min(max_batch_parallelism()).max(1);
-    let mut assigned: Vec<Vec<(usize, DecodeItem)>> = (0..want).map(|_| Vec::new()).collect();
+    let mut assigned: Vec<Vec<(usize, LiveItem)>> = (0..want).map(|_| Vec::new()).collect();
     for (i, item) in rest.into_iter().enumerate() {
         assigned[i % want].push((i, item));
     }
-    let mut outs: Vec<Vec<(usize, DecodeDone)>> = (0..want).map(|_| Vec::new()).collect();
-    let mut fused_done: Vec<DecodeDone> = Vec::new();
-    let mut fused_step_done: Vec<DecodeDone> = Vec::new();
+    let mut outs: Vec<Vec<(usize, DoneItem)>> = (0..want).map(|_| Vec::new()).collect();
+    let mut fused_done: Vec<DoneItem> = Vec::new();
+    let mut fused_step_done: Vec<DoneItem> = Vec::new();
     {
         let mut tasks: Vec<Task> = assigned
             .into_iter()
@@ -543,52 +876,57 @@ fn process_decode_batch(
                 *fused_step_done = execute_fused_steps(config, steps, metrics, step_batch);
             }) as Task);
         }
-        WorkerPool::global().run(tasks);
+        // Panics inside the execute fns are already contained per item;
+        // should a task body itself unwind, its items' BusyGuards poison
+        // their sessions on drop and the scope reports rather than
+        // re-panics — the worker thread must survive.
+        let _ = WorkerPool::global().try_run(tasks);
     }
 
-    let mut done: Vec<DecodeDone> =
+    let mut done: Vec<DoneItem> =
         Vec::with_capacity(n_rest + fused_done.len() + fused_step_done.len());
     done.extend(fused_done);
     done.extend(fused_step_done);
-    let mut slots: Vec<Option<DecodeDone>> = (0..n_rest).map(|_| None).collect();
+    let mut slots: Vec<Option<DoneItem>> = (0..n_rest).map(|_| None).collect();
     for (i, r) in outs.into_iter().flatten() {
         slots[i] = Some(r);
     }
-    done.extend(slots.into_iter().map(|r| r.expect("decode item processed")));
+    done.extend(slots.into_iter().flatten());
 
-    for (req, tx, engine, activity, output, shared_energy_j) in done {
-        let seq_len = engine.len();
-        {
-            let mut table = sessions.lock().unwrap();
-            if let Some(slot) = table.get_mut(&req.session) {
-                slot.engine = Some(engine);
-                slot.seq_len = seq_len;
-                slot.busy = false;
+    for DoneItem { req, tx, guard, outcome } in done {
+        match outcome {
+            Outcome::Done { engine, activity, output, share } => {
+                let seq_len = engine.len();
+                guard.finish(engine);
+                let energy =
+                    EnergyBreakdown::for_activity(&config.accelerator, &activity).total() + share;
+                let cycles = activity.cycles + activity.stall_cycles;
+                metrics.sim_cycles.add(cycles);
+                metrics.sim_energy_pj.add((energy * 1e12) as u64);
+                if matches!(req.input, DecodeInput::Prefill(_)) {
+                    metrics.prefills_completed.inc();
+                } else {
+                    metrics.decode_steps_completed.inc();
+                }
+                metrics.requests_completed.inc();
+                let latency = req.enqueued.elapsed();
+                metrics.latency.observe(latency);
+                let _ = tx.send(Ok(DecodeResponse {
+                    id: req.id,
+                    session: req.session,
+                    output,
+                    seq_len,
+                    sim_cycles: cycles,
+                    sim_energy_j: energy,
+                    latency,
+                    batch_size: b,
+                }));
+            }
+            Outcome::Poisoned => {
+                guard.poison();
+                let _ = tx.send(Err(SubmitError::SessionPoisoned));
             }
         }
-        let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total()
-            + shared_energy_j;
-        let cycles = activity.cycles + activity.stall_cycles;
-        metrics.sim_cycles.add(cycles);
-        metrics.sim_energy_pj.add((energy * 1e12) as u64);
-        if matches!(req.input, DecodeInput::Prefill(_)) {
-            metrics.prefills_completed.inc();
-        } else {
-            metrics.decode_steps_completed.inc();
-        }
-        metrics.requests_completed.inc();
-        let latency = req.enqueued.elapsed();
-        metrics.latency.observe(latency);
-        let _ = tx.send(DecodeResponse {
-            id: req.id,
-            session: req.session,
-            output,
-            seq_len,
-            sim_cycles: cycles,
-            sim_energy_j: energy,
-            latency,
-            batch_size: b,
-        });
     }
 }
 
@@ -598,38 +936,60 @@ fn process_decode_batch(
 /// energy is split evenly across the fused members (mirroring the
 /// infer path's per-request energy split of its amortized batch
 /// total).
-fn execute_fused_prefills(
+fn execute_fused_prefills<'a>(
     config: &SystemConfig,
-    mut items: Vec<DecodeItem>,
+    mut items: Vec<LiveItem<'a>>,
     metrics: &ServerMetrics,
-) -> Vec<DecodeDone> {
+) -> Vec<DoneItem<'a>> {
     let n = items.len();
     debug_assert!(n >= 2);
-    let result = {
+    // Containment: the fused pass interleaves all members through
+    // shared stacked GEMMs, so a panic anywhere inside it cannot be
+    // attributed to one session — the whole group quarantines. (The
+    // per-session failpoint targets the step path, whose tails are
+    // independent; prefill faults are coarse by construction.)
+    let result = catch_unwind(AssertUnwindSafe(|| {
         let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
         let mut inputs: Vec<&MatI8> = Vec::with_capacity(n);
-        for (req, _tx, engine) in items.iter_mut() {
-            let DecodeInput::Prefill(x) = &req.input else {
+        for item in items.iter_mut() {
+            let DecodeInput::Prefill(x) = &item.req.input else {
                 unreachable!("the aggregation stage only receives prefills")
             };
             inputs.push(x);
-            engines.push(&mut **engine);
+            engines.push(&mut *item.engine);
         }
         fused_prefill(&mut engines, &inputs)
-    };
-    metrics.fused_prefill_batches.inc();
-    metrics.fused_prefill_sessions.add(n as u64);
-    let shared_energy =
-        EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
-    let share = shared_energy / n as f64;
-    items
-        .into_iter()
-        .zip(result.outputs)
-        .map(|((req, tx, engine), out)| {
-            let activity = engine.engine.activity;
-            (req, tx, engine, activity, out.out, share)
-        })
-        .collect()
+    }));
+    match result {
+        Ok(result) => {
+            metrics.fused_prefill_batches.inc();
+            metrics.fused_prefill_sessions.add(n as u64);
+            let shared_energy =
+                EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
+            let share = shared_energy / n as f64;
+            items
+                .into_iter()
+                .zip(result.outputs)
+                .map(|(item, out)| {
+                    let LiveItem { req, tx, engine, guard } = item;
+                    let activity = engine.engine.activity;
+                    DoneItem {
+                        req,
+                        tx,
+                        guard,
+                        outcome: Outcome::Done { engine, activity, output: out.out, share },
+                    }
+                })
+                .collect()
+        }
+        Err(_) => items
+            .into_iter()
+            .map(|item| {
+                let LiveItem { req, tx, guard, .. } = item;
+                DoneItem { req, tx, guard, outcome: Outcome::Poisoned }
+            })
+            .collect(),
+    }
 }
 
 /// The step-aggregation stage body (§Step-batching): run ≥ 2 pending
@@ -640,41 +1000,73 @@ fn execute_fused_prefills(
 /// weight-stream energy is split evenly across the fused members
 /// (mirroring the fused-prefill split). The worker-owned `batch`
 /// scratch keeps steady-state ticks allocation-free.
-fn execute_fused_steps(
+fn execute_fused_steps<'a>(
     config: &SystemConfig,
-    mut items: Vec<DecodeItem>,
+    mut items: Vec<LiveItem<'a>>,
     metrics: &ServerMetrics,
     batch: &mut FusedStepBatch,
-) -> Vec<DecodeDone> {
+) -> Vec<DoneItem<'a>> {
     let n = items.len();
     debug_assert!(n >= 2);
-    {
+    // Fine-grained containment (§Quarantine): the tick's stage-2
+    // cache-attention tails are per-session and independent, so a tail
+    // panic poisons ONLY its own session — the tick completes and the
+    // survivors' outputs are bit-identical to a fault-free run (their
+    // rows never read a poisoned session's state; the stage-3 output
+    // GEMM is row-independent). A panic in the shared stages 1/3
+    // (stacked GEMMs over all rows) has no per-session attribution and
+    // quarantines the whole group.
+    let tick_result = catch_unwind(AssertUnwindSafe(|| {
         let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
         let mut rows: Vec<&[i8]> = Vec::with_capacity(n);
-        for (req, _tx, engine) in items.iter_mut() {
-            let DecodeInput::Step(row) = &req.input else {
+        for item in items.iter_mut() {
+            let DecodeInput::Step(row) = &item.req.input else {
                 unreachable!("the step-aggregation stage only receives steps")
             };
             rows.push(row);
-            engines.push(&mut **engine);
+            engines.push(&mut *item.engine);
         }
-        batch.tick(&mut engines, &rows);
+        batch.tick(&mut engines, &rows)
+    }));
+    match tick_result {
+        Ok(report) => {
+            let n_live = n - report.poisoned.len();
+            metrics.fused_step_batches.inc();
+            metrics.fused_step_sessions.add(n_live as u64);
+            let shared_energy =
+                EnergyBreakdown::for_activity(&config.accelerator, batch.shared()).total();
+            let share = if n_live > 0 { shared_energy / n_live as f64 } else { 0.0 };
+            items
+                .into_iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    let LiveItem { req, tx, engine, guard } = item;
+                    if report.poisoned.binary_search(&i).is_ok() {
+                        // Engine dropped here: its KV cache is
+                        // partially advanced and must not be reused.
+                        DoneItem { req, tx, guard, outcome: Outcome::Poisoned }
+                    } else {
+                        let activity = engine.engine.activity;
+                        let row = batch.out_row(i);
+                        let out = MatI8::from_vec(1, row.len(), row.to_vec());
+                        DoneItem {
+                            req,
+                            tx,
+                            guard,
+                            outcome: Outcome::Done { engine, activity, output: out, share },
+                        }
+                    }
+                })
+                .collect()
+        }
+        Err(_) => items
+            .into_iter()
+            .map(|item| {
+                let LiveItem { req, tx, guard, .. } = item;
+                DoneItem { req, tx, guard, outcome: Outcome::Poisoned }
+            })
+            .collect(),
     }
-    metrics.fused_step_batches.inc();
-    metrics.fused_step_sessions.add(n as u64);
-    let shared_energy =
-        EnergyBreakdown::for_activity(&config.accelerator, batch.shared()).total();
-    let share = shared_energy / n as f64;
-    items
-        .into_iter()
-        .enumerate()
-        .map(|(i, (req, tx, engine))| {
-            let activity = engine.engine.activity;
-            let row = batch.out_row(i);
-            let out = MatI8::from_vec(1, row.len(), row.to_vec());
-            (req, tx, engine, activity, out, share)
-        })
-        .collect()
 }
 
 /// Pool-aware adaptive upper bound on one worker's request fan-out
@@ -711,8 +1103,25 @@ fn process_batch(
     batch: Vec<Job>,
     metrics: &ServerMetrics,
 ) {
-    let b = batch.len() as u64;
-    let want = batch.len().min(max_batch_parallelism()).max(1);
+    // Pre-compute shedding: expired deadlines get an explicit verdict,
+    // cancelled (receiver-dropped) items are discarded and counted.
+    let now = Instant::now();
+    let mut live: Vec<Job> = Vec::with_capacity(batch.len());
+    for (req, tx) in batch {
+        if req.deadline.is_some_and(|dl| now >= dl) {
+            metrics.deadlines_expired.inc();
+            let _ = tx.send(Err(SubmitError::DeadlineExceeded));
+        } else if tx.is_cancelled() {
+            metrics.requests_cancelled.inc();
+        } else {
+            live.push((req, tx));
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let b = live.len();
+    let want = b.min(max_batch_parallelism()).max(1);
     while pool.len() < want {
         pool.push(AttentionExecutor::new(
             config.accelerator,
@@ -721,24 +1130,43 @@ fn process_batch(
         ));
     }
 
-    type ReqResult = (Activity, InferenceRequest, Sender<InferenceResponse>, MatI8);
+    type ReqResult =
+        (InferenceRequest, oneshot::Sender<InferenceResult>, Option<(Activity, MatI8)>);
+    // Panic containment: a mid-pass panic leaves the executor's
+    // internal scratch in an unknown state, so it is rebuilt in place
+    // (weights resolve through the shared packed cache — cheap) and
+    // only the offending request fails; batch peers and the worker
+    // survive.
     fn execute_one(
+        config: &SystemConfig,
         exec: &mut AttentionExecutor,
         req: InferenceRequest,
-    ) -> (Activity, InferenceRequest, MatI8) {
-        exec.engine.reset_activity();
-        let out = exec.run(&req.input);
-        (exec.engine.activity, req, out.out)
+    ) -> (InferenceRequest, Option<(Activity, MatI8)>) {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            exec.engine.reset_activity();
+            let out = exec.run(&req.input);
+            (exec.engine.activity, out.out)
+        }));
+        match result {
+            Ok(r) => (req, Some(r)),
+            Err(_) => {
+                *exec = AttentionExecutor::new(
+                    config.accelerator,
+                    config.model.dims,
+                    config.model.seed,
+                );
+                (req, None)
+            }
+        }
     }
 
-    let per_req: Vec<ReqResult> = if batch.len() == 1 || want == 1 {
+    let per_req: Vec<ReqResult> = if b == 1 || want == 1 {
         // Serial fast path: no fan-out overhead for singleton batches.
         let exec = &mut pool[0];
-        batch
-            .into_iter()
+        live.into_iter()
             .map(|(req, tx)| {
-                let (activity, req, out) = execute_one(exec, req);
-                (activity, req, tx, out)
+                let (req, r) = execute_one(config, exec, req);
+                (req, tx, r)
             })
             .collect()
     } else {
@@ -746,7 +1174,7 @@ fn process_batch(
         // responses merge back in submission order. Each pool task
         // owns one executor and fills its own result buffer.
         let mut assigned: Vec<Vec<(usize, Job)>> = (0..want).map(|_| Vec::new()).collect();
-        for (i, job) in batch.into_iter().enumerate() {
+        for (i, job) in live.into_iter().enumerate() {
             assigned[i % want].push((i, job));
         }
         let mut outs: Vec<Vec<(usize, ReqResult)>> = (0..want).map(|_| Vec::new()).collect();
@@ -757,46 +1185,65 @@ fn process_batch(
             .map(|((exec, jobs), out)| {
                 Box::new(move || {
                     for (i, (req, tx)) in jobs {
-                        let (activity, req, res) = execute_one(exec, req);
-                        out.push((i, (activity, req, tx, res)));
+                        let (req, r) = execute_one(config, exec, req);
+                        out.push((i, (req, tx, r)));
                     }
                 }) as Task
             })
             .collect();
         WorkerPool::global().run(tasks);
-        let mut slots: Vec<Option<ReqResult>> = (0..b as usize).map(|_| None).collect();
+        let mut slots: Vec<Option<ReqResult>> = (0..b).map(|_| None).collect();
         for (i, r) in outs.into_iter().flatten() {
             slots[i] = Some(r);
         }
         slots.into_iter().map(|r| r.expect("request processed")).collect()
     };
-    // Batch-level activity with amortized weight traffic.
-    let single_weight_writes = per_req.first().map(|(a, ..)| a.weight_buf_writes).unwrap_or(0);
-    let mut batch_activity = Activity::default();
-    for (a, ..) in &per_req {
-        batch_activity.add(a);
+    // Batch-level activity with amortized weight traffic, summed over
+    // the requests that actually completed.
+    let n_ok = per_req.iter().filter(|(.., r)| r.is_some()).count() as u64;
+    let mut energy_per_req = 0.0;
+    let mut cycles_per_req = 0;
+    if n_ok > 0 {
+        let single_weight_writes = per_req
+            .iter()
+            .find_map(|(.., r)| r.as_ref().map(|(a, _)| a.weight_buf_writes))
+            .unwrap_or(0);
+        let mut batch_activity = Activity::default();
+        for (.., r) in &per_req {
+            if let Some((a, _)) = r {
+                batch_activity.add(a);
+            }
+        }
+        batch_activity.weight_buf_writes -= single_weight_writes * (n_ok - 1);
+
+        let energy = EnergyBreakdown::for_activity(&config.accelerator, &batch_activity).total();
+        let cycles = batch_activity.cycles + batch_activity.stall_cycles;
+        metrics.sim_cycles.add(cycles);
+        metrics.sim_energy_pj.add((energy * 1e12) as u64);
+        energy_per_req = energy / n_ok as f64;
+        cycles_per_req = cycles / n_ok;
     }
-    batch_activity.weight_buf_writes -= single_weight_writes * (b - 1);
-
-    let energy = EnergyBreakdown::for_activity(&config.accelerator, &batch_activity).total();
-    let cycles = batch_activity.cycles + batch_activity.stall_cycles;
-    metrics.sim_cycles.add(cycles);
-    metrics.sim_energy_pj.add((energy * 1e12) as u64);
-
-    let energy_per_req = energy / b as f64;
-    let cycles_per_req = cycles / b;
-    for (_, req, tx, out) in per_req {
-        let latency = req.enqueued.elapsed();
-        metrics.latency.observe(latency);
-        metrics.requests_completed.inc();
-        let _ = tx.send(InferenceResponse {
-            id: req.id,
-            output: out,
-            sim_cycles: cycles_per_req,
-            sim_energy_j: energy_per_req,
-            latency,
-            batch_size: b as usize,
-        });
+    for (req, tx, r) in per_req {
+        match r {
+            Some((_, out)) => {
+                let latency = req.enqueued.elapsed();
+                metrics.latency.observe(latency);
+                metrics.requests_completed.inc();
+                let _ = tx.send(Ok(InferenceResponse {
+                    id: req.id,
+                    output: out,
+                    sim_cycles: cycles_per_req,
+                    sim_energy_j: energy_per_req,
+                    latency,
+                    batch_size: b,
+                }));
+            }
+            // A panicked one-shot request carries no session to poison;
+            // its waiter learns the work was abandoned.
+            None => {
+                let _ = tx.send(Err(SubmitError::Cancelled));
+            }
+        }
     }
 }
 
@@ -816,7 +1263,13 @@ mod tests {
                 layers: 1,
                 seed: 42,
             },
-            server: ServerConfig { workers: 2, max_batch: 4, max_wait_us: 500, queue_depth: 16 },
+            server: ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait_us: 500,
+                queue_depth: 16,
+                ..ServerConfig::default()
+            },
         }
     }
 
@@ -869,7 +1322,7 @@ mod tests {
         assert!(!rxs.is_empty());
         let mut max_batch = 0;
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             max_batch = max_batch.max(resp.batch_size);
         }
         assert!(max_batch >= 2, "burst should batch, got max fill {max_batch}");
@@ -891,7 +1344,7 @@ mod tests {
         let golden: Vec<_> = inputs.iter().map(|x| exec.run_serial(x).out).collect();
         let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.output, golden[i], "request {i} diverged");
         }
         server.shutdown();
@@ -994,7 +1447,7 @@ mod tests {
             .collect();
 
         for ((rx, p), &sid) in rxs.into_iter().zip(&prompts).zip(&sids) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.seq_len, p.rows());
             let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
             let want = golden.prefill(p);
@@ -1002,7 +1455,7 @@ mod tests {
             assert_eq!(resp.batch_size, 4, "all four prefills in one decode batch");
             assert!(resp.sim_energy_j > 0.0 && resp.sim_cycles > 0);
         }
-        let _ = infer_rx.recv().unwrap();
+        let _ = infer_rx.recv().unwrap().unwrap();
         assert_eq!(server.metrics.fused_prefill_batches.get(), 1);
         assert_eq!(server.metrics.fused_prefill_sessions.get(), 4);
         assert_eq!(server.metrics.prefills_completed.get(), 4);
@@ -1063,7 +1516,7 @@ mod tests {
                 })
                 .collect();
             for (((rx, row), golden), &l) in rxs.into_iter().zip(&mut goldens).zip(&lens) {
-                let resp = rx.recv().unwrap();
+                let resp = rx.recv().unwrap().unwrap();
                 assert_eq!(resp.seq_len, l + 1 + tick as usize);
                 assert_eq!(resp.batch_size, 4, "all four steps in one decode batch");
                 assert_eq!(
@@ -1121,11 +1574,11 @@ mod tests {
                 })
                 .collect();
             for (rx, golden) in step_rxs.into_iter().zip(&mut goldens) {
-                assert_eq!(rx.recv().unwrap().output.row(0), &golden.step(x.row(r))[..]);
+                assert_eq!(rx.recv().unwrap().unwrap().output.row(0), &golden.step(x.row(r))[..]);
             }
             for (rx, p) in pre_rxs {
                 let mut g = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
-                assert_eq!(rx.recv().unwrap().output, g.prefill(&p).out);
+                assert_eq!(rx.recv().unwrap().unwrap().output, g.prefill(&p).out);
             }
             for sid in fresh {
                 assert!(server.close_session(sid));
@@ -1213,7 +1666,7 @@ mod tests {
         );
         // Busy sessions cannot be closed out from under the worker.
         assert!(!server.close_session(sid));
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.seq_len, 1);
         // After the response the session accepts work again.
         server.decode(sid, DecodeInput::Step(vec![2; d.e])).unwrap();
@@ -1238,8 +1691,8 @@ mod tests {
         for r in 0..6 {
             let infer_rx = server.submit(x.clone()).unwrap();
             let step_rx = server.submit_decode(sid, DecodeInput::Step(x.row(r).to_vec())).unwrap();
-            assert_eq!(infer_rx.recv().unwrap().output, want_infer);
-            assert_eq!(step_rx.recv().unwrap().output.row(0), &golden.step(x.row(r))[..]);
+            assert_eq!(infer_rx.recv().unwrap().unwrap().output, want_infer);
+            assert_eq!(step_rx.recv().unwrap().unwrap().output.row(0), &golden.step(x.row(r))[..]);
         }
         assert_eq!(server.metrics.decode_steps_completed.get(), 6);
         server.shutdown();
@@ -1253,7 +1706,7 @@ mod tests {
         let rxs: Vec<_> = (0..10).filter_map(|_| server.submit(x.clone()).ok()).collect();
         let n = rxs.len() as u64;
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         assert_eq!(server.metrics.requests_completed.get(), n);
         assert!(server.metrics.latency.count() == n);

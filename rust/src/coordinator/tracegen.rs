@@ -46,7 +46,12 @@ pub fn interarrival_gaps(process: ArrivalProcess, n: usize, seed: u64) -> Vec<Du
 pub struct LoadReport {
     pub offered: usize,
     pub completed: usize,
+    /// Total submissions the server turned away (all error variants).
     pub rejected: usize,
+    /// Rejections broken down by error message — a loadtest against a
+    /// saturated, shutting-down, or fault-injected server reports what
+    /// happened instead of panicking on the first non-QueueFull error.
+    pub rejections: std::collections::BTreeMap<String, usize>,
     pub wall: Duration,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -59,7 +64,7 @@ impl LoadReport {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "offered {} completed {} rejected {} in {:.1} ms\n\
              achieved {:.0} req/s, p50 {:.0} us, p99 {:.0} us, mean batch fill {:.2}",
             self.offered,
@@ -70,7 +75,11 @@ impl LoadReport {
             self.p50_us,
             self.p99_us,
             self.mean_batch_fill
-        )
+        );
+        for (why, n) in &self.rejections {
+            out.push_str(&format!("\n  rejected {n}: {why}"));
+        }
+        out
     }
 }
 
@@ -92,23 +101,33 @@ pub fn run_load(
 
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    let mut rejected = 0usize;
+    let mut rejections = std::collections::BTreeMap::new();
     for (i, gap) in gaps.iter().enumerate() {
         if !gap.is_zero() {
             std::thread::sleep(*gap);
         }
+        // Every rejection variant is load-test data, not a crash:
+        // QueueFull under saturation, Shutdown when racing teardown,
+        // DeadlineExceeded/QueueFull under injected faults.
         match server.submit(inputs[i % inputs.len()].clone()) {
             Ok(rx) => pending.push(rx),
-            Err(crate::coordinator::SubmitError::QueueFull) => rejected += 1,
-            Err(e) => panic!("{e}"),
+            Err(e) => *rejections.entry(e.to_string()).or_insert(0) += 1,
         }
     }
-    let completed = pending.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    // A pending request completes only with an Ok verdict; explicit
+    // in-flight errors (shed, poisoned, shutdown) and bare disconnects
+    // both count as not-completed.
+    let completed = pending
+        .into_iter()
+        .map(|rx| rx.recv())
+        .filter(|r| matches!(r, Ok(Ok(_))))
+        .count();
     let wall = t0.elapsed();
     LoadReport {
         offered: n,
         completed,
-        rejected,
+        rejected: rejections.values().sum(),
+        rejections,
         wall,
         p50_us: server.metrics.latency.quantile_us(0.5),
         p99_us: server.metrics.latency.quantile_us(0.99),
@@ -164,7 +183,13 @@ mod tests {
                 layers: 1,
                 seed: 42,
             },
-            server: ServerConfig { workers: 2, max_batch: 4, max_wait_us: 200, queue_depth: 64 },
+            server: ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait_us: 200,
+                queue_depth: 64,
+                ..ServerConfig::default()
+            },
         };
         let server = crate::coordinator::Server::start(cfg);
         let rep = run_load(&server, ArrivalProcess::Bursty { burst: 8, gap: Duration::from_micros(100) }, 32, 3);
@@ -172,5 +197,14 @@ mod tests {
         assert!(rep.completed > 0);
         assert!(rep.achieved_rps() > 0.0);
         server.shutdown();
+
+        // Against a shut-down server, every submit is rejected with an
+        // explicit per-variant count — no panic (regression: run_load
+        // used to panic on any non-QueueFull error).
+        let rep = run_load(&server, ArrivalProcess::Uniform { rate: 1e6 }, 8, 5);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.rejected, 8);
+        assert_eq!(rep.rejections.get("server is shut down"), Some(&8));
+        assert!(rep.render().contains("rejected 8: server is shut down"), "{}", rep.render());
     }
 }

@@ -157,6 +157,21 @@ pub struct ServerMetrics {
     /// Decode steps that rode a fused tick (each saved its own set of
     /// projection weight streams).
     pub fused_step_sessions: Counter,
+    /// Requests shed before compute because their deadline had passed.
+    pub deadlines_expired: Counter,
+    /// Requests shed before compute because the caller dropped its
+    /// receiver (or an injected ingress fault discarded them).
+    pub requests_cancelled: Counter,
+    /// Decode sessions quarantined after a mid-operation panic.
+    pub sessions_poisoned: Counter,
+    /// Idle decode sessions evicted by the TTL sweep.
+    pub sessions_evicted: Counter,
+    /// Accepted jobs discarded by an injected ingress-drop fault.
+    pub ingress_dropped: Counter,
+    /// Batches whose processing exceeded the watchdog threshold.
+    pub slow_ticks: Counter,
+    /// Wall-clock duration of each batch-processing pass (watchdog).
+    pub tick_duration: LatencyHistogram,
 }
 
 impl ServerMetrics {
@@ -176,6 +191,8 @@ impl ServerMetrics {
              decode: sessions={} prefills={} (fused={} in {} passes) \
              steps={} (fused={} in {} ticks)\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
+             faults: deadline_expired={} cancelled={} dropped={} poisoned={} evicted={}\n\
+             ticks: mean={:.1}us slow={}\n\
              sim: cycles={} energy={:.3}uJ",
             self.requests_accepted.get(),
             self.requests_rejected.get(),
@@ -192,6 +209,13 @@ impl ServerMetrics {
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
+            self.deadlines_expired.get(),
+            self.requests_cancelled.get(),
+            self.ingress_dropped.get(),
+            self.sessions_poisoned.get(),
+            self.sessions_evicted.get(),
+            self.tick_duration.mean_us(),
+            self.slow_ticks.get(),
             self.sim_cycles.get(),
             self.sim_energy_pj.get() as f64 / 1e6,
         )
@@ -257,6 +281,23 @@ mod tests {
         m.fused_step_sessions.add(4);
         m.fused_step_batches.add(2);
         assert!(m.report().contains("steps=6 (fused=4 in 2 ticks)"));
+    }
+
+    #[test]
+    fn server_metrics_report_fault_lines() {
+        let m = ServerMetrics::default();
+        m.deadlines_expired.add(3);
+        m.requests_cancelled.add(2);
+        m.sessions_poisoned.inc();
+        m.sessions_evicted.add(4);
+        m.slow_ticks.inc();
+        m.tick_duration.observe(Duration::from_micros(100));
+        let r = m.report();
+        assert!(
+            r.contains("faults: deadline_expired=3 cancelled=2 dropped=0 poisoned=1 evicted=4"),
+            "{r}"
+        );
+        assert!(r.contains("slow=1"), "{r}");
     }
 
     #[test]

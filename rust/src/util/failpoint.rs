@@ -1,0 +1,180 @@
+//! Named fault-injection points (chaos harness), gated behind the
+//! `failpoints` cargo feature.
+//!
+//! Production code sprinkles `failpoint::hit("name", ctx)` at the
+//! places faults must be survivable — the decode stage-2 attend tail,
+//! the server ingress, the worker loop. With the feature off, `hit` is
+//! a `const fn` returning `false`, so every call site const-folds away
+//! and the default build carries zero overhead (witnessed by a
+//! compile-time assertion below). With the feature on, tests arm
+//! points by name via [`cfg`] / [`cfg_for`] and the hooks fire:
+//!
+//! - [`FailAction::Panic`] — panic at the hit site (quarantine tests),
+//! - [`FailAction::Delay`] — sleep before proceeding (slow worker),
+//! - [`FailAction::Trigger`] — `hit` returns `true` and the call site
+//!   decides what the fault means (forced queue-full, ingress drop).
+//!
+//! Points used by the coordinator:
+//!
+//! | name                  | ctx                  | site                        |
+//! |-----------------------|----------------------|-----------------------------|
+//! | `decode.step.tail`    | engine `fail_tag`    | stage-2 attend tail         |
+//! | `server.ingress.full` | 0                    | submit path, forces QueueFull |
+//! | `server.ingress.drop` | 0                    | dispatcher, drops one job   |
+//! | `server.worker.slow`  | 0                    | worker loop, delays a batch |
+
+#[cfg(feature = "failpoints")]
+pub use enabled::*;
+
+#[cfg(feature = "failpoints")]
+mod enabled {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    /// What an armed failpoint does when hit.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum FailAction {
+        /// Panic at the hit site.
+        Panic,
+        /// Sleep for the given duration, then proceed normally.
+        Delay(Duration),
+        /// Make `hit` return `true`; the call site interprets it.
+        Trigger,
+    }
+
+    #[derive(Clone, Copy)]
+    struct FailSpec {
+        action: FailAction,
+        /// Only fire when the hit's ctx matches (None = any ctx).
+        ctx: Option<u64>,
+        /// Remaining activations (None = unlimited).
+        times: Option<usize>,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, FailSpec>> {
+        static REG: OnceLock<Mutex<HashMap<String, FailSpec>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn lock() -> std::sync::MutexGuard<'static, HashMap<String, FailSpec>> {
+        // A Panic action fires *after* the lock is released, but be
+        // tolerant anyway: a poisoned registry is still a valid map.
+        registry().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm `name` unconditionally (any ctx, unlimited activations).
+    pub fn cfg(name: &str, action: FailAction) {
+        lock().insert(name.to_string(), FailSpec { action, ctx: None, times: None });
+    }
+
+    /// Arm `name` to fire only for hits carrying `ctx`, at most `times`
+    /// activations (after which the point disarms itself).
+    pub fn cfg_for(name: &str, ctx: u64, times: usize, action: FailAction) {
+        lock().insert(name.to_string(), FailSpec { action, ctx: Some(ctx), times: Some(times) });
+    }
+
+    /// Disarm a single point.
+    pub fn remove(name: &str) {
+        lock().remove(name);
+    }
+
+    /// Disarm everything (call between tests).
+    pub fn clear() {
+        lock().clear();
+    }
+
+    /// Evaluate the point. Returns `true` only for a fired `Trigger`;
+    /// `Panic`/`Delay` act directly. The registry lock is dropped
+    /// before the action runs so a panicking hit never wedges it.
+    pub fn hit(name: &str, ctx: u64) -> bool {
+        let action = {
+            let mut reg = lock();
+            let Some(spec) = reg.get_mut(name) else { return false };
+            if spec.ctx.is_some_and(|want| want != ctx) {
+                return false;
+            }
+            if let Some(times) = &mut spec.times {
+                if *times == 0 {
+                    return false;
+                }
+                *times -= 1;
+                let action = spec.action;
+                if *times == 0 {
+                    reg.remove(name);
+                }
+                action
+            } else {
+                spec.action
+            }
+        };
+        match action {
+            FailAction::Panic => panic!("failpoint '{name}' fired (ctx={ctx})"),
+            FailAction::Delay(d) => {
+                std::thread::sleep(d);
+                false
+            }
+            FailAction::Trigger => true,
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // The registry is process-global; each test uses its own
+        // point names so they can run in parallel.
+
+        #[test]
+        fn unarmed_point_is_inert() {
+            assert!(!hit("test.unarmed", 0));
+        }
+
+        #[test]
+        fn trigger_fires_then_counts_down() {
+            cfg_for("test.trigger", 0, 2, FailAction::Trigger);
+            assert!(hit("test.trigger", 0));
+            assert!(hit("test.trigger", 0));
+            assert!(!hit("test.trigger", 0), "exhausted point must disarm");
+        }
+
+        #[test]
+        fn ctx_filter_only_matches_its_target() {
+            cfg_for("test.ctx", 7, 1, FailAction::Trigger);
+            assert!(!hit("test.ctx", 3), "wrong ctx must not fire");
+            assert!(hit("test.ctx", 7));
+            remove("test.ctx");
+        }
+
+        #[test]
+        fn panic_action_panics_without_poisoning_registry() {
+            cfg_for("test.panic", 0, 1, FailAction::Panic);
+            let r = std::panic::catch_unwind(|| hit("test.panic", 0));
+            assert!(r.is_err());
+            // Registry still usable afterwards.
+            assert!(!hit("test.panic", 0));
+        }
+
+        #[test]
+        fn delay_action_sleeps() {
+            use std::time::{Duration, Instant};
+            cfg_for("test.delay", 0, 1, FailAction::Delay(Duration::from_millis(20)));
+            let t0 = Instant::now();
+            assert!(!hit("test.delay", 0));
+            assert!(t0.elapsed() >= Duration::from_millis(20));
+        }
+    }
+}
+
+/// Feature off: a const fn the optimizer folds to `false`, deleting
+/// the call site entirely.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub const fn hit(_name: &str, _ctx: u64) -> bool {
+    false
+}
+
+// Compile-time witness that the disabled hook is free: if `hit` were
+// not const-foldable to `false`, this assertion would not compile.
+#[cfg(not(feature = "failpoints"))]
+const _: () = assert!(!hit("any", 0));

@@ -12,9 +12,11 @@
 
 pub mod bench;
 pub mod error;
+pub mod failpoint;
 pub mod gemm;
 pub mod json;
 pub mod mat;
+pub mod oneshot;
 pub mod pool;
 pub mod prop;
 pub mod rng;

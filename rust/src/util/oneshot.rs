@@ -1,0 +1,200 @@
+//! Single-use response channel with cancellation observability.
+//!
+//! The coordinator hands every submitter a [`Receiver`] for exactly one
+//! response. std's `mpsc::Sender` cannot tell whether its receiver is
+//! still alive without actually sending, which is precisely the signal
+//! the batcher needs to shed work for callers that gave up (dropped
+//! their receiver, or timed out in a `*_timeout` wrapper). This
+//! dependency-free oneshot keeps both halves' liveness observable:
+//! [`Sender::is_cancelled`] is a cheap pre-compute check, and a sender
+//! dropped without sending surfaces as a disconnect on the receiver.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct State<T> {
+    value: Option<T>,
+    sender_dropped: bool,
+    receiver_dropped: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Sending half. Consumed by [`Sender::send`]; dropping it without
+/// sending disconnects the receiver.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half. Consumed by [`Receiver::recv`] /
+/// [`Receiver::recv_timeout`]; dropping it marks the request cancelled.
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// The sender was dropped without ever sending a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Outcome of a bounded wait on the receiving half.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// The deadline passed with no value sent.
+    Timeout,
+    /// The sender was dropped without ever sending a value.
+    Disconnected,
+}
+
+/// Create a connected oneshot pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State { value: None, sender_dropped: false, receiver_dropped: false }),
+        cv: Condvar::new(),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    // A panicking holder poisons the mutex but cannot leave the state
+    // torn (every critical section is a couple of field writes), so
+    // recover the guard rather than cascading the panic.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T> Sender<T> {
+    /// Deliver the value. Returns it back if the receiver is gone.
+    pub fn send(self, value: T) -> Result<(), T> {
+        let mut st = lock(&self.inner.state);
+        if st.receiver_dropped {
+            return Err(value);
+        }
+        st.value = Some(value);
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(())
+    }
+
+    /// True once the paired receiver has been dropped without taking a
+    /// value — the caller abandoned this request.
+    pub fn is_cancelled(&self) -> bool {
+        lock(&self.inner.state).receiver_dropped
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.inner.state);
+        st.sender_dropped = true;
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the value arrives or the sender disappears.
+    pub fn recv(self) -> Result<T, RecvError> {
+        let mut st = lock(&self.inner.state);
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if st.sender_dropped {
+                return Err(RecvError);
+            }
+            st = self.inner.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block at most `timeout`. Consumes the receiver either way, so a
+    /// timed-out wait doubles as cancellation: the dropped receiver is
+    /// what the batcher's shed pass observes.
+    pub fn recv_timeout(self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock(&self.inner.state);
+        loop {
+            if let Some(v) = st.value.take() {
+                return Ok(v);
+            }
+            if st.sender_dropped {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self
+                .inner
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.inner.state);
+        st.receiver_dropped = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_recv() {
+        let (tx, rx) = channel();
+        tx.send(7u32).unwrap();
+        assert_eq!(rx.recv(), Ok(7));
+    }
+
+    #[test]
+    fn cross_thread_recv_blocks_until_send() {
+        let (tx, rx) = channel();
+        let t = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(42u64).unwrap();
+        assert_eq!(t.join().unwrap(), Ok(42));
+    }
+
+    #[test]
+    fn dropped_sender_disconnects() {
+        let (tx, rx) = channel::<u8>();
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_disconnects() {
+        let (tx, rx) = channel::<u8>();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(5)), Err(RecvTimeoutError::Timeout));
+        // The timed-out receiver is gone: the sender observes the
+        // cancellation and its send fails.
+        assert!(tx.is_cancelled());
+        assert_eq!(tx.send(1), Err(1));
+    }
+
+    #[test]
+    fn receiver_drop_marks_cancelled() {
+        let (tx, rx) = channel::<u8>();
+        assert!(!tx.is_cancelled());
+        drop(rx);
+        assert!(tx.is_cancelled());
+    }
+
+    #[test]
+    fn recv_timeout_delivers_value_sent_before_deadline() {
+        let (tx, rx) = channel();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(9i32).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(9));
+        t.join().unwrap();
+    }
+}

@@ -64,44 +64,87 @@ pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
 
 type StaticTask = Box<dyn FnOnce() + Send + 'static>;
 
+/// What went wrong inside a `try_run` / `try_run_indexed` scope: which
+/// task indices panicked (sorted), and the first panic payload that
+/// could be rendered as text. The scope itself always completes — the
+/// failure report is for the caller to quarantine the *specific* items
+/// that failed (e.g. poison one decode session) instead of tearing
+/// down the whole batch.
+#[derive(Debug, Default)]
+pub struct ScopeFailure {
+    /// Indices (submission order for `run`, claim index for
+    /// `run_indexed`) of the tasks that panicked.
+    pub indices: Vec<usize>,
+    /// First panic payload that was a `&str`/`String`, if any.
+    pub first_message: Option<String>,
+}
+
+impl ScopeFailure {
+    fn record(&mut self, i: usize, payload: &(dyn std::any::Any + Send)) {
+        self.indices.push(i);
+        if self.first_message.is_none() {
+            self.first_message = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned());
+        }
+    }
+
+    fn single(i: usize, payload: &(dyn std::any::Any + Send)) -> Self {
+        let mut f = Self::default();
+        f.record(i, payload);
+        f
+    }
+}
+
+fn poison_ok<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    // Scope bookkeeping mutexes hold plain data (counters, index
+    // lists); a panic while holding one cannot leave it torn, so
+    // recover the guard instead of cascading.
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
 /// Shared state of one `run` invocation: its task queue and the
 /// completion barrier.
 struct ScopeState {
-    queue: Mutex<VecDeque<StaticTask>>,
+    queue: Mutex<VecDeque<(usize, StaticTask)>>,
     /// Tasks not yet *completed* (queued or running).
     pending: Mutex<usize>,
     done: Condvar,
     panicked: AtomicBool,
+    failures: Mutex<ScopeFailure>,
 }
 
 impl ScopeState {
-    fn new(tasks: VecDeque<StaticTask>) -> Self {
+    fn new(tasks: VecDeque<(usize, StaticTask)>) -> Self {
         let n = tasks.len();
         Self {
             queue: Mutex::new(tasks),
             pending: Mutex::new(n),
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
+            failures: Mutex::new(ScopeFailure::default()),
         }
     }
 
     /// Pop-and-execute until the scope queue is empty. Panics are
-    /// contained (recorded + re-raised by the owning `run`).
+    /// contained (recorded + reported by the owning `run`/`try_run`).
     fn drain(&self) {
         loop {
-            let task = self.queue.lock().unwrap().pop_front();
+            let task = poison_ok(self.queue.lock()).pop_front();
             match task {
-                Some(t) => self.execute(t),
+                Some((i, t)) => self.execute(i, t),
                 None => return,
             }
         }
     }
 
-    fn execute(&self, task: StaticTask) {
-        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+    fn execute(&self, index: usize, task: StaticTask) {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+            poison_ok(self.failures.lock()).record(index, payload.as_ref());
             self.panicked.store(true, Ordering::Release);
         }
-        let mut p = self.pending.lock().unwrap();
+        let mut p = poison_ok(self.pending.lock());
         *p -= 1;
         if *p == 0 {
             self.done.notify_all();
@@ -109,9 +152,19 @@ impl ScopeState {
     }
 
     fn wait_all(&self) {
-        let mut p = self.pending.lock().unwrap();
+        let mut p = poison_ok(self.pending.lock());
         while *p > 0 {
-            p = self.done.wait(p).unwrap();
+            p = poison_ok(self.done.wait(p));
+        }
+    }
+
+    fn take_failure(&self) -> Option<ScopeFailure> {
+        if self.panicked.swap(false, Ordering::AcqRel) {
+            let mut f = std::mem::take(&mut *poison_ok(self.failures.lock()));
+            f.indices.sort_unstable();
+            Some(f)
+        } else {
+            None
         }
     }
 }
@@ -144,6 +197,7 @@ struct IndexedState {
     pending: Mutex<usize>,
     done: Condvar,
     panicked: AtomicBool,
+    failures: Mutex<ScopeFailure>,
 }
 
 impl IndexedState {
@@ -153,7 +207,7 @@ impl IndexedState {
     fn drain(&self) {
         loop {
             let (f, i) = {
-                let mut slot = self.work.lock().unwrap();
+                let mut slot = poison_ok(self.work.lock());
                 match slot.as_mut() {
                     Some(w) if w.next < w.n => {
                         let i = w.next;
@@ -167,10 +221,11 @@ impl IndexedState {
             // current slot, so `f` belongs to a `run_indexed` call
             // still blocked on `pending` — its borrows are alive.
             let f = unsafe { &*f };
-            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                poison_ok(self.failures.lock()).record(i, payload.as_ref());
                 self.panicked.store(true, Ordering::Release);
             }
-            let mut p = self.pending.lock().unwrap();
+            let mut p = poison_ok(self.pending.lock());
             *p -= 1;
             if *p == 0 {
                 self.done.notify_all();
@@ -179,9 +234,20 @@ impl IndexedState {
     }
 
     fn wait_all(&self) {
-        let mut p = self.pending.lock().unwrap();
+        let mut p = poison_ok(self.pending.lock());
         while *p > 0 {
-            p = self.done.wait(p).unwrap();
+            p = poison_ok(self.done.wait(p));
+        }
+    }
+
+    fn take_failure(&self) -> Option<ScopeFailure> {
+        // Reset the flag so the scope stays reusable after a panic.
+        if self.panicked.swap(false, Ordering::AcqRel) {
+            let mut f = std::mem::take(&mut *poison_ok(self.failures.lock()));
+            f.indices.sort_unstable();
+            Some(f)
+        } else {
+            None
         }
     }
 }
@@ -205,6 +271,7 @@ impl IndexedScope {
                 pending: Mutex::new(0),
                 done: Condvar::new(),
                 panicked: AtomicBool::new(false),
+                failures: Mutex::new(ScopeFailure::default()),
             }),
         }
     }
@@ -400,19 +467,46 @@ impl WorkerPool {
     /// when **all** completed. If any task panicked, re-panics after
     /// the whole scope finished — partial effects of the surviving
     /// tasks are still visible, matching `thread::scope` join
-    /// semantics.
+    /// semantics. Callers that need to *contain* the failure instead
+    /// use [`WorkerPool::try_run`].
     pub fn run<'a>(&self, tasks: Vec<Task<'a>>) {
-        match tasks.len() {
-            0 => return,
-            1 => {
-                // Singleton fast path: no handle traffic, direct call
-                // (panic propagates natively).
-                for t in tasks {
-                    t();
-                }
-                return;
+        if tasks.len() == 1 {
+            // Singleton fast path: no handle traffic, direct call
+            // (panic propagates natively).
+            for t in tasks {
+                t();
             }
-            _ => {}
+            return;
+        }
+        if let Err(f) = self.run_scope(tasks) {
+            panic!(
+                "worker pool task panicked (indices {:?}{})",
+                f.indices,
+                f.first_message.map(|m| format!(": {m}")).unwrap_or_default()
+            );
+        }
+    }
+
+    /// Like [`WorkerPool::run`], but a panicking task does not
+    /// re-panic the caller: the scope still runs to completion (every
+    /// non-panicking task finishes, same blocking contract), and the
+    /// failure report says *which* task indices panicked so the caller
+    /// can quarantine exactly those items.
+    pub fn try_run<'a>(&self, tasks: Vec<Task<'a>>) -> Result<(), ScopeFailure> {
+        if tasks.len() == 1 {
+            for t in tasks {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(t)) {
+                    return Err(ScopeFailure::single(0, payload.as_ref()));
+                }
+            }
+            return Ok(());
+        }
+        self.run_scope(tasks)
+    }
+
+    fn run_scope<'a>(&self, tasks: Vec<Task<'a>>) -> Result<(), ScopeFailure> {
+        if tasks.is_empty() {
+            return Ok(());
         }
         let n = tasks.len();
         // SAFETY: the tasks are erased to 'static but this function
@@ -422,9 +516,10 @@ impl WorkerPool {
         // the Arc a worker may still briefly hold contains no borrowed
         // data. Hence no task — and no borrow it captured — outlives
         // the true lifetime 'a of this call.
-        let tasks: VecDeque<StaticTask> = tasks
+        let tasks: VecDeque<(usize, StaticTask)> = tasks
             .into_iter()
             .map(|t| unsafe { std::mem::transmute::<Task<'a>, StaticTask>(t) })
+            .enumerate()
             .collect();
         let scope = Arc::new(ScopeState::new(tasks));
         // One handle per task, capped at the worker count — workers
@@ -433,8 +528,9 @@ impl WorkerPool {
             .advertise(|| ScopeHandle::Boxed(scope.clone()), (n - 1).min(self.threads));
         scope.drain();
         scope.wait_all();
-        if scope.panicked.load(Ordering::Acquire) {
-            panic!("worker pool task panicked");
+        match scope.take_failure() {
+            Some(f) => Err(f),
+            None => Ok(()),
         }
     }
 
@@ -453,26 +549,62 @@ impl WorkerPool {
     /// [`DisjointSlots`] for disjoint `&mut` access), and nested
     /// fan-out on *other* scopes is deadlock-free by caller
     /// participation. Re-entering the *same* scope from inside `f` is
-    /// a programmer error and asserts.
+    /// a programmer error and asserts. Callers that need to *contain*
+    /// a panicking index instead use [`WorkerPool::try_run_indexed`].
     pub fn run_indexed(&self, scope: &IndexedScope, n: usize, f: &(dyn Fn(usize) + Sync)) {
-        match n {
-            0 => return,
-            1 => {
-                // Singleton fast path: direct call, panic propagates
-                // natively (mirrors run()'s singleton path).
-                f(0);
-                return;
-            }
-            _ => {}
+        if n == 1 {
+            // Singleton fast path: direct call, panic propagates
+            // natively (mirrors run()'s singleton path).
+            f(0);
+            return;
+        }
+        if let Err(fail) = self.run_indexed_scope(scope, n, f) {
+            panic!(
+                "worker pool task panicked (indices {:?}{})",
+                fail.indices,
+                fail.first_message.map(|m| format!(": {m}")).unwrap_or_default()
+            );
+        }
+    }
+
+    /// Like [`WorkerPool::run_indexed`], but a panicking index does
+    /// not re-panic the caller: the scope still completes (all `n`
+    /// indices execute — allocation-free contract included), and the
+    /// failure report says *which* indices panicked. This is the hook
+    /// the fused decode tick uses to poison only the offending session
+    /// while the survivors' slots stay bit-exact.
+    pub fn try_run_indexed(
+        &self,
+        scope: &IndexedScope,
+        n: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), ScopeFailure> {
+        if n == 1 {
+            return match catch_unwind(AssertUnwindSafe(|| f(0))) {
+                Ok(()) => Ok(()),
+                Err(payload) => Err(ScopeFailure::single(0, payload.as_ref())),
+            };
+        }
+        self.run_indexed_scope(scope, n, f)
+    }
+
+    fn run_indexed_scope(
+        &self,
+        scope: &IndexedScope,
+        n: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), ScopeFailure> {
+        if n == 0 {
+            return Ok(());
         }
         let state = &scope.state;
         {
-            let mut slot = state.work.lock().unwrap();
+            let mut slot = poison_ok(state.work.lock());
             assert!(
                 slot.is_none(),
                 "IndexedScope is not re-entrant (nested run_indexed on the same scope)"
             );
-            *state.pending.lock().unwrap() = n;
+            *poison_ok(state.pending.lock()) = n;
             // SAFETY (lifetime erasure): the pointer is published only
             // for the duration of this call — claims stop at `n`, the
             // call blocks until all `n` executed, and the slot is
@@ -490,10 +622,10 @@ impl WorkerPool {
             .advertise(|| ScopeHandle::Indexed(state.clone()), (n - 1).min(self.threads));
         state.drain();
         state.wait_all();
-        *state.work.lock().unwrap() = None;
-        // Reset the flag so the scope stays reusable after a panic.
-        if state.panicked.swap(false, Ordering::AcqRel) {
-            panic!("worker pool task panicked");
+        *poison_ok(state.work.lock()) = None;
+        match state.take_failure() {
+            Some(fail) => Err(fail),
+            None => Ok(()),
         }
     }
 
@@ -785,6 +917,71 @@ mod tests {
             .collect();
         pool.run(outer);
         assert_eq!(total.load(Ordering::Relaxed), 48);
+    }
+
+    #[test]
+    fn try_run_reports_which_indices_panicked() {
+        let pool = WorkerPool::new(2, "t-try");
+        let survivors = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| {
+                let survivors = survivors.clone();
+                Box::new(move || {
+                    if i == 2 || i == 5 {
+                        panic!("task {i} failed");
+                    }
+                    survivors.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        let fail = pool.try_run(tasks).expect_err("panics must surface");
+        assert_eq!(fail.indices, vec![2, 5]);
+        assert!(fail.first_message.as_deref().is_some_and(|m| m.contains("failed")));
+        // Every non-panicking task still ran.
+        assert_eq!(survivors.load(Ordering::Relaxed), 6);
+        // The pool is unharmed: a follow-up clean scope succeeds.
+        let mut x = 0;
+        assert!(pool.try_run(vec![Box::new(|| x = 1) as Task, Box::new(|| ()) as Task]).is_ok());
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn try_run_singleton_contains_panic() {
+        let pool = WorkerPool::new(1, "t-try-single");
+        let fail = pool
+            .try_run(vec![Box::new(|| panic!("lone")) as Task])
+            .expect_err("singleton panic must surface as Err");
+        assert_eq!(fail.indices, vec![0]);
+        assert_eq!(fail.first_message.as_deref(), Some("lone"));
+    }
+
+    #[test]
+    fn try_run_indexed_reports_indices_and_scope_stays_reusable() {
+        let pool = WorkerPool::new(2, "t-try-indexed");
+        let scope = IndexedScope::new();
+        let survivors = AtomicUsize::new(0);
+        let fail = pool
+            .try_run_indexed(&scope, 6, &|i| {
+                if i == 3 {
+                    panic!("index 3 down");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            })
+            .expect_err("panic must surface");
+        assert_eq!(fail.indices, vec![3]);
+        assert_eq!(fail.first_message.as_deref(), Some("index 3 down"));
+        assert_eq!(survivors.load(Ordering::Relaxed), 5, "survivor indices complete");
+        // Same scope, clean follow-up tick.
+        let count = AtomicUsize::new(0);
+        assert!(pool
+            .try_run_indexed(&scope, 4, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            })
+            .is_ok());
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+        // Singleton path too.
+        let fail = pool.try_run_indexed(&scope, 1, &|_| panic!("solo")).unwrap_err();
+        assert_eq!(fail.indices, vec![0]);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Chaos suite: drives the coordinator's fault containment through the
+//! `util::failpoint` harness (`--features failpoints`). Each test arms
+//! a named failure point, provokes it, and asserts the documented
+//! containment: explicit verdicts (never hangs), quarantine scoped to
+//! the offending session, bit-identical survivors, and a server that
+//! keeps serving afterwards.
+#![cfg(feature = "failpoints")]
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{DecodeInput, Server, SubmitError};
+use ita::ita::ItaConfig;
+use ita::util::failpoint::{self, FailAction};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The failpoint registry is process-global, so chaos tests run one at
+/// a time; each one starts from a fully disarmed registry.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::clear();
+    g
+}
+
+fn config(workers: usize, max_batch: usize, max_wait_us: u64) -> SystemConfig {
+    SystemConfig {
+        accelerator: ItaConfig::tiny(),
+        model: ModelConfig {
+            dims: ModelDims { s: 16, e: 16, p: 8, h: 2 },
+            ffn: 32,
+            layers: 1,
+            seed: 42,
+        },
+        server: ServerConfig {
+            workers,
+            max_batch,
+            max_wait_us,
+            queue_depth: 128,
+            ..ServerConfig::default()
+        },
+    }
+}
+
+/// Acceptance: panic one session's stage-2 tail inside a fused tick of
+/// four. The poisoned waiter gets an explicit `SessionPoisoned` (no
+/// hang), the three survivors are bit-identical to fault-free mirrors,
+/// the busy flag is released (the slot is closable), and subsequent
+/// submits / open_session / fused ticks all succeed.
+#[test]
+fn fused_tick_panic_quarantines_only_the_victim() {
+    let _g = serial();
+    let cfg = config(1, 4, 500_000);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(31, &d);
+    let p0 = 3usize;
+    let block = x.block_padded(0, 0, p0, d.e);
+
+    let mut sids = Vec::new();
+    let mut goldens = Vec::new();
+    for _ in 0..4 {
+        let sid = server.open_session().unwrap();
+        server.decode(sid, DecodeInput::Prefill(block.clone())).unwrap();
+        let mut g = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+        g.prefill(&block);
+        sids.push(sid);
+        goldens.push(g);
+    }
+    let victim = sids[1];
+    // Fire once, and only for hits tagged with the victim's session id
+    // (the golden mirrors below carry tag 0 and never match).
+    failpoint::cfg_for("decode.step.tail", victim, 1, FailAction::Panic);
+
+    // Four steps fill the batch: the size trigger fires ONE fused tick.
+    let row = x.row(p0).to_vec();
+    let rxs: Vec<_> = sids
+        .iter()
+        .map(|&sid| server.submit_decode(sid, DecodeInput::Step(row.clone())).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let verdict = rx.recv().expect("explicit verdict, not a hang");
+        if sids[i] == victim {
+            assert_eq!(verdict.unwrap_err(), SubmitError::SessionPoisoned);
+        } else {
+            let resp = verdict.expect("survivor completed");
+            assert_eq!(
+                resp.output.row(0),
+                &goldens[i].step(&row)[..],
+                "survivor {i} not bit-identical to its fault-free mirror"
+            );
+            assert_eq!(resp.seq_len, p0 + 1);
+        }
+    }
+    assert_eq!(server.metrics.sessions_poisoned.get(), 1);
+
+    // Quarantine is sticky: the poisoned session rejects at submit.
+    assert!(matches!(
+        server.submit_decode(victim, DecodeInput::Step(row.clone())),
+        Err(SubmitError::SessionPoisoned)
+    ));
+    // ... but its busy flag was released, so the slot is closable.
+    assert!(server.close_session(victim));
+
+    // The server keeps serving: a fresh session joins the survivors in
+    // another full fused tick, and survivors still track their mirrors.
+    let fresh = server.open_session().unwrap();
+    server.decode(fresh, DecodeInput::Prefill(block.clone())).unwrap();
+    let mut fresh_golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+    fresh_golden.prefill(&block);
+
+    let row2 = x.row(p0 + 1).to_vec();
+    let mut pending = Vec::new();
+    for (i, &sid) in sids.iter().enumerate() {
+        if sid == victim {
+            continue;
+        }
+        pending.push((i, server.submit_decode(sid, DecodeInput::Step(row2.clone())).unwrap()));
+    }
+    let rx_fresh = server.submit_decode(fresh, DecodeInput::Step(row.clone())).unwrap();
+    for (i, rx) in pending {
+        let resp = rx.recv().unwrap().expect("post-fault survivor step");
+        assert_eq!(resp.output.row(0), &goldens[i].step(&row2)[..]);
+    }
+    let resp = rx_fresh.recv().unwrap().expect("fresh session step");
+    assert_eq!(resp.output.row(0), &fresh_golden.step(&row)[..]);
+    server.shutdown();
+}
+
+/// A panicking lone step (no fused peers) poisons only its session;
+/// one-shot inference and new sessions keep working.
+#[test]
+fn lone_step_panic_poisons_session_server_survives() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(33, &d);
+    let sid = server.open_session().unwrap();
+    server.decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+
+    failpoint::cfg_for("decode.step.tail", sid, 1, FailAction::Panic);
+    let err = server.decode(sid, DecodeInput::Step(x.row(2).to_vec())).unwrap_err();
+    assert_eq!(err, SubmitError::SessionPoisoned);
+    assert_eq!(server.metrics.sessions_poisoned.get(), 1);
+
+    // The worker survived the panic: the one-shot path still serves...
+    assert!(server.infer(x.clone()).is_ok());
+    // ...and a brand-new session decodes normally.
+    let s2 = server.open_session().unwrap();
+    server.decode(s2, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    let resp = server.decode(s2, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    assert_eq!(resp.seq_len, 3);
+    server.shutdown();
+}
+
+/// Injected admission-control rejection: `server.ingress.full` makes
+/// submits report `QueueFull` (with the rejection metric) exactly
+/// `times` times, after which service resumes untouched.
+#[test]
+fn injected_queue_full_rejects_then_recovers() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let x = gen_input(35, &cfg.model.dims);
+
+    failpoint::cfg_for("server.ingress.full", 0, 2, FailAction::Trigger);
+    assert!(matches!(server.submit(x.clone()), Err(SubmitError::QueueFull)));
+    assert!(matches!(server.submit(x.clone()), Err(SubmitError::QueueFull)));
+    assert_eq!(server.metrics.requests_rejected.get(), 2);
+    // The point disarmed itself after two activations.
+    assert!(server.infer(x.clone()).is_ok());
+    server.shutdown();
+}
+
+/// A stalled worker cannot hold a deadline-bearing caller hostage:
+/// `infer_timeout` returns `DeadlineExceeded` promptly, and the stalled
+/// worker sheds the expired request instead of computing it.
+#[test]
+fn slow_worker_honors_caller_deadlines() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let x = gen_input(37, &cfg.model.dims);
+
+    failpoint::cfg("server.worker.slow", FailAction::Delay(Duration::from_millis(60)));
+    let t0 = Instant::now();
+    let res = server.infer_timeout(x.clone(), Duration::from_millis(10));
+    assert_eq!(res.unwrap_err(), SubmitError::DeadlineExceeded);
+    assert!(
+        t0.elapsed() < Duration::from_millis(50),
+        "caller blocked past its deadline: {:?}",
+        t0.elapsed()
+    );
+    failpoint::remove("server.worker.slow");
+
+    // When the stalled worker finally reaches the batch, the expired
+    // request is shed before compute.
+    let deadline = Instant::now() + Duration::from_millis(200);
+    while server.metrics.deadlines_expired.get() == 0 {
+        assert!(Instant::now() < deadline, "stalled request was never shed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.metrics.requests_completed.get(), 0);
+    // Service is normal again.
+    assert!(server.infer(x.clone()).is_ok());
+    server.shutdown();
+}
+
+/// Injected post-admission loss (`server.ingress.drop`): the accepted
+/// job vanishes, blocking waiters observe `Cancelled` — never a hang —
+/// and a dropped decode step releases its session's busy flag.
+#[test]
+fn ingress_drop_cancels_waiter_and_releases_busy() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(39, &d);
+
+    failpoint::cfg_for("server.ingress.drop", 0, 1, FailAction::Trigger);
+    assert_eq!(server.infer(x.clone()).unwrap_err(), SubmitError::Cancelled);
+    assert_eq!(server.metrics.ingress_dropped.get(), 1);
+    assert!(server.infer(x.clone()).is_ok());
+
+    // Decode variant: the dropped step's session is not wedged.
+    let sid = server.open_session().unwrap();
+    server.decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    failpoint::cfg_for("server.ingress.drop", 0, 1, FailAction::Trigger);
+    assert_eq!(
+        server.decode(sid, DecodeInput::Step(x.row(2).to_vec())).unwrap_err(),
+        SubmitError::Cancelled
+    );
+    assert_eq!(server.metrics.ingress_dropped.get(), 2);
+    let resp = server.decode(sid, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    assert_eq!(resp.seq_len, 3);
+    server.shutdown();
+}
+
+/// `decode_timeout` mirrors `infer_timeout`: a deadline-bearing decode
+/// against a stalled worker resolves promptly and leaves the session
+/// usable (the expired step is shed, busy released, cache untouched).
+#[test]
+fn decode_timeout_resolves_promptly_under_stall() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(41, &d);
+    let sid = server.open_session().unwrap();
+    server.decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+
+    failpoint::cfg("server.worker.slow", FailAction::Delay(Duration::from_millis(60)));
+    let t0 = Instant::now();
+    let res = server.decode_timeout(sid, DecodeInput::Step(x.row(2).to_vec()), Duration::from_millis(10));
+    assert_eq!(res.unwrap_err(), SubmitError::DeadlineExceeded);
+    assert!(t0.elapsed() < Duration::from_millis(50));
+    failpoint::remove("server.worker.slow");
+
+    // Wait for the stalled worker to shed the expired step and release
+    // the busy flag, then confirm the session still serves correctly.
+    let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+    golden.prefill(&x.block_padded(0, 0, 2, d.e));
+    let deadline = Instant::now() + Duration::from_millis(500);
+    let resp = loop {
+        match server.decode(sid, DecodeInput::Step(x.row(2).to_vec())) {
+            Ok(resp) => break resp,
+            Err(SubmitError::SessionBusy) => {
+                assert!(Instant::now() < deadline, "busy flag never released");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    };
+    assert_eq!(resp.output.row(0), &golden.step(x.row(2))[..]);
+    assert_eq!(resp.seq_len, 3);
+    assert!(server.metrics.deadlines_expired.get() >= 1);
+    server.shutdown();
+}

@@ -5,10 +5,11 @@
 use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, run_attention_causal, AttentionExecutor, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
-use ita::coordinator::{DecodeInput, Server, SubmitError};
+use ita::coordinator::{DecodeInput, Server, SubmitError, SubmitOptions};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn config(workers: usize, max_batch: usize) -> SystemConfig {
     SystemConfig {
@@ -19,7 +20,13 @@ fn config(workers: usize, max_batch: usize) -> SystemConfig {
             layers: 1,
             seed: 42,
         },
-        server: ServerConfig { workers, max_batch, max_wait_us: 300, queue_depth: 128 },
+        server: ServerConfig {
+            workers,
+            max_batch,
+            max_wait_us: 300,
+            queue_depth: 128,
+            ..ServerConfig::default()
+        },
     }
 }
 
@@ -47,7 +54,7 @@ fn sustained_load_all_requests_complete_correctly() {
         }
     }
     for (idx, rx) in handles {
-        let resp = rx.recv().expect("response arrives");
+        let resp = rx.recv().expect("response arrives").expect("request completed");
         assert_eq!(resp.output, golden[idx], "served output != golden for input {idx}");
     }
     assert_eq!(server.metrics.requests_completed.get(), 40);
@@ -105,7 +112,10 @@ fn shutdown_drains_in_flight_requests() {
     server.shutdown();
     let mut drained = 0u64;
     for rx in rxs {
-        let resp = rx.recv().expect("in-flight request dropped during shutdown");
+        let resp = rx
+            .recv()
+            .expect("in-flight request dropped during shutdown")
+            .expect("drained request completed");
         assert_eq!(resp.output.shape(), (16, 16));
         drained += 1;
     }
@@ -127,7 +137,10 @@ fn shutdown_drains_in_flight_decode_requests() {
     let x = gen_input(9, &d);
     let rx = server.submit_decode(sid, DecodeInput::Step(x.row(0).to_vec())).unwrap();
     server.shutdown();
-    let resp = rx.recv().expect("in-flight decode step dropped during shutdown");
+    let resp = rx
+        .recv()
+        .expect("in-flight decode step dropped during shutdown")
+        .expect("drained decode step completed");
     assert_eq!(resp.seq_len, 1);
     assert!(matches!(
         server.submit_decode(sid, DecodeInput::Step(x.row(1).to_vec())),
@@ -158,7 +171,7 @@ fn queue_full_rejections_reflected_in_metrics() {
     assert_eq!(server.metrics.requests_rejected.get(), rejected);
     assert_eq!(server.metrics.requests_accepted.get(), rxs.len() as u64);
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     server.shutdown();
 }
@@ -218,7 +231,7 @@ fn batching_reduces_energy_per_request() {
 
     // Burst: forms large batches.
     let rxs: Vec<_> = (0..16).filter_map(|_| server.submit(x.clone()).ok()).collect();
-    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let batched_energy =
         batched.iter().map(|r| r.sim_energy_j).sum::<f64>() / batched.len() as f64;
     let max_fill = batched.iter().map(|r| r.batch_size).max().unwrap();
@@ -232,5 +245,158 @@ fn batching_reduces_energy_per_request() {
             single.sim_energy_j
         );
     }
+    server.shutdown();
+}
+
+#[test]
+fn receiver_drop_mid_flight_sheds_work_without_wedging() {
+    // A caller abandons its request (drops the receiver) while the
+    // item is queued: the worker sheds it before compute, counts the
+    // cancellation, releases the session's busy flag, and the batch
+    // peer completes normally — nothing wedges.
+    let mut cfg = config(1, 2);
+    cfg.server.max_wait_us = 500_000; // only the size trigger flushes
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(17, &d);
+    let s1 = server.open_session().unwrap();
+    let s2 = server.open_session().unwrap();
+    // Prefills are eager, so these complete despite the huge window.
+    server.decode(s1, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    server.decode(s2, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+
+    // Step A waits in the batcher (1 < max_batch)... and is abandoned.
+    let rx_a = server.submit_decode(s1, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    drop(rx_a);
+    // Step B fills the batch: the size trigger flushes [A, B].
+    let rx_b = server.submit_decode(s2, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    let resp = rx_b.recv().expect("peer response").expect("peer completed");
+    assert_eq!(resp.seq_len, 3);
+    assert_eq!(server.metrics.requests_cancelled.get(), 1);
+    assert_eq!(server.metrics.decode_steps_completed.get(), 1, "shed item never computed");
+    // Session 1 is not wedged: busy was released, new work completes.
+    let resp = server.decode(s1, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    assert_eq!(resp.seq_len, 3);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_double_shutdown_is_idempotent() {
+    let cfg = config(2, 4);
+    let server = Server::start(cfg);
+    let x = gen_input(5, &cfg.model.dims);
+    assert!(server.infer(x.clone()).is_ok());
+    let mut threads = Vec::new();
+    for _ in 0..2 {
+        let server: Arc<Server> = server.clone();
+        threads.push(std::thread::spawn(move || server.shutdown()));
+    }
+    for t in threads {
+        t.join().expect("shutdown call panicked");
+    }
+    // A third, sequential call is also a no-op.
+    server.shutdown();
+    assert!(matches!(server.submit(x), Err(SubmitError::Shutdown)));
+}
+
+#[test]
+fn expired_deadline_is_shed_before_compute() {
+    // The batcher holds a lone request for up to 50 ms; its 5 ms
+    // deadline passes first, so the worker sheds it with an explicit
+    // verdict instead of computing a result nobody wants.
+    let mut cfg = config(1, 64);
+    cfg.server.max_wait_us = 50_000;
+    let server = Server::start(cfg);
+    let x = gen_input(5, &cfg.model.dims);
+    let rx = server
+        .submit_with(x.clone(), SubmitOptions::deadline_in(Duration::from_millis(5)))
+        .unwrap();
+    assert_eq!(rx.recv().expect("verdict arrives").unwrap_err(), SubmitError::DeadlineExceeded);
+    assert_eq!(server.metrics.deadlines_expired.get(), 1);
+    assert_eq!(server.metrics.requests_completed.get(), 0);
+
+    // An already-expired deadline never enters the queue.
+    let opts = SubmitOptions { deadline: Some(Instant::now() - Duration::from_millis(1)) };
+    assert!(matches!(server.submit_with(x.clone(), opts), Err(SubmitError::DeadlineExceeded)));
+    assert_eq!(server.metrics.deadlines_expired.get(), 2);
+
+    // infer_timeout returns promptly — well before the 50 ms batch
+    // window — instead of blocking on the held batch.
+    let t0 = Instant::now();
+    let res = server.infer_timeout(x.clone(), Duration::from_millis(10));
+    assert_eq!(res.unwrap_err(), SubmitError::DeadlineExceeded);
+    assert!(
+        t0.elapsed() < Duration::from_millis(45),
+        "timeout wrapper blocked past its deadline: {:?}",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn expired_decode_deadline_releases_busy() {
+    let mut cfg = config(1, 64);
+    cfg.server.max_wait_us = 50_000;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(23, &d);
+    let sid = server.open_session().unwrap();
+    server.decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    let rx = server
+        .submit_decode_with(
+            sid,
+            DecodeInput::Step(x.row(2).to_vec()),
+            SubmitOptions::deadline_in(Duration::from_millis(5)),
+        )
+        .unwrap();
+    assert_eq!(rx.recv().expect("verdict arrives").unwrap_err(), SubmitError::DeadlineExceeded);
+    assert_eq!(server.metrics.deadlines_expired.get(), 1);
+    // The shed step never touched the cache and the busy flag was
+    // released: the session accepts (and correctly serves) new work.
+    let mut golden = DecodeEngine::new(cfg.accelerator, d, cfg.model.seed);
+    golden.prefill(&x.block_padded(0, 0, 2, d.e));
+    let resp = server.decode(sid, DecodeInput::Step(x.row(2).to_vec())).unwrap();
+    assert_eq!(resp.output.row(0), &golden.step(x.row(2))[..]);
+    server.shutdown();
+}
+
+#[test]
+fn idle_sessions_evicted_after_ttl() {
+    let mut cfg = config(1, 4);
+    cfg.server.session_ttl_ms = 10;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(29, &d);
+    let s1 = server.open_session().unwrap();
+    let s2 = server.open_session().unwrap();
+    server.decode(s1, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    // Deterministic sweep (the dispatcher also sweeps on its own
+    // cadence — either way both idle sessions are gone).
+    server.evict_idle_now();
+    assert_eq!(server.metrics.sessions_evicted.get(), 2);
+    assert_eq!(server.session_len(s1), None);
+    assert_eq!(server.session_len(s2), None);
+    assert!(matches!(
+        server.submit_decode(s1, DecodeInput::Step(x.row(2).to_vec())),
+        Err(SubmitError::UnknownSession)
+    ));
+    // A fresh session is unaffected (it is younger than the TTL).
+    let s3 = server.open_session().unwrap();
+    server.decode(s3, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn tick_watchdog_flags_slow_batches() {
+    // A 1 µs watchdog threshold makes every real batch "slow": the
+    // worker must record the tick duration and flag it.
+    let mut cfg = config(1, 4);
+    cfg.server.watchdog_us = 1;
+    let server = Server::start(cfg);
+    let x = gen_input(5, &cfg.model.dims);
+    server.infer(x).unwrap();
+    assert!(server.metrics.slow_ticks.get() >= 1);
+    assert!(server.metrics.tick_duration.count() >= 1);
     server.shutdown();
 }

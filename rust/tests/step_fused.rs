@@ -216,7 +216,7 @@ fn fused_ticks_compose_with_fused_prefill_and_plain_steps() {
             let row_refs: Vec<&[i8]> = rows.iter().map(|r| &r[..]).collect();
             {
                 let mut refs: Vec<&mut DecodeEngine> = fused.iter_mut().collect();
-                batch.tick(&mut refs, &row_refs);
+                assert!(batch.tick(&mut refs, &row_refs).ok(), "fault-free tick t={t}");
             }
             for i in 0..n {
                 indep[i].step_into(&rows[i], &mut want);
