@@ -19,12 +19,20 @@
 //! pays a full M-row tile and its own weight stream). Emitted into
 //! `BENCH_decode.json` alongside the per-step rows, so the CI
 //! bench-smoke leg tracks both.
+//!
+//! §Continuous-batching addendum: a final smoke round drives streamed
+//! generations through the live decode router (join/leave churn, slot
+//! reuse) and emits the round latency plus the mean tick occupancy
+//! into the same JSON report.
 
 use ita::attention::decode::{DecodeEngine, FusedStepBatch};
 use ita::attention::{gen_input, run_attention_causal, ModelDims};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{GenerateOptions, Server};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
 use ita::util::bench::{bencher, black_box, JsonReport};
+use ita::util::mat::MatI8;
 use ita::util::pool::{Task, WorkerPool};
 
 fn main() {
@@ -186,6 +194,80 @@ fn main() {
             indep * 1e6,
             indep / fused
         );
+    }
+
+    // ---- router churn smoke (§Continuous batching) -------------------
+    // Serving-layer counterpart of the fused-tick rows above: one churn
+    // round drives 6 streamed generations through the continuous-
+    // batching router with only 4 slots — staggered admissions, one
+    // caller abandoning its stream mid-flight, freed slots handed to
+    // the queued sessions. The measured quantity is wall time per
+    // round; the mean tick occupancy (live sessions per fused tick,
+    // accumulated over every timed round) is emitted into the JSON
+    // shape string so the CI bench-smoke leg tracks scheduling quality
+    // alongside latency.
+    {
+        let sd = ModelDims { s: 16, e: 16, p: 8, h: 2 };
+        let scfg = SystemConfig {
+            accelerator: ItaConfig::tiny(),
+            model: ModelConfig { dims: sd, ffn: 32, layers: 1, seed: 42 },
+            server: ServerConfig {
+                workers: 1,
+                max_batch: 4,
+                stream_buffer: 2,
+                max_waiting_ticks: 1,
+                queue_depth: 64,
+                ..ServerConfig::default()
+            },
+        };
+        let server = Server::start(scfg);
+        let n_sessions = 6usize;
+        let tokens = 6usize;
+        let prompts: Vec<MatI8> = (0..n_sessions as u64)
+            .map(|i| gen_input(7 + i, &sd).block_padded(0, 0, 2, sd.e))
+            .collect();
+        println!("\nrouter churn round: {n_sessions} sessions x {tokens} tokens, 4 slots\n");
+        b.bench(&format!("router churn round @N={n_sessions}"), || {
+            let mut streams = Vec::with_capacity(n_sessions);
+            for p in &prompts {
+                let sid = server.open_session().expect("session");
+                let stream = server
+                    .submit_generate(
+                        sid,
+                        p.clone(),
+                        GenerateOptions { max_new_tokens: tokens, ..GenerateOptions::default() },
+                    )
+                    .expect("accepted");
+                streams.push((sid, stream));
+            }
+            // One mid-flight leave per round: take a token, abandon the
+            // stream; the router reaps the session and hands its slot
+            // to a queued one.
+            let (sid0, mut s0) = streams.remove(0);
+            black_box(s0.recv().expect("live").expect("token").row[0]);
+            drop(s0);
+            // Drain in submission order: running sessions complete
+            // first, freeing the slots the late-queued ones need.
+            for (sid, stream) in streams {
+                black_box(stream.collect_rows().expect("stream").len());
+                assert!(server.close_session(sid));
+            }
+            // The abandoned session may still be mid-reap on the
+            // router thread; best-effort close, ignore a busy refusal.
+            let _ = server.close_session(sid0);
+        });
+        let occupancy = server.metrics.mean_router_occupancy();
+        report.entry(
+            "router churn round",
+            &format!("N={n_sessions},slots=4,tok={tokens},occ={occupancy:.2}"),
+            b.results().last().unwrap(),
+            None,
+        );
+        println!(
+            "  -> mean router occupancy {occupancy:.2} sessions/tick over {} ticks\n",
+            server.metrics.router_ticks.get()
+        );
+        server.shutdown();
     }
 
     match report.write() {

@@ -1267,6 +1267,48 @@ mod tests {
     }
 
     #[test]
+    fn fused_step_batch_survives_join_leave_churn() {
+        // The continuous-batching router's contract: ONE long-lived
+        // FusedStepBatch whose membership changes every tick (sessions
+        // join mid-flight, leave mid-flight, rejoin, shrink to N=1) —
+        // every surviving session stays bit-identical to its
+        // independent step_into path at every tick.
+        let d = dims();
+        let n = 4;
+        let mut fused: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 99)).collect();
+        let mut indep: Vec<DecodeEngine> =
+            (0..n).map(|_| DecodeEngine::new(ItaConfig::tiny(), d, 99)).collect();
+        for (i, eng) in fused.iter_mut().chain(indep.iter_mut()).enumerate() {
+            let prompt = gen_input(60 + (i % n) as u64, &d).block_padded(0, 0, 1 + i % n, d.e);
+            eng.prefill(&prompt);
+        }
+        // Tick-by-tick membership: join (2), leave (1), rejoin after a
+        // sat-out tick (1), shrink to a single survivor (3).
+        let members: [&[usize]; 5] = [&[0, 1], &[0, 1, 2], &[0, 2], &[0, 1, 2, 3], &[3]];
+        let mut batch = FusedStepBatch::new();
+        let mut want = Vec::new();
+        for (t, ms) in members.iter().enumerate() {
+            let x = gen_input(300 + t as u64, &d);
+            let rows: Vec<&[i8]> = ms.iter().map(|&i| x.row(i)).collect();
+            {
+                let mut refs: Vec<&mut DecodeEngine> = fused
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| ms.contains(i))
+                    .map(|(_, e)| e)
+                    .collect();
+                assert!(batch.tick(&mut refs, &rows).ok(), "fault-free tick {t}");
+            }
+            for (k, &i) in ms.iter().enumerate() {
+                indep[i].step_into(rows[k], &mut want);
+                assert_eq!(batch.out_row(k), &want[..], "tick {t} session {i}");
+                assert_eq!(fused[i].len(), indep[i].len(), "tick {t} session {i} fill");
+            }
+        }
+    }
+
+    #[test]
     fn fused_step_streams_each_weight_once() {
         // The acceptance assertion, at the unit level: one tick
         // charges exactly one weight stream per 3·H + 1 weight

@@ -26,6 +26,9 @@
 //! queue_depth = 64
 //! session_ttl_ms = 0
 //! watchdog_us = 500000
+//! waiting_served_pct = 120
+//! max_waiting_ticks = 4
+//! stream_buffer = 32
 //! ```
 
 pub mod toml;
@@ -69,6 +72,23 @@ pub struct ServerConfig {
     /// Watchdog threshold: a batch taking longer than this many
     /// microseconds to process counts as a slow tick in the metrics.
     pub watchdog_us: u64,
+    /// Continuous-batching admission policy: admit waiting generations
+    /// when `waiting * 100 >= running * waiting_served_pct` (the TGI
+    /// waiting/served ratio, in integer percent — 120 means "wait
+    /// until the waiting queue is 1.2x the running batch"). Admission
+    /// pauses the running batch for a prefill, so a higher ratio
+    /// amortizes that pause over more admissions; 0 admits every
+    /// waiter at the next tick boundary.
+    pub waiting_served_pct: u64,
+    /// Admission-policy escape hatch: a waiting generation is admitted
+    /// after at most this many ticks even if the ratio never fires
+    /// (bounds time-to-first-token when the waiting queue stays
+    /// small). Clamped to >= 1.
+    pub max_waiting_ticks: u64,
+    /// Per-session token-stream buffer (tokens). A full buffer pauses
+    /// only that session (backpressure) until the caller drains it;
+    /// other sessions keep ticking. Clamped to >= 1.
+    pub stream_buffer: usize,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +100,9 @@ impl Default for ServerConfig {
             queue_depth: 64,
             session_ttl_ms: 0,
             watchdog_us: 500_000,
+            waiting_served_pct: 120,
+            max_waiting_ticks: 4,
+            stream_buffer: 32,
         }
     }
 }
@@ -209,6 +232,19 @@ impl SystemConfig {
             )? as u64,
             watchdog_us: get_usize(&doc, "server", "watchdog_us", def.server.watchdog_us as usize)?
                 as u64,
+            waiting_served_pct: get_usize(
+                &doc,
+                "server",
+                "waiting_served_pct",
+                def.server.waiting_served_pct as usize,
+            )? as u64,
+            max_waiting_ticks: get_usize(
+                &doc,
+                "server",
+                "max_waiting_ticks",
+                def.server.max_waiting_ticks as usize,
+            )? as u64,
+            stream_buffer: get_usize(&doc, "server", "stream_buffer", def.server.stream_buffer)?,
         };
 
         let cfg = Self { accelerator: acc, model, server };
@@ -289,6 +325,10 @@ mod tests {
         // Fault-containment knobs default off / generous.
         assert_eq!(cfg.server.session_ttl_ms, 0);
         assert_eq!(cfg.server.watchdog_us, 500_000);
+        // Router knobs keep their defaults too.
+        assert_eq!(cfg.server.waiting_served_pct, 120);
+        assert_eq!(cfg.server.max_waiting_ticks, 4);
+        assert_eq!(cfg.server.stream_buffer, 32);
     }
 
     #[test]
@@ -299,6 +339,17 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.server.session_ttl_ms, 2500);
         assert_eq!(cfg.server.watchdog_us, 1000);
+    }
+
+    #[test]
+    fn parse_router_knobs() {
+        let cfg = SystemConfig::from_toml(
+            "[server]\nwaiting_served_pct = 0\nmax_waiting_ticks = 1\nstream_buffer = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.waiting_served_pct, 0);
+        assert_eq!(cfg.server.max_waiting_ticks, 1);
+        assert_eq!(cfg.server.stream_buffer, 4);
     }
 
     #[test]

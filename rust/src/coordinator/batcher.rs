@@ -72,10 +72,16 @@ impl<T> Batcher<T> {
     }
 
     fn push_impl(&mut self, item: T, now: Instant, eager: bool) -> Option<Vec<T>> {
-        if self.pending.is_empty() {
-            self.oldest = Some(now);
-        }
         if !eager {
+            // The wait deadline anchors at the FIRST PATIENT arrival,
+            // not the first arrival: eager items never start the clock,
+            // so a decode step queuing behind an older pending prefill
+            // still gets its full coalescing window (§Step-batching) —
+            // inheriting the prefill's timestamp could flush the step
+            // with a near-zero window, defeating step fusion.
+            if self.patient == 0 {
+                self.oldest = Some(now);
+            }
             self.patient += 1;
         }
         self.pending.push(item);
@@ -346,6 +352,51 @@ mod tests {
         b.push(10, t0);
         b.push(11, t0);
         assert_eq!(b.push(12, t0), Some(vec![10, 11, 12]));
+    }
+
+    #[test]
+    fn patient_deadline_anchors_at_first_patient_arrival() {
+        // Regression: a patient item joining a pending all-eager batch
+        // must NOT inherit the eager item's arrival timestamp. Before
+        // the fix, `push_impl` set `oldest` whenever pending was empty,
+        // so a step queuing 7ms behind a prefill flushed after only
+        // 3ms of its 10ms coalescing window.
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(100, max_wait);
+        let t0 = Instant::now();
+        b.push_eager(1, t0);
+        let t1 = t0 + Duration::from_millis(7);
+        b.push(2, t1); // patient — the clock starts HERE
+        assert!(
+            b.poll(t0 + Duration::from_millis(11)).is_none(),
+            "patient item flushed on the eager item's deadline"
+        );
+        let hint = b.time_to_deadline(t0 + Duration::from_millis(11)).unwrap();
+        assert!(
+            hint > Duration::ZERO && hint <= Duration::from_millis(6),
+            "sleep hint must count down from the patient arrival, got {hint:?}"
+        );
+        assert_eq!(b.poll(t1 + max_wait), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn later_patients_do_not_move_the_anchor() {
+        // Only the FIRST patient arrival anchors the deadline; later
+        // patient joins must not extend the window (that would starve
+        // the oldest waiter under a steady trickle).
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(100, max_wait);
+        let t0 = Instant::now();
+        b.push_eager(0, t0);
+        let t1 = t0 + Duration::from_millis(2);
+        b.push(1, t1); // first patient: the anchor
+        b.push(2, t0 + Duration::from_millis(6)); // later patient
+        assert!(b.poll(t1 + Duration::from_millis(9)).is_none());
+        assert_eq!(
+            b.poll(t1 + max_wait),
+            Some(vec![0, 1, 2]),
+            "deadline must fire max_wait after the FIRST patient arrival"
+        );
     }
 
     #[test]

@@ -7,6 +7,15 @@
 //! every weight stream), and a worker pool where each worker owns one
 //! simulated accelerator instance (optionally validating numerics
 //! against the AOT-compiled JAX model via the PJRT runtime).
+//!
+//! Decode traffic additionally gets a **continuous-batching router**
+//! (TGI `batching_task` style): a long-lived loop that owns one
+//! [`FusedStepBatch`](crate::attention::decode::FusedStepBatch), each
+//! tick culls finished/cancelled sessions, admits waiting generations
+//! under a waiting/served-ratio policy, and streams every tick's
+//! output rows to callers over per-session bounded channels
+//! ([`TokenStream`]) — throughput stays pinned at the fused row-GEMM
+//! rate regardless of join/leave churn.
 
 pub mod batcher;
 pub mod request;
@@ -14,7 +23,8 @@ pub mod server;
 pub mod tracegen;
 
 pub use request::{
-    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, InferenceRequest, InferenceResponse,
-    InferenceResult, SessionId, SubmitError, SubmitOptions,
+    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, GenerateOptions, InferenceRequest,
+    InferenceResponse, InferenceResult, SessionId, SubmitError, SubmitOptions, TokenItem,
+    TokenResult, TokenStream,
 };
 pub use server::Server;

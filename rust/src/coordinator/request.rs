@@ -107,6 +107,88 @@ pub struct DecodeResponse {
     pub batch_size: usize,
 }
 
+/// Options of one [`submit_generate`](crate::coordinator::Server::submit_generate)
+/// call — a whole closed-loop generation, not a single step.
+#[derive(Debug, Clone, Copy)]
+pub struct GenerateOptions {
+    /// Number of decode steps to run (tokens to stream). Each tick's
+    /// output row is both delivered on the stream and fed back as the
+    /// next tick's input (the `examples/generate.rs` convention).
+    pub max_new_tokens: usize,
+    /// Shed (with [`SubmitError::DeadlineExceeded`] on the stream) if
+    /// the generation has not been *admitted into the running batch*
+    /// by this instant. `None` = wait indefinitely for admission.
+    pub deadline: Option<Instant>,
+}
+
+impl Default for GenerateOptions {
+    fn default() -> Self {
+        Self { max_new_tokens: 16, deadline: None }
+    }
+}
+
+/// One streamed token: the output row of one fused decode tick,
+/// delivered as soon as the tick completes.
+#[derive(Debug, Clone)]
+pub struct TokenItem {
+    pub session: SessionId,
+    /// 0-based position within this generation's stream.
+    pub index: usize,
+    /// The tick's 1×E output row — bit-identical to what a solo
+    /// [`DecodeEngine::step`](crate::attention::decode::DecodeEngine::step)
+    /// at the same fill would return.
+    pub row: Vec<i8>,
+    /// Session KV-cache fill after this token.
+    pub seq_len: usize,
+    /// Simulated accelerator cycles attributed to this token (the
+    /// session's tick share).
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy attributed to this token (J),
+    /// including an even share of the tick's once-per-batch weight
+    /// streams.
+    pub sim_energy_j: f64,
+}
+
+/// What each stream slot resolves to: a token, or the in-flight
+/// failure that terminated the generation (after which the stream
+/// ends).
+pub type TokenResult = Result<TokenItem, SubmitError>;
+
+/// Receiving half of one generation's per-token stream. Tokens arrive
+/// as ticks complete; `None` from [`TokenStream::recv`] is the clean
+/// end of the stream (all tokens delivered, session idle again).
+/// **Dropping the stream mid-generation cancels it**: the router
+/// removes the session from the next tick and frees its slot.
+pub struct TokenStream {
+    pub(crate) rx: crate::util::stream::Receiver<TokenResult>,
+}
+
+impl TokenStream {
+    /// Block for the next token. `None` = generation complete.
+    pub fn recv(&mut self) -> Option<TokenResult> {
+        self.rx.recv()
+    }
+
+    /// Block at most `timeout` for the next token. Does NOT cancel on
+    /// timeout — drop the stream to cancel.
+    pub fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<TokenResult, crate::util::stream::RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    /// Drain the whole stream: every token row in order, or the first
+    /// in-flight failure.
+    pub fn collect_rows(mut self) -> Result<Vec<Vec<i8>>, SubmitError> {
+        let mut rows = Vec::new();
+        while let Some(item) = self.rx.recv() {
+            rows.push(item?.row);
+        }
+        Ok(rows)
+    }
+}
+
 /// Submission and in-flight failure modes.
 ///
 /// `#[non_exhaustive]`: downstream matches must carry a wildcard arm,
@@ -193,6 +275,43 @@ mod tests {
         let d = opts.deadline.expect("deadline set");
         assert!(d > Instant::now());
         assert!(d <= Instant::now() + Duration::from_millis(60));
+    }
+
+    #[test]
+    fn generate_options_default() {
+        let opts = GenerateOptions::default();
+        assert_eq!(opts.max_new_tokens, 16);
+        assert!(opts.deadline.is_none());
+    }
+
+    #[test]
+    fn token_stream_collects_rows_until_clean_end() {
+        let (tx, rx) = crate::util::stream::bounded(4);
+        let mut stream = TokenStream { rx };
+        let tok = |i: usize| TokenItem {
+            session: 1,
+            index: i,
+            row: vec![i as i8; 3],
+            seq_len: i + 1,
+            sim_cycles: 0,
+            sim_energy_j: 0.0,
+        };
+        tx.try_send(Ok(tok(0))).unwrap();
+        tx.try_send(Ok(tok(1))).unwrap();
+        assert_eq!(stream.recv().unwrap().unwrap().index, 0);
+        tx.try_send(Ok(tok(2))).unwrap();
+        drop(tx); // clean end
+        let rows = stream.collect_rows().unwrap();
+        assert_eq!(rows, vec![vec![1i8; 3], vec![2i8; 3]]);
+    }
+
+    #[test]
+    fn token_stream_surfaces_inflight_failures() {
+        let (tx, rx) = crate::util::stream::bounded(4);
+        let stream = TokenStream { rx };
+        tx.try_send(Err(SubmitError::SessionPoisoned)).unwrap();
+        drop(tx);
+        assert_eq!(stream.collect_rows(), Err(SubmitError::SessionPoisoned));
     }
 
     #[test]

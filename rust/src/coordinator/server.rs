@@ -10,8 +10,9 @@
 
 use super::batcher::Batcher;
 use super::request::{
-    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, InferenceRequest, InferenceResponse,
-    InferenceResult, SessionId, SubmitError, SubmitOptions,
+    DecodeInput, DecodeRequest, DecodeResponse, DecodeResult, GenerateOptions, InferenceRequest,
+    InferenceResponse, InferenceResult, SessionId, SubmitError, SubmitOptions, TokenItem,
+    TokenResult, TokenStream,
 };
 use crate::attention::decode::{fused_prefill, DecodeEngine, FusedStepBatch};
 use crate::attention::{AttentionExecutor, PackedWeights};
@@ -23,10 +24,13 @@ use crate::util::failpoint;
 use crate::util::mat::MatI8;
 use crate::util::oneshot;
 use crate::util::pool::{Task, WorkerPool};
-use std::collections::HashMap;
+use crate::util::stream;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -43,6 +47,20 @@ type DecodeJob = (DecodeRequest, oneshot::Sender<DecodeResult>);
 enum Work {
     Infer(Job),
     Decode(DecodeJob),
+}
+
+/// One queued generation awaiting admission by the continuous-batching
+/// router: a prompt to prefill plus a closed-loop token budget, with
+/// the caller's stream sender riding along (its receiver-liveness is
+/// the cancellation signal).
+struct GenerateJob {
+    session: SessionId,
+    prompt: MatI8,
+    max_new_tokens: usize,
+    /// Shed (never admitted) if still waiting past this instant.
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    tx: stream::Sender<TokenResult>,
 }
 
 /// One open decode session. The engine (and its KV caches) is owned by
@@ -80,6 +98,10 @@ pub struct Server {
     /// `None` after shutdown — dropping the sender disconnects the
     /// dispatcher, which drains and stops the workers.
     ingress: Mutex<Option<SyncSender<Work>>>,
+    /// Generation ingress of the continuous-batching router; `None`
+    /// after shutdown (the router drains waiting + running
+    /// generations, then exits).
+    router_ingress: Mutex<Option<SyncSender<GenerateJob>>>,
     next_id: AtomicU64,
     next_session: AtomicU64,
     sessions: Arc<SessionTable>,
@@ -101,6 +123,7 @@ impl Server {
     pub fn start(config: SystemConfig) -> Arc<Server> {
         let metrics = Arc::new(ServerMetrics::default());
         let (ingress_tx, ingress_rx) = sync_channel::<Work>(config.server.queue_depth);
+        let (router_tx, router_rx) = sync_channel::<GenerateJob>(config.server.queue_depth);
         let shutdown = Arc::new(AtomicBool::new(false));
         let sessions: Arc<SessionTable> = Arc::new(Mutex::new(HashMap::new()));
 
@@ -126,10 +149,12 @@ impl Server {
                 metrics.clone(),
             ));
         }
+        threads.push(spawn_router(config, router_rx, sessions.clone(), metrics.clone()));
 
         let model = PackedWeights::shared(config.model.dims, config.model.seed);
         Arc::new(Server {
             ingress: Mutex::new(Some(ingress_tx)),
+            router_ingress: Mutex::new(Some(router_tx)),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
             sessions,
@@ -403,10 +428,116 @@ impl Server {
         }
     }
 
-    fn unmark_busy(&self, session: SessionId) {
-        if let Some(slot) = lock_table(&self.sessions).get_mut(&session) {
-            slot.busy = false;
+    /// Submit a whole closed-loop generation to the continuous-
+    /// batching router: prefill `prompt` (>= 1 rows), then stream
+    /// `opts.max_new_tokens` decode-step output rows, each fed back as
+    /// the next step's input (the `examples/generate.rs` convention).
+    /// Tokens arrive on the returned [`TokenStream`] as fused ticks
+    /// complete; **dropping the stream mid-generation cancels the
+    /// remainder** — the router reaps the session from the next tick
+    /// and its slot is free for a waiting admission (the session
+    /// itself survives, holding whatever its cache accumulated).
+    ///
+    /// Unlike [`Server::submit_decode`], the session stays busy for
+    /// the WHOLE generation and is released when the stream ends.
+    /// Waiting generations are admitted at tick boundaries under the
+    /// `waiting_served_pct` policy — never a poll-window wait. A slow
+    /// consumer only pauses its own session (bounded `stream_buffer`);
+    /// the tick keeps running for everyone else.
+    ///
+    /// In-flight failures (admission deadline, poisoning, shutdown)
+    /// arrive ON the stream as `Err` items before it ends; when the
+    /// stream buffer is full the verdict delivery is best-effort, but
+    /// the stream always terminates.
+    pub fn submit_generate(
+        &self,
+        session: SessionId,
+        prompt: MatI8,
+        opts: GenerateOptions,
+    ) -> Result<TokenStream, SubmitError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::Shutdown);
         }
+        if opts.deadline.is_some_and(|dl| Instant::now() >= dl) {
+            self.metrics.deadlines_expired.inc();
+            return Err(SubmitError::DeadlineExceeded);
+        }
+        if failpoint::hit("server.ingress.full", 0) {
+            self.metrics.requests_rejected.inc();
+            return Err(SubmitError::QueueFull);
+        }
+        let d = self.config.model.dims;
+        if prompt.cols() != d.e || prompt.rows() == 0 || opts.max_new_tokens == 0 {
+            return Err(SubmitError::BadShape);
+        }
+        // Validate and mark busy under the table lock (the flag holds
+        // for the whole generation — autoregressive order needs no
+        // other synchronization).
+        {
+            let mut table = lock_table(&self.sessions);
+            let slot = table.get_mut(&session).ok_or(SubmitError::UnknownSession)?;
+            if slot.poisoned {
+                return Err(SubmitError::SessionPoisoned);
+            }
+            if slot.busy {
+                return Err(SubmitError::SessionBusy);
+            }
+            // The whole generation must fit: prefill + every step.
+            if slot.seq_len != 0 || prompt.rows() + opts.max_new_tokens > d.s {
+                return Err(SubmitError::SessionFull);
+            }
+            slot.busy = true;
+            slot.last_used = Instant::now();
+        }
+        let (tx, rx) = stream::bounded(self.config.server.stream_buffer.max(1));
+        let job = GenerateJob {
+            session,
+            prompt,
+            max_new_tokens: opts.max_new_tokens,
+            deadline: opts.deadline,
+            enqueued: Instant::now(),
+            tx,
+        };
+        let guard = self.router_ingress.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(sender) = guard.as_ref() else {
+            self.unmark_busy(session);
+            return Err(SubmitError::Shutdown);
+        };
+        match sender.try_send(job) {
+            Ok(()) => {
+                self.metrics.requests_accepted.inc();
+                Ok(TokenStream { rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.requests_rejected.inc();
+                self.unmark_busy(session);
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.unmark_busy(session);
+                Err(SubmitError::Shutdown)
+            }
+        }
+    }
+
+    /// Blocking generation convenience: submit and drain the stream
+    /// into the ordered token rows (or the first in-flight failure).
+    pub fn generate(
+        &self,
+        session: SessionId,
+        prompt: MatI8,
+        max_new_tokens: usize,
+    ) -> Result<Vec<Vec<i8>>, SubmitError> {
+        self.submit_generate(
+            session,
+            prompt,
+            GenerateOptions { max_new_tokens, ..GenerateOptions::default() },
+        )?
+        .collect_rows()
+    }
+
+    fn unmark_busy(&self, session: SessionId) {
+        release_busy(&self.sessions, session);
     }
 
     /// Graceful shutdown: close the ingress, drain in-flight work,
@@ -421,8 +552,11 @@ impl Server {
         self.shutdown.store(true, Ordering::Release);
         // Dropping the sender disconnects the dispatcher's receive
         // loop, which flushes the batcher and exits; dropping its
-        // batch sender then stops the workers.
+        // batch sender then stops the workers. The router sender's
+        // drop likewise makes the router drain waiting + running
+        // generations and exit.
         self.ingress.lock().unwrap_or_else(|e| e.into_inner()).take();
+        self.router_ingress.lock().unwrap_or_else(|e| e.into_inner()).take();
         let mut threads = self.threads.lock().unwrap_or_else(|e| e.into_inner());
         for t in threads.drain(..) {
             let _ = t.join();
@@ -444,6 +578,423 @@ fn evict_idle(sessions: &SessionTable, ttl: Duration, metrics: &ServerMetrics) -
     evicted
 }
 
+/// Release one session's busy flag (shed/cancel paths: the engine was
+/// never taken out of the table).
+fn release_busy(sessions: &SessionTable, session: SessionId) {
+    if let Some(slot) = lock_table(sessions).get_mut(&session) {
+        slot.busy = false;
+    }
+}
+
+/// One generation live inside the router's running batch: the
+/// session's engine (taken from the table for the whole generation,
+/// under the same [`BusyGuard`] discipline as the worker path), the
+/// closed-loop feedback row, and at most one undelivered token (a full
+/// stream buffer pauses the session — it sits out ticks until the
+/// caller drains, instead of stalling the loop).
+struct RunningGen<'a> {
+    session: SessionId,
+    tx: stream::Sender<TokenResult>,
+    engine: Box<DecodeEngine>,
+    guard: BusyGuard<'a>,
+    /// Next tick's input row (the previous output — closed loop).
+    next: Vec<i8>,
+    /// Token produced but not yet accepted by the stream buffer.
+    pending: Option<TokenItem>,
+    emitted: usize,
+    max_new_tokens: usize,
+    enqueued: Instant,
+}
+
+fn spawn_router(
+    config: SystemConfig,
+    rx: Receiver<GenerateJob>,
+    sessions: Arc<SessionTable>,
+    metrics: Arc<ServerMetrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ita-router".into())
+        .spawn(move || run_router(&config, rx, &sessions, &metrics))
+        .expect("spawn router")
+}
+
+/// The continuous-batching decode loop (TGI `batching_task` style).
+///
+/// One long-lived loop owns one [`FusedStepBatch`] and a running set
+/// of generations. Every pass it: drains the ingress, sheds waiting
+/// jobs whose deadline passed or whose caller vanished
+/// (shed-before-compute, exactly like the worker path), admits
+/// waiters under the waiting/served-ratio policy (admission bursts
+/// prefill FUSED — one projection GEMM per weight), delivers any
+/// tokens a previously-full stream buffer held back, reaps finished
+/// and cancelled sessions (their slots are reusable by the very next
+/// tick), then runs ONE fused tick over the active set — a single
+/// stacked row-GEMM per projection weight regardless of join/leave
+/// churn, so throughput never collapses back to poll-window batching.
+///
+/// Fault containment mirrors PR 6's worker path: a stage-2 tail panic
+/// poisons only its own session ([`TickReport::poisoned`]
+/// [`TickReport::poisoned`](crate::attention::decode::TickReport) —
+/// survivors bit-exact), a shared-stage panic quarantines the active
+/// set, and every engine is under a [`BusyGuard`] so even a router
+/// panic cannot leak a permanently-busy slot.
+fn run_router(
+    config: &SystemConfig,
+    rx: Receiver<GenerateJob>,
+    sessions: &SessionTable,
+    metrics: &ServerMetrics,
+) {
+    let ratio_pct = config.server.waiting_served_pct;
+    let max_waiting_ticks = config.server.max_waiting_ticks.max(1);
+    let watchdog = Duration::from_micros(config.server.watchdog_us);
+    let max_running = config.server.max_batch;
+    let mut waiting: VecDeque<GenerateJob> = VecDeque::new();
+    let mut running: Vec<RunningGen> = Vec::new();
+    let mut batch = FusedStepBatch::new();
+    let mut ticks_since_admission: u64 = 0;
+    let mut disconnected = false;
+
+    loop {
+        // ---- Ingest --------------------------------------------------
+        if running.is_empty() && waiting.is_empty() {
+            if disconnected {
+                break; // drained: shutdown completes
+            }
+            // Idle: block for work (bounded so a shutdown race cannot
+            // strand the thread).
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(job) => waiting.push_back(job),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    continue;
+                }
+            }
+        }
+        if !disconnected {
+            // Busy: drain opportunistically, never block the tick.
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => waiting.push_back(job),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- Shed waiting jobs before they cost anything -------------
+        let now = Instant::now();
+        waiting.retain(|job| {
+            if job.deadline.is_some_and(|dl| now >= dl) {
+                metrics.deadlines_expired.inc();
+                let _ = job.tx.try_send(Err(SubmitError::DeadlineExceeded));
+                release_busy(sessions, job.session);
+                return false;
+            }
+            if job.tx.is_cancelled() {
+                metrics.requests_cancelled.inc();
+                release_busy(sessions, job.session);
+                return false;
+            }
+            true
+        });
+
+        // ---- Admission (waiting/served-ratio policy) ------------------
+        // Admit when the batch is empty (nothing to pause), when the
+        // waiting queue is large relative to the running batch (the
+        // prefill pause amortizes over many admissions), or when the
+        // escape hatch fires (bounded time-to-first-token).
+        let slots = max_running.saturating_sub(running.len());
+        let due = !waiting.is_empty()
+            && slots > 0
+            && (running.is_empty()
+                || (waiting.len() as u64) * 100 >= (running.len() as u64) * ratio_pct
+                || ticks_since_admission >= max_waiting_ticks);
+        if due {
+            let n = waiting.len().min(slots);
+            let admitted: Vec<GenerateJob> = waiting.drain(..n).collect();
+            let newly = admit_generations(config, admitted, sessions, metrics);
+            metrics.router_admissions.add(newly.len() as u64);
+            running.extend(newly);
+            ticks_since_admission = 0;
+        }
+
+        // ---- Deliver held-back tokens; reap finished & cancelled ------
+        let mut i = 0;
+        while i < running.len() {
+            let g = &mut running[i];
+            if let Some(tok) = g.pending.take() {
+                match g.tx.try_send(Ok(tok)) {
+                    Ok(()) => metrics.tokens_streamed.inc(),
+                    Err(stream::TrySendError::Full(Ok(tok))) => g.pending = Some(tok),
+                    Err(_) => {} // receiver gone: the cancel check reaps it
+                }
+            }
+            if g.tx.is_cancelled() {
+                // Receiver dropped mid-stream: the engine is intact
+                // between ticks, so only the generation dies — the
+                // session survives with its cache, and this slot is
+                // free for the next admission.
+                let g = running.remove(i);
+                metrics.requests_cancelled.inc();
+                g.guard.finish(g.engine);
+                continue;
+            }
+            if g.emitted >= g.max_new_tokens && g.pending.is_none() {
+                let g = running.remove(i);
+                metrics.streams_completed.inc();
+                metrics.requests_completed.inc();
+                metrics.latency.observe(g.enqueued.elapsed());
+                g.guard.finish(g.engine);
+                // g.tx drops here: the stream's clean end.
+                continue;
+            }
+            i += 1;
+        }
+        metrics.running_sessions.set(running.len() as u64);
+
+        // ---- One fused tick over the active set -----------------------
+        // Paused sessions (full stream buffer) and finished-awaiting-
+        // delivery sessions sit this tick out; everyone else stacks
+        // into one row-GEMM per projection weight.
+        let active: Vec<usize> = running
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.pending.is_none() && g.emitted < g.max_new_tokens)
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            if running.is_empty() && waiting.is_empty() {
+                continue; // the idle branch at the top takes over
+            }
+            // Everyone is paused on backpressure: wait for consumers
+            // (or new arrivals) without spinning.
+            if disconnected {
+                std::thread::sleep(Duration::from_micros(200));
+            } else {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(job) => waiting.push_back(job),
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                    Err(RecvTimeoutError::Timeout) => {}
+                }
+            }
+            continue;
+        }
+        metrics.router_ticks.inc();
+        metrics.router_tick_sessions.add(active.len() as u64);
+        let t0 = Instant::now();
+        // Containment mirrors `execute_fused_steps`: a per-session
+        // stage-2 tail panic is reported in the TickReport (survivors
+        // bit-exact); a shared-stage panic unwinds and quarantines the
+        // whole active set.
+        let tick_result = catch_unwind(AssertUnwindSafe(|| {
+            let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(active.len());
+            let mut rows: Vec<&[i8]> = Vec::with_capacity(active.len());
+            for g in running.iter_mut() {
+                if g.pending.is_none() && g.emitted < g.max_new_tokens {
+                    let RunningGen { engine, next, .. } = g;
+                    engines.push(&mut **engine);
+                    rows.push(&next[..]);
+                }
+            }
+            batch.tick(&mut engines, &rows)
+        }));
+        match tick_result {
+            Ok(report) => {
+                let n_live = active.len() - report.poisoned.len();
+                let shared_energy =
+                    EnergyBreakdown::for_activity(&config.accelerator, batch.shared()).total();
+                let share = if n_live > 0 { shared_energy / n_live as f64 } else { 0.0 };
+                // Reverse walk so removing poisoned entries by index
+                // leaves the remaining (lower) indices valid.
+                for (k, &ri) in active.iter().enumerate().rev() {
+                    if report.poisoned.binary_search(&k).is_ok() {
+                        let g = running.remove(ri);
+                        let _ = g.tx.try_send(Err(SubmitError::SessionPoisoned));
+                        g.guard.poison();
+                        continue;
+                    }
+                    let g = &mut running[ri];
+                    let activity = g.engine.engine.activity;
+                    let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity)
+                        .total()
+                        + share;
+                    let cycles = activity.cycles + activity.stall_cycles;
+                    metrics.sim_cycles.add(cycles);
+                    metrics.sim_energy_pj.add((energy * 1e12) as u64);
+                    let row = batch.out_row(k).to_vec();
+                    g.next.clear();
+                    g.next.extend_from_slice(&row);
+                    let tok = TokenItem {
+                        session: g.session,
+                        index: g.emitted,
+                        row,
+                        seq_len: g.engine.len(),
+                        sim_cycles: cycles,
+                        sim_energy_j: energy,
+                    };
+                    g.emitted += 1;
+                    match g.tx.try_send(Ok(tok)) {
+                        Ok(()) => metrics.tokens_streamed.inc(),
+                        Err(stream::TrySendError::Full(Ok(tok))) => {
+                            metrics.stream_backpressure.inc();
+                            g.pending = Some(tok);
+                        }
+                        Err(_) => {} // receiver gone: reaped next pass
+                    }
+                }
+            }
+            Err(_) => {
+                for &ri in active.iter().rev() {
+                    let g = running.remove(ri);
+                    let _ = g.tx.try_send(Err(SubmitError::SessionPoisoned));
+                    g.guard.poison();
+                }
+            }
+        }
+        let took = t0.elapsed();
+        metrics.tick_duration.observe(took);
+        if took > watchdog {
+            metrics.slow_ticks.inc();
+        }
+        ticks_since_admission += 1;
+        metrics.running_sessions.set(running.len() as u64);
+    }
+}
+
+/// Admit a burst of waiting generations: take each session's engine
+/// out of the table (one lock, mirroring the worker path's shed-and-
+/// take), then prefill — FUSED when the burst has >= 2 members (one
+/// projection GEMM per weight matrix, §Prefill-batching), plain
+/// otherwise. Returns the generations that made it into the running
+/// set; failures answer on their streams and never join.
+fn admit_generations<'a>(
+    config: &SystemConfig,
+    jobs: Vec<GenerateJob>,
+    sessions: &'a SessionTable,
+    metrics: &'a ServerMetrics,
+) -> Vec<RunningGen<'a>> {
+    let mut taken: Vec<(GenerateJob, Box<DecodeEngine>, BusyGuard<'a>)> =
+        Vec::with_capacity(jobs.len());
+    {
+        let mut table = lock_table(sessions);
+        for job in jobs {
+            match table.get_mut(&job.session) {
+                None => {
+                    let _ = job.tx.try_send(Err(SubmitError::UnknownSession));
+                }
+                Some(slot) => match slot.engine.take() {
+                    Some(mut engine) => {
+                        // Tag the engine so an injected fault can
+                        // target one session out of a fused tick.
+                        engine.fail_tag = job.session;
+                        let guard = BusyGuard::new(sessions, metrics, job.session);
+                        taken.push((job, engine, guard));
+                    }
+                    None => {
+                        slot.busy = false;
+                        slot.poisoned = true;
+                        let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
+                    }
+                },
+            }
+        }
+    }
+    let n = taken.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n >= 2 {
+        // Admission burst: one fused prefill pass. Containment is
+        // coarse like `execute_fused_prefills` — the stacked GEMMs
+        // interleave every member, so a panic quarantines the group.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
+            let mut inputs: Vec<&MatI8> = Vec::with_capacity(n);
+            for (job, engine, _) in taken.iter_mut() {
+                inputs.push(&job.prompt);
+                engines.push(&mut **engine);
+            }
+            fused_prefill(&mut engines, &inputs)
+        }));
+        match result {
+            Ok(result) => {
+                metrics.fused_prefill_batches.inc();
+                metrics.fused_prefill_sessions.add(n as u64);
+                let shared_energy =
+                    EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
+                let share = shared_energy / n as f64;
+                taken
+                    .into_iter()
+                    .zip(result.outputs)
+                    .map(|((job, engine, guard), out)| {
+                        finish_admission(config, metrics, job, engine, guard, &out.out, share)
+                    })
+                    .collect()
+            }
+            Err(_) => {
+                for (job, _, guard) in taken {
+                    let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
+                    guard.poison();
+                }
+                Vec::new()
+            }
+        }
+    } else {
+        // Lone admission: plain prefill, per-session containment.
+        let (job, mut engine, guard) = taken.pop().expect("n == 1");
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            engine.engine.reset_activity();
+            let out = engine.prefill(&job.prompt).out;
+            (engine, out)
+        }));
+        match result {
+            Ok((engine, out)) => {
+                vec![finish_admission(config, metrics, job, engine, guard, &out, 0.0)]
+            }
+            Err(_) => {
+                let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
+                guard.poison();
+                Vec::new()
+            }
+        }
+    }
+}
+
+/// Account one admitted generation's prefill and seed its closed loop:
+/// the prompt's last output row is the first tick's input.
+fn finish_admission<'a>(
+    config: &SystemConfig,
+    metrics: &ServerMetrics,
+    job: GenerateJob,
+    engine: Box<DecodeEngine>,
+    guard: BusyGuard<'a>,
+    out: &MatI8,
+    share: f64,
+) -> RunningGen<'a> {
+    let activity = engine.engine.activity;
+    let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total() + share;
+    let cycles = activity.cycles + activity.stall_cycles;
+    metrics.sim_cycles.add(cycles);
+    metrics.sim_energy_pj.add((energy * 1e12) as u64);
+    metrics.prefills_completed.inc();
+    let next = out.row(out.rows() - 1).to_vec();
+    RunningGen {
+        session: job.session,
+        tx: job.tx,
+        engine,
+        guard,
+        next,
+        pending: None,
+        emitted: 0,
+        max_new_tokens: job.max_new_tokens,
+        enqueued: job.enqueued,
+    }
+}
+
 fn spawn_dispatcher(
     config: SystemConfig,
     ingress: Receiver<Work>,
@@ -457,10 +1008,28 @@ fn spawn_dispatcher(
             let max_wait = Duration::from_micros(config.server.max_wait_us);
             let ttl = Duration::from_millis(config.server.session_ttl_ms);
             let mut batcher: Batcher<Work> = Batcher::new(config.server.max_batch, max_wait);
+            // TTL sweeps run on a WALL-CLOCK cadence, independent of
+            // traffic: sweeping only when `recv_timeout` times out
+            // starves eviction under sustained arrivals (the Timeout
+            // branch never fires), letting idle sessions pin their KV
+            // caches forever on a busy server.
+            let sweep_every = (!ttl.is_zero()).then(|| ttl.min(Duration::from_millis(50)));
+            let mut next_sweep = sweep_every.map(|every| Instant::now() + every);
             loop {
-                let timeout = batcher
-                    .time_to_deadline(Instant::now())
-                    .unwrap_or(Duration::from_millis(50));
+                let now = Instant::now();
+                if let (Some(every), Some(due)) = (sweep_every, next_sweep) {
+                    if now >= due {
+                        evict_idle(&sessions, ttl, &metrics);
+                        next_sweep = Some(now + every);
+                    }
+                }
+                let mut timeout =
+                    batcher.time_to_deadline(now).unwrap_or(Duration::from_millis(50));
+                if let Some(due) = next_sweep {
+                    // Never oversleep a due sweep behind a long batch
+                    // deadline.
+                    timeout = timeout.min(due.saturating_duration_since(now));
+                }
                 match ingress.recv_timeout(timeout) {
                     Ok(job) => {
                         // Injected ingress fault: an accepted job
@@ -477,7 +1046,6 @@ fn spawn_dispatcher(
                             metrics.ingress_dropped.inc();
                             continue;
                         }
-                        metrics.queue_depth.set(batcher.len() as u64 + 1);
                         // Prefills are eager (§Prefill-batching): they
                         // fuse with whatever other prefills are queued
                         // *right now*, so an all-prefill batch flushes
@@ -497,19 +1065,23 @@ fn spawn_dispatcher(
                         if let Some(batch) = flushed {
                             send_batch(&batch_tx, batch, &metrics);
                         }
+                        // Gauge tracked at EVERY push/flush point (not
+                        // just arrivals): a set-on-arrival-only gauge
+                        // reads the last pre-flush depth forever and
+                        // never returns to zero after quiesce.
+                        metrics.queue_depth.set(batcher.len() as u64);
                     }
                     Err(RecvTimeoutError::Timeout) => {
                         if let Some(batch) = batcher.poll(Instant::now()) {
                             send_batch(&batch_tx, batch, &metrics);
                         }
-                        if !ttl.is_zero() {
-                            evict_idle(&sessions, ttl, &metrics);
-                        }
+                        metrics.queue_depth.set(batcher.len() as u64);
                     }
                     Err(RecvTimeoutError::Disconnected) => {
                         if let Some(batch) = batcher.flush() {
                             send_batch(&batch_tx, batch, &metrics);
                         }
+                        metrics.queue_depth.set(0);
                         break;
                     }
                 }

@@ -172,6 +172,25 @@ pub struct ServerMetrics {
     pub slow_ticks: Counter,
     /// Wall-clock duration of each batch-processing pass (watchdog).
     pub tick_duration: LatencyHistogram,
+    /// Continuous-batching router: fused decode ticks executed by the
+    /// persistent loop (any batch size, N=1 included).
+    pub router_ticks: Counter,
+    /// Sum of live sessions over all router ticks — divided by
+    /// `router_ticks` this is the mean running-batch occupancy, the
+    /// quantity the admission policy exists to keep high.
+    pub router_tick_sessions: Counter,
+    /// Generations admitted from the waiting queue into the running
+    /// batch.
+    pub router_admissions: Counter,
+    /// Sessions in the router's running batch right now.
+    pub running_sessions: Gauge,
+    /// Tokens delivered on per-session streams.
+    pub tokens_streamed: Counter,
+    /// Ticks a session sat out because its stream buffer was full
+    /// (per-session backpressure; the tick loop itself never stalls).
+    pub stream_backpressure: Counter,
+    /// Generations that ran to completion and closed their stream.
+    pub streams_completed: Counter,
 }
 
 impl ServerMetrics {
@@ -184,6 +203,16 @@ impl ServerMetrics {
         self.batch_fill_sum.get() as f64 / b as f64
     }
 
+    /// Mean running-batch occupancy of the continuous-batching router
+    /// (sessions per fused tick).
+    pub fn mean_router_occupancy(&self) -> f64 {
+        let t = self.router_ticks.get();
+        if t == 0 {
+            return 0.0;
+        }
+        self.router_tick_sessions.get() as f64 / t as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: accepted={} rejected={} completed={}\n\
@@ -191,6 +220,7 @@ impl ServerMetrics {
              decode: sessions={} prefills={} (fused={} in {} passes) \
              steps={} (fused={} in {} ticks)\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
+             router: admissions={} streams_done={} tokens={} occupancy={:.2} backpressure={}\n\
              faults: deadline_expired={} cancelled={} dropped={} poisoned={} evicted={}\n\
              ticks: mean={:.1}us slow={}\n\
              sim: cycles={} energy={:.3}uJ",
@@ -209,6 +239,11 @@ impl ServerMetrics {
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
+            self.router_admissions.get(),
+            self.streams_completed.get(),
+            self.tokens_streamed.get(),
+            self.mean_router_occupancy(),
+            self.stream_backpressure.get(),
             self.deadlines_expired.get(),
             self.requests_cancelled.get(),
             self.ingress_dropped.get(),
@@ -298,6 +333,32 @@ mod tests {
             "{r}"
         );
         assert!(r.contains("slow=1"), "{r}");
+    }
+
+    #[test]
+    fn server_metrics_report_router_line() {
+        let m = ServerMetrics::default();
+        m.router_admissions.add(5);
+        m.streams_completed.add(4);
+        m.tokens_streamed.add(40);
+        m.router_ticks.add(10);
+        m.router_tick_sessions.add(35); // mean occupancy 3.5
+        m.stream_backpressure.add(2);
+        assert!((m.mean_router_occupancy() - 3.5).abs() < 1e-9);
+        let r = m.report();
+        assert!(
+            r.contains(
+                "router: admissions=5 streams_done=4 tokens=40 occupancy=3.50 backpressure=2"
+            ),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn router_occupancy_defined_at_zero_ticks() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.mean_router_occupancy(), 0.0);
+        assert!(m.report().contains("occupancy=0.00"));
     }
 
     #[test]

@@ -21,4 +21,5 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod stream;
 pub mod table;

@@ -1,0 +1,272 @@
+//! Bounded multi-value channel with cancellation observability — the
+//! streaming sibling of [`crate::util::oneshot`].
+//!
+//! The continuous-batching router delivers one token per fused tick to
+//! every live session, so it needs what std's `mpsc::SyncSender` does
+//! not offer: (a) a *non-blocking* send whose `Full` outcome the
+//! router can turn into per-session backpressure (pause the session,
+//! never stall the tick loop), and (b) receiver-liveness observable
+//! *without* sending — a dropped [`Receiver`] is how a caller cancels
+//! a generation mid-stream, and the router must notice it before
+//! spending a tick on the session. Both halves here are dependency-
+//! free (the build is offline) and poison-tolerant like the rest of
+//! the coordinator's locks.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    sender_dropped: bool,
+    receiver_dropped: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+/// Producing half (the router). Only non-blocking sends: the tick loop
+/// must never block on a slow consumer.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Consuming half (the caller's token stream). Dropping it cancels the
+/// in-flight generation.
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Why a [`Sender::try_send`] did not deliver; carries the value back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Buffer at capacity and the receiver still alive — backpressure.
+    Full(T),
+    /// The receiver was dropped — the caller cancelled.
+    Disconnected(T),
+}
+
+/// Outcome of a bounded wait on the receiving half.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// The deadline passed with nothing buffered.
+    Timeout,
+    /// Buffer empty and the sender gone: the stream ended.
+    Disconnected,
+}
+
+/// Create a connected bounded pair. `capacity` is clamped to >= 1 (a
+/// zero-capacity rendezvous would deadlock a non-blocking producer).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            sender_dropped: false,
+            receiver_dropped: false,
+        }),
+        cv: Condvar::new(),
+        capacity: capacity.max(1),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    // Critical sections are a few field writes; recover from poison
+    // rather than cascading a worker panic into the caller.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T> Sender<T> {
+    /// Deliver `value` if there is room and the receiver is alive.
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        let mut st = lock(&self.inner.state);
+        if st.receiver_dropped {
+            return Err(TrySendError::Disconnected(value));
+        }
+        if st.queue.len() >= self.inner.capacity {
+            return Err(TrySendError::Full(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(())
+    }
+
+    /// True once the paired receiver has been dropped — the caller
+    /// abandoned this stream. Cheap pre-compute check (shed before the
+    /// tick spends work on the session).
+    pub fn is_cancelled(&self) -> bool {
+        lock(&self.inner.state).receiver_dropped
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.inner.state);
+        st.sender_dropped = true;
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until a value arrives. `None` means the sender is gone
+    /// and the buffer drained — the clean end of the stream.
+    pub fn recv(&mut self) -> Option<T> {
+        let mut st = lock(&self.inner.state);
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                // A paused producer may be waiting on the freed slot
+                // (the router polls rather than waits, but a test
+                // producer may block on a full-buffer retry loop).
+                self.inner.cv.notify_all();
+                return Some(v);
+            }
+            if st.sender_dropped {
+                return None;
+            }
+            st = self.inner.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block at most `timeout` for the next value. Unlike the oneshot,
+    /// this does NOT consume the receiver — a timed-out stream read is
+    /// not a cancellation (drop the receiver to cancel).
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock(&self.inner.state);
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.inner.cv.notify_all();
+                return Ok(v);
+            }
+            if st.sender_dropped {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self
+                .inner
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` when the buffer is momentarily
+    /// empty, `Err(())` when the stream ended.
+    pub fn try_recv(&mut self) -> Result<Option<T>, ()> {
+        let mut st = lock(&self.inner.state);
+        if let Some(v) = st.queue.pop_front() {
+            drop(st);
+            self.inner.cv.notify_all();
+            return Ok(Some(v));
+        }
+        if st.sender_dropped {
+            return Err(());
+        }
+        Ok(None)
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.inner.state);
+        st.receiver_dropped = true;
+        // Buffered tokens nobody will read: free them now rather than
+        // holding them for the Arc's lifetime.
+        st.queue.clear();
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_arrive_in_order() {
+        let (tx, mut rx) = bounded(4);
+        tx.try_send(1u32).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+    }
+
+    #[test]
+    fn full_buffer_reports_backpressure_and_returns_the_value() {
+        let (tx, mut rx) = bounded(2);
+        tx.try_send(1u8).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        // Draining one slot unblocks the producer.
+        assert_eq!(rx.recv(), Some(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+    }
+
+    #[test]
+    fn dropped_receiver_is_observable_without_sending() {
+        let (tx, rx) = bounded::<u8>(1);
+        assert!(!tx.is_cancelled());
+        drop(rx);
+        assert!(tx.is_cancelled());
+        assert_eq!(tx.try_send(1), Err(TrySendError::Disconnected(1)));
+    }
+
+    #[test]
+    fn sender_drop_ends_the_stream_after_draining() {
+        let (tx, mut rx) = bounded(4);
+        tx.try_send(7u8).unwrap();
+        drop(tx);
+        // Buffered value still delivered, then the clean end marker.
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.try_recv(), Err(()));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_without_cancelling() {
+        let (tx, mut rx) = bounded(1);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(5)), Err(RecvTimeoutError::Timeout));
+        // The stream is still live: a timed-out read is not a drop.
+        assert!(!tx.is_cancelled());
+        tx.try_send(9u8).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(9));
+    }
+
+    #[test]
+    fn cross_thread_stream_delivers_everything() {
+        let (tx, mut rx) = bounded(2);
+        let t = std::thread::spawn(move || {
+            for i in 0..16u32 {
+                // Producer-side retry loop standing in for the
+                // router's pause-and-retry-next-tick behavior.
+                let mut v = i;
+                loop {
+                    match tx.try_send(v) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(back)) => {
+                            v = back;
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(TrySendError::Disconnected(_)) => panic!("receiver vanished"),
+                    }
+                }
+            }
+        });
+        let got: Vec<u32> = std::iter::from_fn(|| rx.recv()).collect();
+        t.join().unwrap();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+    }
+}

@@ -9,9 +9,10 @@
 use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
-use ita::coordinator::{DecodeInput, Server, SubmitError};
+use ita::coordinator::{DecodeInput, GenerateOptions, Server, SubmitError};
 use ita::ita::ItaConfig;
 use ita::util::failpoint::{self, FailAction};
+use ita::util::mat::MatI8;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -236,6 +237,128 @@ fn ingress_drop_cancels_waiter_and_releases_busy() {
     assert_eq!(server.metrics.ingress_dropped.get(), 2);
     let resp = server.decode(sid, DecodeInput::Step(x.row(2).to_vec())).unwrap();
     assert_eq!(resp.seq_len, 3);
+    server.shutdown();
+}
+
+/// Solo closed-loop oracle (same convention as the integration suite).
+fn golden_generation(cfg: &SystemConfig, prompt: &MatI8, max_new_tokens: usize) -> Vec<Vec<i8>> {
+    let mut eng = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+    let pre = eng.prefill(prompt);
+    let mut next = pre.out.row(prompt.rows() - 1).to_vec();
+    let mut rows = Vec::new();
+    for _ in 0..max_new_tokens {
+        let out = eng.step(&next);
+        rows.push(out.clone());
+        next = out;
+    }
+    rows
+}
+
+fn gen_opts(max_new_tokens: usize) -> GenerateOptions {
+    GenerateOptions { max_new_tokens, ..GenerateOptions::default() }
+}
+
+/// Panic one session's stage-2 tail inside the continuous-batching
+/// router's fused tick: the victim's generation terminates (poisoned,
+/// quarantine sticky until close/reopen) while the co-streaming
+/// survivors run to completion bit-identical to their solo oracles,
+/// and the router keeps admitting fresh generations afterwards.
+#[test]
+fn router_tick_panic_poisons_victim_survivors_stream_bit_exact() {
+    let _g = serial();
+    let mut cfg = config(1, 4, 300);
+    cfg.server.stream_buffer = 4;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let pv = gen_input(51, &d).block_padded(0, 0, 2, d.e);
+    let p1 = gen_input(52, &d).block_padded(0, 0, 3, d.e);
+    let p2 = gen_input(53, &d).block_padded(0, 0, 4, d.e);
+    let golden_v = golden_generation(&cfg, &pv, 12);
+    let golden_1 = golden_generation(&cfg, &p1, 8);
+    let golden_2 = golden_generation(&cfg, &p2, 8);
+
+    let victim = server.open_session().unwrap();
+    let s1 = server.open_session().unwrap();
+    let s2 = server.open_session().unwrap();
+    let mut stream_v = server.submit_generate(victim, pv.clone(), gen_opts(12)).unwrap();
+    let mut stream_1 = server.submit_generate(s1, p1, gen_opts(8)).unwrap();
+    let mut stream_2 = server.submit_generate(s2, p2, gen_opts(8)).unwrap();
+
+    // One token from each proves all three are admitted and ticking
+    // (prefills done — the fault below must land in a STEP tick).
+    let mut got_v = vec![stream_v.recv().unwrap().unwrap().row];
+    let mut got_1 = vec![stream_1.recv().unwrap().unwrap().row];
+    let mut got_2 = vec![stream_2.recv().unwrap().unwrap().row];
+    // The small stream buffer bounds how far ahead the router can run:
+    // the victim cannot finish its 12 tokens before the fault arms.
+    failpoint::cfg_for("decode.step.tail", victim, 1, FailAction::Panic);
+
+    // Survivors drain to completion, bit-identical, while the victim
+    // dies somewhere mid-stream.
+    while let Some(item) = stream_1.recv() {
+        got_1.push(item.expect("survivor 1 token").row);
+    }
+    while let Some(item) = stream_2.recv() {
+        got_2.push(item.expect("survivor 2 token").row);
+    }
+    assert_eq!(got_1, golden_1, "survivor 1 not bit-identical to its solo oracle");
+    assert_eq!(got_2, golden_2, "survivor 2 not bit-identical to its solo oracle");
+
+    // The victim's stream: a valid oracle prefix, then (best-effort) a
+    // SessionPoisoned verdict, then termination — never a hang, never
+    // a wrong row.
+    let mut verdict = None;
+    while let Some(item) = stream_v.recv() {
+        match item {
+            Ok(tok) => got_v.push(tok.row),
+            Err(e) => verdict = Some(e),
+        }
+    }
+    assert!(got_v.len() < 12, "victim must not complete");
+    assert_eq!(got_v[..], golden_v[..got_v.len()], "victim prefix must match its oracle");
+    if let Some(e) = verdict {
+        assert_eq!(e, SubmitError::SessionPoisoned);
+    }
+    assert_eq!(server.metrics.sessions_poisoned.get(), 1);
+
+    // Quarantine is sticky and scoped: the victim rejects new
+    // generations, close/reopen recovers, and the fresh session
+    // streams bit-exact through the same router.
+    assert!(matches!(
+        server.submit_generate(victim, pv.clone(), gen_opts(2)),
+        Err(SubmitError::SessionPoisoned)
+    ));
+    assert!(server.close_session(victim));
+    let fresh = server.open_session().unwrap();
+    assert_eq!(
+        server.generate(fresh, pv, 12).expect("fresh generation after quarantine"),
+        golden_v
+    );
+    server.shutdown();
+}
+
+/// `server.ingress.full` also guards the router's generation intake:
+/// the injected rejection returns `QueueFull` without wedging the
+/// session, and the immediate retry streams normally.
+#[test]
+fn injected_queue_full_on_generate_leaves_session_usable() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(55, &d).block_padded(0, 0, 3, d.e);
+    let golden = golden_generation(&cfg, &prompt, 5);
+    let sid = server.open_session().unwrap();
+
+    failpoint::cfg_for("server.ingress.full", 0, 1, FailAction::Trigger);
+    assert!(matches!(
+        server.submit_generate(sid, prompt.clone(), gen_opts(5)),
+        Err(SubmitError::QueueFull)
+    ));
+    assert_eq!(server.metrics.requests_rejected.get(), 1);
+    // The rejection left no busy flag behind: the retry is accepted
+    // and completes bit-exact.
+    assert_eq!(server.generate(sid, prompt, 5).unwrap(), golden);
     server.shutdown();
 }
 

@@ -5,9 +5,11 @@
 use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, run_attention_causal, AttentionExecutor, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
-use ita::coordinator::{DecodeInput, Server, SubmitError, SubmitOptions};
+use ita::coordinator::{DecodeInput, GenerateOptions, Server, SubmitError, SubmitOptions};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
+use ita::util::mat::MatI8;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -174,6 +176,10 @@ fn queue_full_rejections_reflected_in_metrics() {
         rx.recv().unwrap().unwrap();
     }
     server.shutdown();
+    // Regression (scheduling bugfix): the gauge used to be set only on
+    // arrival (to pre-flush depth), so it read the last burst's depth
+    // forever. After quiesce + shutdown it must read zero.
+    assert_eq!(server.metrics.queue_depth.get(), 0, "queue_depth must return to 0 after quiesce");
 }
 
 #[test]
@@ -384,6 +390,206 @@ fn idle_sessions_evicted_after_ttl() {
     // A fresh session is unaffected (it is younger than the TTL).
     let s3 = server.open_session().unwrap();
     server.decode(s3, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    server.shutdown();
+}
+
+/// Solo oracle for a closed-loop generation: prefill, then feed each
+/// output row back as the next step's input — exactly what the router
+/// must reproduce bit-for-bit from inside a churning fused batch.
+fn golden_generation(cfg: &SystemConfig, prompt: &MatI8, max_new_tokens: usize) -> Vec<Vec<i8>> {
+    let mut eng = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+    let pre = eng.prefill(prompt);
+    let mut next = pre.out.row(prompt.rows() - 1).to_vec();
+    let mut rows = Vec::new();
+    for _ in 0..max_new_tokens {
+        let out = eng.step(&next);
+        rows.push(out.clone());
+        next = out;
+    }
+    rows
+}
+
+fn gen_opts(max_new_tokens: usize) -> GenerateOptions {
+    GenerateOptions { max_new_tokens, ..GenerateOptions::default() }
+}
+
+#[test]
+fn router_streams_tokens_bit_identical_to_solo_run() {
+    let cfg = config(1, 4);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(401, &d).block_padded(0, 0, 4, d.e);
+    let golden = golden_generation(&cfg, &prompt, 8);
+    let sid = server.open_session().unwrap();
+    let mut stream = server.submit_generate(sid, prompt, gen_opts(8)).unwrap();
+    let mut rows = Vec::new();
+    while let Some(item) = stream.recv() {
+        let tok = item.expect("token, not an in-flight failure");
+        assert_eq!(tok.session, sid);
+        assert_eq!(tok.index, rows.len());
+        assert_eq!(tok.seq_len, 4 + rows.len() + 1);
+        assert!(tok.sim_cycles > 0);
+        assert!(tok.sim_energy_j > 0.0);
+        rows.push(tok.row);
+    }
+    assert_eq!(rows, golden, "streamed rows != solo closed-loop oracle");
+    assert_eq!(server.metrics.streams_completed.get(), 1);
+    assert_eq!(server.metrics.tokens_streamed.get(), 8);
+    assert_eq!(server.metrics.requests_completed.get(), 1);
+    assert_eq!(server.metrics.running_sessions.get(), 0);
+    // The generation released the session with its cache intact.
+    assert_eq!(server.session_len(sid), Some(12));
+    assert!(server.close_session(sid));
+    server.shutdown();
+}
+
+#[test]
+fn router_admits_next_tick_and_reuses_freed_slots() {
+    // ONE router slot, a dispatcher batch window three orders of
+    // magnitude longer than the test: B still completes, because the
+    // router admits at tick boundaries (B takes A's slot the pass
+    // after A's last token frees it), never on a poll-window wait.
+    let mut cfg = config(1, 1);
+    cfg.server.max_wait_us = 10_000_000;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let pa = gen_input(402, &d).block_padded(0, 0, 3, d.e);
+    let pb = gen_input(403, &d).block_padded(0, 0, 5, d.e);
+    let golden_a = golden_generation(&cfg, &pa, 6);
+    let golden_b = golden_generation(&cfg, &pb, 6);
+    let sa = server.open_session().unwrap();
+    let sb = server.open_session().unwrap();
+    let stream_a = server.submit_generate(sa, pa, gen_opts(6)).unwrap();
+    let stream_b = server.submit_generate(sb, pb, gen_opts(6)).unwrap();
+    assert_eq!(stream_a.collect_rows().unwrap(), golden_a);
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b);
+    assert_eq!(server.metrics.router_admissions.get(), 2);
+    assert_eq!(server.metrics.streams_completed.get(), 2);
+    assert_eq!(server.metrics.running_sessions.get(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn router_mid_flight_admission_is_bit_exact() {
+    // A long generation is mid-flight (paused on its 1-token stream
+    // buffer after we sample two tokens); B joins the SAME running
+    // batch, fully streams, and finishes while A is still live — and
+    // both match their solo oracles bit-for-bit.
+    let mut cfg = config(1, 4);
+    cfg.server.stream_buffer = 1;
+    cfg.server.max_waiting_ticks = 1;
+    cfg.server.max_wait_us = 10_000_000;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let pa = gen_input(406, &d).block_padded(0, 0, 3, d.e);
+    let pb = gen_input(407, &d).block_padded(0, 0, 4, d.e);
+    let golden_a = golden_generation(&cfg, &pa, 10);
+    let golden_b = golden_generation(&cfg, &pb, 4);
+    let sa = server.open_session().unwrap();
+    let sb = server.open_session().unwrap();
+    let mut stream_a = server.submit_generate(sa, pa, gen_opts(10)).unwrap();
+    let mut got_a = Vec::new();
+    for _ in 0..2 {
+        got_a.push(stream_a.recv().unwrap().unwrap().row);
+    }
+    // With buffer=1 and nobody draining, A can be at most 4 tokens in
+    // (2 sampled + 1 buffered + 1 held back) — mid-flight by design.
+    let stream_b = server.submit_generate(sb, pb, gen_opts(4)).unwrap();
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b);
+    assert_eq!(server.metrics.streams_completed.get(), 1, "B finished while A mid-flight");
+    while let Some(item) = stream_a.recv() {
+        got_a.push(item.unwrap().row);
+    }
+    assert_eq!(got_a, golden_a, "mid-flight join perturbed A's stream");
+    assert_eq!(server.metrics.router_admissions.get(), 2);
+    assert!(server.metrics.stream_backpressure.get() > 0, "buffer=1 must backpressure");
+    server.shutdown();
+}
+
+#[test]
+fn router_receiver_drop_mid_stream_frees_slot_for_waiting_session() {
+    // Dropping a TokenStream mid-generation cancels it: the router
+    // reaps the session from the next pass, the single slot goes to
+    // the waiting generation, and the cancelled session is left
+    // closable (busy released, engine back in the table).
+    let mut cfg = config(1, 1);
+    cfg.server.stream_buffer = 1;
+    cfg.server.max_wait_us = 10_000_000;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let pa = gen_input(408, &d).block_padded(0, 0, 2, d.e);
+    let pb = gen_input(409, &d).block_padded(0, 0, 3, d.e);
+    let golden_b = golden_generation(&cfg, &pb, 5);
+    let sa = server.open_session().unwrap();
+    let sb = server.open_session().unwrap();
+    let mut stream_a = server.submit_generate(sa, pa, gen_opts(12)).unwrap();
+    // One token proves A was admitted and is ticking; then abandon it.
+    assert!(stream_a.recv().unwrap().is_ok());
+    drop(stream_a);
+    let stream_b = server.submit_generate(sb, pb, gen_opts(5)).unwrap();
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b, "B must run unperturbed in A's slot");
+    assert_eq!(server.metrics.requests_cancelled.get(), 1);
+    assert_eq!(server.metrics.streams_completed.get(), 1);
+    // The cancelled session survived with a consistent cache.
+    assert!(server.session_len(sa).is_some());
+    assert!(server.close_session(sa), "cancelled session must not stay busy");
+    server.shutdown();
+}
+
+#[test]
+fn ttl_eviction_survives_sustained_ingress() {
+    // Regression (scheduling bugfix): eviction used to run only in the
+    // dispatcher's recv-timeout branch, which never fires while
+    // arrivals keep coming — idle sessions pinned their KV caches
+    // forever on exactly the servers that needed eviction most. The
+    // sweep now runs on a wall-clock cadence independent of traffic.
+    let mut cfg = config(1, 4);
+    cfg.server.session_ttl_ms = 25;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(404, &d);
+    let sid = server.open_session().unwrap();
+    server.decode(sid, DecodeInput::Prefill(x.block_padded(0, 0, 2, d.e))).unwrap();
+    // Hot ingress: a submit storm keeps the dispatcher's receive arm
+    // returning Ok (arrival gaps far under the batch window), so the
+    // timeout branch the old sweep lived in never runs.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammer = {
+        let server: Arc<Server> = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let x = gen_input(405, &d);
+            let mut rxs = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match server.submit(x.clone()) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::QueueFull) => {
+                        // Drain so the storm never stalls.
+                        for rx in rxs.drain(..) {
+                            let _ = rx.recv();
+                        }
+                    }
+                    Err(e) => panic!("unexpected {e}"),
+                }
+            }
+            for rx in rxs {
+                let _ = rx.recv();
+            }
+        })
+    };
+    let deadline = Instant::now() + Duration::from_millis(1500);
+    let mut evicted = false;
+    while Instant::now() < deadline {
+        if server.session_len(sid).is_none() {
+            evicted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::Relaxed);
+    hammer.join().unwrap();
+    assert!(evicted, "idle session must be swept mid-traffic, without evict_idle_now()");
+    assert!(server.metrics.sessions_evicted.get() >= 1);
     server.shutdown();
 }
 

@@ -1,0 +1,159 @@
+//! Continuous-batching router churn — the end-to-end correctness
+//! property of this layer.
+//!
+//! Property: for seeded churn scenarios (staggered submissions, ragged
+//! prompt lengths and token budgets, more sessions than router slots,
+//! one caller abandoning its stream mid-generation) and **every kernel
+//! path this host can execute**, every generation the router completes
+//! is **bit-identical** to a solo closed-loop run of the same prompt
+//! on a private `DecodeEngine` — and the cancelled generation's
+//! delivered prefix matches its oracle's prefix. Join/leave churn,
+//! admission order, stream backpressure, and slot reuse must be
+//! invisible in the numerics.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating property lives in a single #[test] and restores
+//! auto-detection before returning — the same discipline
+//! `tests/step_fused.rs` uses.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::ModelDims;
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{GenerateOptions, Server, TokenStream};
+use ita::ita::ItaConfig;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+use ita::util::rng::SplitMix64;
+
+fn config() -> SystemConfig {
+    SystemConfig {
+        accelerator: ItaConfig::tiny(),
+        model: ModelConfig {
+            dims: ModelDims { s: 16, e: 16, p: 8, h: 2 },
+            ffn: 32,
+            layers: 1,
+            seed: 42,
+        },
+        server: ServerConfig {
+            workers: 1,
+            // Fewer slots than sessions: admissions must wait for
+            // completions/cancellations to free slots (reuse churn).
+            max_batch: 4,
+            // Tiny stream buffer: sessions pause and resume on
+            // backpressure, so tick membership churns constantly.
+            stream_buffer: 2,
+            max_waiting_ticks: 1,
+            queue_depth: 128,
+            ..ServerConfig::default()
+        },
+    }
+}
+
+/// Solo closed-loop oracle: prefill, then feed each output row back.
+fn golden_generation(cfg: &SystemConfig, prompt: &MatI8, max_new_tokens: usize) -> Vec<Vec<i8>> {
+    let mut eng = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+    let pre = eng.prefill(prompt);
+    let mut next = pre.out.row(prompt.rows() - 1).to_vec();
+    let mut rows = Vec::new();
+    for _ in 0..max_new_tokens {
+        let out = eng.step(&next);
+        rows.push(out.clone());
+        next = out;
+    }
+    rows
+}
+
+/// One seeded churn scenario against a live server. Session 0 is the
+/// victim: its stream is dropped mid-generation after two tokens.
+fn run_scenario(seed: u64, label: &str) {
+    const N: usize = 6;
+    let cfg = config();
+    let d = cfg.model.dims;
+    let server = Server::start(cfg);
+    let mut rng = SplitMix64::new(seed);
+
+    let mut prompts = Vec::with_capacity(N);
+    let mut ntok = Vec::with_capacity(N);
+    for i in 0..N {
+        let plen = 1 + (rng.u64() % 4) as usize;
+        prompts.push(MatI8::from_vec(plen, d.e, rng.vec_i8(plen * d.e)));
+        // Victim needs >= 4 tokens so the drop lands mid-stream (it
+        // consumes exactly two before abandoning).
+        ntok.push(if i == 0 { 4 + (rng.u64() % 5) as usize } else { 1 + (rng.u64() % 8) as usize });
+    }
+    let goldens: Vec<Vec<Vec<i8>>> =
+        (0..N).map(|i| golden_generation(&cfg, &prompts[i], ntok[i])).collect();
+
+    let sids: Vec<_> = (0..N).map(|_| server.open_session().unwrap()).collect();
+    let mut streams: Vec<Option<TokenStream>> = (0..N).map(|_| None).collect();
+    let mut got: Vec<Vec<Vec<i8>>> = (0..N).map(|_| Vec::new()).collect();
+
+    let submit = |i: usize| {
+        server
+            .submit_generate(
+                sids[i],
+                prompts[i].clone(),
+                GenerateOptions { max_new_tokens: ntok[i], ..GenerateOptions::default() },
+            )
+            .expect("accepted")
+    };
+    // Staggered waves: each wave submits two more sessions and samples
+    // one token from every live stream, so later sessions join a batch
+    // that is already mid-flight for earlier ones.
+    for wave in 0..2 {
+        for i in (wave * 2)..(wave * 2 + 2) {
+            streams[i] = Some(submit(i));
+        }
+        for i in 0..(wave * 2 + 2) {
+            if got[i].len() < ntok[i] {
+                let stream = streams[i].as_mut().unwrap();
+                let tok = stream.recv().expect("live stream").expect("token");
+                got[i].push(tok.row);
+            }
+        }
+    }
+    // Mid-stream leave: the victim vanishes; its slot must be reusable.
+    drop(streams[0].take());
+    // More sessions than remaining slots: 4 and 5 queue behind the
+    // running batch and are admitted as completions free slots.
+    for i in 4..N {
+        streams[i] = Some(submit(i));
+    }
+    // Drain running sessions first (their completions free the slots
+    // the queued sessions need), then the late joiners.
+    for i in 1..N {
+        let mut stream = streams[i].take().unwrap();
+        while let Some(item) = stream.recv() {
+            got[i].push(item.expect("token").row);
+        }
+        assert_eq!(
+            got[i], goldens[i],
+            "[{label}] session {i} (prompt {} rows, {} tokens) diverged from its solo oracle",
+            prompts[i].rows(),
+            ntok[i]
+        );
+    }
+    // The cancelled victim delivered a bit-exact prefix.
+    assert_eq!(got[0].len(), 2, "[{label}] victim consumed two tokens before leaving");
+    assert_eq!(got[0][..], goldens[0][..2], "[{label}] victim prefix diverged");
+
+    server.shutdown();
+    assert_eq!(server.metrics.streams_completed.get(), (N - 1) as u64, "[{label}]");
+    assert_eq!(server.metrics.requests_cancelled.get(), 1, "[{label}]");
+    // The victim's session survived its cancellation intact.
+    assert!(server.session_len(sids[0]).is_some(), "[{label}] victim session evaporated");
+}
+
+#[test]
+fn router_churn_bit_exact_across_kernel_paths() {
+    for (p, path) in available_kernel_paths().into_iter().enumerate() {
+        set_kernel_path(Some(path));
+        for s in 0..3u64 {
+            run_scenario(
+                0x907e5 ^ ((p as u64) << 32) ^ s,
+                &format!("{} seed {s}", path.name()),
+            );
+        }
+    }
+    set_kernel_path(None);
+}
