@@ -270,6 +270,75 @@ fn main() {
         server.shutdown();
     }
 
+    // ---- paged-KV pressure round (§Paged-KV) -------------------------
+    // Two costs of the block-arena containment path. First the price
+    // of one preemption: a parked session resumes by recompute-prefill
+    // over its whole history (O(S²) once, replacing O(S) steps that
+    // were already streamed), measured at half fill on the compact
+    // shape. Then a serving round on a deliberately oversubscribed
+    // pool: two generations whose joint demand (16 blocks) exceeds a
+    // 10-block pool, so every round pays at least one preempt+restore
+    // cycle end to end; the shape string carries the cumulative
+    // preemption count and the pool peak so the CI bench-smoke leg
+    // tracks the containment path, not just latency.
+    {
+        let fill = 32usize;
+        let hist = x.block_padded(0, 0, fill, dims.e);
+        de.reset();
+        b.bench(&format!("preempt+restore (recompute prefill) @S={fill}"), || {
+            de.release_blocks();
+            de.reserve_for(fill).expect("private arena covers one session");
+            black_box(de.prefill(black_box(&hist)).out.row(fill - 1)[0]);
+        });
+        report.entry(
+            "preempt restore",
+            &format!("S={fill},E=128,P=64,H=2"),
+            b.results().last().unwrap(),
+            None,
+        );
+
+        let sd = ModelDims { s: 16, e: 16, p: 8, h: 2 };
+        let scfg = SystemConfig {
+            accelerator: ItaConfig::tiny(),
+            model: ModelConfig { dims: sd, ffn: 32, layers: 1, seed: 42 },
+            server: ServerConfig {
+                workers: 1,
+                max_batch: 4,
+                stream_buffer: 64,
+                queue_depth: 16,
+                kv_block_size: 4,
+                kv_pool_blocks: 10,
+                ..ServerConfig::default()
+            },
+        };
+        let server = Server::start(scfg);
+        let p1 = gen_input(31, &sd).block_padded(0, 0, 4, sd.e);
+        let p2 = gen_input(32, &sd).block_padded(0, 0, 4, sd.e);
+        println!("\npaged-KV pressure round: 2 generations, 16-block demand, 10-block pool\n");
+        b.bench("paged-KV pressure round @pool=10", || {
+            let s1 = server.open_session().expect("session");
+            let s2 = server.open_session().expect("session");
+            let opts = GenerateOptions { max_new_tokens: 12, ..GenerateOptions::default() };
+            let st1 = server.submit_generate(s1, p1.clone(), opts).expect("accepted");
+            let opts = GenerateOptions { max_new_tokens: 12, ..GenerateOptions::default() };
+            let st2 = server.submit_generate(s2, p2.clone(), opts).expect("accepted");
+            black_box(st1.collect_rows().expect("stream").len());
+            assert!(server.close_session(s1));
+            black_box(st2.collect_rows().expect("stream").len());
+            assert!(server.close_session(s2));
+        });
+        let preempts = server.metrics.preemptions.get();
+        let peak = server.kv_arena().blocks_peak();
+        report.entry(
+            "paged-KV pressure round",
+            &format!("pool=10,bs=4,preempt={preempts},peak={peak}"),
+            b.results().last().unwrap(),
+            None,
+        );
+        println!("  -> {preempts} preemptions over all rounds, pool peak {peak} / 10 blocks\n");
+        server.shutdown();
+    }
+
     match report.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write BENCH_decode.json: {e}"),

@@ -31,36 +31,62 @@ use super::{
 };
 use crate::ita::datapath::TileEngine;
 use crate::ita::{Activity, ItaConfig};
+use crate::util::blocks::{Block, BlockArena, BlockPoolExhausted, DEFAULT_KV_BLOCK};
 use crate::util::mat::{MatI8, MatU8};
 use crate::util::pool::{DisjointSlots, IndexedScope, ScopeFailure, Task, WorkerPool};
 use std::sync::Arc;
 
-/// One head's append-only K/V store with fixed capacity.
+/// One head's append-only K/V store, **paged**: backed by fixed-size
+/// [`Block`]s drawn on demand from a [`BlockArena`] instead of one
+/// worst-case-capacity contiguous reservation.
 ///
-/// K is kept row-major (one row per cached position, the layout Q·Kᵀ
-/// row dots want); V is kept transposed (P rows of S-capacity each, the
-/// layout the A·V row dots want), so a step's reads are all contiguous
-/// slices. [`KvCache::truncate`] rolls the logical length back without
-/// touching storage — the rollback primitive speculative decoding (and
-/// the decode bench) needs.
-#[derive(Debug, Clone)]
+/// Within a block, K is kept row-major (one row per cached position,
+/// the layout Q·Kᵀ row dots want) and V is kept transposed (P rows of
+/// `block_size` each, the layout the A·V row dots want), so a step's
+/// reads are contiguous block-local slices. [`KvCache::truncate`]
+/// rolls the logical length back without touching storage *or*
+/// returning blocks — the rollback primitive speculative decoding
+/// (and the decode bench) needs stays replay-exact and
+/// allocation-free. [`KvCache::release_blocks`] is the serving-layer
+/// primitive that does return everything (close / eviction /
+/// preemption); `Drop` reclaims too, so a dropped session can never
+/// leak pool blocks.
+#[derive(Debug)]
 pub struct KvCache {
-    /// Cached keys: capacity×P row-major; rows `0..len` are valid.
-    k: MatI8,
-    /// Cached values, packed transposed: P×capacity; columns `0..len`
-    /// are valid.
-    vt: MatI8,
+    /// Owned block table: block `b` holds positions
+    /// `b·bs .. (b+1)·bs`. Owning the blocks outright (not refs into
+    /// the arena) is what lets the fused tick's per-session fan-out
+    /// run lock- and unsafe-free.
+    blocks: Vec<Block>,
+    arena: Arc<BlockArena>,
     len: usize,
+    capacity: usize,
 }
 
 impl KvCache {
+    /// Stand-alone cache over a **private** arena sized to exactly
+    /// cover `capacity` — the single-engine construction (tests,
+    /// examples, golden oracles), where exhaustion is impossible by
+    /// construction. Serving paths share one bounded arena via
+    /// [`KvCache::with_arena`] instead.
     pub fn new(capacity: usize, p: usize) -> Self {
-        Self { k: MatI8::zeros(capacity, p), vt: MatI8::zeros(p, capacity), len: 0 }
+        let bs = DEFAULT_KV_BLOCK.min(capacity).max(1);
+        let arena = BlockArena::new(bs, p, capacity.div_ceil(bs));
+        Self::with_arena(arena, capacity)
+    }
+
+    /// Cache drawing its blocks from `arena` (shared or private).
+    /// Nothing is allocated yet — blocks arrive on demand via
+    /// [`KvCache::reserve`] / [`KvCache::push`]. The block-table `Vec`
+    /// is pre-sized so growth to full capacity never reallocates it.
+    pub fn with_arena(arena: Arc<BlockArena>, capacity: usize) -> Self {
+        let table = arena.blocks_for(capacity);
+        Self { blocks: Vec::with_capacity(table), arena, len: 0, capacity }
     }
 
     #[inline]
     pub fn capacity(&self) -> usize {
-        self.k.rows()
+        self.capacity
     }
 
     #[inline]
@@ -73,44 +99,121 @@ impl KvCache {
         self.len == 0
     }
 
+    /// Positions per backing block.
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.arena.block_size()
+    }
+
+    /// The owned block table (block `b` = positions `b·bs..(b+1)·bs`;
+    /// only positions `0..len()` are meaningful).
+    #[inline]
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    /// The arena this cache draws from.
+    #[inline]
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        &self.arena
+    }
+
+    /// Ensure the block table covers `new_len` positions, drawing
+    /// blocks from the arena — the **fallible** path the serving layer
+    /// uses to turn pool exhaustion into deferred admission or
+    /// preemption instead of a panic. On failure the table is left
+    /// trimmed back to what `len` needs (no freshly-drawn block is
+    /// stranded on a cache that could not grow).
+    pub fn reserve(&mut self, new_len: usize) -> Result<(), BlockPoolExhausted> {
+        assert!(new_len <= self.capacity, "reserve beyond cache capacity {}", self.capacity);
+        let bs = self.block_size();
+        while self.blocks.len() * bs < new_len {
+            match self.arena.try_alloc() {
+                Ok(b) => self.blocks.push(b),
+                Err(e) => {
+                    self.trim_to_len();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Return every block beyond what `len` needs (the failed-
+    /// reservation rollback; such blocks hold no live data).
+    fn trim_to_len(&mut self) {
+        while self.blocks.len() > self.arena.blocks_for(self.len) {
+            let b = self.blocks.pop().expect("table longer than len cover");
+            self.arena.reclaim(b);
+        }
+    }
+
     /// Append one (key row, value row) pair. Panics when full — the
-    /// serving layer checks capacity before admitting a step.
+    /// serving layer checks capacity before admitting a step. Draws a
+    /// block if the table doesn't cover the new position; on a
+    /// *shared* arena the serving layer reserves first
+    /// ([`KvCache::reserve`]), making the draw here infallible — the
+    /// `expect` is the backstop for paths that skipped reservation.
     pub fn push(&mut self, k_row: &[i8], v_row: &[i8]) {
-        assert!(self.len < self.capacity(), "KV cache full (capacity {})", self.capacity());
-        assert_eq!(k_row.len(), self.k.cols(), "key row width");
-        assert_eq!(v_row.len(), self.vt.rows(), "value row width");
-        self.k.row_mut(self.len).copy_from_slice(k_row);
+        assert!(self.len < self.capacity, "KV cache full (capacity {})", self.capacity);
+        assert_eq!(k_row.len(), self.arena.p(), "key row width");
+        assert_eq!(v_row.len(), self.arena.p(), "value row width");
+        let bs = self.block_size();
+        if self.len == self.blocks.len() * bs {
+            let b = self.arena.try_alloc().expect("KV block pool exhausted (reserve first)");
+            self.blocks.push(b);
+        }
+        let b = &mut self.blocks[self.len / bs];
+        let slot = self.len % bs;
+        b.k.row_mut(slot).copy_from_slice(k_row);
         for (j, &v) in v_row.iter().enumerate() {
-            self.vt.set(j, self.len, v);
+            b.vt.set(j, slot, v);
         }
         self.len += 1;
     }
 
     /// Roll the logical length back to `len` (≤ current). Storage for
     /// positions `0..len` is untouched, so re-appending reproduces the
-    /// original sequence bit-for-bit.
+    /// original sequence bit-for-bit. Blocks beyond the rollback point
+    /// are **retained** (they stay this session's reserved capacity),
+    /// keeping truncate-and-replay allocation-free and arena-silent.
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.len, "truncate beyond current length");
         self.len = len;
     }
 
-    /// Cached keys as a matrix (only rows `0..len()` are meaningful).
-    #[inline]
-    pub fn k_mat(&self) -> &MatI8 {
-        &self.k
+    /// Return every block to the arena and empty the cache — the
+    /// close/evict/preempt primitive. The cached bytes are gone; a
+    /// preempted session restores them by recompute-prefill.
+    pub fn release_blocks(&mut self) {
+        self.len = 0;
+        for b in self.blocks.drain(..) {
+            self.arena.reclaim(b);
+        }
     }
 
-    /// Cached Vᵀ pack (only columns `0..len()` are meaningful).
-    #[inline]
-    pub fn vt_mat(&self) -> &MatI8 {
-        &self.vt
-    }
-
-    /// One cached key row.
+    /// One cached key row (contiguous: a key row never straddles
+    /// blocks).
     #[inline]
     pub fn k_row(&self, i: usize) -> &[i8] {
         assert!(i < self.len, "key row {i} beyond cache length {}", self.len);
-        self.k.row(i)
+        let bs = self.block_size();
+        self.blocks[i / bs].k.row(i % bs)
+    }
+
+    /// One cached value row, gathered from the transposed pack
+    /// (allocates — a test/debug accessor, not a serving path).
+    pub fn v_col(&self, i: usize) -> Vec<i8> {
+        assert!(i < self.len, "value row {i} beyond cache length {}", self.len);
+        let bs = self.block_size();
+        let b = &self.blocks[i / bs];
+        (0..self.arena.p()).map(|j| b.vt.get(j, i % bs)).collect()
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.release_blocks();
     }
 }
 
@@ -164,7 +267,10 @@ impl DecodeEngine {
     /// Build around an existing shared model (multi-session serving:
     /// every session clones the `Arc`s instead of regenerating and
     /// re-transposing the weights — only the KV caches and scratch are
-    /// per-session).
+    /// per-session). The KV blocks come from a **private** arena sized
+    /// to exactly cover H heads × capacity, so this engine can never
+    /// see pool exhaustion; the memory-pressure serving paths share
+    /// one bounded arena via [`DecodeEngine::from_shared_arena`].
     pub fn from_shared(
         cfg: ItaConfig,
         dims: ModelDims,
@@ -172,9 +278,29 @@ impl DecodeEngine {
         weights_t: Arc<TransposedWeights>,
         requants: RequantConfig,
     ) -> Self {
+        let bs = DEFAULT_KV_BLOCK.min(dims.s).max(1);
+        let arena = BlockArena::new(bs, dims.p, dims.h * dims.s.div_ceil(bs));
+        Self::from_shared_arena(cfg, dims, weights, weights_t, requants, arena)
+    }
+
+    /// [`DecodeEngine::from_shared`] drawing KV blocks from a caller-
+    /// provided (typically process-shared, bounded) [`BlockArena`] —
+    /// the paged-serving construction. The caller owns the exhaustion
+    /// story: reserve before stepping ([`DecodeEngine::reserve_for`])
+    /// and release on close/evict/preempt
+    /// ([`DecodeEngine::release_blocks`], also run by drop).
+    pub fn from_shared_arena(
+        cfg: ItaConfig,
+        dims: ModelDims,
+        weights: Arc<AttentionWeights>,
+        weights_t: Arc<TransposedWeights>,
+        requants: RequantConfig,
+        arena: Arc<BlockArena>,
+    ) -> Self {
         assert!(dims.h >= 1, "at least one head");
         assert_eq!(weights.heads.len(), dims.h, "weights/dims head count");
         assert_eq!(weights_t.heads.len(), dims.h, "transposed weights/dims head count");
+        assert_eq!(arena.p(), dims.p, "arena block width must match the projection width");
         Self {
             engine: TileEngine::new(cfg),
             weights,
@@ -182,7 +308,7 @@ impl DecodeEngine {
             requants,
             dims,
             fail_tag: 0,
-            caches: (0..dims.h).map(|_| KvCache::new(dims.s, dims.p)).collect(),
+            caches: (0..dims.h).map(|_| KvCache::with_arena(arena.clone(), dims.s)).collect(),
             q_row: vec![0; dims.p],
             k_row: vec![0; dims.p],
             v_row: vec![0; dims.p],
@@ -226,8 +352,46 @@ impl DecodeEngine {
     }
 
     /// Empty all caches; the engine is ready for a fresh prefill.
+    /// Blocks stay reserved ([`KvCache::truncate`] semantics) — use
+    /// [`DecodeEngine::release_blocks`] to also return them.
     pub fn reset(&mut self) {
         self.truncate(0);
+    }
+
+    /// The arena every head's cache draws from.
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        self.caches[0].arena()
+    }
+
+    /// Fallibly ensure every head's block table covers `new_len`
+    /// positions — the serving layer's pre-step/pre-prefill gate that
+    /// turns pool exhaustion into a recoverable
+    /// [`BlockPoolExhausted`]. On failure, blocks already drawn for
+    /// this reservation are returned (per-cache trim), so a failed
+    /// reservation strands nothing.
+    pub fn reserve_for(&mut self, new_len: usize) -> Result<(), BlockPoolExhausted> {
+        for i in 0..self.caches.len() {
+            if let Err(e) = self.caches[i].reserve(new_len) {
+                // Roll the earlier heads' fresh draws back too — a
+                // failed reservation must not shrink the pool for the
+                // sessions that could still make progress.
+                for c in &mut self.caches[..i] {
+                    c.trim_to_len();
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Return every head's blocks to the arena and empty the caches —
+    /// close, eviction, and **preemption** all funnel here. The engine
+    /// stays usable: a later recompute-prefill restores the cache
+    /// bytes bit-identically.
+    pub fn release_blocks(&mut self) {
+        for c in &mut self.caches {
+            c.release_blocks();
+        }
     }
 
     /// Prompt phase: run the full causal path over `x` (S₀×E, S₀ ≤
@@ -416,9 +580,9 @@ fn attend_tail(
     concat_slot: &mut [i8],
 ) {
     cache.push(k_row, v_row);
-    engine.logits_row_cached(q_row, cache.k_mat(), cache.len(), rq.qk, logits);
+    engine.logits_row_paged(q_row, cache.blocks(), cache.block_size(), cache.len(), rq.qk, logits);
     engine.softmax_row(logits, attn_row);
-    engine.av_row_cached(attn_row, cache.vt_mat(), &hw.bav, rq.av, concat_slot);
+    engine.av_row_paged(attn_row, cache.blocks(), cache.block_size(), &hw.bav, rq.av, concat_slot);
 }
 
 /// Result of one [`fused_prefill`] pass.
@@ -742,6 +906,20 @@ impl FusedStepBatch {
             assert_eq!(row.len(), dims.e, "token row width (session {i})");
         }
 
+        // ---- Block reservation: fallible, serial, before compute ----
+        // Every session's next position is reserved on the (possibly
+        // shared, bounded) arena *up front*, so pool exhaustion is a
+        // per-session report instead of a mid-tail panic. Serial in
+        // index order: deterministic victims, no free-list races. The
+        // fault-free case pushes nothing (an empty Vec never
+        // allocates), preserving the tick's zero-allocation contract.
+        let mut exhausted: Vec<usize> = Vec::new();
+        for (i, e) in engines.iter_mut().enumerate() {
+            if e.reserve_for(e.len() + 1).is_err() {
+                exhausted.push(i);
+            }
+        }
+
         // Scratch sizing: allocates only while n / dims still grow —
         // a steady-state tick reuses everything below.
         self.x_all.reset_for_overwrite(n, dims.e);
@@ -816,8 +994,17 @@ impl FusedStepBatch {
         let failure: Option<ScopeFailure> = {
             let qkv = &self.qkv[..dims.h];
             let engs = DisjointSlots::new(engines);
+            let exhausted = &exhausted;
             WorkerPool::global()
                 .try_run_indexed(&self.scope, n, &|i| {
+                    // An exhausted session's tail is skipped outright:
+                    // its caches are untouched, its token row stays
+                    // unconsumed (the router re-ticks it after
+                    // preemption frees blocks), and its out_row slot
+                    // holds garbage nobody reads.
+                    if exhausted.binary_search(&i).is_ok() {
+                        return;
+                    }
                     // SAFETY: one executor per session index.
                     let eng = unsafe { engs.slot(i) };
                     eng.engine.reset_activity();
@@ -852,7 +1039,7 @@ impl FusedStepBatch {
         for (i, eng) in engines.iter_mut().enumerate() {
             eng.engine.activity.add(&self.per_seq[i]);
         }
-        TickReport { poisoned: failure.map(|f| f.indices).unwrap_or_default() }
+        TickReport { poisoned: failure.map(|f| f.indices).unwrap_or_default(), exhausted }
     }
 
     /// Session `i`'s output row (length E) of the most recent tick.
@@ -876,9 +1063,9 @@ impl Default for FusedStepBatch {
 }
 
 /// Fault report of one [`FusedStepBatch::tick`]. The fault-free case
-/// carries an empty (never-allocated) `Vec`, preserving the tick's
+/// carries empty (never-allocated) `Vec`s, preserving the tick's
 /// zero-allocation contract.
-#[must_use = "a tick may have poisoned sessions; check ok() / poisoned"]
+#[must_use = "a tick may have poisoned/exhausted sessions; check ok()"]
 #[derive(Debug, Default)]
 pub struct TickReport {
     /// Batch indices whose stage-2 attend tail panicked. Those
@@ -888,12 +1075,19 @@ pub struct TickReport {
     /// the engines. All other indices are untouched by the failure and
     /// bit-identical to a fault-free tick.
     pub poisoned: Vec<usize>,
+    /// Batch indices whose pre-tick block reservation hit
+    /// [`BlockPoolExhausted`] (sorted — built in index order). Unlike
+    /// poisoning this is **recoverable**: the session's caches are
+    /// untouched, its token row was not consumed, and its engine stays
+    /// healthy — the caller frees memory (preemption) and re-ticks it.
+    /// Its `out_row` slot holds garbage for this tick only.
+    pub exhausted: Vec<usize>,
 }
 
 impl TickReport {
     /// True when every session in the tick completed.
     pub fn ok(&self) -> bool {
-        self.poisoned.is_empty()
+        self.poisoned.is_empty() && self.exhausted.is_empty()
     }
 }
 
@@ -915,7 +1109,12 @@ pub struct FusedStepResult {
 pub fn fused_step(engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) -> FusedStepResult {
     let mut batch = FusedStepBatch::new();
     let report = batch.tick(engines, rows);
-    assert!(report.ok(), "fused_step tick poisoned sessions {:?}", report.poisoned);
+    assert!(
+        report.ok(),
+        "fused_step tick faulted (poisoned {:?}, exhausted {:?})",
+        report.poisoned,
+        report.exhausted
+    );
     FusedStepResult {
         outputs: (0..rows.len()).map(|i| batch.out_row(i).to_vec()).collect(),
         shared: batch.shared,
@@ -941,9 +1140,32 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c.k_row(0), &[1, 2, 3]);
         assert_eq!(c.k_row(1), &[7, 8, 9]);
-        // Vᵀ pack: column i holds value row i.
-        assert_eq!(c.vt_mat().get(0, 0), 4);
-        assert_eq!(c.vt_mat().get(2, 1), 12);
+        // Vᵀ pack: block column i holds value row i.
+        assert_eq!(c.v_col(0), vec![4, 5, 6]);
+        assert_eq!(c.v_col(1), vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn kv_cache_pages_across_block_boundaries() {
+        // A tiny shared arena (block_size 2) forces the table to span
+        // blocks; rows and value columns must read back exactly across
+        // the boundary, and blocks must flow through the arena.
+        let arena = BlockArena::new(2, 3, 4);
+        let mut c = KvCache::with_arena(arena.clone(), 5);
+        assert_eq!(c.block_size(), 2);
+        for i in 0..5i8 {
+            c.push(&[i, i + 10, i + 20], &[i + 30, i + 40, i + 50]);
+        }
+        assert_eq!(c.blocks().len(), 3, "5 positions at block_size 2 -> 3 blocks");
+        assert_eq!(arena.blocks_in_use(), 3);
+        for i in 0..5i8 {
+            assert_eq!(c.k_row(i as usize), &[i, i + 10, i + 20], "key row {i}");
+            assert_eq!(c.v_col(i as usize), vec![i + 30, i + 40, i + 50], "value row {i}");
+        }
+        c.release_blocks();
+        assert!(c.is_empty());
+        assert_eq!(arena.blocks_in_use(), 0, "release returns every block");
+        assert_eq!(arena.blocks_free(), 4);
     }
 
     #[test]
@@ -957,6 +1179,47 @@ mod tests {
         c.push(&[9, 9], &[9, 9]); // overwrites position 1
         assert_eq!(c.len(), 2);
         assert_eq!(c.k_row(1), &[9, 9]);
+    }
+
+    #[test]
+    fn kv_cache_truncate_keeps_blocks_reserved() {
+        // Truncate is arena-silent: the rolled-back blocks stay this
+        // cache's reserved capacity (replay never touches the pool).
+        let arena = BlockArena::new(2, 2, 3);
+        let mut c = KvCache::with_arena(arena.clone(), 6);
+        for i in 0..5i8 {
+            c.push(&[i, i], &[i, i]);
+        }
+        assert_eq!(arena.blocks_in_use(), 3);
+        c.truncate(1);
+        assert_eq!(arena.blocks_in_use(), 3, "truncate returns nothing");
+        for i in 0..4i8 {
+            c.push(&[9 + i, 9], &[9, 9 + i]);
+        }
+        assert_eq!(arena.blocks_in_use(), 3, "replay re-used the retained blocks");
+        assert_eq!(c.k_row(0), &[0, 0]);
+        assert_eq!(c.k_row(2), &[10, 9]);
+    }
+
+    #[test]
+    fn kv_cache_reserve_failure_rolls_back_and_recovers() {
+        // Two caches on a 3-block arena (block_size 2): the second
+        // cache's over-reserve fails WITHOUT stranding the blocks it
+        // drew, and succeeds once the first cache releases.
+        let arena = BlockArena::new(2, 2, 3);
+        let mut a = KvCache::with_arena(arena.clone(), 6);
+        let mut b = KvCache::with_arena(arena.clone(), 6);
+        a.reserve(4).unwrap(); // 2 blocks
+        let err = b.reserve(4).unwrap_err(); // needs 2, only 1 free
+        assert_eq!(err.total_blocks, 3);
+        assert_eq!(arena.blocks_in_use(), 2, "failed reserve returned its draw");
+        b.reserve(2).unwrap(); // 1 block still fits
+        assert_eq!(arena.blocks_in_use(), 3);
+        a.release_blocks();
+        b.reserve(6).unwrap();
+        assert_eq!(arena.blocks_in_use(), 3);
+        drop(b);
+        assert_eq!(arena.blocks_free(), 3, "drop reclaims (no leaks)");
     }
 
     #[test]
@@ -1306,6 +1569,68 @@ mod tests {
                 assert_eq!(fused[i].len(), indep[i].len(), "tick {t} session {i} fill");
             }
         }
+    }
+
+    #[test]
+    fn tick_reports_exhaustion_and_recovers_after_release() {
+        // Two sessions on one deliberately tiny shared arena: when the
+        // pool runs dry mid-generation the tick reports the starved
+        // session as `exhausted` (no panic, caches untouched, row
+        // unconsumed); after the other session releases its blocks
+        // (preemption, at the serving layer), re-ticking the SAME row
+        // completes and stays bit-identical to an untouched solo run.
+        let d = dims();
+        let packed = PackedWeights::shared(d, 71);
+        // Block size 4: an 8-row prefill fills 2 blocks/head exactly
+        // (no slack) and a 5-row prefill takes 2 blocks/head with
+        // slack; 2 heads -> 8 blocks, and the pool holds exactly 8.
+        let arena = BlockArena::new(4, d.p, 8);
+        let mk = |arena: &Arc<BlockArena>| {
+            DecodeEngine::from_shared_arena(
+                ItaConfig::tiny(),
+                d,
+                packed.weights.clone(),
+                packed.weights_t.clone(),
+                packed.requants,
+                arena.clone(),
+            )
+        };
+        let mut a = mk(&arena);
+        let mut b = mk(&arena);
+        let x = gen_input(72, &d);
+        a.prefill(&x.block_padded(0, 0, 8, d.e));
+        b.prefill(&x.block_padded(0, 0, 5, d.e));
+        assert_eq!(arena.blocks_free(), 0);
+
+        // Session b's step (5 -> 6) fits its reserved slack; session
+        // a's step (8 -> 9) needs a fresh block per head — pool dry.
+        let mut batch = FusedStepBatch::new();
+        let rows = [x.row(8), x.row(5)];
+        let report = {
+            let mut refs: Vec<&mut DecodeEngine> = vec![&mut a, &mut b];
+            batch.tick(&mut refs, &rows)
+        };
+        assert_eq!(report.exhausted, vec![0], "session a starved");
+        assert!(report.poisoned.is_empty());
+        assert_eq!(a.len(), 8, "starved session's caches untouched");
+        assert_eq!(b.len(), 6, "survivor advanced normally");
+
+        // Survivor output is bit-identical to a fault-free solo step.
+        let mut solo_b = DecodeEngine::new(ItaConfig::tiny(), d, 71);
+        solo_b.prefill(&x.block_padded(0, 0, 5, d.e));
+        assert_eq!(batch.out_row(1), &solo_b.step(x.row(5))[..]);
+
+        // Preempt b (the serving layer's move): its blocks return and
+        // the SAME unconsumed row of a now completes, bit-identical.
+        b.release_blocks();
+        let report = {
+            let mut refs: Vec<&mut DecodeEngine> = vec![&mut a];
+            batch.tick(&mut refs, &rows[..1])
+        };
+        assert!(report.ok(), "{report:?}");
+        let mut solo_a = DecodeEngine::new(ItaConfig::tiny(), d, 71);
+        solo_a.prefill(&x.block_padded(0, 0, 8, d.e));
+        assert_eq!(batch.out_row(0), &solo_a.step(x.row(8))[..], "retried step bit-exact");
     }
 
     #[test]

@@ -89,6 +89,19 @@ pub struct ServerConfig {
     /// only that session (backpressure) until the caller drains it;
     /// other sessions keep ticking. Clamped to >= 1.
     pub stream_buffer: usize,
+    /// Paged KV-cache block size (cached positions per block). 0 picks
+    /// the library default ([`crate::util::blocks::DEFAULT_KV_BLOCK`],
+    /// clamped to the model's S).
+    pub kv_block_size: usize,
+    /// Total blocks in the server's shared KV pool. 0 auto-sizes the
+    /// pool generously (worst-case blocks for `max_batch + queue_depth`
+    /// concurrent sessions — exhaustion-free unless deliberately
+    /// oversubscribed). An explicit value bounds KV memory and arms the
+    /// containment path: admission defers on low memory and mid-
+    /// generation exhaustion preempts (and later restores) the
+    /// youngest session. Must cover at least one worst-case session
+    /// (H · ceil(S / block_size)) so a lone generation always fits.
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for ServerConfig {
@@ -103,6 +116,8 @@ impl Default for ServerConfig {
             waiting_served_pct: 120,
             max_waiting_ticks: 4,
             stream_buffer: 32,
+            kv_block_size: 0,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -245,6 +260,13 @@ impl SystemConfig {
                 def.server.max_waiting_ticks as usize,
             )? as u64,
             stream_buffer: get_usize(&doc, "server", "stream_buffer", def.server.stream_buffer)?,
+            kv_block_size: get_usize(&doc, "server", "kv_block_size", def.server.kv_block_size)?,
+            kv_pool_blocks: get_usize(
+                &doc,
+                "server",
+                "kv_pool_blocks",
+                def.server.kv_pool_blocks,
+            )?,
         };
 
         let cfg = Self { accelerator: acc, model, server };
@@ -255,6 +277,36 @@ impl SystemConfig {
     /// Load from a file path.
     pub fn from_file(path: &str) -> Result<Self, ConfigError> {
         Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Effective paged-KV block size for this model: the configured
+    /// `[server] kv_block_size`, or the library default clamped to S.
+    pub fn kv_block_size(&self) -> usize {
+        match self.server.kv_block_size {
+            0 => crate::util::blocks::DEFAULT_KV_BLOCK.min(self.model.dims.s).max(1),
+            bs => bs,
+        }
+    }
+
+    /// Worst-case blocks one session can hold: H heads × ceil(S / bs)
+    /// — the admission/progress unit of the paged-KV reservation math.
+    pub fn kv_blocks_per_session(&self) -> usize {
+        self.model.dims.h * self.model.dims.s.div_ceil(self.kv_block_size())
+    }
+
+    /// Effective shared KV pool size in blocks: the configured
+    /// `[server] kv_pool_blocks`, or (at 0) a generous auto-size —
+    /// worst-case blocks for every admissible session plus every
+    /// queueable request, so default deployments never see exhaustion
+    /// and oversubscription is always an explicit choice.
+    pub fn kv_pool_blocks(&self) -> usize {
+        match self.server.kv_pool_blocks {
+            0 => {
+                (self.server.max_batch + self.server.queue_depth).max(1)
+                    * self.kv_blocks_per_session()
+            }
+            n => n,
+        }
     }
 
     /// Design-rule checks (the constraints §III/§V-A state).
@@ -287,6 +339,22 @@ impl SystemConfig {
         }
         if self.server.workers == 0 || self.server.max_batch == 0 {
             return Err(ConfigError::Invalid("server workers/max_batch must be positive".into()));
+        }
+        // The paged-KV progress guarantee: one worst-case session must
+        // always fit the pool, or a preempted generation could never
+        // restore and the router would live-lock on memory.
+        if self.server.kv_pool_blocks != 0
+            && self.server.kv_pool_blocks < self.kv_blocks_per_session()
+        {
+            return Err(ConfigError::Invalid(format!(
+                "kv_pool_blocks = {} cannot hold one worst-case session ({} blocks: {} heads x \
+                 ceil({} / {}))",
+                self.server.kv_pool_blocks,
+                self.kv_blocks_per_session(),
+                self.model.dims.h,
+                self.model.dims.s,
+                self.kv_block_size()
+            )));
         }
         Ok(())
     }
@@ -350,6 +418,41 @@ mod tests {
         assert_eq!(cfg.server.waiting_served_pct, 0);
         assert_eq!(cfg.server.max_waiting_ticks, 1);
         assert_eq!(cfg.server.stream_buffer, 4);
+    }
+
+    #[test]
+    fn parse_paged_kv_knobs_and_derived_sizing() {
+        let cfg = SystemConfig::from_toml(
+            "[model]\ns = 40\nheads = 2\n[server]\nkv_block_size = 16\nkv_pool_blocks = 12\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.kv_block_size, 16);
+        assert_eq!(cfg.server.kv_pool_blocks, 12);
+        assert_eq!(cfg.kv_block_size(), 16);
+        // ceil(40/16) = 3 blocks per head, 2 heads.
+        assert_eq!(cfg.kv_blocks_per_session(), 6);
+        assert_eq!(cfg.kv_pool_blocks(), 12);
+
+        // Defaults: library block size clamped to S, generous pool.
+        let def = SystemConfig::default();
+        assert_eq!(def.server.kv_block_size, 0);
+        assert_eq!(def.server.kv_pool_blocks, 0);
+        assert_eq!(def.kv_block_size(), crate::util::blocks::DEFAULT_KV_BLOCK);
+        assert_eq!(
+            def.kv_pool_blocks(),
+            (def.server.max_batch + def.server.queue_depth) * def.kv_blocks_per_session()
+        );
+    }
+
+    #[test]
+    fn rejects_pool_smaller_than_one_session() {
+        // 2 heads x ceil(16/16) = 2 blocks minimum; 1 cannot hold a
+        // worst-case session -> the restore path could live-lock.
+        let err = SystemConfig::from_toml(
+            "[model]\ns = 16\nheads = 2\n[server]\nkv_pool_blocks = 1\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("worst-case session"), "{err}");
     }
 
     #[test]

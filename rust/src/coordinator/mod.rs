@@ -27,4 +27,4 @@ pub use request::{
     InferenceResponse, InferenceResult, SessionId, SubmitError, SubmitOptions, TokenItem,
     TokenResult, TokenStream,
 };
-pub use server::Server;
+pub use server::{Server, KV_ARENA_FAIL_TAG};

@@ -20,6 +20,7 @@ use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
 use crate::metrics::ServerMetrics;
+use crate::util::blocks::BlockArena;
 use crate::util::failpoint;
 use crate::util::mat::MatI8;
 use crate::util::oneshot;
@@ -40,6 +41,12 @@ use std::time::{Duration, Instant};
 /// [`SubmitError`]s instead of bare channel disconnects.
 type Job = (InferenceRequest, oneshot::Sender<InferenceResult>);
 type DecodeJob = (DecodeRequest, oneshot::Sender<DecodeResult>);
+
+/// `fail_tag` of the server's shared KV block arena. Chaos tests aim
+/// the `kv.block.alloc` failpoint at this ctx to starve the *serving*
+/// pool; golden-oracle engines' private arenas carry tag 0 and are
+/// never hit.
+pub const KV_ARENA_FAIL_TAG: u64 = 1;
 
 /// One queued work item: the dynamic batcher forms mixed batches of
 /// one-shot inferences and decode-session operations (they share the
@@ -112,6 +119,11 @@ pub struct Server {
     /// caches / engine scratch, never a weight regeneration +
     /// re-transpose.
     model: Arc<PackedWeights>,
+    /// The bounded paged-KV block pool every decode session's caches
+    /// draw from (§Paged-KV): admission and per-tick cache growth are
+    /// gated on its free count, so memory pressure surfaces as
+    /// deferral/preemption instead of allocation failure.
+    arena: Arc<BlockArena>,
     pub metrics: Arc<ServerMetrics>,
     pub config: SystemConfig,
     shutdown: Arc<AtomicBool>,
@@ -126,6 +138,29 @@ impl Server {
         let (router_tx, router_rx) = sync_channel::<GenerateJob>(config.server.queue_depth);
         let shutdown = Arc::new(AtomicBool::new(false));
         let sessions: Arc<SessionTable> = Arc::new(Mutex::new(HashMap::new()));
+
+        // One bounded block pool backs every session's KV cache. The
+        // auto-sized pool is generous (config.kv_pool_blocks covers the
+        // whole admission window at worst-case length); an explicit
+        // pool is clamped so it always holds at least one worst-case
+        // session (progress guarantee — config::validate rejects
+        // smaller values up front). `ITA_KV_TINY_POOL=1` shrinks an
+        // AUTO-sized pool to that floor plus one head's slack, so the
+        // CI memory-pressure leg runs the normal suites starved —
+        // explicitly configured pools are always respected (tests that
+        // pin a pool size stay deterministic under the leg).
+        let tiny_pool = std::env::var("ITA_KV_TINY_POOL").is_ok_and(|v| v == "1");
+        let pool_blocks = if tiny_pool && config.server.kv_pool_blocks == 0 {
+            config.kv_blocks_per_session() + config.model.dims.h
+        } else {
+            config.kv_pool_blocks().max(config.kv_blocks_per_session())
+        };
+        let arena = BlockArena::with_fail_tag(
+            config.kv_block_size(),
+            config.model.dims.p,
+            pool_blocks,
+            KV_ARENA_FAIL_TAG,
+        );
 
         // Dispatcher -> workers channel sized to keep workers busy
         // without unbounded buildup.
@@ -149,7 +184,13 @@ impl Server {
                 metrics.clone(),
             ));
         }
-        threads.push(spawn_router(config, router_rx, sessions.clone(), metrics.clone()));
+        threads.push(spawn_router(
+            config,
+            router_rx,
+            sessions.clone(),
+            metrics.clone(),
+            arena.clone(),
+        ));
 
         let model = PackedWeights::shared(config.model.dims, config.model.seed);
         Arc::new(Server {
@@ -159,6 +200,7 @@ impl Server {
             next_session: AtomicU64::new(1),
             sessions,
             model,
+            arena,
             metrics,
             config,
             shutdown,
@@ -252,12 +294,13 @@ impl Server {
         if self.shutdown.load(Ordering::Acquire) {
             return Err(SubmitError::Shutdown);
         }
-        let engine = DecodeEngine::from_shared(
+        let engine = DecodeEngine::from_shared_arena(
             self.config.accelerator,
             self.config.model.dims,
             self.model.weights.clone(),
             self.model.weights_t.clone(),
             self.model.requants,
+            self.arena.clone(),
         );
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
         lock_table(&self.sessions).insert(
@@ -293,6 +336,13 @@ impl Server {
     /// request), or `None` for unknown sessions.
     pub fn session_len(&self, id: SessionId) -> Option<usize> {
         lock_table(&self.sessions).get(&id).map(|s| s.seq_len)
+    }
+
+    /// The shared paged-KV block arena (occupancy inspection: leak
+    /// checks assert `blocks_in_use()` returns to zero once every
+    /// session is closed).
+    pub fn kv_arena(&self) -> &Arc<BlockArena> {
+        &self.arena
     }
 
     /// Evict idle (not busy) sessions older than the configured TTL
@@ -604,6 +654,15 @@ struct RunningGen<'a> {
     emitted: usize,
     max_new_tokens: usize,
     enqueued: Instant,
+    /// Every input row this generation has consumed, flat (`dims.e`
+    /// columns): the prompt, then each feedback row as its tick lands.
+    /// Preemption's recompute-restore prefills exactly this matrix, so
+    /// the rebuilt KV cache is bit-identical to the evicted one.
+    history: Vec<i8>,
+    /// Preempted: KV blocks released under memory pressure. The
+    /// session sits out ticks (its stream stalls, never errors) until
+    /// the restore pass wins its blocks back.
+    parked: bool,
 }
 
 fn spawn_router(
@@ -611,10 +670,11 @@ fn spawn_router(
     rx: Receiver<GenerateJob>,
     sessions: Arc<SessionTable>,
     metrics: Arc<ServerMetrics>,
+    arena: Arc<BlockArena>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("ita-router".into())
-        .spawn(move || run_router(&config, rx, &sessions, &metrics))
+        .spawn(move || run_router(&config, rx, &sessions, &metrics, &arena))
         .expect("spawn router")
 }
 
@@ -638,11 +698,23 @@ fn spawn_router(
 /// survivors bit-exact), a shared-stage panic quarantines the active
 /// set, and every engine is under a [`BusyGuard`] so even a router
 /// panic cannot leak a permanently-busy slot.
+/// Memory pressure (§Paged-KV) threads through three points of the
+/// loop: a **restore pass** re-prefills preempted sessions as blocks
+/// free up (oldest first — recompute-restore is bit-exact, so the
+/// caller only ever observes a stall), **admission** reserves each
+/// prompt's blocks fallibly and defers the job (front of the waiting
+/// queue, busy flag held) when the pool cannot cover it, and a tick's
+/// [`TickReport::exhausted`](crate::attention::decode::TickReport)
+/// verdict preempts the youngest unfinished generation — its blocks
+/// are released so the starved sessions' reservations succeed on the
+/// next tick. The exhausted session's own input row was not consumed
+/// and simply retries; nothing panics and no block leaks.
 fn run_router(
     config: &SystemConfig,
     rx: Receiver<GenerateJob>,
     sessions: &SessionTable,
     metrics: &ServerMetrics,
+    arena: &Arc<BlockArena>,
 ) {
     let ratio_pct = config.server.waiting_served_pct;
     let max_waiting_ticks = config.server.max_waiting_ticks.max(1);
@@ -702,6 +774,50 @@ fn run_router(
             true
         });
 
+        // ---- Restore preempted sessions (oldest first) ---------------
+        // A parked generation's engine is empty (blocks released at
+        // preemption) but its full input history rode along: reserve
+        // fallibly, then recompute-prefill the history — bit-identical
+        // cache bytes (decode-parity invariant), outputs discarded
+        // (already streamed). Still-starved sessions just stay parked;
+        // a restore that panics poisons only its own session.
+        let mut i = 0;
+        while i < running.len() {
+            if !running[i].parked {
+                i += 1;
+                continue;
+            }
+            let e_cols = config.model.dims.e;
+            let rows = running[i].history.len() / e_cols;
+            if running[i].engine.reserve_for(rows).is_err() {
+                i += 1;
+                continue; // pool still tight: stay parked
+            }
+            let g = &mut running[i];
+            let restored = catch_unwind(AssertUnwindSafe(|| {
+                g.engine.engine.reset_activity();
+                let hist = MatI8::from_vec(rows, e_cols, g.history.clone());
+                let _ = g.engine.prefill(&hist);
+            }));
+            match restored {
+                Ok(()) => {
+                    let activity = g.engine.engine.activity;
+                    let energy =
+                        EnergyBreakdown::for_activity(&config.accelerator, &activity).total();
+                    metrics.sim_cycles.add(activity.cycles + activity.stall_cycles);
+                    metrics.sim_energy_pj.add((energy * 1e12) as u64);
+                    metrics.restores.inc();
+                    g.parked = false;
+                    i += 1;
+                }
+                Err(_) => {
+                    let g = running.remove(i);
+                    let _ = g.tx.try_send(Err(SubmitError::SessionPoisoned));
+                    g.guard.poison();
+                }
+            }
+        }
+
         // ---- Admission (waiting/served-ratio policy) ------------------
         // Admit when the batch is empty (nothing to pause), when the
         // waiting queue is large relative to the running batch (the
@@ -716,9 +832,16 @@ fn run_router(
         if due {
             let n = waiting.len().min(slots);
             let admitted: Vec<GenerateJob> = waiting.drain(..n).collect();
-            let newly = admit_generations(config, admitted, sessions, metrics);
+            let (newly, deferred) = admit_generations(config, admitted, sessions, metrics);
             metrics.router_admissions.add(newly.len() as u64);
             running.extend(newly);
+            // Jobs the pool could not cover go back to the FRONT of
+            // the waiting queue in order (busy flag still held): they
+            // re-try as completions and closes free blocks, and the
+            // deadline shed above still bounds their wait.
+            for job in deferred.into_iter().rev() {
+                waiting.push_front(job);
+            }
             ticks_since_admission = 0;
         }
 
@@ -757,13 +880,14 @@ fn run_router(
         metrics.running_sessions.set(running.len() as u64);
 
         // ---- One fused tick over the active set -----------------------
-        // Paused sessions (full stream buffer) and finished-awaiting-
-        // delivery sessions sit this tick out; everyone else stacks
-        // into one row-GEMM per projection weight.
+        // Paused sessions (full stream buffer), parked (preempted)
+        // sessions, and finished-awaiting-delivery sessions sit this
+        // tick out; everyone else stacks into one row-GEMM per
+        // projection weight.
         let active: Vec<usize> = running
             .iter()
             .enumerate()
-            .filter(|(_, g)| g.pending.is_none() && g.emitted < g.max_new_tokens)
+            .filter(|(_, g)| g.pending.is_none() && !g.parked && g.emitted < g.max_new_tokens)
             .map(|(i, _)| i)
             .collect();
         if active.is_empty() {
@@ -794,7 +918,7 @@ fn run_router(
             let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(active.len());
             let mut rows: Vec<&[i8]> = Vec::with_capacity(active.len());
             for g in running.iter_mut() {
-                if g.pending.is_none() && g.emitted < g.max_new_tokens {
+                if g.pending.is_none() && !g.parked && g.emitted < g.max_new_tokens {
                     let RunningGen { engine, next, .. } = g;
                     engines.push(&mut **engine);
                     rows.push(&next[..]);
@@ -804,7 +928,7 @@ fn run_router(
         }));
         match tick_result {
             Ok(report) => {
-                let n_live = active.len() - report.poisoned.len();
+                let n_live = active.len() - report.poisoned.len() - report.exhausted.len();
                 let shared_energy =
                     EnergyBreakdown::for_activity(&config.accelerator, batch.shared()).total();
                 let share = if n_live > 0 { shared_energy / n_live as f64 } else { 0.0 };
@@ -817,7 +941,18 @@ fn run_router(
                         g.guard.poison();
                         continue;
                     }
+                    if report.exhausted.binary_search(&k).is_ok() {
+                        // Pool exhaustion is recoverable, not a fault:
+                        // this session's caches are untouched and its
+                        // input row was never consumed (`g.next` stays
+                        // valid) — it retries once the preemption
+                        // below frees blocks.
+                        continue;
+                    }
                     let g = &mut running[ri];
+                    // The row this tick consumed joins the recompute-
+                    // restore history before the output replaces it.
+                    g.history.extend_from_slice(&g.next);
                     let activity = g.engine.engine.activity;
                     let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity)
                         .total()
@@ -846,6 +981,26 @@ fn run_router(
                         Err(_) => {} // receiver gone: reaped next pass
                     }
                 }
+                if !report.exhausted.is_empty() {
+                    // Memory-pressure preemption: park ONE victim —
+                    // the youngest unfinished generation (FCFS: older
+                    // admissions keep their progress; the youngest
+                    // recomputes the least). Its blocks return to the
+                    // pool so the starved sessions' reservations
+                    // succeed next tick; the victim restores later,
+                    // bit-exactly, via the recompute pass above. The
+                    // victim may be an exhausted session itself — then
+                    // parking it IS the resolution.
+                    if let Some(victim) = running
+                        .iter_mut()
+                        .rev()
+                        .find(|g| !g.parked && g.emitted < g.max_new_tokens)
+                    {
+                        victim.engine.release_blocks();
+                        victim.parked = true;
+                        metrics.preemptions.inc();
+                    }
+                }
             }
             Err(_) => {
                 for &ri in active.iter().rev() {
@@ -862,6 +1017,8 @@ fn run_router(
         }
         ticks_since_admission += 1;
         metrics.running_sessions.set(running.len() as u64);
+        metrics.kv_blocks_in_use.set(arena.blocks_in_use() as u64);
+        metrics.kv_blocks_peak.set(arena.blocks_peak() as u64);
     }
 }
 
@@ -870,15 +1027,19 @@ fn run_router(
 /// take), then prefill — FUSED when the burst has >= 2 members (one
 /// projection GEMM per weight matrix, §Prefill-batching), plain
 /// otherwise. Returns the generations that made it into the running
-/// set; failures answer on their streams and never join.
+/// set plus the jobs **deferred on memory** (the block pool could not
+/// cover their prompt — their engines went straight back into the
+/// table with the busy flag still held, and the caller requeues them);
+/// failures answer on their streams and never join.
 fn admit_generations<'a>(
     config: &SystemConfig,
     jobs: Vec<GenerateJob>,
     sessions: &'a SessionTable,
     metrics: &'a ServerMetrics,
-) -> Vec<RunningGen<'a>> {
+) -> (Vec<RunningGen<'a>>, Vec<GenerateJob>) {
     let mut taken: Vec<(GenerateJob, Box<DecodeEngine>, BusyGuard<'a>)> =
         Vec::with_capacity(jobs.len());
+    let mut deferred: Vec<GenerateJob> = Vec::new();
     {
         let mut table = lock_table(sessions);
         for job in jobs {
@@ -888,6 +1049,21 @@ fn admit_generations<'a>(
                 }
                 Some(slot) => match slot.engine.take() {
                     Some(mut engine) => {
+                        // Memory gate (§Paged-KV): reserve the whole
+                        // prompt's blocks FALLIBLY before committing,
+                        // so an admitted prefill can never hit the
+                        // infallible in-push allocation. A job the
+                        // pool cannot cover is deferred — engine back
+                        // in the slot untouched (the failed reserve
+                        // rolled its draws back), busy flag still
+                        // held, no stream verdict: the caller just
+                        // waits longer.
+                        if engine.reserve_for(job.prompt.rows()).is_err() {
+                            slot.engine = Some(engine);
+                            metrics.admissions_deferred_on_memory.inc();
+                            deferred.push(job);
+                            continue;
+                        }
                         // Tag the engine so an injected fault can
                         // target one session out of a fused tick.
                         engine.fail_tag = job.session;
@@ -905,7 +1081,7 @@ fn admit_generations<'a>(
     }
     let n = taken.len();
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), deferred);
     }
     if n >= 2 {
         // Admission burst: one fused prefill pass. Containment is
@@ -927,20 +1103,21 @@ fn admit_generations<'a>(
                 let shared_energy =
                     EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
                 let share = shared_energy / n as f64;
-                taken
+                let newly = taken
                     .into_iter()
                     .zip(result.outputs)
                     .map(|((job, engine, guard), out)| {
                         finish_admission(config, metrics, job, engine, guard, &out.out, share)
                     })
-                    .collect()
+                    .collect();
+                (newly, deferred)
             }
             Err(_) => {
                 for (job, _, guard) in taken {
                     let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
                     guard.poison();
                 }
-                Vec::new()
+                (Vec::new(), deferred)
             }
         }
     } else {
@@ -953,12 +1130,12 @@ fn admit_generations<'a>(
         }));
         match result {
             Ok((engine, out)) => {
-                vec![finish_admission(config, metrics, job, engine, guard, &out, 0.0)]
+                (vec![finish_admission(config, metrics, job, engine, guard, &out, 0.0)], deferred)
             }
             Err(_) => {
                 let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
                 guard.poison();
-                Vec::new()
+                (Vec::new(), deferred)
             }
         }
     }
@@ -982,6 +1159,13 @@ fn finish_admission<'a>(
     metrics.sim_energy_pj.add((energy * 1e12) as u64);
     metrics.prefills_completed.inc();
     let next = out.row(out.rows() - 1).to_vec();
+    // Seed the recompute-restore history with the prompt rows; each
+    // tick appends its consumed feedback row.
+    let mut history =
+        Vec::with_capacity((job.prompt.rows() + job.max_new_tokens) * job.prompt.cols());
+    for r in 0..job.prompt.rows() {
+        history.extend_from_slice(job.prompt.row(r));
+    }
     RunningGen {
         session: job.session,
         tx: job.tx,
@@ -992,6 +1176,8 @@ fn finish_admission<'a>(
         emitted: 0,
         max_new_tokens: job.max_new_tokens,
         enqueued: job.enqueued,
+        history,
+        parked: false,
     }
 }
 
@@ -1253,6 +1439,11 @@ enum Outcome {
     Done { engine: Box<DecodeEngine>, activity: Activity, output: MatI8, share: f64 },
     /// The item panicked mid-compute (engine discarded) — quarantine.
     Poisoned,
+    /// The KV block pool could not cover this step (§Paged-KV). The
+    /// engine is INTACT — the fallible reservation rolled back and the
+    /// input row was never consumed — so the session keeps its cache
+    /// and the caller gets a retryable [`SubmitError::QueueFull`].
+    Exhausted { engine: Box<DecodeEngine> },
 }
 
 /// Executed decode item awaiting merge.
@@ -1498,6 +1689,12 @@ fn process_decode_batch(
                 guard.poison();
                 let _ = tx.send(Err(SubmitError::SessionPoisoned));
             }
+            Outcome::Exhausted { engine } => {
+                // Memory pressure, not a fault: session and cache
+                // survive untouched; the submitter may retry.
+                guard.finish(engine);
+                let _ = tx.send(Err(SubmitError::QueueFull));
+            }
         }
     }
 }
@@ -1602,7 +1799,7 @@ fn execute_fused_steps<'a>(
     }));
     match tick_result {
         Ok(report) => {
-            let n_live = n - report.poisoned.len();
+            let n_live = n - report.poisoned.len() - report.exhausted.len();
             metrics.fused_step_batches.inc();
             metrics.fused_step_sessions.add(n_live as u64);
             let shared_energy =
@@ -1617,6 +1814,8 @@ fn execute_fused_steps<'a>(
                         // Engine dropped here: its KV cache is
                         // partially advanced and must not be reused.
                         DoneItem { req, tx, guard, outcome: Outcome::Poisoned }
+                    } else if report.exhausted.binary_search(&i).is_ok() {
+                        DoneItem { req, tx, guard, outcome: Outcome::Exhausted { engine } }
                     } else {
                         let activity = engine.engine.activity;
                         let row = batch.out_row(i);

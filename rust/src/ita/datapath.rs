@@ -27,6 +27,7 @@ use super::requant::{requant_mat, RequantParams};
 use super::simulator::{activity_for_matmul, MatmulDims};
 use super::softmax::{ita_softmax_row_masked_into, ita_softmax_rows, SoftmaxUnit};
 use super::{Activity, ItaConfig};
+use crate::util::blocks::Block;
 use crate::util::gemm::{active_kernel_path, dot_dispatch, gemm_requant_pret, GemmScratch};
 use crate::util::mat::{matmul_i8, matmul_i8_pret, matmul_u8_i8, MatI8, MatU8};
 
@@ -594,6 +595,75 @@ impl TileEngine {
         let useful = (valid * p) as u64;
         self.record_matmul(1, valid, p, useful);
     }
+
+    /// [`TileEngine::logits_row_cached`] against a **paged** key store:
+    /// the first `valid` cached key rows live in fixed-size
+    /// [`Block`]s (`blocks[i / block_size].k.row(i % block_size)` is
+    /// position `i`). A key row never straddles blocks, so every dot
+    /// reads one contiguous block-local slice — same kernels, same
+    /// order, same [`Activity`]: bit-identical to the contiguous
+    /// variant over the same cached bytes.
+    pub fn logits_row_paged(
+        &mut self,
+        q: &[i8],
+        blocks: &[Block],
+        block_size: usize,
+        valid: usize,
+        rq: RequantParams,
+        out: &mut Vec<i8>,
+    ) {
+        assert!(block_size >= 1, "paged logits need a positive block size");
+        assert!(valid <= blocks.len() * block_size, "valid beyond the block table");
+        out.resize(valid, 0);
+        let path = active_kernel_path();
+        for (c, o) in out.iter_mut().enumerate() {
+            let krow = blocks[c / block_size].k.row(c % block_size);
+            debug_assert_eq!(q.len(), krow.len(), "projection dim");
+            *o = rq.apply(dot_dispatch(path, q, krow));
+        }
+        let useful = (q.len() * valid) as u64;
+        self.record_matmul(1, q.len(), valid, useful);
+    }
+
+    /// [`TileEngine::av_row_cached`] against a **paged** Vᵀ store: the
+    /// probability row spans blocks, so each output lane sums i32
+    /// partial dots over the per-block Vᵀ slices and requants **once**
+    /// at the end. Integer partial sums are associative (and ITA's
+    /// int8 × u8 ranges keep a full-capacity row far below `i32::MAX`),
+    /// so the result — and the recorded [`Activity`] — is bit-identical
+    /// to the contiguous variant over the same cached bytes.
+    pub fn av_row_paged(
+        &mut self,
+        a: &[u8],
+        blocks: &[Block],
+        block_size: usize,
+        bias: &[i8],
+        rq: RequantParams,
+        out: &mut [i8],
+    ) {
+        assert!(block_size >= 1, "paged A·V needs a positive block size");
+        let p = bias.len();
+        assert_eq!(out.len(), p, "output row width");
+        let valid = a.len();
+        assert!(valid <= blocks.len() * block_size, "probability row beyond the block table");
+        let path = active_kernel_path();
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            let mut c0 = 0usize;
+            for b in blocks {
+                if c0 >= valid {
+                    break;
+                }
+                debug_assert_eq!(b.vt.rows(), p, "block Vᵀ width");
+                let w = (valid - c0).min(block_size);
+                acc += dot_dispatch(path, &a[c0..c0 + w], &b.vt.row(j)[..w]);
+                c0 += w;
+            }
+            *o = rq.apply_biased(acc, bias[j]);
+        }
+        let useful = (valid * p) as u64;
+        self.record_matmul(1, valid, p, useful);
+    }
 }
 
 #[cfg(test)]
@@ -1023,6 +1093,60 @@ mod tests {
                 assert_eq!(&a_row[..], &a_full.row(r)[..valid], "attn row {r}");
                 assert!(a_full.row(r)[valid..].iter().all(|&x| x == 0));
                 assert_eq!(&out[..], o_full.row(r), "out row {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn paged_row_primitives_match_contiguous() {
+        // The paged decode tail vs the contiguous one, over random
+        // shapes, ragged valid lengths (block-boundary straddling
+        // included), and random block sizes: outputs AND activity
+        // bit-identical — partial i32 dots per block are associative.
+        use crate::util::blocks::BlockArena;
+        forall("paged == contiguous decode row", 40, |g| {
+            let cfg = ItaConfig::tiny();
+            let p = g.usize_in(1, 16);
+            let bs = g.usize_in(1, 9);
+            let valid = g.usize_in(1, 33);
+            let mut rng = SplitMix64::new(g.u64());
+            let k = rand_mat(&mut rng, valid, p);
+            let v = rand_mat(&mut rng, valid, p);
+            let q: Vec<i8> = rng.vec_i8(p);
+            let bias: Vec<i8> = (0..p).map(|_| rng.next_i8()).collect();
+
+            // Load the same rows into a block table...
+            let arena = BlockArena::new(bs, p, valid.div_ceil(bs));
+            let mut blocks = Vec::new();
+            for i in 0..valid {
+                if i % bs == 0 {
+                    blocks.push(arena.try_alloc().unwrap());
+                }
+                let b = blocks.last_mut().unwrap();
+                b.k.row_mut(i % bs).copy_from_slice(k.row(i));
+                for j in 0..p {
+                    b.vt.set(j, i % bs, v.get(i, j));
+                }
+            }
+
+            let vt = v.transpose();
+            let mut e1 = TileEngine::new(cfg);
+            let mut e2 = TileEngine::new(cfg);
+            let (mut l1, mut l2) = (Vec::new(), Vec::new());
+            e1.logits_row_cached(&q, &k, valid, rq(), &mut l1);
+            e2.logits_row_paged(&q, &blocks, bs, valid, rq(), &mut l2);
+            assert_eq!(l1, l2, "logits (p={p} bs={bs} valid={valid})");
+
+            let mut a_row = Vec::new();
+            e1.softmax_row(&l1, &mut a_row);
+            e2.softmax_row(&l2, &mut a_row);
+            let (mut o1, mut o2) = (vec![0i8; p], vec![0i8; p]);
+            e1.av_row_cached(&a_row, &vt, &bias, rq(), &mut o1);
+            e2.av_row_paged(&a_row, &blocks, bs, &bias, rq(), &mut o2);
+            assert_eq!(o1, o2, "A·V (p={p} bs={bs} valid={valid})");
+            assert_eq!(e1.activity, e2.activity, "identical recorded activity");
+            for b in blocks {
+                arena.reclaim(b);
             }
         });
     }

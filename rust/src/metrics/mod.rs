@@ -191,6 +191,21 @@ pub struct ServerMetrics {
     pub stream_backpressure: Counter,
     /// Generations that ran to completion and closed their stream.
     pub streams_completed: Counter,
+    /// KV blocks currently handed out by the shared arena (gauge,
+    /// refreshed every router tick).
+    pub kv_blocks_in_use: Gauge,
+    /// High-water mark of `kv_blocks_in_use` over the arena's lifetime
+    /// (gauge mirroring the arena's own peak counter).
+    pub kv_blocks_peak: Gauge,
+    /// Running generations preempted on pool exhaustion (blocks
+    /// released, prompt + generated tokens retained for restore).
+    pub preemptions: Counter,
+    /// Preempted generations restored via recompute-prefill and
+    /// resumed bit-exactly.
+    pub restores: Counter,
+    /// Admissions deferred because the pool could not cover the
+    /// candidate's prompt (re-queued, not rejected).
+    pub admissions_deferred_on_memory: Counter,
 }
 
 impl ServerMetrics {
@@ -221,6 +236,7 @@ impl ServerMetrics {
              steps={} (fused={} in {} ticks)\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              router: admissions={} streams_done={} tokens={} occupancy={:.2} backpressure={}\n\
+             kv: blocks_in_use={} peak={} preemptions={} restores={} deferred={}\n\
              faults: deadline_expired={} cancelled={} dropped={} poisoned={} evicted={}\n\
              ticks: mean={:.1}us slow={}\n\
              sim: cycles={} energy={:.3}uJ",
@@ -244,6 +260,11 @@ impl ServerMetrics {
             self.tokens_streamed.get(),
             self.mean_router_occupancy(),
             self.stream_backpressure.get(),
+            self.kv_blocks_in_use.get(),
+            self.kv_blocks_peak.get(),
+            self.preemptions.get(),
+            self.restores.get(),
+            self.admissions_deferred_on_memory.get(),
             self.deadlines_expired.get(),
             self.requests_cancelled.get(),
             self.ingress_dropped.get(),
@@ -350,6 +371,21 @@ mod tests {
             r.contains(
                 "router: admissions=5 streams_done=4 tokens=40 occupancy=3.50 backpressure=2"
             ),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn server_metrics_report_kv_line() {
+        let m = ServerMetrics::default();
+        m.kv_blocks_in_use.set(12);
+        m.kv_blocks_peak.set(20);
+        m.preemptions.add(3);
+        m.restores.add(2);
+        m.admissions_deferred_on_memory.add(5);
+        let r = m.report();
+        assert!(
+            r.contains("kv: blocks_in_use=12 peak=20 preemptions=3 restores=2 deferred=5"),
             "{r}"
         );
     }

@@ -1,0 +1,252 @@
+//! Paged KV-cache backing store: fixed-size K/V blocks drawn from one
+//! shared, bounded [`BlockArena`] (the block-table scheme of
+//! vLLM/TGI-style servers, specialized to ITA's decode layout).
+//!
+//! A [`Block`] holds `block_size` cached positions for one head: keys
+//! row-major (`block_size`×P, the Q·Kᵀ-ready layout) and values packed
+//! transposed (P×`block_size`, the A·V-ready layout) — the same two
+//! layouts the contiguous cache used, just chunked, so the O(S) decode
+//! tail walks blocks with contiguous slice reads and bit-identical
+//! integer dots (i32 partial sums over block prefixes are associative;
+//! at ITA's int8 ranges a full-capacity row sums to ≪ `i32::MAX`).
+//!
+//! The arena is a pre-allocated free list with **ownership transfer**:
+//! `try_alloc` moves a block out, `reclaim` moves it back. A session's
+//! cache owns its blocks outright, so the fused tick's parallel
+//! per-session fan-out needs no block locking and no unsafe aliasing —
+//! the mutex guards only the free-list pop/push, which happens at most
+//! once per `block_size` appended positions per head. Steady-state
+//! operation performs no heap allocation: every block is allocated at
+//! arena construction and the free list never grows past its initial
+//! capacity.
+//!
+//! Memory-pressure containment starts here: `try_alloc` is **fallible**
+//! ([`BlockPoolExhausted`]) instead of panicking, and the
+//! `kv.block.alloc` failpoint (ctx = the arena's `fail_tag`) forces an
+//! exhaustion at a chosen moment so the chaos suite can drive the
+//! preempt/restore path deterministically.
+
+use crate::util::failpoint;
+use crate::util::mat::MatI8;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default block size (cached positions per block) when none is
+/// configured. 16 positions × P bytes of K plus the same of V is small
+/// enough that a short session strands little memory, large enough
+/// that the free-list mutex is touched rarely.
+pub const DEFAULT_KV_BLOCK: usize = 16;
+
+/// One head-cache block: `block_size` positions of K (row-major) and
+/// Vᵀ (transposed pack). Storage only — validity (`len`) lives in the
+/// owning cache's block table.
+#[derive(Debug)]
+pub struct Block {
+    /// Keys: `block_size`×P row-major.
+    pub k: MatI8,
+    /// Values packed transposed: P×`block_size`.
+    pub vt: MatI8,
+}
+
+/// `try_alloc` found the free list empty (or an armed `kv.block.alloc`
+/// failpoint forced the miss). The serving layer converts this into
+/// deferred admission or preemption — it must never unwind a tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockPoolExhausted {
+    /// Blocks in the pool (none of them free at the failed call).
+    pub total_blocks: usize,
+}
+
+impl std::fmt::Display for BlockPoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV block pool exhausted ({} blocks total, none free)", self.total_blocks)
+    }
+}
+
+impl std::error::Error for BlockPoolExhausted {}
+
+/// Bounded shared pool of KV blocks, all of one geometry
+/// (`block_size` positions × `p` projection lanes).
+#[derive(Debug)]
+pub struct BlockArena {
+    free: Mutex<Vec<Block>>,
+    block_size: usize,
+    p: usize,
+    total: usize,
+    in_use: AtomicUsize,
+    peak: AtomicUsize,
+    /// Fault-injection targeting tag: the `kv.block.alloc` failpoint
+    /// fires only for hits carrying this ctx, so a chaos test can arm
+    /// the *server's* arena without tripping the private arenas of its
+    /// golden-oracle engines. Inert unless `failpoints` is on.
+    fail_tag: u64,
+}
+
+impl BlockArena {
+    /// Pre-allocate `total` blocks of `block_size`×`p`. All memory the
+    /// pool will ever hand out is allocated here.
+    pub fn new(block_size: usize, p: usize, total: usize) -> Arc<Self> {
+        Self::with_fail_tag(block_size, p, total, 0)
+    }
+
+    /// [`BlockArena::new`] with a fault-injection tag (see `fail_tag`).
+    pub fn with_fail_tag(block_size: usize, p: usize, total: usize, fail_tag: u64) -> Arc<Self> {
+        assert!(block_size >= 1, "block size must be at least one position");
+        assert!(p >= 1, "projection width must be at least one lane");
+        let mut free = Vec::with_capacity(total);
+        for _ in 0..total {
+            free.push(Block { k: MatI8::zeros(block_size, p), vt: MatI8::zeros(p, block_size) });
+        }
+        Arc::new(Self {
+            free: Mutex::new(free),
+            block_size,
+            p,
+            total,
+            in_use: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            fail_tag,
+        })
+    }
+
+    /// Positions per block.
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Projection width (lanes per position).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Total blocks in the pool (free + handed out).
+    #[inline]
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    /// Blocks currently handed out.
+    #[inline]
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of `blocks_in_use` over the arena's lifetime.
+    #[inline]
+    pub fn blocks_peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Blocks currently free. Advisory under concurrency — admission
+    /// uses it as a gate, the fallible `try_alloc` is the authority.
+    pub fn blocks_free(&self) -> usize {
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Blocks needed to back `len` cached positions of ONE head.
+    #[inline]
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.block_size)
+    }
+
+    /// Move one block out of the pool. Fails (instead of panicking)
+    /// when the free list is empty or the `kv.block.alloc` failpoint
+    /// (ctx = this arena's `fail_tag`) forces a miss.
+    pub fn try_alloc(self: &Arc<Self>) -> Result<Block, BlockPoolExhausted> {
+        if failpoint::hit("kv.block.alloc", self.fail_tag) {
+            return Err(BlockPoolExhausted { total_blocks: self.total });
+        }
+        let popped = self.free.lock().unwrap_or_else(|e| e.into_inner()).pop();
+        match popped {
+            Some(b) => {
+                let now = self.in_use.fetch_add(1, Ordering::Relaxed) + 1;
+                self.peak.fetch_max(now, Ordering::Relaxed);
+                Ok(b)
+            }
+            None => Err(BlockPoolExhausted { total_blocks: self.total }),
+        }
+    }
+
+    /// Return a block to the pool. Contents are left as-is — a cache
+    /// only ever reads positions it has written, so scrubbing would be
+    /// pure overhead.
+    pub fn reclaim(self: &Arc<Self>, block: Block) {
+        assert_eq!(block.k.rows(), self.block_size, "foreign block (size)");
+        assert_eq!(block.k.cols(), self.p, "foreign block (width)");
+        self.in_use.fetch_sub(1, Ordering::Relaxed);
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(free.len() < self.total, "reclaim beyond pool size");
+        free.push(block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_reclaim_roundtrip_and_accounting() {
+        let a = BlockArena::new(4, 8, 3);
+        assert_eq!((a.block_size(), a.p(), a.total_blocks()), (4, 8, 3));
+        assert_eq!(a.blocks_free(), 3);
+        let b1 = a.try_alloc().unwrap();
+        let b2 = a.try_alloc().unwrap();
+        assert_eq!(a.blocks_in_use(), 2);
+        assert_eq!(a.blocks_peak(), 2);
+        assert_eq!(a.blocks_free(), 1);
+        a.reclaim(b1);
+        assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.blocks_peak(), 2, "peak is a high-water mark");
+        a.reclaim(b2);
+        assert_eq!(a.blocks_free(), 3);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let a = BlockArena::new(2, 4, 1);
+        let b = a.try_alloc().unwrap();
+        let err = a.try_alloc().unwrap_err();
+        assert_eq!(err.total_blocks, 1);
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        a.reclaim(b);
+        assert!(a.try_alloc().is_ok(), "reclaimed block is allocatable again");
+    }
+
+    #[test]
+    fn blocks_for_reservation_math() {
+        let a = BlockArena::new(4, 2, 0);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(4), 1);
+        assert_eq!(a.blocks_for(5), 2);
+        assert_eq!(a.blocks_for(8), 2);
+        assert_eq!(a.blocks_for(9), 3);
+    }
+
+    #[test]
+    fn block_geometry_matches_decode_layouts() {
+        let a = BlockArena::new(3, 5, 1);
+        let b = a.try_alloc().unwrap();
+        assert_eq!(b.k.shape(), (3, 5), "K block is block_size x P row-major");
+        assert_eq!(b.vt.shape(), (5, 3), "V block is the P x block_size transposed pack");
+        a.reclaim(b);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn failpoint_forces_exhaustion_only_for_matching_tag() {
+        use crate::util::failpoint::{cfg_for, FailAction};
+        let tagged = BlockArena::with_fail_tag(2, 2, 2, 0xb10c);
+        let plain = BlockArena::new(2, 2, 2);
+        cfg_for("kv.block.alloc", 0xb10c, 1, FailAction::Trigger);
+        // The untagged arena is unaffected even while the point is armed.
+        let ok = plain.try_alloc().expect("untagged arena unaffected");
+        let err = tagged.try_alloc().unwrap_err();
+        assert_eq!(err.total_blocks, 2);
+        // The point disarmed itself after one activation.
+        let b = tagged.try_alloc().expect("point disarmed");
+        plain.reclaim(ok);
+        tagged.reclaim(b);
+    }
+}

@@ -22,6 +22,7 @@
 //! | `server.ingress.full` | 0                    | submit path, forces QueueFull |
 //! | `server.ingress.drop` | 0                    | dispatcher, drops one job   |
 //! | `server.worker.slow`  | 0                    | worker loop, delays a batch |
+//! | `kv.block.alloc`      | arena `fail_tag`     | `BlockArena::try_alloc`, forces exhaustion |
 
 #[cfg(feature = "failpoints")]
 pub use enabled::*;

@@ -11,6 +11,7 @@
 //! the persistent worker pool ([`pool`]) the fan-out paths run on.
 
 pub mod bench;
+pub mod blocks;
 pub mod error;
 pub mod failpoint;
 pub mod gemm;

@@ -9,7 +9,7 @@
 use ita::attention::decode::DecodeEngine;
 use ita::attention::{gen_input, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
-use ita::coordinator::{DecodeInput, GenerateOptions, Server, SubmitError};
+use ita::coordinator::{DecodeInput, GenerateOptions, Server, SubmitError, KV_ARENA_FAIL_TAG};
 use ita::ita::ItaConfig;
 use ita::util::failpoint::{self, FailAction};
 use ita::util::mat::MatI8;
@@ -400,5 +400,78 @@ fn decode_timeout_resolves_promptly_under_stall() {
     assert_eq!(resp.output.row(0), &golden.step(x.row(2))[..]);
     assert_eq!(resp.seq_len, 3);
     assert!(server.metrics.deadlines_expired.get() >= 1);
+    server.shutdown();
+}
+
+/// Injected KV-pool exhaustion at ADMISSION (`kv.block.alloc` aimed at
+/// the server arena's fail tag): the generation is deferred — no
+/// panic, no stream error — and admitted on the next router pass once
+/// the point disarms, completing bit-identical to its solo oracle.
+/// The golden engine's private arena carries tag 0 and is never hit.
+#[test]
+fn injected_pool_exhaustion_defers_admission_then_recovers() {
+    let _g = serial();
+    let cfg = config(1, 4, 300);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(61, &d).block_padded(0, 0, 3, d.e);
+    let golden = golden_generation(&cfg, &prompt, 4);
+    let sid = server.open_session().unwrap();
+
+    // The first server-arena allocation after arming is the admission
+    // reserve for this prompt: it fails once, the job re-queues.
+    failpoint::cfg_for("kv.block.alloc", KV_ARENA_FAIL_TAG, 1, FailAction::Trigger);
+    let rows = server.generate(sid, prompt, 4).expect("deferred, not failed");
+    assert_eq!(rows, golden, "post-deferral generation diverged from its solo oracle");
+    assert_eq!(server.metrics.admissions_deferred_on_memory.get(), 1);
+    assert_eq!(server.metrics.preemptions.get(), 0, "admission deferral must not preempt");
+
+    // Zero leaked blocks once the only session closes.
+    assert!(server.close_session(sid));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "blocks leaked past session close");
+    server.shutdown();
+}
+
+/// Injected KV-pool exhaustion MID-GENERATION: the tick reports the
+/// starved session ([`TickReport::exhausted`]), the router preempts it
+/// (sole unfinished generation — it parks itself, releasing every
+/// block), then restores it by recompute-prefill on the next pass. The
+/// caller observes only a stall: every token arrives, bit-identical to
+/// the solo oracle, and no block leaks.
+#[test]
+fn injected_mid_generation_exhaustion_preempts_and_restores_bit_exact() {
+    let _g = serial();
+    let mut cfg = config(1, 4, 300);
+    // Small blocks make the cache grow mid-generation (draws at
+    // positions 4 and 8); the tiny stream buffer bounds how far the
+    // router runs ahead, so arming after token 1 always lands the
+    // fault on the position-8 draw.
+    cfg.server.kv_block_size = 4;
+    cfg.server.stream_buffer = 2;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(63, &d).block_padded(0, 0, 4, d.e);
+    let golden = golden_generation(&cfg, &prompt, 8);
+    let sid = server.open_session().unwrap();
+
+    let mut stream = server.submit_generate(sid, prompt, gen_opts(8)).unwrap();
+    let mut got = vec![stream.recv().expect("stream alive").expect("token 1").row];
+    // Admission (position 0) and the position-4 draw are behind us;
+    // the next server-arena allocation is the position-8 draw, inside
+    // a step tick.
+    failpoint::cfg_for("kv.block.alloc", KV_ARENA_FAIL_TAG, 1, FailAction::Trigger);
+    while let Some(item) = stream.recv() {
+        got.push(item.expect("exhaustion must stall the stream, never error it").row);
+    }
+    assert_eq!(got, golden, "preempt/restore generation diverged from its solo oracle");
+    assert_eq!(server.metrics.preemptions.get(), 1, "exactly one preemption");
+    assert_eq!(server.metrics.restores.get(), 1, "exactly one restore");
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0, "exhaustion is not a fault");
+
+    // Quiesce: the arena's free count returns to full once the only
+    // session closes — preempt/restore leaked nothing.
+    assert!(server.close_session(sid));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "blocks leaked past session close");
+    assert!(server.kv_arena().blocks_peak() > 0);
     server.shutdown();
 }

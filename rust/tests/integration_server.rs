@@ -223,6 +223,9 @@ fn concurrent_decode_sessions_stay_isolated() {
     }
     assert_eq!(server.metrics.sessions_opened.get(), 4);
     assert_eq!(server.metrics.prefills_completed.get(), 4);
+    // Every session closed: the shared block arena must be empty.
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "closed sessions leaked KV blocks");
+    assert!(server.kv_arena().blocks_peak() > 0);
     server.shutdown();
 }
 
@@ -439,7 +442,14 @@ fn router_streams_tokens_bit_identical_to_solo_run() {
     assert_eq!(server.metrics.running_sessions.get(), 0);
     // The generation released the session with its cache intact.
     assert_eq!(server.session_len(sid), Some(12));
+    // Paged-KV accounting: the generation drew blocks from the shared
+    // arena (peak is monotone, so no race with the router's gauge
+    // cadence), the report exposes the kv line, and closing the
+    // session returns every block.
+    assert!(server.kv_arena().blocks_peak() > 0, "generation never drew a KV block");
+    assert!(server.metrics.report().contains("kv: blocks_in_use="), "report lost the kv line");
     assert!(server.close_session(sid));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "closed session leaked KV blocks");
     server.shutdown();
 }
 

@@ -1,0 +1,296 @@
+//! Paged KV-cache property and pressure tests — the §Paged-KV oracle.
+//!
+//! Library level: preempt → recompute-prefill restore is bit-identical
+//! to never having been preempted, across **every kernel path this
+//! host can execute** and prompt lengths straddling every block-
+//! boundary residue (S % block_size ∈ {0, 1, block_size−1}); truncate
+//! rollback replays bit-identically on retained blocks.
+//!
+//! Server level: real pool pressure (explicit `kv_pool_blocks`) drives
+//! the router's containment path — mid-generation exhaustion preempts
+//! the youngest session and later restores it bit-exactly; admission
+//! defers (never fails) while the pool is pinned; churn waves recycle
+//! every block. The churn test runs under the CI `ITA_KV_TINY_POOL=1`
+//! leg, where the auto-sized pool shrinks to just over one session's
+//! worst case and the pressure assertions arm.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating property lives in a single #[test] (this binary's
+//! other tests do not touch the override) and restores auto-detection
+//! before returning — the same discipline `tests/step_fused.rs` uses.
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, ModelDims, PackedWeights};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{GenerateOptions, Server};
+use ita::ita::ItaConfig;
+use ita::util::blocks::BlockArena;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+use ita::util::rng::SplitMix64;
+use std::time::{Duration, Instant};
+
+const BS: usize = 4;
+
+fn dims() -> ModelDims {
+    ModelDims { s: 16, e: 16, p: 8, h: 2 }
+}
+
+/// A paged engine drawing from `arena`, sharing the same generated
+/// weight set as `DecodeEngine::new(cfg, dims, seed)`.
+fn paged_engine(cfg: ItaConfig, d: ModelDims, seed: u64, arena: &std::sync::Arc<BlockArena>) -> DecodeEngine {
+    let packed = PackedWeights::shared(d, seed);
+    DecodeEngine::from_shared_arena(
+        cfg,
+        d,
+        packed.weights.clone(),
+        packed.weights_t.clone(),
+        packed.requants,
+        arena.clone(),
+    )
+}
+
+#[test]
+fn preempt_restore_roundtrip_bit_identical_across_paths_and_block_boundaries() {
+    // Closed-loop generation with a preemption in the middle: the
+    // engine frees every block (a squatter engine reuses them and
+    // hands them back on drop), then restores by recompute-prefill
+    // over prompt + consumed feedback rows. Every subsequent step must
+    // match a golden engine that was never preempted — and the
+    // restored prefill's last output row must equal the pending
+    // feedback row, which is exactly the invariant the router relies
+    // on to resume a parked generation's stream bit-exactly.
+    let d = dims();
+    let cfg = ItaConfig::tiny();
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+        // plen % BS = 0, 1, BS−1: key rows at, just past, and just
+        // shy of a block boundary when the preempt/restore hits.
+        for &plen in &[BS, BS + 1, BS - 1] {
+            let seed = 0xB10C ^ plen as u64;
+            let arena = BlockArena::new(BS, d.p, d.h * d.s.div_ceil(BS));
+            let mut paged = paged_engine(cfg, d, seed, &arena);
+            let mut golden = DecodeEngine::new(cfg, d, seed);
+
+            let mut rng = SplitMix64::new(seed ^ 0x9a6e);
+            let prompt = MatI8::from_vec(plen, d.e, rng.vec_i8(plen * d.e));
+            let pre_p = paged.prefill(&prompt);
+            let pre_g = golden.prefill(&prompt);
+            assert_eq!(pre_p.out, pre_g.out, "prefill parity plen={plen} [{}]", path.name());
+
+            let mut history: Vec<i8> = Vec::new();
+            for r in 0..plen {
+                history.extend_from_slice(prompt.row(r));
+            }
+            let mut next = pre_g.out.row(plen - 1).to_vec();
+            let budget = d.s - plen;
+            for t in 0..budget {
+                if t == budget / 2 {
+                    paged.release_blocks();
+                    assert_eq!(arena.blocks_in_use(), 0, "preempt must free every block");
+                    {
+                        let mut squatter = paged_engine(cfg, d, seed ^ 1, &arena);
+                        squatter.prefill(&MatI8::from_vec(6, d.e, rng.vec_i8(6 * d.e)));
+                        assert!(arena.blocks_in_use() > 0, "squatter reuses freed blocks");
+                    }
+                    assert_eq!(arena.blocks_in_use(), 0, "drop must reclaim squatter blocks");
+                    let rows = history.len() / d.e;
+                    paged.reserve_for(rows).expect("pool covers one session");
+                    let restored =
+                        paged.prefill(&MatI8::from_vec(rows, d.e, history.clone()));
+                    assert_eq!(
+                        restored.out.row(rows - 1),
+                        &next[..],
+                        "restored prefill's last row must equal the pending feedback row \
+                         (plen={plen} t={t} [{}])",
+                        path.name()
+                    );
+                }
+                history.extend_from_slice(&next);
+                let out = paged.step(&next);
+                assert_eq!(
+                    out,
+                    golden.step(&next),
+                    "post-restore step {t} diverged (plen={plen} [{}])",
+                    path.name()
+                );
+                next = out;
+            }
+            paged.release_blocks();
+            assert_eq!(arena.blocks_in_use(), 0, "roundtrip leaked blocks");
+        }
+    }
+    set_kernel_path(None);
+}
+
+#[test]
+fn truncate_rollback_replays_bit_identical_on_retained_blocks() {
+    // The worker fault path truncates a cache back past rows a failed
+    // fused tick wrote. On the block-backed cache the rollback keeps
+    // the drawn blocks pinned: replaying the same rows must be
+    // bit-identical and must not draw (or leak) a single block.
+    let d = dims();
+    let cfg = ItaConfig::tiny();
+    let seed = 0x7513;
+    let arena = BlockArena::new(BS, d.p, d.h * d.s.div_ceil(BS));
+    let mut eng = paged_engine(cfg, d, seed, &arena);
+    let mut rng = SplitMix64::new(seed);
+    eng.prefill(&MatI8::from_vec(6, d.e, rng.vec_i8(6 * d.e)));
+    let rows: Vec<Vec<i8>> = (0..3).map(|_| rng.vec_i8(d.e)).collect();
+    let first: Vec<Vec<i8>> = rows.iter().map(|r| eng.step(r)).collect();
+    // len 9 at BS=4: ceil(9/4) = 3 blocks per head.
+    let held = arena.blocks_in_use();
+    assert_eq!(held, d.h * 9usize.div_ceil(BS));
+    eng.truncate(6);
+    assert_eq!(arena.blocks_in_use(), held, "rollback keeps blocks pinned for replay");
+    let replay: Vec<Vec<i8>> = rows.iter().map(|r| eng.step(r)).collect();
+    assert_eq!(replay, first, "replay over retained blocks must be bit-identical");
+    assert_eq!(arena.blocks_in_use(), held, "replay must draw nothing new");
+    eng.release_blocks();
+    assert_eq!(arena.blocks_in_use(), 0);
+}
+
+fn server_config(pool_blocks: usize) -> SystemConfig {
+    SystemConfig {
+        accelerator: ItaConfig::tiny(),
+        model: ModelConfig { dims: dims(), ffn: 32, layers: 1, seed: 42 },
+        server: ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait_us: 300,
+            queue_depth: 16,
+            stream_buffer: 64,
+            kv_block_size: BS,
+            kv_pool_blocks: pool_blocks,
+            ..ServerConfig::default()
+        },
+    }
+}
+
+/// Solo oracle for a closed-loop generation (same as the router
+/// integration tests): prefill, then feed each output row back.
+fn golden_generation(cfg: &SystemConfig, prompt: &MatI8, max_new_tokens: usize) -> Vec<Vec<i8>> {
+    let mut eng = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+    let pre = eng.prefill(prompt);
+    let mut next = pre.out.row(prompt.rows() - 1).to_vec();
+    let mut rows = Vec::new();
+    for _ in 0..max_new_tokens {
+        let out = eng.step(&next);
+        rows.push(out.clone());
+        next = out;
+    }
+    rows
+}
+
+fn gen_opts(max_new_tokens: usize) -> GenerateOptions {
+    GenerateOptions { max_new_tokens, ..GenerateOptions::default() }
+}
+
+#[test]
+fn router_preempts_and_restores_under_real_pool_pressure() {
+    // Two full-length generations need 16 blocks; the pool holds 10.
+    // The router must preempt the youngest mid-generation, let the
+    // elder finish, and restore the victim once the elder's blocks
+    // free — both streams bit-exact, no poisoning, nothing leaked.
+    let cfg = server_config(10);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let p1 = gen_input(501, &d).block_padded(0, 0, 4, d.e);
+    let p2 = gen_input(502, &d).block_padded(0, 0, 4, d.e);
+    let golden1 = golden_generation(&cfg, &p1, 12);
+    let golden2 = golden_generation(&cfg, &p2, 12);
+    let s1 = server.open_session().unwrap();
+    let s2 = server.open_session().unwrap();
+    let stream1 = server.submit_generate(s1, p1, gen_opts(12)).unwrap();
+    let stream2 = server.submit_generate(s2, p2, gen_opts(12)).unwrap();
+    assert_eq!(stream1.collect_rows().unwrap(), golden1, "survivor rows != solo oracle");
+    assert!(server.close_session(s1), "drained session must be closable");
+    assert_eq!(stream2.collect_rows().unwrap(), golden2, "preempted rows != solo oracle");
+    assert!(server.metrics.preemptions.get() >= 1, "16-block demand on 10 blocks must preempt");
+    assert_eq!(
+        server.metrics.preemptions.get(),
+        server.metrics.restores.get(),
+        "every preempted generation must have been restored at quiesce"
+    );
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0);
+    assert!(server.kv_arena().blocks_peak() <= 10, "pool bound violated");
+    assert!(server.close_session(s2));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "leaked blocks after close");
+    server.shutdown();
+}
+
+#[test]
+fn admission_defers_until_blocks_free() {
+    // The pool covers exactly one worst-case session. A finished-but-
+    // open session pins all of it; a second generation's admission
+    // must defer on memory — visible in the counter, with the stream
+    // stalled rather than errored — and proceed bit-exactly once the
+    // first session closes.
+    let cfg = server_config(8);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let pa = gen_input(503, &d).block_padded(0, 0, 4, d.e);
+    let pb = gen_input(504, &d).block_padded(0, 0, 4, d.e);
+    let golden_a = golden_generation(&cfg, &pa, 12);
+    let golden_b = golden_generation(&cfg, &pb, 4);
+    let sa = server.open_session().unwrap();
+    let sb = server.open_session().unwrap();
+    let stream_a = server.submit_generate(sa, pa, gen_opts(12)).unwrap();
+    assert_eq!(stream_a.collect_rows().unwrap(), golden_a);
+    // A ran to full length: 2 heads × ceil(16/4) = the whole pool.
+    assert_eq!(server.kv_arena().blocks_free(), 0, "A must pin the whole pool");
+    let stream_b = server.submit_generate(sb, pb, gen_opts(4)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.admissions_deferred_on_memory.get() == 0 {
+        assert!(Instant::now() < deadline, "admission was never deferred on memory");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(server.close_session(sa), "finished session must close under deferral");
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b, "deferred stream != solo oracle");
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0);
+    assert_eq!(server.metrics.preemptions.get(), 0, "deferral must not preempt anyone");
+    assert!(server.close_session(sb));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn session_churn_waves_recycle_blocks_without_leaks() {
+    // Auto-sized pool: generous in normal runs; under the CI
+    // `ITA_KV_TINY_POOL=1` leg it shrinks to one worst-case session
+    // plus H blocks, so three concurrent generations per wave MUST
+    // preempt — and every wave must still stream bit-exact, close
+    // clean, and return the arena to empty.
+    let cfg = server_config(0);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    for wave in 0..3u64 {
+        let mut streams = Vec::new();
+        for j in 0..3u64 {
+            let prompt = gen_input(600 + wave * 10 + j, &d).block_padded(0, 0, 4, d.e);
+            let golden = golden_generation(&cfg, &prompt, 6);
+            let sid = server.open_session().unwrap();
+            let stream = server.submit_generate(sid, prompt, gen_opts(6)).unwrap();
+            streams.push((sid, stream, golden));
+        }
+        for (sid, stream, golden) in streams {
+            assert_eq!(stream.collect_rows().unwrap(), golden, "wave {wave} rows != oracle");
+            assert!(server.close_session(sid), "wave {wave} session must close");
+        }
+        assert_eq!(server.kv_arena().blocks_in_use(), 0, "wave {wave} leaked blocks");
+    }
+    assert_eq!(server.metrics.streams_completed.get(), 9);
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0);
+    assert_eq!(
+        server.metrics.preemptions.get(),
+        server.metrics.restores.get(),
+        "every preemption must have a matching restore at quiesce"
+    );
+    if std::env::var("ITA_KV_TINY_POOL").is_ok_and(|v| v == "1") {
+        assert!(
+            server.metrics.preemptions.get() >= 1,
+            "tiny pool: 3 concurrent generations must force preemption"
+        );
+    }
+    server.shutdown();
+}

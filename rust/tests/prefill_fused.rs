@@ -80,8 +80,8 @@ fn fused_prefill_bit_identical_across_sessions_lengths_and_paths() {
                     let (fc, ic) = (&fused[i].caches()[h], &indep[i].caches()[h]);
                     for r in 0..fc.len() {
                         assert_eq!(fc.k_row(r), ic.k_row(r), "session {i} head {h} K row {r}");
+                        assert_eq!(fc.v_col(r), ic.v_col(r), "session {i} head {h} V col {r}");
                     }
-                    assert_eq!(fc.vt_mat(), ic.vt_mat(), "session {i} head {h} Vᵀ pack");
                 }
                 // First post-prefill step: the serving-visible proof
                 // the caches are interchangeable. (Activity parity has
