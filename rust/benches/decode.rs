@@ -24,6 +24,15 @@
 //! generations through the live decode router (join/leave churn, slot
 //! reuse) and emits the round latency plus the mean tick occupancy
 //! into the same JSON report.
+//!
+//! §Chunked-prefill addendum: the SLO-tradeoff round sweeps
+//! `prefill_chunk_rows` at the Table-1 shape — one long prompt joins
+//! four live decoders and its prefill chunks ride their fused ticks.
+//! Each sweep point reports the prompt's prefill completion time
+//! (submit → first token) and the worst inter-token stall any decoder
+//! observed, embedded in the JSON shape string: small chunks bound the
+//! stall at one chunk tick, `usize::MAX` recovers monolithic prefill
+//! (fastest completion, worst stall).
 
 use ita::attention::decode::{DecodeEngine, FusedStepBatch};
 use ita::attention::{gen_input, run_attention_causal, ModelDims};
@@ -31,9 +40,10 @@ use ita::config::{ModelConfig, ServerConfig, SystemConfig};
 use ita::coordinator::{GenerateOptions, Server};
 use ita::ita::datapath::TileEngine;
 use ita::ita::ItaConfig;
-use ita::util::bench::{bencher, black_box, JsonReport};
+use ita::util::bench::{bencher, black_box, JsonReport, Sample};
 use ita::util::mat::MatI8;
 use ita::util::pool::{Task, WorkerPool};
+use std::time::Instant;
 
 fn main() {
     let mut b = bencher();
@@ -337,6 +347,137 @@ fn main() {
         );
         println!("  -> {preempts} preemptions over all rounds, pool peak {peak} / 10 blocks\n");
         server.shutdown();
+    }
+
+    // ---- chunked-prefill tradeoff round (§Chunked-prefill) -----------
+    // The SLO knob measured end to end at the Table-1 shape: a LONG
+    // prompt joins 4 live decoders mid-stream and its prefill advances
+    // in `prefill_chunk_rows`-row chunks inside the same fused ticks
+    // that carry the decoders' steps. Per sweep point: the prompt's
+    // prefill completion time (submit -> first token) and the worst
+    // inter-token gap any decoder observed while the prompt chunked
+    // through. Each decoder stream is drained by a dedicated thread
+    // blocking on recv() with a buffer larger than its token budget, so
+    // arrival timestamps track tick scheduling, not backpressure or
+    // drain pacing; the first gap (admission + own prefill) is
+    // excluded. Measured once per sweep point after one warm round —
+    // the per-event timings need instrumented rounds, which the
+    // calibrating bencher can't provide — and recorded via a
+    // hand-built single-iteration Sample.
+    {
+        let long_rows = 96usize;
+        let dec_tokens = 48usize;
+        let n_dec = 4usize;
+        println!(
+            "\nchunked prefill: {long_rows}-row prompt joining {n_dec} live decoders, {shape}\n"
+        );
+        let mut chunk_table = Vec::new();
+        for &chunk in &[8usize, 32, usize::MAX] {
+            let scfg = SystemConfig {
+                accelerator: cfg,
+                model: ModelConfig { dims: t1, ffn: 32, layers: 1, seed: 42 },
+                server: ServerConfig {
+                    workers: 1,
+                    max_batch: 8,
+                    stream_buffer: dec_tokens + 2,
+                    max_waiting_ticks: 1,
+                    queue_depth: 16,
+                    prefill_chunk_rows: chunk,
+                    ..ServerConfig::default()
+                },
+            };
+            let server = Server::start(scfg);
+            let long_prompt = gen_input(99, &t1).block_padded(0, 0, long_rows, t1.e);
+            let (mut prefill_s, mut stall_s, mut round_s) = (0f64, 0f64, 0f64);
+            for _warm in 0..2 {
+                let rt0 = Instant::now();
+                let mut drains = Vec::with_capacity(n_dec);
+                for i in 0..n_dec as u64 {
+                    let sid = server.open_session().expect("session");
+                    let p = gen_input(7 + i, &t1).block_padded(0, 0, 8, t1.e);
+                    let stream = server
+                        .submit_generate(
+                            sid,
+                            p,
+                            GenerateOptions {
+                                max_new_tokens: dec_tokens,
+                                ..GenerateOptions::default()
+                            },
+                        )
+                        .expect("accepted");
+                    drains.push((
+                        sid,
+                        std::thread::spawn(move || {
+                            let mut stream = stream;
+                            let mut worst = 0f64;
+                            let mut last: Option<Instant> = None;
+                            while let Some(item) = stream.recv() {
+                                item.expect("decoder token");
+                                let now = Instant::now();
+                                if let Some(prev) = last {
+                                    worst = worst.max((now - prev).as_secs_f64());
+                                }
+                                last = Some(now);
+                            }
+                            worst
+                        }),
+                    ));
+                }
+                let long_sid = server.open_session().expect("session");
+                let t0 = Instant::now();
+                let mut long_stream = server
+                    .submit_generate(
+                        long_sid,
+                        long_prompt.clone(),
+                        GenerateOptions { max_new_tokens: 2, ..GenerateOptions::default() },
+                    )
+                    .expect("accepted");
+                long_stream.recv().expect("live").expect("first token");
+                prefill_s = t0.elapsed().as_secs_f64();
+                while let Some(item) = long_stream.recv() {
+                    item.expect("long token");
+                }
+                assert!(server.close_session(long_sid));
+                stall_s = 0f64;
+                for (sid, h) in drains {
+                    stall_s = stall_s.max(h.join().expect("drain thread"));
+                    assert!(server.close_session(sid));
+                }
+                round_s = rt0.elapsed().as_secs_f64();
+            }
+            let label = if chunk == usize::MAX { "MAX".to_string() } else { chunk.to_string() };
+            let s = Sample {
+                name: format!("chunked prefill round @chunk={label}"),
+                median: round_s,
+                mean: round_s,
+                p95: round_s,
+                iters_per_sample: 1,
+                units: None,
+            };
+            println!("{}", s.report());
+            report.entry(
+                "chunked prefill round",
+                &format!(
+                    "chunk={label},{shape},prefill_ms={:.3},stall_ms={:.3}",
+                    prefill_s * 1e3,
+                    stall_s * 1e3
+                ),
+                &s,
+                None,
+            );
+            chunk_table.push((label, prefill_s, stall_s));
+            server.shutdown();
+        }
+        // EXPERIMENTS.md table (paste-ready).
+        println!("\n| chunk rows | prefill completion | worst decoder stall |");
+        println!("|-----------:|-------------------:|--------------------:|");
+        for (label, prefill, stall) in chunk_table {
+            println!(
+                "| {label:>10} | {:>15.2} ms | {:>17.2} ms |",
+                prefill * 1e3,
+                stall * 1e3
+            );
+        }
     }
 
     match report.write() {

@@ -245,6 +245,10 @@ pub struct DecodeEngine {
     /// tests / the Fig. 5-style experiments).
     attn_rows: Vec<Vec<u8>>,
     concat: Vec<i8>,
+    /// Concat rows of the most recent prefill chunk (chunk_rows×H·P —
+    /// §Chunked-prefill): the fused tick gathers these for the shared
+    /// output projection, exactly as `concat` serves the R=1 steps.
+    chunk_concat: MatI8,
 }
 
 impl DecodeEngine {
@@ -315,6 +319,7 @@ impl DecodeEngine {
             logits: Vec::with_capacity(dims.s),
             attn_rows: (0..dims.h).map(|_| Vec::with_capacity(dims.s)).collect(),
             concat: vec![0; dims.h * dims.p],
+            chunk_concat: MatI8::zeros(0, 0),
         }
     }
 
@@ -557,6 +562,94 @@ impl DecodeEngine {
     /// shared output projection.
     pub fn last_concat(&self) -> &[i8] {
         &self.concat
+    }
+
+    /// One **prefill chunk** from pre-projected per-head Q/K/V stacks
+    /// (§Chunked-prefill): append `rows` prompt rows starting at stack
+    /// row `base`, each processed through the exact same per-row tail
+    /// ([`attend_tail`]) as a decode step — cache append, causal logit
+    /// row against everything cached so far, streaming softmax, A·V.
+    /// This IS the resumable partial-prefill state: cache fill is the
+    /// chunk cursor, and because row `len()` of a causal prefill
+    /// attends to positions `0..=len()` exactly as a decode step does,
+    /// chunked caches/outputs are bit-identical to one monolithic
+    /// [`DecodeEngine::prefill`] regardless of chunk boundaries
+    /// (pinned by `tests/prefill_chunked.rs`).
+    ///
+    /// The per-row concat outputs land in rows `0..rows` of the
+    /// engine's chunk-concat scratch for the fused caller's shared
+    /// output projection; [`DecodeEngine::last_concat`] is untouched.
+    /// Only the tail activity lands on `self.engine` — the caller
+    /// attributes this session's share of the fused projections.
+    ///
+    /// Fault injection: hits the `prefill.chunk` failpoint once per
+    /// chunk (ctx = `fail_tag`), the chunk-granular mirror of
+    /// `decode.step.tail`.
+    pub fn prefill_chunk_from_projected(
+        &mut self,
+        qkv: &[(MatI8, MatI8, MatI8)],
+        base: usize,
+        rows: usize,
+    ) {
+        assert_eq!(qkv.len(), self.dims.h, "one stacked Q/K/V triple per head");
+        assert!(rows >= 1, "empty prefill chunk");
+        assert!(self.len() + rows <= self.capacity(), "chunk beyond cache capacity");
+        let (h, p) = (self.dims.h, self.dims.p);
+        // Sized before the failpoint so a panicking chunk still leaves
+        // a `rows`-row scratch for the fused caller's (unread) gather.
+        self.chunk_concat.reset_for_overwrite(rows, h * p);
+        let _ = crate::util::failpoint::hit("prefill.chunk", self.fail_tag);
+        let rq = self.requants;
+        let weights = self.weights.clone();
+        for (hh, (q, k, v)) in qkv.iter().enumerate() {
+            assert!(base + rows <= q.rows(), "head {hh} chunk beyond stacked Q rows");
+            assert_eq!(k.rows(), q.rows(), "head {hh} K rows");
+            assert_eq!(v.rows(), q.rows(), "head {hh} V rows");
+            assert_eq!(q.cols(), p, "head {hh} projection width");
+        }
+        for j in 0..rows {
+            for (hh, ((q, k, v), hw)) in qkv.iter().zip(weights.heads.iter()).enumerate() {
+                attend_tail(
+                    &mut self.engine,
+                    &mut self.caches[hh],
+                    hw,
+                    &rq,
+                    q.row(base + j),
+                    k.row(base + j),
+                    v.row(base + j),
+                    &mut self.logits,
+                    &mut self.attn_rows[hh],
+                    &mut self.concat[hh * p..(hh + 1) * p],
+                );
+            }
+            self.chunk_concat.row_mut(j).copy_from_slice(&self.concat);
+        }
+    }
+
+    /// Standalone (self-projecting) prefill chunk: project `x`'s rows
+    /// through this engine's own Q/K/V weights, advance the caches by
+    /// [`DecodeEngine::prefill_chunk_from_projected`], and return the
+    /// chunk's output rows (rows×E) through the output projection —
+    /// the solo mirror of one fused-tick chunk member, and the oracle
+    /// building block of `tests/prefill_chunked.rs`. Concatenating
+    /// these outputs over any chunking of a prompt reproduces
+    /// [`DecodeEngine::prefill`]'s output matrix bit for bit.
+    pub fn prefill_chunk(&mut self, x: &MatI8) -> MatI8 {
+        assert_eq!(x.cols(), self.dims.e, "chunk row width");
+        assert!(x.rows() >= 1, "empty prefill chunk");
+        let rq = self.requants;
+        let weights = self.weights.clone();
+        let weights_t = self.weights_t.clone();
+        let mut qkv = Vec::with_capacity(self.dims.h);
+        for (hw, wts) in weights.heads.iter().zip(&weights_t.heads) {
+            let (wqt, wkt, wvt) = wts;
+            let q = self.engine.linear_pret(x, wqt, &hw.bq, rq.q);
+            let k = self.engine.linear_pret(x, wkt, &hw.bk, rq.k);
+            let v = self.engine.linear_pret(x, wvt, &hw.bv, rq.v);
+            qkv.push((q, k, v));
+        }
+        self.prefill_chunk_from_projected(&qkv, 0, x.rows());
+        self.engine.linear_pret(&self.chunk_concat, &weights_t.wot, &weights.bo, rq.o)
     }
 }
 
@@ -803,27 +896,43 @@ pub fn fused_prefill(
 ///
 /// # Dataflow per tick
 ///
-/// 1. Stack the N token rows into `x_all` (N×E).
+/// 1. Stack the members' input rows into `x_all` (M×E, M = Σ lens).
 /// 2. **Stage 1** — per head, one task on the [`WorkerPool`]: three
-///    fused R=N GEMMs (Wq/Wk/Wv) producing the stacked N×P Q/K/V.
+///    fused ragged GEMMs (Wq/Wk/Wv) producing the stacked M×P Q/K/V.
 /// 3. **Stage 2** — per session, one task: the O(S) cache-attention
-///    tail on the session's own engine
-///    ([`DecodeEngine::step_from_projected`]): cache append, logit
-///    row, streaming softmax, A·V.
-/// 4. **Stage 3** — gather the concat rows (N×H·P) and run the one
-///    fused output projection (Wo), scattering each session's output
-///    row into `out_all`.
+///    tail(s) on the session's own engine
+///    ([`DecodeEngine::step_from_projected`] for R=1 members,
+///    [`DecodeEngine::prefill_chunk_from_projected`] per row for
+///    R=chunk members): cache append, logit row, streaming softmax,
+///    A·V.
+/// 4. **Stage 3** — gather the concat rows (M×H·P) and run the one
+///    fused output projection (Wo), scattering each member's output
+///    rows into `out_all`.
+///
+/// # Mixed-R members (§Chunked-prefill)
+///
+/// A member's input slice may carry `r` stacked rows (`r·E` bytes, `r
+/// ≥ 1`): an **R=r prefill chunk** advancing a partial prefill sits in
+/// the same stack as the R=1 decode steps, sharing their weight
+/// streams — the tick has no prefill/decode split, only members
+/// advancing by different row counts. [`FusedStepBatch::out_row`]
+/// returns a member's **last** output row (the only row a generation
+/// loop consumes: the chunk that completes a prefill seeds the first
+/// feedback token exactly as a monolithic prefill's last output row
+/// does).
 ///
 /// Everything is **bit-identical** to N independent
-/// [`DecodeEngine::step_into`] calls — outputs, attention rows, cache
-/// bytes, and every subsequent step — pinned by `tests/step_fused.rs`
+/// [`DecodeEngine::step_into`] / [`DecodeEngine::prefill_chunk`] calls
+/// — outputs, attention rows, cache bytes, and every subsequent step —
+/// pinned by `tests/step_fused.rs` and `tests/prefill_chunked.rs`
 /// across ragged cache fills and all dispatch paths.
 ///
 /// Accounting mirrors the fused-prefill split: each engine's activity
-/// is reset and left holding exactly its session's share (its tail
-/// plus its R=1 slice of every projection pass, streams excluded);
-/// the 3·H + 1 weight streams are charged **once per tick** into
-/// [`FusedStepBatch::shared`].
+/// is reset and left holding exactly its session's share (its tails
+/// plus its R=lens[i] slice of every projection pass, streams
+/// excluded); the 3·H + 1 weight streams are charged **once per
+/// tick** into [`FusedStepBatch::shared`], however many prompt rows
+/// rode along.
 ///
 /// §Perf: every buffer lives here and is grown on first use, and the
 /// pool fan-outs ride the allocation-free [`IndexedScope`] path — a
@@ -831,15 +940,19 @@ pub fn fused_prefill(
 /// (`tests/decode_alloc.rs`), so the coordinator keeps one of these
 /// per worker and ticks at line rate.
 pub struct FusedStepBatch {
-    /// N×E stacked token rows.
+    /// M×E stacked input rows (M = Σ lens).
     x_all: MatI8,
-    /// Per head: the batch-wide stacked N×P Q/K/V of stage 1.
+    /// Per-member row counts (1 for a decode step, chunk_rows for a
+    /// prefill chunk) and row offsets into the M-row stack.
+    lens: Vec<usize>,
+    base: Vec<usize>,
+    /// Per head: the batch-wide stacked M×P Q/K/V of stage 1.
     qkv: Vec<(MatI8, MatI8, MatI8)>,
     /// Per head: the task-private engine running its three GEMMs.
     head_engines: Vec<TileEngine>,
     /// Per head: (per-session shares, stream-only share) of stage 1.
     head_acc: Vec<(Vec<Activity>, Activity)>,
-    /// N×(H·P) gathered concat rows; N×E fused output.
+    /// M×(H·P) gathered concat rows; M×E fused output.
     concat_all: MatI8,
     out_all: MatI8,
     /// Merged per-session projection shares (stages 1 + 3).
@@ -856,6 +969,8 @@ impl FusedStepBatch {
     pub fn new() -> Self {
         Self {
             x_all: MatI8::zeros(0, 0),
+            lens: Vec::new(),
+            base: Vec::new(),
             qkv: Vec::new(),
             head_engines: Vec::new(),
             head_acc: Vec::new(),
@@ -868,29 +983,36 @@ impl FusedStepBatch {
         }
     }
 
-    /// Run one fused tick: session `i` consumes token row `rows[i]`.
-    /// Afterwards [`FusedStepBatch::out_row`]`(i)` holds its output
-    /// row, [`FusedStepBatch::shared`] the once-per-tick weight-stream
-    /// activity, and each engine's activity its own share (see the
-    /// type docs).
+    /// Run one fused tick: member `i` consumes input slice `rows[i]` —
+    /// `lens[i]·E` bytes, where `lens[i] = 1` is a decode step and
+    /// `lens[i] > 1` a prefill chunk (§Chunked-prefill — the slice
+    /// length is the only signal; the tick needs no semantic split).
+    /// Afterwards [`FusedStepBatch::out_row`]`(i)` holds its last
+    /// output row, [`FusedStepBatch::shared`] the once-per-tick
+    /// weight-stream activity, and each engine's activity its own
+    /// share (see the type docs).
     ///
     /// Fault containment: a panic inside one session's stage-2 attend
-    /// tail is caught and reported in [`TickReport::poisoned`] instead
-    /// of unwinding the tick — every *other* session's tail still runs
-    /// on its own engine against the same stage-1 projections, and the
-    /// stage-3 output projection is row-independent, so survivor
-    /// outputs are bit-identical to a fault-free tick (pinned by
-    /// `tests/chaos.rs`). Panics outside stage 2 (shared projection
-    /// GEMMs — nothing session-specific can fail there) still unwind.
+    /// tail (or chunk) is caught and reported in
+    /// [`TickReport::poisoned`] instead of unwinding the tick — every
+    /// *other* session's tails still run on its own engine against the
+    /// same stage-1 projections, and the stage-3 output projection is
+    /// row-independent, so survivor outputs are bit-identical to a
+    /// fault-free tick (pinned by `tests/chaos.rs`). Panics outside
+    /// stage 2 (shared projection GEMMs — nothing session-specific can
+    /// fail there) still unwind.
     pub fn tick(&mut self, engines: &mut [&mut DecodeEngine], rows: &[&[i8]]) -> TickReport {
         let n = engines.len();
-        assert_eq!(n, rows.len(), "one token row per session");
+        assert_eq!(n, rows.len(), "one input slice per session");
         assert!(n >= 1, "fused step needs at least one session");
         let dims = engines[0].dims;
         let cfg = engines[0].engine.cfg;
         let rq = engines[0].requants;
         let weights = engines[0].weights.clone();
         let weights_t = engines[0].weights_t.clone();
+        self.lens.clear();
+        self.base.clear();
+        let mut m_total = 0usize;
         for (i, (e, row)) in engines.iter().zip(rows).enumerate() {
             assert!(
                 Arc::ptr_eq(&e.weights, &weights) && Arc::ptr_eq(&e.weights_t, &weights_t),
@@ -902,29 +1024,42 @@ impl FusedStepBatch {
                 e.engine.cfg == cfg,
                 "fused step requires every session to share one ItaConfig (session {i})"
             );
-            assert!(e.len() < e.capacity(), "KV cache full (session {i})");
-            assert_eq!(row.len(), dims.e, "token row width (session {i})");
+            assert!(
+                !row.is_empty() && row.len() % dims.e == 0,
+                "input slice must be a nonzero multiple of E rows (session {i})"
+            );
+            let r = row.len() / dims.e;
+            assert!(e.len() + r <= e.capacity(), "input beyond KV capacity (session {i})");
+            self.lens.push(r);
+            self.base.push(m_total);
+            m_total += r;
         }
 
         // ---- Block reservation: fallible, serial, before compute ----
-        // Every session's next position is reserved on the (possibly
-        // shared, bounded) arena *up front*, so pool exhaustion is a
-        // per-session report instead of a mid-tail panic. Serial in
+        // Every member's next lens[i] positions are reserved on the
+        // (possibly shared, bounded) arena *up front*, so pool
+        // exhaustion is a per-session report instead of a mid-tail
+        // panic — for a chunk this is the per-chunk (not whole-prompt)
+        // reservation of the chunked-prefill memory story. Serial in
         // index order: deterministic victims, no free-list races. The
         // fault-free case pushes nothing (an empty Vec never
         // allocates), preserving the tick's zero-allocation contract.
         let mut exhausted: Vec<usize> = Vec::new();
         for (i, e) in engines.iter_mut().enumerate() {
-            if e.reserve_for(e.len() + 1).is_err() {
+            if e.reserve_for(e.len() + self.lens[i]).is_err() {
                 exhausted.push(i);
             }
         }
 
-        // Scratch sizing: allocates only while n / dims still grow —
+        // Scratch sizing: allocates only while m / dims still grow —
         // a steady-state tick reuses everything below.
-        self.x_all.reset_for_overwrite(n, dims.e);
+        self.x_all.reset_for_overwrite(m_total, dims.e);
         for (i, row) in rows.iter().enumerate() {
-            self.x_all.row_mut(i).copy_from_slice(row);
+            for j in 0..self.lens[i] {
+                self.x_all
+                    .row_mut(self.base[i] + j)
+                    .copy_from_slice(&row[j * dims.e..(j + 1) * dims.e]);
+            }
         }
         if self.head_engines.first().map(|e| e.cfg != cfg).unwrap_or(false)
             || self.out_engine.as_ref().map(|e| e.cfg != cfg).unwrap_or(false)
@@ -950,17 +1085,20 @@ impl FusedStepBatch {
         }
         self.shared = Activity::default();
 
-        // ---- Stage 1: one fused R=N GEMM per projection weight ------
+        // ---- Stage 1: one fused ragged GEMM per projection weight ---
         // One index per head; its three weight matrices are streamed
         // back to back on its persistent engine. Indexed fan-out:
         // executors claim head indices, DisjointSlots turns claim
         // uniqueness into disjoint &mut access (no boxed tasks — the
-        // zero-alloc contract).
+        // zero-alloc contract). The lens-aware pass charges each
+        // member its own R=lens[i] tile pass, so a chunk's projection
+        // share is exactly what its standalone chunk would record.
         {
             let qkv = DisjointSlots::new(&mut self.qkv[..dims.h]);
             let engs = DisjointSlots::new(&mut self.head_engines[..dims.h]);
             let accs = DisjointSlots::new(&mut self.head_acc[..dims.h]);
             let x_all = &self.x_all;
+            let lens = &self.lens[..];
             let (w, wt) = (&weights, &weights_t);
             WorkerPool::global().run_indexed(&self.scope, dims.h, &|h| {
                 // SAFETY: run_indexed hands index h to exactly one
@@ -971,9 +1109,9 @@ impl FusedStepBatch {
                 eng.reset_activity();
                 let hw = &w.heads[h];
                 let (wqt, wkt, wvt) = &wt.heads[h];
-                eng.linear_rows_pret_multi(x_all, wqt, &hw.bq, rq.q, per_seq, stream, q);
-                eng.linear_rows_pret_multi(x_all, wkt, &hw.bk, rq.k, per_seq, stream, k);
-                eng.linear_rows_pret_multi(x_all, wvt, &hw.bv, rq.v, per_seq, stream, v);
+                eng.linear_lens_pret_multi(x_all, lens, wqt, &hw.bq, rq.q, per_seq, stream, q);
+                eng.linear_lens_pret_multi(x_all, lens, wkt, &hw.bk, rq.k, per_seq, stream, k);
+                eng.linear_lens_pret_multi(x_all, lens, wvt, &hw.bv, rq.v, per_seq, stream, v);
             });
         }
         self.per_seq.clear();
@@ -995,10 +1133,12 @@ impl FusedStepBatch {
             let qkv = &self.qkv[..dims.h];
             let engs = DisjointSlots::new(engines);
             let exhausted = &exhausted;
+            let lens = &self.lens[..];
+            let base = &self.base[..];
             WorkerPool::global()
                 .try_run_indexed(&self.scope, n, &|i| {
                     // An exhausted session's tail is skipped outright:
-                    // its caches are untouched, its token row stays
+                    // its caches are untouched, its input rows stay
                     // unconsumed (the router re-ticks it after
                     // preemption frees blocks), and its out_row slot
                     // holds garbage nobody reads.
@@ -1008,23 +1148,41 @@ impl FusedStepBatch {
                     // SAFETY: one executor per session index.
                     let eng = unsafe { engs.slot(i) };
                     eng.engine.reset_activity();
-                    eng.step_from_projected(qkv, i);
+                    if lens[i] == 1 {
+                        eng.step_from_projected(qkv, base[i]);
+                    } else {
+                        eng.prefill_chunk_from_projected(qkv, base[i], lens[i]);
+                    }
                 })
                 .err()
         };
-        self.concat_all.reset_for_overwrite(n, dims.h * dims.p);
+        self.concat_all.reset_for_overwrite(m_total, dims.h * dims.p);
+        let poisoned: &[usize] = failure.as_ref().map(|f| f.indices.as_slice()).unwrap_or(&[]);
         for (i, eng) in engines.iter().enumerate() {
-            // A poisoned session's concat scratch holds stale bytes —
-            // its stage-3 row computes garbage that nobody reads; the
-            // GEMM is row-independent, so survivor rows are unaffected.
-            self.concat_all.row_mut(i).copy_from_slice(eng.last_concat());
+            let (b, r) = (self.base[i], self.lens[i]);
+            if r == 1 {
+                // A poisoned step's concat scratch holds stale bytes —
+                // its stage-3 row computes garbage that nobody reads;
+                // the GEMM is row-independent, so survivor rows are
+                // unaffected.
+                self.concat_all.row_mut(b).copy_from_slice(eng.last_concat());
+            } else if exhausted.binary_search(&i).is_err() && poisoned.binary_search(&i).is_err() {
+                // Chunk members: gather the chunk's concat rows. A
+                // skipped (exhausted/poisoned) chunk's scratch may be
+                // stale-shaped, so leave its stage-3 rows as the
+                // garbage nobody reads.
+                for j in 0..r {
+                    self.concat_all.row_mut(b + j).copy_from_slice(eng.chunk_concat.row(j));
+                }
+            }
         }
 
         // ---- Stage 3: the one fused output projection ---------------
         let out_engine = self.out_engine.get_or_insert_with(|| TileEngine::new(cfg));
         out_engine.reset_activity();
-        out_engine.linear_rows_pret_multi(
+        out_engine.linear_lens_pret_multi(
             &self.concat_all,
+            &self.lens,
             &weights_t.wot,
             &weights.bo,
             rq.o,
@@ -1042,9 +1200,20 @@ impl FusedStepBatch {
         TickReport { poisoned: failure.map(|f| f.indices).unwrap_or_default(), exhausted }
     }
 
-    /// Session `i`'s output row (length E) of the most recent tick.
+    /// Member `i`'s **last** output row (length E) of the most recent
+    /// tick — the row a generation loop consumes. For an R=1 decode
+    /// step that is its only output row; for an R=r prefill chunk it
+    /// is the chunk's final row (the one that, on the prompt's last
+    /// chunk, seeds the first feedback token bit-identically to a
+    /// monolithic prefill's last output row).
     pub fn out_row(&self, i: usize) -> &[i8] {
-        self.out_all.row(i)
+        self.out_all.row(self.base[i] + self.lens[i] - 1)
+    }
+
+    /// Member `i`'s full output block (lens[i]×E) of the most recent
+    /// tick (allocates — a test/debug accessor, not a serving path).
+    pub fn out_block(&self, i: usize) -> MatI8 {
+        self.out_all.block_padded(self.base[i], 0, self.lens[i], self.out_all.cols())
     }
 
     /// The batch-shared activity of the most recent tick: the

@@ -29,6 +29,7 @@
 //! waiting_served_pct = 120
 //! max_waiting_ticks = 4
 //! stream_buffer = 32
+//! prefill_chunk_rows = 8
 //! ```
 
 pub mod toml;
@@ -102,6 +103,15 @@ pub struct ServerConfig {
     /// youngest session. Must cover at least one worst-case session
     /// (H · ceil(S / block_size)) so a lone generation always fits.
     pub kv_pool_blocks: usize,
+    /// Chunked-prefill row bound: a prompt longer than this many rows
+    /// is advanced chunk-by-chunk inside the router's fused tick, each
+    /// chunk co-ticking with the live decode steps instead of
+    /// monopolizing a whole pass. Smaller chunks bound the worst-case
+    /// step latency a joining long prompt can inflict (the SLO knob);
+    /// larger chunks amortize more weight streams per prompt row.
+    /// `usize::MAX` (the default) prefills whole prompts in one chunk;
+    /// 0 is rejected by [`SystemConfig::validate`].
+    pub prefill_chunk_rows: usize,
 }
 
 impl Default for ServerConfig {
@@ -118,6 +128,7 @@ impl Default for ServerConfig {
             stream_buffer: 32,
             kv_block_size: 0,
             kv_pool_blocks: 0,
+            prefill_chunk_rows: usize::MAX,
         }
     }
 }
@@ -267,6 +278,12 @@ impl SystemConfig {
                 "kv_pool_blocks",
                 def.server.kv_pool_blocks,
             )?,
+            prefill_chunk_rows: get_usize(
+                &doc,
+                "server",
+                "prefill_chunk_rows",
+                def.server.prefill_chunk_rows,
+            )?,
         };
 
         let cfg = Self { accelerator: acc, model, server };
@@ -339,6 +356,14 @@ impl SystemConfig {
         }
         if self.server.workers == 0 || self.server.max_batch == 0 {
             return Err(ConfigError::Invalid("server workers/max_batch must be positive".into()));
+        }
+        // A zero-row chunk could never consume its prompt: the router
+        // would tick the partial prefill forever without progress.
+        if self.server.prefill_chunk_rows == 0 {
+            return Err(ConfigError::Invalid(
+                "prefill_chunk_rows must be positive (use a large value to disable chunking)"
+                    .into(),
+            ));
         }
         // The paged-KV progress guarantee: one worst-case session must
         // always fit the pool, or a preempted generation could never
@@ -418,6 +443,20 @@ mod tests {
         assert_eq!(cfg.server.waiting_served_pct, 0);
         assert_eq!(cfg.server.max_waiting_ticks, 1);
         assert_eq!(cfg.server.stream_buffer, 4);
+    }
+
+    #[test]
+    fn parse_chunked_prefill_knob() {
+        let cfg = SystemConfig::from_toml("[server]\nprefill_chunk_rows = 8\n").unwrap();
+        assert_eq!(cfg.server.prefill_chunk_rows, 8);
+        // Default: unchunked (whole-prompt prefill in one tick member).
+        assert_eq!(SystemConfig::default().server.prefill_chunk_rows, usize::MAX);
+    }
+
+    #[test]
+    fn rejects_zero_chunk_rows() {
+        let err = SystemConfig::from_toml("[server]\nprefill_chunk_rows = 0\n").unwrap_err();
+        assert!(err.to_string().contains("prefill_chunk_rows"), "{err}");
     }
 
     #[test]

@@ -642,12 +642,22 @@ fn release_busy(sessions: &SessionTable, session: SessionId) {
 /// closed-loop feedback row, and at most one undelivered token (a full
 /// stream buffer pauses the session — it sits out ticks until the
 /// caller drains, instead of stalling the loop).
+///
+/// A generation is admitted **before** any prefill compute runs
+/// (§Chunked-prefill): while `prefill_done` is false, each tick feeds
+/// the next `prefill_chunk_rows`-row slice of the prompt into the same
+/// fused tick the decode sessions ride, so a long prompt never
+/// monopolizes the loop. The engine's own `len()` tracks how many
+/// prompt rows have been consumed — parking a mid-prefill session
+/// resets it to zero and the restore pass simply re-chunks from the
+/// start (bit-identical, like any recompute-restore).
 struct RunningGen<'a> {
     session: SessionId,
     tx: stream::Sender<TokenResult>,
     engine: Box<DecodeEngine>,
     guard: BusyGuard<'a>,
     /// Next tick's input row (the previous output — closed loop).
+    /// Empty until the prefill phase completes.
     next: Vec<i8>,
     /// Token produced but not yet accepted by the stream buffer.
     pending: Option<TokenItem>,
@@ -657,8 +667,19 @@ struct RunningGen<'a> {
     /// Every input row this generation has consumed, flat (`dims.e`
     /// columns): the prompt, then each feedback row as its tick lands.
     /// Preemption's recompute-restore prefills exactly this matrix, so
-    /// the rebuilt KV cache is bit-identical to the evicted one.
+    /// the rebuilt KV cache is bit-identical to the evicted one. The
+    /// chunked prefill phase reads its input slices straight out of
+    /// the leading `prompt_rows` rows.
     history: Vec<i8>,
+    /// Rows in the prompt; `engine.len() < prompt_rows` means the
+    /// prefill phase is still consuming chunks.
+    prompt_rows: usize,
+    /// The whole prompt is in the KV cache and `next` holds a real
+    /// feedback row; ticks now emit tokens.
+    prefill_done: bool,
+    /// Consecutive ticks this (decode-phase) session sat out on pool
+    /// exhaustion; feeds the `max_step_stall_ticks` gauge.
+    stall_ticks: u64,
     /// Preempted: KV blocks released under memory pressure. The
     /// session sits out ticks (its stream stalls, never errors) until
     /// the restore pass wins its blocks back.
@@ -684,13 +705,28 @@ fn spawn_router(
 /// of generations. Every pass it: drains the ingress, sheds waiting
 /// jobs whose deadline passed or whose caller vanished
 /// (shed-before-compute, exactly like the worker path), admits
-/// waiters under the waiting/served-ratio policy (admission bursts
-/// prefill FUSED — one projection GEMM per weight), delivers any
-/// tokens a previously-full stream buffer held back, reaps finished
-/// and cancelled sessions (their slots are reusable by the very next
-/// tick), then runs ONE fused tick over the active set — a single
-/// stacked row-GEMM per projection weight regardless of join/leave
-/// churn, so throughput never collapses back to poll-window batching.
+/// waiters under the waiting/served-ratio policy (admission is
+/// compute-free — it only reserves the first prefill chunk's blocks),
+/// delivers any tokens a previously-full stream buffer held back,
+/// reaps finished and cancelled sessions (their slots are reusable by
+/// the very next tick), then runs ONE fused tick over the active set —
+/// a single stacked row-GEMM per projection weight regardless of
+/// join/leave churn, so throughput never collapses back to poll-window
+/// batching.
+///
+/// **Chunked prefill (§Chunked-prefill):** prompts are not prefilled
+/// at admission. A generation whose `prefill_done` is false
+/// contributes its next `prefill_chunk_rows`-row prompt slice to the
+/// SAME fused tick the decode sessions ride — the tick stacks mixed
+/// row counts into one row-GEMM per projection weight, so a chunk is
+/// just a taller member. Every tick that carries a chunk therefore
+/// also advances every unpaused decode session: the worst inter-token
+/// stall a long prompt can inflict is bounded by one chunk's latency,
+/// not the whole prompt's (the `max_step_stall_ticks` gauge witnesses
+/// this — it stays 0 unless pool exhaustion, not prefill, pauses a
+/// decoder). Chunked and monolithic prefill are bit-identical
+/// (`tests/prefill_chunked.rs`), so the knob trades throughput
+/// against stall SLO without touching outputs.
 ///
 /// Fault containment mirrors PR 6's worker path: a stage-2 tail panic
 /// poisons only its own session ([`TickReport::poisoned`]
@@ -720,6 +756,10 @@ fn run_router(
     let max_waiting_ticks = config.server.max_waiting_ticks.max(1);
     let watchdog = Duration::from_micros(config.server.watchdog_us);
     let max_running = config.server.max_batch;
+    // `validate()` rejects 0, but a hand-built config must not hang
+    // the prefill phase (a zero-row chunk never consumes its prompt).
+    let chunk_rows = config.server.prefill_chunk_rows.max(1);
+    let e_cols = config.model.dims.e;
     let mut waiting: VecDeque<GenerateJob> = VecDeque::new();
     let mut running: Vec<RunningGen> = Vec::new();
     let mut batch = FusedStepBatch::new();
@@ -781,13 +821,28 @@ fn run_router(
         // cache bytes (decode-parity invariant), outputs discarded
         // (already streamed). Still-starved sessions just stay parked;
         // a restore that panics poisons only its own session.
+        //
+        // A session parked MID-PREFILL has nothing to recompute: its
+        // chunk progress reset with the released blocks (`len() == 0`)
+        // and the unified tick below re-chunks the prompt from the
+        // start — bit-identical by the chunk-composition invariant.
+        // Unparking it only needs the FIRST chunk's reservation back.
         let mut i = 0;
         while i < running.len() {
             if !running[i].parked {
                 i += 1;
                 continue;
             }
-            let e_cols = config.model.dims.e;
+            if !running[i].prefill_done {
+                let g = &mut running[i];
+                let first = g.prompt_rows.min(chunk_rows);
+                if g.engine.reserve_for(first).is_ok() {
+                    g.parked = false;
+                    metrics.restores.inc();
+                }
+                i += 1;
+                continue;
+            }
             let rows = running[i].history.len() / e_cols;
             if running[i].engine.reserve_for(rows).is_err() {
                 i += 1;
@@ -866,7 +921,7 @@ fn run_router(
                 g.guard.finish(g.engine);
                 continue;
             }
-            if g.emitted >= g.max_new_tokens && g.pending.is_none() {
+            if g.prefill_done && g.emitted >= g.max_new_tokens && g.pending.is_none() {
                 let g = running.remove(i);
                 metrics.streams_completed.inc();
                 metrics.requests_completed.inc();
@@ -882,12 +937,16 @@ fn run_router(
         // ---- One fused tick over the active set -----------------------
         // Paused sessions (full stream buffer), parked (preempted)
         // sessions, and finished-awaiting-delivery sessions sit this
-        // tick out; everyone else stacks into one row-GEMM per
-        // projection weight.
+        // tick out; everyone else — mid-prefill chunkers and decode
+        // steppers alike — stacks into one row-GEMM per projection
+        // weight.
+        let is_active = |g: &RunningGen| {
+            g.pending.is_none() && !g.parked && (!g.prefill_done || g.emitted < g.max_new_tokens)
+        };
         let active: Vec<usize> = running
             .iter()
             .enumerate()
-            .filter(|(_, g)| g.pending.is_none() && !g.parked && g.emitted < g.max_new_tokens)
+            .filter(|(_, g)| is_active(g))
             .map(|(i, _)| i)
             .collect();
         if active.is_empty() {
@@ -918,10 +977,24 @@ fn run_router(
             let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(active.len());
             let mut rows: Vec<&[i8]> = Vec::with_capacity(active.len());
             for g in running.iter_mut() {
-                if g.pending.is_none() && !g.parked && g.emitted < g.max_new_tokens {
-                    let RunningGen { engine, next, .. } = g;
-                    engines.push(&mut **engine);
-                    rows.push(&next[..]);
+                if g.pending.is_none()
+                    && !g.parked
+                    && (!g.prefill_done || g.emitted < g.max_new_tokens)
+                {
+                    let RunningGen { engine, next, history, prompt_rows, prefill_done, .. } = g;
+                    if *prefill_done {
+                        engines.push(&mut **engine);
+                        rows.push(&next[..]);
+                    } else {
+                        // Next unconsumed prompt slice: the engine's
+                        // fill level IS the chunk cursor, so a parked-
+                        // and-restored session re-chunks from wherever
+                        // its (empty) cache says.
+                        let consumed = engine.len();
+                        let take = (*prompt_rows - consumed).min(chunk_rows);
+                        engines.push(&mut **engine);
+                        rows.push(&history[consumed * e_cols..(consumed + take) * e_cols]);
+                    }
                 }
             }
             batch.tick(&mut engines, &rows)
@@ -944,15 +1017,22 @@ fn run_router(
                     if report.exhausted.binary_search(&k).is_ok() {
                         // Pool exhaustion is recoverable, not a fault:
                         // this session's caches are untouched and its
-                        // input row was never consumed (`g.next` stays
-                        // valid) — it retries once the preemption
-                        // below frees blocks.
+                        // input (feedback row or prompt slice) was
+                        // never consumed — it retries once the
+                        // preemption below frees blocks. A starved
+                        // DECODE session sat out a tick: that is the
+                        // only way the bounded-stall invariant bends,
+                        // so it feeds the witness gauge.
+                        let g = &mut running[ri];
+                        if g.prefill_done {
+                            g.stall_ticks += 1;
+                            if g.stall_ticks > metrics.max_step_stall_ticks.get() {
+                                metrics.max_step_stall_ticks.set(g.stall_ticks);
+                            }
+                        }
                         continue;
                     }
                     let g = &mut running[ri];
-                    // The row this tick consumed joins the recompute-
-                    // restore history before the output replaces it.
-                    g.history.extend_from_slice(&g.next);
                     let activity = g.engine.engine.activity;
                     let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity)
                         .total()
@@ -960,6 +1040,26 @@ fn run_router(
                     let cycles = activity.cycles + activity.stall_cycles;
                     metrics.sim_cycles.add(cycles);
                     metrics.sim_energy_pj.add((energy * 1e12) as u64);
+                    if !g.prefill_done {
+                        // Prefill phase: the tick consumed one prompt
+                        // chunk (already part of `history`). No token
+                        // leaves; the stream starts once the last
+                        // chunk lands, seeded by its final output row
+                        // — the same row monolithic prefill would
+                        // have produced (chunk-composition invariant).
+                        metrics.prefill_chunks.inc();
+                        if g.engine.len() >= g.prompt_rows {
+                            g.prefill_done = true;
+                            metrics.prefills_completed.inc();
+                            g.next.clear();
+                            g.next.extend_from_slice(batch.out_row(k));
+                        }
+                        continue;
+                    }
+                    // The row this tick consumed joins the recompute-
+                    // restore history before the output replaces it.
+                    g.history.extend_from_slice(&g.next);
+                    g.stall_ticks = 0;
                     let row = batch.out_row(k).to_vec();
                     g.next.clear();
                     g.next.extend_from_slice(&row);
@@ -991,10 +1091,13 @@ fn run_router(
                     // bit-exactly, via the recompute pass above. The
                     // victim may be an exhausted session itself — then
                     // parking it IS the resolution.
+                    // A mid-prefill victim loses its chunk progress
+                    // with its blocks (`len()` → 0) and re-chunks
+                    // from the start after restore — bit-identical.
                     if let Some(victim) = running
                         .iter_mut()
                         .rev()
-                        .find(|g| !g.parked && g.emitted < g.max_new_tokens)
+                        .find(|g| !g.parked && (!g.prefill_done || g.emitted < g.max_new_tokens))
                     {
                         victim.engine.release_blocks();
                         victim.parked = true;
@@ -1024,161 +1127,91 @@ fn run_router(
 
 /// Admit a burst of waiting generations: take each session's engine
 /// out of the table (one lock, mirroring the worker path's shed-and-
-/// take), then prefill — FUSED when the burst has >= 2 members (one
-/// projection GEMM per weight matrix, §Prefill-batching), plain
-/// otherwise. Returns the generations that made it into the running
-/// set plus the jobs **deferred on memory** (the block pool could not
-/// cover their prompt — their engines went straight back into the
-/// table with the busy flag still held, and the caller requeues them);
-/// failures answer on their streams and never join.
+/// take) and reserve the FIRST prefill chunk's blocks fallibly. No
+/// prefill compute runs here (§Chunked-prefill): every admitted
+/// prompt — however long — joins the running set immediately and the
+/// unified tick advances it chunk-by-chunk alongside the live
+/// decoders, so admission never pauses anyone. Returns the
+/// generations that joined plus the jobs **deferred on memory** (the
+/// pool could not cover even their first chunk — engines back in the
+/// table with the busy flag still held, and the caller requeues
+/// them); failures answer on their streams and never join.
 fn admit_generations<'a>(
     config: &SystemConfig,
     jobs: Vec<GenerateJob>,
     sessions: &'a SessionTable,
     metrics: &'a ServerMetrics,
 ) -> (Vec<RunningGen<'a>>, Vec<GenerateJob>) {
-    let mut taken: Vec<(GenerateJob, Box<DecodeEngine>, BusyGuard<'a>)> =
-        Vec::with_capacity(jobs.len());
+    let chunk_rows = config.server.prefill_chunk_rows.max(1);
+    let mut newly: Vec<RunningGen<'a>> = Vec::with_capacity(jobs.len());
     let mut deferred: Vec<GenerateJob> = Vec::new();
-    {
-        let mut table = lock_table(sessions);
-        for job in jobs {
-            match table.get_mut(&job.session) {
+    let mut table = lock_table(sessions);
+    for job in jobs {
+        match table.get_mut(&job.session) {
+            None => {
+                let _ = job.tx.try_send(Err(SubmitError::UnknownSession));
+            }
+            Some(slot) => match slot.engine.take() {
+                Some(mut engine) => {
+                    // Memory gate (§Paged-KV): reserve the first
+                    // chunk's blocks FALLIBLY before committing —
+                    // later chunks reserve per-tick inside the fused
+                    // tick, where exhaustion surfaces as a
+                    // recoverable `TickReport::exhausted` verdict. A
+                    // job the pool cannot cover at all is deferred —
+                    // engine back in the slot untouched (the failed
+                    // reserve rolled its draws back), busy flag still
+                    // held, no stream verdict: the caller just waits.
+                    let prompt_rows = job.prompt.rows();
+                    if engine.reserve_for(prompt_rows.min(chunk_rows)).is_err() {
+                        slot.engine = Some(engine);
+                        metrics.admissions_deferred_on_memory.inc();
+                        deferred.push(job);
+                        continue;
+                    }
+                    // Tag the engine so an injected fault can
+                    // target one session out of a fused tick.
+                    engine.fail_tag = job.session;
+                    if prompt_rows > chunk_rows {
+                        metrics.chunked_prefill_sessions.inc();
+                    }
+                    let guard = BusyGuard::new(sessions, metrics, job.session);
+                    // Seed the recompute-restore history with the
+                    // prompt rows — the chunk loop reads its input
+                    // slices from these; each decode tick then
+                    // appends its consumed feedback row.
+                    let mut history = Vec::with_capacity(
+                        (prompt_rows + job.max_new_tokens) * job.prompt.cols(),
+                    );
+                    for r in 0..prompt_rows {
+                        history.extend_from_slice(job.prompt.row(r));
+                    }
+                    newly.push(RunningGen {
+                        session: job.session,
+                        tx: job.tx,
+                        engine,
+                        guard,
+                        next: Vec::new(),
+                        pending: None,
+                        emitted: 0,
+                        max_new_tokens: job.max_new_tokens,
+                        enqueued: job.enqueued,
+                        history,
+                        prompt_rows,
+                        prefill_done: false,
+                        stall_ticks: 0,
+                        parked: false,
+                    });
+                }
                 None => {
-                    let _ = job.tx.try_send(Err(SubmitError::UnknownSession));
-                }
-                Some(slot) => match slot.engine.take() {
-                    Some(mut engine) => {
-                        // Memory gate (§Paged-KV): reserve the whole
-                        // prompt's blocks FALLIBLY before committing,
-                        // so an admitted prefill can never hit the
-                        // infallible in-push allocation. A job the
-                        // pool cannot cover is deferred — engine back
-                        // in the slot untouched (the failed reserve
-                        // rolled its draws back), busy flag still
-                        // held, no stream verdict: the caller just
-                        // waits longer.
-                        if engine.reserve_for(job.prompt.rows()).is_err() {
-                            slot.engine = Some(engine);
-                            metrics.admissions_deferred_on_memory.inc();
-                            deferred.push(job);
-                            continue;
-                        }
-                        // Tag the engine so an injected fault can
-                        // target one session out of a fused tick.
-                        engine.fail_tag = job.session;
-                        let guard = BusyGuard::new(sessions, metrics, job.session);
-                        taken.push((job, engine, guard));
-                    }
-                    None => {
-                        slot.busy = false;
-                        slot.poisoned = true;
-                        let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
-                    }
-                },
-            }
-        }
-    }
-    let n = taken.len();
-    if n == 0 {
-        return (Vec::new(), deferred);
-    }
-    if n >= 2 {
-        // Admission burst: one fused prefill pass. Containment is
-        // coarse like `execute_fused_prefills` — the stacked GEMMs
-        // interleave every member, so a panic quarantines the group.
-        let result = catch_unwind(AssertUnwindSafe(|| {
-            let mut engines: Vec<&mut DecodeEngine> = Vec::with_capacity(n);
-            let mut inputs: Vec<&MatI8> = Vec::with_capacity(n);
-            for (job, engine, _) in taken.iter_mut() {
-                inputs.push(&job.prompt);
-                engines.push(&mut **engine);
-            }
-            fused_prefill(&mut engines, &inputs)
-        }));
-        match result {
-            Ok(result) => {
-                metrics.fused_prefill_batches.inc();
-                metrics.fused_prefill_sessions.add(n as u64);
-                let shared_energy =
-                    EnergyBreakdown::for_activity(&config.accelerator, &result.shared).total();
-                let share = shared_energy / n as f64;
-                let newly = taken
-                    .into_iter()
-                    .zip(result.outputs)
-                    .map(|((job, engine, guard), out)| {
-                        finish_admission(config, metrics, job, engine, guard, &out.out, share)
-                    })
-                    .collect();
-                (newly, deferred)
-            }
-            Err(_) => {
-                for (job, _, guard) in taken {
+                    slot.busy = false;
+                    slot.poisoned = true;
                     let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
-                    guard.poison();
                 }
-                (Vec::new(), deferred)
-            }
-        }
-    } else {
-        // Lone admission: plain prefill, per-session containment.
-        let (job, mut engine, guard) = taken.pop().expect("n == 1");
-        let result = catch_unwind(AssertUnwindSafe(|| {
-            engine.engine.reset_activity();
-            let out = engine.prefill(&job.prompt).out;
-            (engine, out)
-        }));
-        match result {
-            Ok((engine, out)) => {
-                (vec![finish_admission(config, metrics, job, engine, guard, &out, 0.0)], deferred)
-            }
-            Err(_) => {
-                let _ = job.tx.try_send(Err(SubmitError::SessionPoisoned));
-                guard.poison();
-                (Vec::new(), deferred)
-            }
+            },
         }
     }
-}
-
-/// Account one admitted generation's prefill and seed its closed loop:
-/// the prompt's last output row is the first tick's input.
-fn finish_admission<'a>(
-    config: &SystemConfig,
-    metrics: &ServerMetrics,
-    job: GenerateJob,
-    engine: Box<DecodeEngine>,
-    guard: BusyGuard<'a>,
-    out: &MatI8,
-    share: f64,
-) -> RunningGen<'a> {
-    let activity = engine.engine.activity;
-    let energy = EnergyBreakdown::for_activity(&config.accelerator, &activity).total() + share;
-    let cycles = activity.cycles + activity.stall_cycles;
-    metrics.sim_cycles.add(cycles);
-    metrics.sim_energy_pj.add((energy * 1e12) as u64);
-    metrics.prefills_completed.inc();
-    let next = out.row(out.rows() - 1).to_vec();
-    // Seed the recompute-restore history with the prompt rows; each
-    // tick appends its consumed feedback row.
-    let mut history =
-        Vec::with_capacity((job.prompt.rows() + job.max_new_tokens) * job.prompt.cols());
-    for r in 0..job.prompt.rows() {
-        history.extend_from_slice(job.prompt.row(r));
-    }
-    RunningGen {
-        session: job.session,
-        tx: job.tx,
-        engine,
-        guard,
-        next,
-        pending: None,
-        emitted: 0,
-        max_new_tokens: job.max_new_tokens,
-        enqueued: job.enqueued,
-        history,
-        parked: false,
-    }
+    (newly, deferred)
 }
 
 fn spawn_dispatcher(

@@ -151,12 +151,43 @@ impl TileEngine {
         per_seq: &mut [Activity],
         shared: &mut Activity,
     ) -> MatI8 {
+        let mut out = MatI8::zeros(0, 0);
+        self.linear_lens_pret_multi(x, lens, wt, bias, rq, per_seq, shared, &mut out);
+        out
+    }
+
+    /// The general mixed-R fused linear: ragged per-sequence row
+    /// counts like [`TileEngine::linear_pret_multi`] **and** a
+    /// caller-provided output like
+    /// [`TileEngine::linear_rows_pret_multi`] — a warm steady-state
+    /// call allocates nothing. This is the unified tick's projection
+    /// primitive (§Chunked-prefill): an R=chunk_rows prefill chunk and
+    /// the R=1 decode steps share one blocked GEMM and one weight
+    /// stream per weight matrix.
+    ///
+    /// Numerics and accounting are exactly `linear_pret_multi`'s:
+    /// output rows are independent dots (stack composition is
+    /// invisible), each sequence is charged its own R=lens[i] tile
+    /// pass with the single weight stream landing in `shared`. With
+    /// all `lens[i] == 1` the charges coincide, field for field, with
+    /// `linear_rows_pret_multi`'s.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linear_lens_pret_multi(
+        &mut self,
+        x: &MatI8,
+        lens: &[usize],
+        wt: &MatI8,
+        bias: &[i8],
+        rq: RequantParams,
+        per_seq: &mut [Activity],
+        shared: &mut Activity,
+        out: &mut MatI8,
+    ) {
         assert_eq!(x.cols(), wt.cols(), "linear dims (pre-transposed)");
         assert_eq!(lens.iter().sum::<usize>(), x.rows(), "lens must tile the stacked rows");
         assert_eq!(lens.len(), per_seq.len(), "one Activity slot per sequence");
         self.check_depth(wt.cols());
-        let mut out = MatI8::zeros(0, 0);
-        gemm_requant_pret(x, wt, bias, rq, &mut self.scratch.gemm, &mut out);
+        gemm_requant_pret(x, wt, bias, rq, &mut self.scratch.gemm, out);
         let (k, c) = (x.cols(), wt.rows());
         for (i, &r) in lens.iter().enumerate() {
             if r == 0 {
@@ -176,7 +207,6 @@ impl TileEngine {
             shared.add(&stream);
             self.activity.add(&stream);
         }
-        out
     }
 
     /// Multi-session single-row linear layer (§Step-batching): `x`
@@ -1040,6 +1070,59 @@ mod tests {
             assert_eq!(gen_per_seq, per_row);
             assert_eq!(gen_shared, shared);
             assert_eq!(gen_eng.activity, fused_eng.activity);
+        });
+    }
+
+    #[test]
+    fn mixed_lens_linear_matches_general_and_rows_specializations() {
+        // §Chunked-prefill: the unified tick's projection primitive —
+        // ragged lens AND a caller-provided out — must coincide with
+        // linear_pret_multi on every field (it's the same body), and a
+        // mixed stack (R=chunk next to R=1 steps) must be bit-identical
+        // per row to the independent passes it fuses.
+        forall("linear_lens_pret_multi == linear_pret_multi (+ mixed-R rows)", 25, |g| {
+            let cfg = ItaConfig::tiny();
+            let n = g.usize_in(1, 5);
+            let (k, c) = (g.usize_in(1, 48), g.usize_in(1, 24));
+            let mut rng = SplitMix64::new(g.u64());
+            // Mix chunk-sized members (up to 12 rows) with R=1 steps.
+            let lens: Vec<usize> =
+                (0..n).map(|_| if g.usize_in(0, 1) == 0 { 1 } else { g.usize_in(0, 12) }).collect();
+            let total: usize = lens.iter().sum();
+            let x = rand_mat(&mut rng, total, k);
+            let wt = rand_mat(&mut rng, c, k);
+            let bias: Vec<i8> = (0..c).map(|_| rng.next_i8()).collect();
+
+            let mut lens_eng = TileEngine::new(cfg);
+            let mut lens_per_seq = vec![Activity::default(); n];
+            let mut lens_shared = Activity::default();
+            let mut out = MatI8::zeros(0, 0);
+            lens_eng.linear_lens_pret_multi(
+                &x, &lens, &wt, &bias, rq(), &mut lens_per_seq, &mut lens_shared, &mut out,
+            );
+
+            let mut gen_eng = TileEngine::new(cfg);
+            let mut gen_per_seq = vec![Activity::default(); n];
+            let mut gen_shared = Activity::default();
+            let general = gen_eng
+                .linear_pret_multi(&x, &lens, &wt, &bias, rq(), &mut gen_per_seq, &mut gen_shared);
+            assert_eq!(out, general);
+            assert_eq!(lens_per_seq, gen_per_seq);
+            assert_eq!(lens_shared, gen_shared);
+            assert_eq!(lens_eng.activity, gen_eng.activity);
+
+            // Row-for-row bit-identity against independent passes: the
+            // stack composition (who ticks next to whom) is invisible.
+            let mut off = 0;
+            for (i, &len) in lens.iter().enumerate() {
+                let xi = x.block_padded(off, 0, len, k);
+                let mut e = TileEngine::new(cfg);
+                let want = e.linear_pret(&xi, &wt, &bias, rq());
+                for r in 0..len {
+                    assert_eq!(out.row(off + r), want.row(r), "member {i} row {r}");
+                }
+                off += len;
+            }
         });
     }
 

@@ -206,6 +206,19 @@ pub struct ServerMetrics {
     /// Admissions deferred because the pool could not cover the
     /// candidate's prompt (re-queued, not rejected).
     pub admissions_deferred_on_memory: Counter,
+    /// Prefill chunks advanced inside the router's fused tick (each a
+    /// bounded R=chunk_rows member co-ticking with the R=1 decode
+    /// steps — §Chunked-prefill).
+    pub prefill_chunks: Counter,
+    /// Generations whose prompt exceeded `prefill_chunk_rows` and was
+    /// therefore prefilled across multiple tick-resident chunks.
+    pub chunked_prefill_sessions: Counter,
+    /// Worst ticks-without-a-step any live decode session has
+    /// experienced (gauge, running max). Exhaustion retries are the
+    /// only way a live unpaused session sits out a tick — a co-ticking
+    /// prefill chunk never stalls it — so under an ample pool this
+    /// stays 0 even while a long prompt chunks through the batch.
+    pub max_step_stall_ticks: Gauge,
 }
 
 impl ServerMetrics {
@@ -236,6 +249,7 @@ impl ServerMetrics {
              steps={} (fused={} in {} ticks)\n\
              latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              router: admissions={} streams_done={} tokens={} occupancy={:.2} backpressure={}\n\
+             chunked: prefill_chunks={} sessions={} max_step_stall_ticks={}\n\
              kv: blocks_in_use={} peak={} preemptions={} restores={} deferred={}\n\
              faults: deadline_expired={} cancelled={} dropped={} poisoned={} evicted={}\n\
              ticks: mean={:.1}us slow={}\n\
@@ -260,6 +274,9 @@ impl ServerMetrics {
             self.tokens_streamed.get(),
             self.mean_router_occupancy(),
             self.stream_backpressure.get(),
+            self.prefill_chunks.get(),
+            self.chunked_prefill_sessions.get(),
+            self.max_step_stall_ticks.get(),
             self.kv_blocks_in_use.get(),
             self.kv_blocks_peak.get(),
             self.preemptions.get(),
@@ -386,6 +403,19 @@ mod tests {
         let r = m.report();
         assert!(
             r.contains("kv: blocks_in_use=12 peak=20 preemptions=3 restores=2 deferred=5"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn server_metrics_report_chunked_line() {
+        let m = ServerMetrics::default();
+        m.prefill_chunks.add(9);
+        m.chunked_prefill_sessions.add(2);
+        m.max_step_stall_ticks.set(3);
+        let r = m.report();
+        assert!(
+            r.contains("chunked: prefill_chunks=9 sessions=2 max_step_stall_ticks=3"),
             "{r}"
         );
     }

@@ -23,6 +23,7 @@
 //! | `server.ingress.drop` | 0                    | dispatcher, drops one job   |
 //! | `server.worker.slow`  | 0                    | worker loop, delays a batch |
 //! | `kv.block.alloc`      | arena `fail_tag`     | `BlockArena::try_alloc`, forces exhaustion |
+//! | `prefill.chunk`       | engine `fail_tag`    | stage-2 prefill chunk (once per chunk) |
 
 #[cfg(feature = "failpoints")]
 pub use enabled::*;

@@ -6,7 +6,7 @@
 //! keeps serving afterwards.
 #![cfg(feature = "failpoints")]
 
-use ita::attention::decode::DecodeEngine;
+use ita::attention::decode::{DecodeEngine, FusedStepBatch};
 use ita::attention::{gen_input, ModelDims};
 use ita::config::{ModelConfig, ServerConfig, SystemConfig};
 use ita::coordinator::{DecodeInput, GenerateOptions, Server, SubmitError, KV_ARENA_FAIL_TAG};
@@ -473,5 +473,169 @@ fn injected_mid_generation_exhaustion_preempts_and_restores_bit_exact() {
     assert!(server.close_session(sid));
     assert_eq!(server.kv_arena().blocks_in_use(), 0, "blocks leaked past session close");
     assert!(server.kv_arena().blocks_peak() > 0);
+    server.shutdown();
+}
+
+/// Panic inside one member's `prefill.chunk` failpoint in a MIXED
+/// fused tick (one R=4 chunk next to one R=1 decode step): only the
+/// chunking member is poisoned, and the co-ticking decode survivor's
+/// output row is bit-identical to its fault-free solo step — the
+/// chunk-granular mirror of `decode.step.tail` containment, at the
+/// batch level.
+#[test]
+fn prefill_chunk_panic_quarantines_only_the_chunking_member() {
+    let _g = serial();
+    let d = ModelDims { s: 16, e: 16, p: 8, h: 2 };
+    let acc = ItaConfig::tiny();
+    let mut a = DecodeEngine::new(acc, d, 42); // decode member
+    let mut b = DecodeEngine::new(acc, d, 42); // chunking member
+    let mut golden_a = DecodeEngine::new(acc, d, 42);
+    let x = gen_input(71, &d);
+    let pa = x.block_padded(0, 0, 3, d.e);
+    a.prefill(&pa);
+    golden_a.prefill(&pa);
+    a.fail_tag = 1;
+    b.fail_tag = 2;
+    failpoint::cfg_for("prefill.chunk", 2, 1, FailAction::Panic);
+
+    let chunk = gen_input(72, &d).block_padded(0, 0, 4, d.e);
+    let flat: Vec<i8> = (0..4).flat_map(|r| chunk.row(r).iter().copied()).collect();
+    let row = x.row(3);
+    let mut batch = FusedStepBatch::new();
+    let report = {
+        let mut refs: Vec<&mut DecodeEngine> = vec![&mut a, &mut b];
+        batch.tick(&mut refs, &[row, &flat[..]])
+    };
+    assert_eq!(report.poisoned, vec![1], "only the chunking member poisoned");
+    assert!(report.exhausted.is_empty());
+    assert_eq!(batch.out_row(0), &golden_a.step(row)[..], "co-ticking survivor not bit-exact");
+    assert_eq!(a.len(), 4, "survivor advanced");
+    assert_eq!(b.len(), 0, "poisoned chunk appended nothing");
+}
+
+/// The same containment through the router: a long prompt joins two
+/// mid-stream decoders with chunking on, and its first chunk panics.
+/// The victim dies before its first token with a `SessionPoisoned`
+/// verdict; both co-ticking survivors drain bit-identical to their
+/// solo oracles; close/reopen recovers and the fresh chunked
+/// generation streams bit-exact.
+#[test]
+fn router_prefill_chunk_panic_poisons_only_the_chunking_session() {
+    let _g = serial();
+    let mut cfg = config(1, 4, 300);
+    cfg.server.stream_buffer = 4;
+    cfg.server.prefill_chunk_rows = 2;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let p1 = gen_input(81, &d).block_padded(0, 0, 3, d.e);
+    let p2 = gen_input(82, &d).block_padded(0, 0, 4, d.e);
+    let pv = gen_input(83, &d).block_padded(0, 0, 6, d.e);
+    let golden_1 = golden_generation(&cfg, &p1, 8);
+    let golden_2 = golden_generation(&cfg, &p2, 8);
+    let golden_v = golden_generation(&cfg, &pv, 4);
+
+    let s1 = server.open_session().unwrap();
+    let s2 = server.open_session().unwrap();
+    let victim = server.open_session().unwrap();
+    let mut stream_1 = server.submit_generate(s1, p1, gen_opts(8)).unwrap();
+    let mut stream_2 = server.submit_generate(s2, p2, gen_opts(8)).unwrap();
+    // One token from each proves both decoders are live mid-stream
+    // before the long prompt joins.
+    let mut got_1 = vec![stream_1.recv().unwrap().unwrap().row];
+    let mut got_2 = vec![stream_2.recv().unwrap().unwrap().row];
+
+    // Arm for the victim only, then admit it: its FIRST chunk panics
+    // inside a tick both survivors share.
+    failpoint::cfg_for("prefill.chunk", victim, 1, FailAction::Panic);
+    let mut stream_v = server.submit_generate(victim, pv.clone(), gen_opts(8)).unwrap();
+
+    while let Some(item) = stream_1.recv() {
+        got_1.push(item.expect("survivor 1 token").row);
+    }
+    while let Some(item) = stream_2.recv() {
+        got_2.push(item.expect("survivor 2 token").row);
+    }
+    assert_eq!(got_1, golden_1, "survivor 1 not bit-identical to its solo oracle");
+    assert_eq!(got_2, golden_2, "survivor 2 not bit-identical to its solo oracle");
+
+    // The victim dies mid-prefill: no token, (best-effort) a
+    // SessionPoisoned verdict, then termination — never a hang.
+    let mut verdict = None;
+    let mut v_tokens = 0usize;
+    while let Some(item) = stream_v.recv() {
+        match item {
+            Ok(_) => v_tokens += 1,
+            Err(e) => verdict = Some(e),
+        }
+    }
+    assert_eq!(v_tokens, 0, "victim must die before its first token");
+    if let Some(e) = verdict {
+        assert_eq!(e, SubmitError::SessionPoisoned);
+    }
+    assert_eq!(server.metrics.sessions_poisoned.get(), 1);
+
+    // Close/reopen recovers; the fresh chunked generation (3 chunks
+    // of 2) is bit-identical to its monolithic solo oracle.
+    assert!(server.close_session(victim));
+    let fresh = server.open_session().unwrap();
+    assert_eq!(server.generate(fresh, pv, 4).unwrap(), golden_v);
+    assert!(server.metrics.prefill_chunks.get() >= 3, "fresh prompt re-chunked");
+    server.shutdown();
+}
+
+/// Injected KV-pool exhaustion MID-PREFILL (`kv.block.alloc` armed
+/// while a chunked prefill is in flight): the starved chunk's tick
+/// reports `exhausted`, the router parks the partial prefill through
+/// the PR-8 preempt path (blocks released, chunk progress reset), and
+/// the restore pass re-admits it with one chunk's reservation — the
+/// prompt re-chunks from the start, bit-identically, and every token
+/// still arrives bit-exact. The `prefill.chunk` Delay pacing makes the
+/// arming race-free: chunks take >=50ms each, so the point armed right
+/// after chunk 1 lands always fires on a mid-prefill reservation.
+#[test]
+fn injected_mid_chunk_exhaustion_parks_partial_prefill_then_rechunks_bit_exact() {
+    let _g = serial();
+    let mut cfg = config(1, 4, 300);
+    cfg.server.kv_block_size = 2;
+    cfg.server.prefill_chunk_rows = 2;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(67, &d).block_padded(0, 0, 8, d.e);
+    let golden = golden_generation(&cfg, &prompt, 8);
+    let sid = server.open_session().unwrap();
+
+    // Pace every chunk (any ctx: only this session chunks), so the
+    // arming below lands between two chunk ticks deterministically.
+    failpoint::cfg("prefill.chunk", FailAction::Delay(Duration::from_millis(50)));
+    let mut stream = server.submit_generate(sid, prompt, gen_opts(8)).unwrap();
+    // 8 rows at chunk_rows=2: 4 chunks, with fresh block draws at the
+    // reservations of chunks 2..4 (block_size 2). Arm after chunk 1
+    // lands: the next mid-prefill reservation fails exactly once.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.prefill_chunks.get() < 1 {
+        assert!(Instant::now() < deadline, "first chunk never landed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    failpoint::cfg_for("kv.block.alloc", KV_ARENA_FAIL_TAG, 1, FailAction::Trigger);
+
+    let mut got = Vec::new();
+    while let Some(item) = stream.recv() {
+        got.push(item.expect("mid-prefill exhaustion must stall, never error").row);
+    }
+    failpoint::remove("prefill.chunk");
+    assert_eq!(got, golden, "park/re-chunk generation diverged from its solo oracle");
+    assert_eq!(server.metrics.preemptions.get(), 1, "the partial prefill parked itself");
+    assert_eq!(server.metrics.restores.get(), 1, "one first-chunk re-reservation");
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0, "exhaustion is not a fault");
+    assert_eq!(server.metrics.chunked_prefill_sessions.get(), 1);
+    // >=1 chunk before the park plus the full 4-chunk replay.
+    assert!(
+        server.metrics.prefill_chunks.get() >= 5,
+        "prompt must re-chunk from the start after restore (got {})",
+        server.metrics.prefill_chunks.get()
+    );
+
+    assert!(server.close_session(sid));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "blocks leaked past session close");
     server.shutdown();
 }

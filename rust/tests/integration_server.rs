@@ -517,6 +517,101 @@ fn router_mid_flight_admission_is_bit_exact() {
 }
 
 #[test]
+fn router_chunked_prefill_joins_mid_stream_without_stalling_decoders() {
+    // The §Chunked-prefill acceptance test: a LONG prompt joins three
+    // live decoders with chunking on (`prefill_chunk_rows = 2`, so the
+    // 8-row prompt takes 4 chunk ticks). There is no admission-time
+    // prefill pause — each chunk is a mixed-R member of the same fused
+    // tick the decoders' steps ride — so every tick that carries a
+    // chunk also advances every unpaused decode session. The witness
+    // is `max_step_stall_ticks` staying 0: only pool exhaustion can
+    // make an unpaused decode session sit out a tick, and the pool is
+    // ample here. Every stream is bit-identical to its solo oracle.
+    let mut cfg = config(1, 4);
+    cfg.server.prefill_chunk_rows = 2;
+    // A tight buffer keeps all four sessions in lockstep with the
+    // round-robin drain below, so the chunk ticks genuinely overlap
+    // live decoding instead of racing past it.
+    cfg.server.stream_buffer = 2;
+    cfg.server.max_waiting_ticks = 1;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+
+    let dec_prompts: Vec<MatI8> =
+        (0..3).map(|i| gen_input(421 + i as u64, &d).block_padded(0, 0, 2, d.e)).collect();
+    let long_prompt = gen_input(430, &d).block_padded(0, 0, 8, d.e);
+    let dec_golden: Vec<_> =
+        dec_prompts.iter().map(|p| golden_generation(&cfg, p, 10)).collect();
+    let long_golden = golden_generation(&cfg, &long_prompt, 6);
+
+    let dec_sids: Vec<_> = (0..3).map(|_| server.open_session().unwrap()).collect();
+    let mut dec_streams: Vec<_> = dec_sids
+        .iter()
+        .zip(&dec_prompts)
+        .map(|(&sid, p)| server.submit_generate(sid, p.clone(), gen_opts(10)).unwrap())
+        .collect();
+    // One token from each proves all three decoders are admitted and
+    // ticking before the long prompt joins mid-stream.
+    let mut dec_rows: Vec<Vec<Vec<i8>>> = dec_streams
+        .iter_mut()
+        .map(|s| vec![s.recv().unwrap().unwrap().row])
+        .collect();
+
+    let long_sid = server.open_session().unwrap();
+    let mut long_stream = server.submit_generate(long_sid, long_prompt, gen_opts(6)).unwrap();
+
+    // Round-robin drain: all four streams stay live together.
+    let mut long_rows: Vec<Vec<i8>> = Vec::new();
+    let mut long_open = true;
+    let mut open = [true; 3];
+    while long_open || open.iter().any(|&o| o) {
+        if long_open {
+            match long_stream.recv() {
+                Some(item) => {
+                    let tok = item.expect("long-prompt token");
+                    assert_eq!(tok.index, long_rows.len());
+                    assert_eq!(
+                        tok.seq_len,
+                        8 + long_rows.len() + 1,
+                        "tokens start only after the whole prompt is cached"
+                    );
+                    long_rows.push(tok.row);
+                }
+                None => long_open = false,
+            }
+        }
+        for i in 0..3 {
+            if open[i] {
+                match dec_streams[i].recv() {
+                    Some(item) => dec_rows[i].push(item.expect("decoder token").row),
+                    None => open[i] = false,
+                }
+            }
+        }
+    }
+    assert_eq!(long_rows, long_golden, "chunked prefill diverged from the solo oracle");
+    for (i, rows) in dec_rows.iter().enumerate() {
+        assert_eq!(rows, &dec_golden[i], "chunked join perturbed decoder {i}");
+    }
+
+    // Chunk accounting is exact (no preemption, so no re-chunking):
+    // one chunk per 2-row decoder prompt plus four for the 8-row
+    // prompt, and only the long prompt counts as a chunked session
+    // (prompt_rows > chunk_rows).
+    assert_eq!(server.metrics.prefill_chunks.get(), 7);
+    assert_eq!(server.metrics.chunked_prefill_sessions.get(), 1);
+    // The bounded-stall acceptance gauge: no unpaused decode session
+    // ever sat out a tick while the long prompt chunked through.
+    assert_eq!(server.metrics.max_step_stall_ticks.get(), 0);
+    assert!(
+        server.metrics.report().contains("chunked: prefill_chunks="),
+        "report lost the chunked line"
+    );
+    assert_eq!(server.session_len(long_sid), Some(14));
+    server.shutdown();
+}
+
+#[test]
 fn router_receiver_drop_mid_stream_frees_slot_for_waiting_session() {
     // Dropping a TokenStream mid-generation cancels it: the router
     // reaps the session from the next pass, the single slot goes to

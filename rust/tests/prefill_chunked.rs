@@ -1,0 +1,280 @@
+//! Chunked-prefill parity — the §Chunked-prefill correctness oracle.
+//!
+//! Property: splitting a prompt into bounded row-chunks and advancing
+//! them through [`DecodeEngine::prefill_chunk`] (standalone) or as
+//! mixed-R members of [`FusedStepBatch::tick`] (one R=chunk_rows chunk
+//! stacked next to R=1 decode steps) is **bit-identical** to one
+//! monolithic [`DecodeEngine::prefill`] — output rows, KV-cache
+//! contents, and the first post-prefill decode step — for every chunk
+//! size (1, block_size−1, block_size, ∞), ragged prompt lengths,
+//! random model shapes, and **every kernel path this host can
+//! execute**. The co-ticking decode sessions stay bit-identical to
+//! their independent `step_into` path at every tick, and the shared
+//! weight-stream accounting (one stream per weight matrix per tick,
+//! regardless of member mix) is asserted alongside.
+//!
+//! Why this works at all: a causal prefill row `r` attends to
+//! positions `0..=r` exactly as a decode step at cache fill `r` does,
+//! so a chunk is just `rows` consecutive decode tails — chunk
+//! boundaries (and which other members share the stacked GEMM) are
+//! invisible to every output bit.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating properties live in a single #[test] (the same
+//! discipline `tests/prefill_fused.rs` uses) and restore
+//! auto-detection before returning.
+
+use ita::attention::decode::{DecodeEngine, FusedStepBatch};
+use ita::attention::{gen_input, ModelDims};
+use ita::ita::simulator::{activity_for_matmul, MatmulDims};
+use ita::ita::ItaConfig;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+use ita::util::prop::forall;
+
+/// One weight stream per 3·H + 1 weight matrices — the batch-shared
+/// charge a fused tick records regardless of its member mix.
+fn streams_once(cfg: &ItaConfig, d: &ModelDims) -> u64 {
+    let proj = activity_for_matmul(cfg, MatmulDims { r: 0, k: d.e, c: d.p }, 0);
+    let out_proj = activity_for_matmul(cfg, MatmulDims { r: 0, k: d.h * d.p, c: d.e }, 0);
+    3 * d.h as u64 * proj.weight_buf_writes + out_proj.weight_buf_writes
+}
+
+#[test]
+fn chunked_prefill_bit_identical_to_monolithic_across_paths() {
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+
+        // ---- Standalone: prefill_chunk loop == monolithic prefill --
+        forall(&format!("chunked == monolithic prefill [{}]", path.name()), 10, |g| {
+            let s = g.usize_in(2, 24);
+            let d = ModelDims {
+                s,
+                e: g.usize_in(1, 24),
+                p: g.usize_in(1, 12),
+                h: g.usize_in(1, 3),
+            };
+            let seed = g.u64();
+            let l = g.usize_in(1, s);
+            let x = gen_input(seed ^ 0x51ab, &d).block_padded(0, 0, l, d.e);
+
+            let mut mono = DecodeEngine::new(ItaConfig::tiny(), d, seed);
+            let want = mono.prefill(&x);
+            let bs = mono.caches()[0].block_size();
+            let want_step = if l < s {
+                let mut m2 = DecodeEngine::new(ItaConfig::tiny(), d, seed);
+                m2.prefill(&x);
+                Some(m2.step(gen_input(seed ^ 0xdead, &d).row(0)))
+            } else {
+                None
+            };
+
+            // The acceptance set: single rows, straddling a block
+            // boundary both ways, and "no chunking at all".
+            for &chunk in &[1usize, bs.saturating_sub(1).max(1), bs, usize::MAX] {
+                let mut eng = DecodeEngine::new(ItaConfig::tiny(), d, seed);
+                let mut done = 0usize;
+                let mut got: Vec<Vec<i8>> = Vec::new();
+                while done < l {
+                    let take = chunk.min(l - done);
+                    let out = eng.prefill_chunk(&x.block_padded(done, 0, take, d.e));
+                    assert_eq!(out.shape(), (take, d.e));
+                    for r in 0..take {
+                        got.push(out.row(r).to_vec());
+                    }
+                    done += take;
+                }
+                for r in 0..l {
+                    assert_eq!(
+                        &got[r][..],
+                        want.out.row(r),
+                        "chunk={chunk} row {r} (l={l} d={d:?} path={})",
+                        path.name()
+                    );
+                }
+                // Cache parity, directly on the stored K / Vᵀ bytes.
+                assert_eq!(eng.len(), mono.len(), "chunk={chunk} cache fill");
+                for h in 0..d.h {
+                    let (cc, mc) = (&eng.caches()[h], &mono.caches()[h]);
+                    for r in 0..l {
+                        assert_eq!(cc.k_row(r), mc.k_row(r), "chunk={chunk} head {h} K row {r}");
+                        assert_eq!(cc.v_col(r), mc.v_col(r), "chunk={chunk} head {h} V col {r}");
+                    }
+                }
+                // The serving-visible proof the caches are
+                // interchangeable: the first post-prefill step agrees.
+                if let Some(ref ws) = want_step {
+                    assert_eq!(
+                        &eng.step(gen_input(seed ^ 0xdead, &d).row(0)),
+                        ws,
+                        "chunk={chunk} first step after prefill"
+                    );
+                }
+            }
+        });
+
+        // ---- Fused: one chunking member next to R=1 decoders -------
+        forall(&format!("mixed tick == independent [{}]", path.name()), 8, |g| {
+            let s = g.usize_in(4, 24);
+            let d = ModelDims {
+                s,
+                e: g.usize_in(1, 20),
+                p: g.usize_in(1, 10),
+                h: g.usize_in(1, 3),
+            };
+            let seed = g.u64();
+            let cfg = ItaConfig::tiny();
+            let l = g.usize_in(2, s);
+            let chunk = g.usize_in(1, l);
+            let ticks = l.div_ceil(chunk);
+            let n_dec = g.usize_in(1, 3);
+            // Each decoder consumes one position per tick: leave room.
+            let dec_lens: Vec<usize> =
+                (0..n_dec).map(|_| g.usize_in(0, s - ticks)).collect();
+
+            let x = gen_input(seed ^ 0x51ab, &d).block_padded(0, 0, l, d.e);
+            let flat: Vec<i8> =
+                (0..l).flat_map(|r| x.row(r).iter().copied()).collect();
+
+            let mut chunk_eng = DecodeEngine::new(cfg, d, seed);
+            let mut mono = DecodeEngine::new(cfg, d, seed);
+            let want = mono.prefill(&x);
+
+            let mut dec: Vec<DecodeEngine> =
+                (0..n_dec).map(|_| DecodeEngine::new(cfg, d, seed)).collect();
+            let mut indep: Vec<DecodeEngine> =
+                (0..n_dec).map(|_| DecodeEngine::new(cfg, d, seed)).collect();
+            for (i, &dl) in dec_lens.iter().enumerate() {
+                let prompt = gen_input(seed ^ (0x77 + i as u64), &d).block_padded(0, 0, dl, d.e);
+                dec[i].prefill(&prompt);
+                indep[i].prefill(&prompt);
+            }
+
+            let once = streams_once(&cfg, &d);
+            let mut batch = FusedStepBatch::new();
+            let mut got: Vec<Vec<i8>> = Vec::new();
+            let mut consumed = 0usize;
+            let mut want_row = Vec::new();
+            for t in 0..ticks {
+                let take = chunk.min(l - consumed);
+                let xt = gen_input(seed ^ (0x700 + t as u64), &d);
+                let rows_in: Vec<&[i8]> =
+                    std::iter::once(&flat[consumed * d.e..(consumed + take) * d.e])
+                        .chain((0..n_dec).map(|i| xt.row(i)))
+                        .collect();
+                let report = {
+                    let mut refs: Vec<&mut DecodeEngine> = Vec::with_capacity(1 + n_dec);
+                    refs.push(&mut chunk_eng);
+                    refs.extend(dec.iter_mut());
+                    batch.tick(&mut refs, &rows_in)
+                };
+                assert!(report.ok(), "fault-free tick {t}: {report:?}");
+                // One weight stream per weight matrix per tick,
+                // whatever the member mix (compute-free by design).
+                assert_eq!(batch.shared().weight_buf_writes, once, "tick {t} streams");
+                assert_eq!(batch.shared().macs, 0, "tick {t} streams carry no compute");
+
+                let blk = batch.out_block(0);
+                for r in 0..take {
+                    got.push(blk.row(r).to_vec());
+                }
+                // Every tick that carries a chunk also advanced every
+                // decoder — bit-identically to its solo path.
+                for i in 0..n_dec {
+                    indep[i].step_into(xt.row(i), &mut want_row);
+                    assert_eq!(
+                        batch.out_row(i + 1),
+                        &want_row[..],
+                        "tick {t} decoder {i} (chunk={chunk} l={l} d={d:?} path={})",
+                        path.name()
+                    );
+                    assert_eq!(dec[i].len(), indep[i].len(), "tick {t} decoder {i} fill");
+                }
+                consumed += take;
+            }
+
+            // The chunk member's concatenated output rows reproduce
+            // the monolithic prefill's output matrix bit for bit.
+            assert_eq!(got.len(), l);
+            for r in 0..l {
+                assert_eq!(
+                    &got[r][..],
+                    want.out.row(r),
+                    "chunk output row {r} (chunk={chunk} l={l} d={d:?} path={})",
+                    path.name()
+                );
+            }
+            // Final state parity: same cache bytes, same next step.
+            assert_eq!(chunk_eng.len(), mono.len());
+            for h in 0..d.h {
+                let (cc, mc) = (&chunk_eng.caches()[h], &mono.caches()[h]);
+                for r in 0..l {
+                    assert_eq!(cc.k_row(r), mc.k_row(r), "head {h} K row {r}");
+                    assert_eq!(cc.v_col(r), mc.v_col(r), "head {h} V col {r}");
+                }
+            }
+            if l < s {
+                let nx = gen_input(seed ^ 0xbeef, &d);
+                assert_eq!(
+                    chunk_eng.step(nx.row(0)),
+                    mono.step(nx.row(0)),
+                    "first post-prefill step after fused chunking"
+                );
+            }
+        });
+    }
+    set_kernel_path(None);
+}
+
+#[test]
+fn mixed_tick_activity_attribution_is_composition_invariant() {
+    // The accounting half of the unified tick: a chunk member's
+    // per-tick engine activity equals its standalone
+    // `prefill_chunk` minus exactly the shared weight streams, and the
+    // co-ticking decoder's equals its standalone `step_into` minus the
+    // same streams — every other counter bit-equal. (The per-member
+    // R=lens[i] tile-pass convention: charges never depend on who else
+    // shared the stack.)
+    forall("mixed tick activity == standalone minus streams", 12, |g| {
+        let s = g.usize_in(3, 20);
+        let d = ModelDims { s, e: g.usize_in(1, 20), p: g.usize_in(1, 10), h: g.usize_in(1, 3) };
+        let seed = g.u64();
+        let cfg = ItaConfig::tiny();
+        let rows = g.usize_in(2, s);
+        let dl = g.usize_in(0, s - 1);
+        let x = gen_input(seed ^ 0x31, &d).block_padded(0, 0, rows, d.e);
+        let flat: Vec<i8> = (0..rows).flat_map(|r| x.row(r).iter().copied()).collect();
+        let dec_prompt = gen_input(seed ^ 0x32, &d).block_padded(0, 0, dl, d.e);
+        let step_x = gen_input(seed ^ 0x33, &d);
+
+        let mut a = DecodeEngine::new(cfg, d, seed);
+        let mut b = DecodeEngine::new(cfg, d, seed);
+        b.prefill(&dec_prompt);
+        let mut batch = FusedStepBatch::new();
+        let report = {
+            let mut refs: Vec<&mut DecodeEngine> = vec![&mut a, &mut b];
+            batch.tick(&mut refs, &[&flat[..], step_x.row(0)])
+        };
+        assert!(report.ok(), "{report:?}");
+
+        let once = streams_once(&cfg, &d);
+        let mut sa = DecodeEngine::new(cfg, d, seed);
+        sa.engine.reset_activity();
+        let _ = sa.prefill_chunk(&x);
+        let mut sb = DecodeEngine::new(cfg, d, seed);
+        sb.prefill(&dec_prompt);
+        sb.engine.reset_activity();
+        let mut out = Vec::new();
+        sb.step_into(step_x.row(0), &mut out);
+
+        let mut fa = a.engine.activity;
+        fa.weight_buf_writes += once;
+        assert_eq!(fa, sa.engine.activity, "chunk member share (rows={rows} d={d:?})");
+        let mut fb = b.engine.activity;
+        fb.weight_buf_writes += once;
+        assert_eq!(fb, sb.engine.activity, "decode member share (dl={dl} d={d:?})");
+        assert_eq!(batch.shared().weight_buf_writes, once);
+        assert_eq!(batch.shared().macs, 0, "streams carry no compute");
+        assert_eq!(batch.shared().cycles, 0, "streams carry no row cycles");
+    });
+}

@@ -11,6 +11,13 @@
 //! admission order, stream backpressure, and slot reuse must be
 //! invisible in the numerics.
 //!
+//! A second scenario family covers §Chunked-prefill mixed traffic: one
+//! LONG prompt joins a mid-stream wave of short decoders while its
+//! prefill is split into `prefill_chunk_rows`-row chunks that ride the
+//! decoders' fused ticks. Chunk size ∈ {1, 8, ∞} must be invisible in
+//! the numerics too — every completed stream bit-identical to its solo
+//! oracle — and chunk accounting is exact.
+//!
 //! Path forcing note: `set_kernel_path` is process-global, so the
 //! path-iterating property lives in a single #[test] and restores
 //! auto-detection before returning — the same discipline
@@ -144,6 +151,98 @@ fn run_scenario(seed: u64, label: &str) {
     assert!(server.session_len(sids[0]).is_some(), "[{label}] victim session evaporated");
 }
 
+/// Mixed-traffic scenario (§Chunked-prefill): one LONG prompt joins a
+/// wave of short decoders that are already streaming, with its prefill
+/// split into `chunk_rows`-row chunks stacked into the decoders' fused
+/// ticks. Chunking must be invisible: every stream bit-identical to
+/// its solo oracle, chunk accounting exact, and no decode session ever
+/// stalled by a chunk tick.
+fn run_mixed_scenario(seed: u64, chunk_rows: usize, label: &str) {
+    const N: usize = 3;
+    let mut cfg = config();
+    cfg.server.prefill_chunk_rows = chunk_rows;
+    let d = cfg.model.dims;
+    let mut rng = SplitMix64::new(seed);
+
+    let mut prompts = Vec::with_capacity(N + 1);
+    let mut ntok = Vec::with_capacity(N + 1);
+    for _ in 0..N {
+        let plen = 1 + (rng.u64() % 3) as usize;
+        prompts.push(MatI8::from_vec(plen, d.e, rng.vec_i8(plen * d.e)));
+        ntok.push(2 + (rng.u64() % 7) as usize);
+    }
+    // The long joiner: most of the context window is prompt, so its
+    // prefill spans many ticks when chunk_rows is small.
+    let plen = 8 + (rng.u64() % 4) as usize;
+    prompts.push(MatI8::from_vec(plen, d.e, rng.vec_i8(plen * d.e)));
+    ntok.push(2 + (rng.u64() % 3) as usize);
+
+    let goldens: Vec<Vec<Vec<i8>>> =
+        (0..=N).map(|i| golden_generation(&cfg, &prompts[i], ntok[i])).collect();
+
+    let server = Server::start(cfg);
+    let sids: Vec<_> = (0..=N).map(|_| server.open_session().unwrap()).collect();
+    let submit = |i: usize| {
+        server
+            .submit_generate(
+                sids[i],
+                prompts[i].clone(),
+                GenerateOptions { max_new_tokens: ntok[i], ..GenerateOptions::default() },
+            )
+            .expect("accepted")
+    };
+    let mut streams: Vec<TokenStream> = (0..N).map(&submit).collect();
+    let mut got: Vec<Vec<Vec<i8>>> = (0..=N).map(|_| Vec::new()).collect();
+    // One token from each decoder proves the wave is live mid-stream
+    // before the long prompt joins.
+    for (i, stream) in streams.iter_mut().enumerate() {
+        got[i].push(stream.recv().expect("live stream").expect("token").row);
+    }
+    streams.push(submit(N));
+
+    // Round-robin drain keeps every stream live while the long prompt
+    // chunks through, so chunk ticks genuinely co-run with decode
+    // steps under the tiny stream buffer.
+    let mut open = [true; N + 1];
+    while open.iter().any(|&o| o) {
+        for i in 0..=N {
+            if open[i] {
+                match streams[i].recv() {
+                    Some(item) => got[i].push(item.expect("token").row),
+                    None => open[i] = false,
+                }
+            }
+        }
+    }
+    for i in 0..=N {
+        assert_eq!(
+            got[i], goldens[i],
+            "[{label}] session {i} (prompt {} rows, {} tokens) diverged from its solo oracle",
+            prompts[i].rows(),
+            ntok[i]
+        );
+    }
+
+    // Chunk accounting is exact: no preemption here, so each prompt
+    // costs exactly ceil(rows / chunk_rows) chunks, and a session is
+    // "chunked" iff its prompt spans more than one chunk.
+    let cr = chunk_rows.max(1);
+    let expected_chunks: u64 = prompts.iter().map(|p| p.rows().div_ceil(cr) as u64).sum();
+    let expected_chunked = prompts.iter().filter(|p| p.rows() > cr).count() as u64;
+    assert_eq!(server.metrics.prefill_chunks.get(), expected_chunks, "[{label}] chunk count");
+    assert_eq!(
+        server.metrics.chunked_prefill_sessions.get(),
+        expected_chunked,
+        "[{label}] chunked-session count"
+    );
+    assert_eq!(
+        server.metrics.max_step_stall_ticks.get(),
+        0,
+        "[{label}] a decode session sat out a tick"
+    );
+    server.shutdown();
+}
+
 #[test]
 fn router_churn_bit_exact_across_kernel_paths() {
     for (p, path) in available_kernel_paths().into_iter().enumerate() {
@@ -152,6 +251,13 @@ fn router_churn_bit_exact_across_kernel_paths() {
             run_scenario(
                 0x907e5 ^ ((p as u64) << 32) ^ s,
                 &format!("{} seed {s}", path.name()),
+            );
+        }
+        for (c, &chunk_rows) in [1usize, 8, usize::MAX].iter().enumerate() {
+            run_mixed_scenario(
+                0xc40c5 ^ ((p as u64) << 32) ^ ((c as u64) << 16),
+                chunk_rows,
+                &format!("{} chunk_rows {chunk_rows}", path.name()),
             );
         }
     }
