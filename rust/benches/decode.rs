@@ -33,6 +33,14 @@
 //! observed, embedded in the JSON shape string: small chunks bound the
 //! stall at one chunk tick, `usize::MAX` recovers monolithic prefill
 //! (fastest completion, worst stall).
+//!
+//! §Prefix-sharing addendum: N ∈ {2, 4, 8} sessions share a 64-row
+//! system prompt at the Table-1 shape, with the router's prefix cache
+//! on vs off. Per point: mean admission-to-first-token latency, the
+//! prefill rows actually computed (total minus adopted), and the
+//! arena's physical-block peak — sharing should cut all three, since
+//! adopters skip the system prompt's prefill entirely and their
+//! adopted blocks are refcount bumps, not copies.
 
 use ita::attention::decode::{DecodeEngine, FusedStepBatch};
 use ita::attention::{gen_input, run_attention_causal, ModelDims};
@@ -227,6 +235,9 @@ fn main() {
                 stream_buffer: 2,
                 max_waiting_ticks: 1,
                 queue_depth: 64,
+                // Sharing off: rounds repeat identical prompts, and a
+                // cache hit would change what this round measures.
+                prefix_cache_entries: 0,
                 ..ServerConfig::default()
             },
         };
@@ -318,6 +329,9 @@ fn main() {
                 queue_depth: 16,
                 kv_block_size: 4,
                 kv_pool_blocks: 10,
+                // Sharing off: this round measures preempt/restore on
+                // a tight pool; cache retention would repin it.
+                prefix_cache_entries: 0,
                 ..ServerConfig::default()
             },
         };
@@ -383,6 +397,9 @@ fn main() {
                     max_waiting_ticks: 1,
                     queue_depth: 16,
                     prefill_chunk_rows: chunk,
+                    // Sharing off: a cache hit on the repeated long
+                    // prompt would skip the prefill being measured.
+                    prefix_cache_entries: 0,
                     ..ServerConfig::default()
                 },
             };
@@ -476,6 +493,151 @@ fn main() {
                 "| {label:>10} | {:>15.2} ms | {:>17.2} ms |",
                 prefill * 1e3,
                 stall * 1e3
+            );
+        }
+    }
+
+    // ---- prefix-sharing round (§Prefix-sharing) ----------------------
+    // N sessions share a 64-row system prompt (block-aligned at
+    // bs=16) behind distinct 8-row suffixes. A publisher session runs
+    // the bare system prompt first; with the cache on, the joiners
+    // adopt its blocks at admission and prefill only their suffixes.
+    // Per (N, mode): the mean admission-to-first-token latency across
+    // the joiners, the prefill rows computed (total submitted minus
+    // adopted), and the arena's physical-block peak. First tokens are
+    // observed in admission order from the submitting thread — they
+    // arrive in that order off the shared fused ticks, so the
+    // sequential recv adds only the already-arrived drain cost.
+    {
+        let sys_rows = 64usize;
+        let suffix_rows = 8usize;
+        let tokens = 4usize;
+        println!("\nprefix sharing: {sys_rows}-row system prompt + {suffix_rows}-row suffixes, {shape}\n");
+        let mut share_table = Vec::new();
+        for &n in &[2usize, 4, 8] {
+            let mut ttft = [0f64; 2]; // [cache off, cache on]
+            let mut rows_computed = [0u64; 2];
+            let mut peak = [0usize; 2];
+            for (mode, &cache) in [0usize, 8].iter().enumerate() {
+                let scfg = SystemConfig {
+                    accelerator: cfg,
+                    model: ModelConfig { dims: t1, ffn: 32, layers: 1, seed: 42 },
+                    server: ServerConfig {
+                        workers: 1,
+                        max_batch: 8,
+                        stream_buffer: tokens + 2,
+                        max_waiting_ticks: 1,
+                        queue_depth: 16,
+                        kv_block_size: 16,
+                        // Generous explicit pool: this round measures
+                        // sharing, not pressure containment.
+                        kv_pool_blocks: 2048,
+                        prefix_cache_entries: cache,
+                        ..ServerConfig::default()
+                    },
+                };
+                let server = Server::start(scfg);
+                let sys = gen_input(17, &t1).block_padded(0, 0, sys_rows, t1.e);
+                // Publisher (both modes, keeping the phases symmetric):
+                // with the cache on, its completed prefill publishes
+                // the system prompt's blocks.
+                let pub_sid = server.open_session().expect("session");
+                let pub_stream = server
+                    .submit_generate(
+                        pub_sid,
+                        sys.clone(),
+                        GenerateOptions { max_new_tokens: 1, ..GenerateOptions::default() },
+                    )
+                    .expect("accepted");
+                black_box(pub_stream.collect_rows().expect("publisher").len());
+                assert!(server.close_session(pub_sid));
+
+                let mut joiners = Vec::with_capacity(n);
+                for i in 0..n as u64 {
+                    let mut data = Vec::with_capacity((sys_rows + suffix_rows) * t1.e);
+                    for r in 0..sys_rows {
+                        data.extend_from_slice(sys.row(r));
+                    }
+                    let sfx = gen_input(200 + i, &t1).block_padded(0, 0, suffix_rows, t1.e);
+                    for r in 0..suffix_rows {
+                        data.extend_from_slice(sfx.row(r));
+                    }
+                    let prompt = MatI8::from_vec(sys_rows + suffix_rows, t1.e, data);
+                    let sid = server.open_session().expect("session");
+                    let t0 = Instant::now();
+                    let stream = server
+                        .submit_generate(
+                            sid,
+                            prompt,
+                            GenerateOptions { max_new_tokens: tokens, ..GenerateOptions::default() },
+                        )
+                        .expect("accepted");
+                    joiners.push((sid, t0, stream));
+                }
+                let mut sum_ttft = 0f64;
+                for (_, t0, stream) in joiners.iter_mut() {
+                    stream.recv().expect("live").expect("first token");
+                    sum_ttft += t0.elapsed().as_secs_f64();
+                }
+                for (sid, _, mut stream) in joiners {
+                    while let Some(item) = stream.recv() {
+                        black_box(item.expect("token").row[0]);
+                    }
+                    assert!(server.close_session(sid));
+                }
+                ttft[mode] = sum_ttft / n as f64;
+                let submitted = (n * (sys_rows + suffix_rows)) as u64;
+                rows_computed[mode] =
+                    submitted.saturating_sub(server.metrics.prefix_match_rows.get());
+                peak[mode] = server.kv_arena().blocks_peak();
+                server.shutdown();
+            }
+            let s = Sample {
+                name: format!("prefix sharing round @N={n}"),
+                median: ttft[1],
+                mean: ttft[1],
+                p95: ttft[1],
+                iters_per_sample: 1,
+                units: None,
+            };
+            println!("{}", s.report());
+            report.entry(
+                "prefix sharing round",
+                &format!(
+                    "N={n},{shape},sys={sys_rows},ttft_cold_ms={:.3},rows={}/{},peak={}/{}",
+                    ttft[0] * 1e3,
+                    rows_computed[1],
+                    rows_computed[0],
+                    peak[1],
+                    peak[0]
+                ),
+                &s,
+                Some(ttft[0] / ttft[1]),
+            );
+            println!(
+                "  -> N={n}: ttft {:.2} ms -> {:.2} ms ({:.2}x), prefill rows {} -> {}, block peak {} -> {}\n",
+                ttft[0] * 1e3,
+                ttft[1] * 1e3,
+                ttft[0] / ttft[1],
+                rows_computed[0],
+                rows_computed[1],
+                peak[0],
+                peak[1]
+            );
+            share_table.push((n, ttft, rows_computed, peak));
+        }
+        // EXPERIMENTS.md table (paste-ready).
+        println!("| sessions | ttft cold | ttft shared | rows cold | rows shared | peak cold | peak shared |");
+        println!("|---------:|----------:|------------:|----------:|------------:|----------:|------------:|");
+        for (n, ttft, rows, peak) in share_table {
+            println!(
+                "| {n:>8} | {:>6.2} ms | {:>8.2} ms | {:>9} | {:>11} | {:>9} | {:>11} |",
+                ttft[0] * 1e3,
+                ttft[1] * 1e3,
+                rows[0],
+                rows[1],
+                peak[0],
+                peak[1]
             );
         }
     }

@@ -51,16 +51,37 @@ use std::sync::Arc;
 /// primitive that does return everything (close / eviction /
 /// preemption); `Drop` reclaims too, so a dropped session can never
 /// leak pool blocks.
+///
+/// # Prefix sharing and copy-on-write
+///
+/// A table entry may be **shared** (its [`Block`] handle refcounts the
+/// same physical storage as another cache's entry or a router
+/// prefix-cache entry — [`KvCache::adopt`] / [`KvCache::share_blocks`])
+/// or **owned** (refcount 1). Reads never care: the O(S) attend tail
+/// walks both identically, byte-for-byte. Writes do: any append
+/// landing in a shared block first **forks** it — a fallible
+/// `try_alloc` draw, a memcpy of the retained rows, a table-entry
+/// swap that drops (refcount-decrements) the parent handle. The fork
+/// runs in the fallible [`KvCache::reserve`] phase, so CoW pressure
+/// surfaces as the same [`BlockPoolExhausted`] the serving layer
+/// already contains via deferred admission / preemption; the
+/// `kv.cow.fork` failpoint (ctx = `fail_tag`) injects exhaustion or a
+/// panic at exactly that moment.
 #[derive(Debug)]
 pub struct KvCache {
-    /// Owned block table: block `b` holds positions
-    /// `b·bs .. (b+1)·bs`. Owning the blocks outright (not refs into
-    /// the arena) is what lets the fused tick's per-session fan-out
-    /// run lock- and unsafe-free.
+    /// Block table: block `b` holds positions `b·bs .. (b+1)·bs`.
+    /// Each entry is a refcounted handle — exclusively owned entries
+    /// are writable, shared entries are read-only until CoW-forked —
+    /// so the fused tick's per-session fan-out still runs lock- and
+    /// unsafe-free (forks happen in the serial reserve phase).
     blocks: Vec<Block>,
     arena: Arc<BlockArena>,
     len: usize,
     capacity: usize,
+    /// Fault-injection targeting tag for the `kv.cow.fork` failpoint
+    /// (propagated from the owning engine's `fail_tag` on every
+    /// [`DecodeEngine::reserve_for`]). Inert unless `failpoints` is on.
+    fail_tag: u64,
 }
 
 impl KvCache {
@@ -81,7 +102,7 @@ impl KvCache {
     /// is pre-sized so growth to full capacity never reallocates it.
     pub fn with_arena(arena: Arc<BlockArena>, capacity: usize) -> Self {
         let table = arena.blocks_for(capacity);
-        Self { blocks: Vec::with_capacity(table), arena, len: 0, capacity }
+        Self { blocks: Vec::with_capacity(table), arena, len: 0, capacity, fail_tag: 0 }
     }
 
     #[inline]
@@ -118,15 +139,35 @@ impl KvCache {
         &self.arena
     }
 
-    /// Ensure the block table covers `new_len` positions, drawing
-    /// blocks from the arena — the **fallible** path the serving layer
-    /// uses to turn pool exhaustion into deferred admission or
-    /// preemption instead of a panic. On failure the table is left
-    /// trimmed back to what `len` needs (no freshly-drawn block is
-    /// stranded on a cache that could not grow).
+    /// Ensure the block table covers `new_len` positions — drawing
+    /// blocks from the arena AND copy-on-write-forking any **shared**
+    /// existing block the appends `len..new_len` would write into —
+    /// the **fallible** path the serving layer uses to turn pool
+    /// exhaustion into deferred admission or preemption instead of a
+    /// panic. On failure the table is left trimmed back to what `len`
+    /// needs (no freshly-drawn block is stranded on a cache that could
+    /// not grow; an already-completed fork is harmless — the forked
+    /// entry is owned and bit-identical to its parent's retained
+    /// rows).
     pub fn reserve(&mut self, new_len: usize) -> Result<(), BlockPoolExhausted> {
         assert!(new_len <= self.capacity, "reserve beyond cache capacity {}", self.capacity);
         let bs = self.block_size();
+        if new_len > self.len {
+            // CoW: the appends will write blocks len/bs ..= (new_len-1)/bs;
+            // fork every one of those that already exists and is shared
+            // (typically just the partial tail block of an adopted
+            // prefix — but truncate-and-replay can also land a rewrite
+            // in an earlier shared block).
+            let last = (new_len - 1) / bs;
+            for idx in (self.len / bs)..=last {
+                if idx >= self.blocks.len() {
+                    break;
+                }
+                if self.blocks[idx].is_shared() {
+                    self.cow_fork(idx)?;
+                }
+            }
+        }
         while self.blocks.len() * bs < new_len {
             match self.arena.try_alloc() {
                 Ok(b) => self.blocks.push(b),
@@ -137,6 +178,66 @@ impl KvCache {
             }
         }
         Ok(())
+    }
+
+    /// Copy-on-write fork of table entry `idx`: draw a fresh block
+    /// (fallible), memcpy the retained rows (`len`-covered positions
+    /// of that block — later positions hold no live data), swap the
+    /// table entry, and drop the parent handle (refcount decrement;
+    /// the physical parent stays alive for its other sharers). The
+    /// `kv.cow.fork` failpoint (ctx = `fail_tag`) fires first, so
+    /// chaos tests can inject exhaustion or a panic mid-fork.
+    fn cow_fork(&mut self, idx: usize) -> Result<(), BlockPoolExhausted> {
+        if crate::util::failpoint::hit("kv.cow.fork", self.fail_tag) {
+            return Err(BlockPoolExhausted { total_blocks: self.arena.total_blocks() });
+        }
+        let mut fresh = self.arena.try_alloc()?;
+        let bs = self.block_size();
+        let retained = self.len.saturating_sub(idx * bs).min(bs);
+        {
+            let parent = &self.blocks[idx];
+            let dst = fresh.storage_mut();
+            for r in 0..retained {
+                dst.k.row_mut(r).copy_from_slice(parent.k.row(r));
+            }
+            for j in 0..self.arena.p() {
+                dst.vt.row_mut(j)[..retained].copy_from_slice(&parent.vt.row(j)[..retained]);
+            }
+        }
+        self.arena.note_cow_fork();
+        self.blocks[idx] = fresh;
+        Ok(())
+    }
+
+    /// Seed an **empty** cache with shared handles to `blocks`
+    /// (refcount bumps, no data movement, no arena draw): afterwards
+    /// positions `0..rows` read the donor's cached bytes. The partial
+    /// tail block (when `rows % block_size != 0`) stays shared too —
+    /// the first append into it CoW-forks. The handle clones are
+    /// pushed into the pre-sized table, so adoption allocates nothing.
+    pub fn adopt(&mut self, blocks: &[Block], rows: usize) {
+        assert!(self.is_empty() && self.blocks.is_empty(), "adopt into a non-empty cache");
+        assert!(rows <= self.capacity, "adopt beyond cache capacity {}", self.capacity);
+        assert_eq!(
+            blocks.len(),
+            self.arena.blocks_for(rows),
+            "adopted block count must exactly cover {rows} rows"
+        );
+        for b in blocks {
+            assert_eq!(b.k.rows(), self.block_size(), "foreign block (size)");
+            assert_eq!(b.k.cols(), self.arena.p(), "foreign block (width)");
+            self.blocks.push(b.share());
+        }
+        self.len = rows;
+    }
+
+    /// Shared handles to the blocks covering positions `0..rows` —
+    /// what a prefix-cache entry (or another session's
+    /// [`KvCache::adopt`]) retains. Refcount bumps only; this cache's
+    /// entries keep working unchanged (they just become CoW-on-append).
+    pub fn share_blocks(&self, rows: usize) -> Vec<Block> {
+        assert!(rows <= self.len, "share beyond cached length {}", self.len);
+        self.blocks[..self.arena.blocks_for(rows)].iter().map(|b| b.share()).collect()
     }
 
     /// Return every block beyond what `len` needs (the failed-
@@ -150,10 +251,13 @@ impl KvCache {
 
     /// Append one (key row, value row) pair. Panics when full — the
     /// serving layer checks capacity before admitting a step. Draws a
-    /// block if the table doesn't cover the new position; on a
-    /// *shared* arena the serving layer reserves first
-    /// ([`KvCache::reserve`]), making the draw here infallible — the
-    /// `expect` is the backstop for paths that skipped reservation.
+    /// block if the table doesn't cover the new position, and
+    /// CoW-forks a covered-but-shared target block; on a *shared*
+    /// arena the serving layer reserves first ([`KvCache::reserve`],
+    /// which also performs the forks fallibly), making both paths here
+    /// infallible — the `expect`s are the backstop for solo paths that
+    /// skipped reservation (their private arenas cover capacity by
+    /// construction).
     pub fn push(&mut self, k_row: &[i8], v_row: &[i8]) {
         assert!(self.len < self.capacity, "KV cache full (capacity {})", self.capacity);
         assert_eq!(k_row.len(), self.arena.p(), "key row width");
@@ -162,8 +266,11 @@ impl KvCache {
         if self.len == self.blocks.len() * bs {
             let b = self.arena.try_alloc().expect("KV block pool exhausted (reserve first)");
             self.blocks.push(b);
+        } else if self.blocks[self.len / bs].is_shared() {
+            self.cow_fork(self.len / bs)
+                .expect("KV block pool exhausted on CoW fork (reserve first)");
         }
-        let b = &mut self.blocks[self.len / bs];
+        let b = self.blocks[self.len / bs].storage_mut();
         let slot = self.len % bs;
         b.k.row_mut(slot).copy_from_slice(k_row);
         for (j, &v) in v_row.iter().enumerate() {
@@ -371,11 +478,17 @@ impl DecodeEngine {
     /// Fallibly ensure every head's block table covers `new_len`
     /// positions — the serving layer's pre-step/pre-prefill gate that
     /// turns pool exhaustion into a recoverable
-    /// [`BlockPoolExhausted`]. On failure, blocks already drawn for
-    /// this reservation are returned (per-cache trim), so a failed
-    /// reservation strands nothing.
+    /// [`BlockPoolExhausted`]. This is also where copy-on-write forks
+    /// run ([`KvCache::reserve`]): any shared block the coming appends
+    /// would write into is forked here, fallibly and serially, before
+    /// any compute. On failure, blocks already drawn for this
+    /// reservation are returned (per-cache trim), so a failed
+    /// reservation strands nothing; completed forks persist (owned,
+    /// bit-identical retained rows — harmless).
     pub fn reserve_for(&mut self, new_len: usize) -> Result<(), BlockPoolExhausted> {
         for i in 0..self.caches.len() {
+            // Keep the cow-fork failpoint aimed at this session.
+            self.caches[i].fail_tag = self.fail_tag;
             if let Err(e) = self.caches[i].reserve(new_len) {
                 // Roll the earlier heads' fresh draws back too — a
                 // failed reservation must not shrink the pool for the
@@ -387,6 +500,30 @@ impl DecodeEngine {
             }
         }
         Ok(())
+    }
+
+    /// Seed every (empty) head cache with shared handles to another
+    /// engine's prefix blocks (`blocks[h]` = head `h`'s covering
+    /// blocks, from [`DecodeEngine::share_prefix`]): afterwards
+    /// `len() == rows` and the next prefill chunk continues from row
+    /// `rows` — the adopted positions read the donor's bytes, so the
+    /// continuation is bit-identical to having prefilled them locally
+    /// (pinned by `tests/prefix_sharing.rs`). Refcount bumps only; no
+    /// pool draw, no copy.
+    pub fn adopt_prefix(&mut self, blocks: &[Vec<Block>], rows: usize) {
+        assert_eq!(blocks.len(), self.dims.h, "one shared block set per head");
+        assert!(self.is_empty(), "adopt into a non-empty engine (release_blocks() first)");
+        for (c, bs) in self.caches.iter_mut().zip(blocks) {
+            c.adopt(bs, rows);
+        }
+    }
+
+    /// Shared handles to every head's blocks covering positions
+    /// `0..rows` — what the router's prefix cache retains at prefill
+    /// completion (and what a matching admission adopts).
+    pub fn share_prefix(&self, rows: usize) -> Vec<Vec<Block>> {
+        assert!(rows <= self.len(), "share beyond cached length {}", self.len());
+        self.caches.iter().map(|c| c.share_blocks(rows)).collect()
     }
 
     /// Return every head's blocks to the arena and empty the caches —
@@ -1037,17 +1174,30 @@ impl FusedStepBatch {
 
         // ---- Block reservation: fallible, serial, before compute ----
         // Every member's next lens[i] positions are reserved on the
-        // (possibly shared, bounded) arena *up front*, so pool
+        // (possibly shared, bounded) arena *up front* — including any
+        // copy-on-write forks of shared prefix blocks — so pool
         // exhaustion is a per-session report instead of a mid-tail
         // panic — for a chunk this is the per-chunk (not whole-prompt)
         // reservation of the chunked-prefill memory story. Serial in
-        // index order: deterministic victims, no free-list races. The
-        // fault-free case pushes nothing (an empty Vec never
-        // allocates), preserving the tick's zero-allocation contract.
+        // index order: deterministic victims, no free-list races. A
+        // PANIC inside one member's reservation (e.g. an injected
+        // `kv.cow.fork` fault) is caught and quarantined to that
+        // member exactly like a stage-2 tail panic: its tail is
+        // skipped and it lands in [`TickReport::poisoned`], while
+        // exhaustion stays a recoverable [`TickReport::exhausted`].
+        // The fault-free case pushes nothing (an empty Vec never
+        // allocates) and `catch_unwind` costs nothing on the
+        // non-panicking path, preserving the tick's zero-allocation
+        // contract.
         let mut exhausted: Vec<usize> = Vec::new();
+        let mut reserve_poisoned: Vec<usize> = Vec::new();
         for (i, e) in engines.iter_mut().enumerate() {
-            if e.reserve_for(e.len() + self.lens[i]).is_err() {
-                exhausted.push(i);
+            let new_len = e.len() + self.lens[i];
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.reserve_for(new_len)))
+            {
+                Ok(Ok(())) => {}
+                Ok(Err(_)) => exhausted.push(i),
+                Err(_) => reserve_poisoned.push(i),
             }
         }
 
@@ -1133,6 +1283,7 @@ impl FusedStepBatch {
             let qkv = &self.qkv[..dims.h];
             let engs = DisjointSlots::new(engines);
             let exhausted = &exhausted;
+            let reserve_poisoned = &reserve_poisoned;
             let lens = &self.lens[..];
             let base = &self.base[..];
             WorkerPool::global()
@@ -1141,8 +1292,12 @@ impl FusedStepBatch {
                     // its caches are untouched, its input rows stay
                     // unconsumed (the router re-ticks it after
                     // preemption frees blocks), and its out_row slot
-                    // holds garbage nobody reads.
-                    if exhausted.binary_search(&i).is_ok() {
+                    // holds garbage nobody reads. A reserve-poisoned
+                    // session is skipped too — its owner quarantines
+                    // it.
+                    if exhausted.binary_search(&i).is_ok()
+                        || reserve_poisoned.binary_search(&i).is_ok()
+                    {
                         return;
                     }
                     // SAFETY: one executor per session index.
@@ -1166,7 +1321,10 @@ impl FusedStepBatch {
                 // the GEMM is row-independent, so survivor rows are
                 // unaffected.
                 self.concat_all.row_mut(b).copy_from_slice(eng.last_concat());
-            } else if exhausted.binary_search(&i).is_err() && poisoned.binary_search(&i).is_err() {
+            } else if exhausted.binary_search(&i).is_err()
+                && poisoned.binary_search(&i).is_err()
+                && reserve_poisoned.binary_search(&i).is_err()
+            {
                 // Chunk members: gather the chunk's concat rows. A
                 // skipped (exhausted/poisoned) chunk's scratch may be
                 // stale-shaped, so leave its stage-3 rows as the
@@ -1197,7 +1355,15 @@ impl FusedStepBatch {
         for (i, eng) in engines.iter_mut().enumerate() {
             eng.engine.activity.add(&self.per_seq[i]);
         }
-        TickReport { poisoned: failure.map(|f| f.indices).unwrap_or_default(), exhausted }
+        let mut poisoned = failure.map(|f| f.indices).unwrap_or_default();
+        if !reserve_poisoned.is_empty() {
+            // Reservation-phase panics join the stage-2 ones (sorted
+            // merge — callers binary_search this list). Fault path
+            // only: the allocation is fine here.
+            poisoned.extend_from_slice(&reserve_poisoned);
+            poisoned.sort_unstable();
+        }
+        TickReport { poisoned, exhausted }
     }
 
     /// Member `i`'s **last** output row (length E) of the most recent
@@ -1237,12 +1403,14 @@ impl Default for FusedStepBatch {
 #[must_use = "a tick may have poisoned/exhausted sessions; check ok()"]
 #[derive(Debug, Default)]
 pub struct TickReport {
-    /// Batch indices whose stage-2 attend tail panicked. Those
-    /// sessions' engines are left with partially-advanced KV caches
-    /// (the tail pushes K/V *before* computing — see [`attend_tail`])
-    /// and their `out_row` slots hold garbage; the caller must discard
-    /// the engines. All other indices are untouched by the failure and
-    /// bit-identical to a fault-free tick.
+    /// Batch indices whose stage-2 attend tail panicked — or whose
+    /// pre-tick block reservation panicked (e.g. an injected
+    /// `kv.cow.fork` fault mid-fork). Those sessions' engines are left
+    /// with partially-advanced KV caches (the tail pushes K/V *before*
+    /// computing — see [`attend_tail`]) and their `out_row` slots hold
+    /// garbage; the caller must discard the engines. All other indices
+    /// are untouched by the failure and bit-identical to a fault-free
+    /// tick. Sorted (callers binary-search it).
     pub poisoned: Vec<usize>,
     /// Batch indices whose pre-tick block reservation hit
     /// [`BlockPoolExhausted`] (sorted — built in index order). Unlike
@@ -1397,6 +1565,143 @@ mod tests {
         let mut c = KvCache::new(1, 2);
         c.push(&[1, 2], &[3, 4]);
         c.push(&[5, 6], &[7, 8]);
+    }
+
+    #[test]
+    fn kv_cache_adopt_shares_blocks_and_forks_on_divergent_append() {
+        // Donor caches 3 rows (block_size 2: one full + one partial
+        // block). Adoption bumps refcounts without touching the pool;
+        // the adopter's first append lands in the shared partial tail
+        // block and must CoW-fork it, leaving the donor's bytes
+        // untouched and the shared full block still shared.
+        let arena = BlockArena::new(2, 2, 4);
+        let mut donor = KvCache::with_arena(arena.clone(), 6);
+        for i in 0..3i8 {
+            donor.push(&[i, i + 10], &[i + 20, i + 30]);
+        }
+        assert_eq!(arena.blocks_in_use(), 2);
+
+        let mut adopter = KvCache::with_arena(arena.clone(), 6);
+        adopter.adopt(&donor.share_blocks(3), 3);
+        assert_eq!(adopter.len(), 3);
+        assert_eq!(arena.blocks_in_use(), 2, "adoption is refcount-only");
+        assert!(donor.blocks()[0].is_shared() && donor.blocks()[1].is_shared());
+        for i in 0..3 {
+            assert_eq!(adopter.k_row(i), donor.k_row(i), "adopted key row {i}");
+            assert_eq!(adopter.v_col(i), donor.v_col(i), "adopted value row {i}");
+        }
+
+        // Divergent append: position 3 lives in the shared tail block.
+        adopter.reserve(4).unwrap();
+        assert_eq!(arena.blocks_in_use(), 3, "the fork drew one fresh block");
+        assert_eq!(arena.cow_forks(), 1);
+        adopter.push(&[77, 78], &[79, 80]);
+        assert_eq!(adopter.k_row(2), donor.k_row(2), "retained row copied by the fork");
+        assert_eq!(adopter.k_row(3), &[77, 78]);
+        assert!(!donor.blocks()[1].is_shared(), "fork released the donor's tail");
+        assert!(donor.blocks()[0].is_shared(), "full prefix block still shared");
+        // The donor's own append path is unaffected.
+        donor.push(&[1, 2], &[3, 4]);
+        assert_eq!(donor.k_row(3), &[1, 2]);
+        assert_eq!(adopter.k_row(3), &[77, 78], "divergence stays private");
+
+        donor.release_blocks();
+        adopter.release_blocks();
+        assert_eq!(arena.blocks_in_use(), 0, "all physical blocks returned");
+        assert_eq!(arena.blocks_free(), 4);
+    }
+
+    #[test]
+    fn kv_cache_exact_block_adoption_forks_nothing_until_shared_tail() {
+        // A block-aligned prefix (4 rows, block_size 2): the adopter's
+        // appends start a FRESH block, so no fork happens at all.
+        let arena = BlockArena::new(2, 2, 4);
+        let mut donor = KvCache::with_arena(arena.clone(), 8);
+        for i in 0..4i8 {
+            donor.push(&[i, i], &[i, i]);
+        }
+        let mut adopter = KvCache::with_arena(arena.clone(), 8);
+        adopter.adopt(&donor.share_blocks(4), 4);
+        adopter.reserve(5).unwrap();
+        adopter.push(&[9, 9], &[9, 9]);
+        assert_eq!(arena.cow_forks(), 0, "aligned divergence needs no fork");
+        assert_eq!(arena.blocks_in_use(), 3);
+        drop(donor);
+        drop(adopter);
+        assert_eq!(arena.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn adopted_prefix_continuation_matches_cold_prefill() {
+        // The tentpole bit-exactness property at engine level: adopt a
+        // donor's prefix blocks (mid-block boundary), chunk-prefill the
+        // divergent suffix, then decode — everything must equal a cold
+        // engine prefilling the full prompt, and the donor must stay
+        // bit-exact after the adopter's CoW fork.
+        let d = dims();
+        let cfg = ItaConfig::tiny();
+        let packed = PackedWeights::shared(d, 5);
+        let arena = BlockArena::new(4, d.p, 64);
+        let mk = |arena: &Arc<BlockArena>| {
+            DecodeEngine::from_shared_arena(
+                cfg,
+                d,
+                packed.weights.clone(),
+                packed.weights_t.clone(),
+                packed.requants,
+                arena.clone(),
+            )
+        };
+        let x = gen_input(6, &d);
+        let prompt_rows = 10usize;
+        let shared_rows = 6usize; // 6 % 4 != 0: mid-block divergence
+
+        let mut donor = mk(&arena);
+        donor.prefill(&x.block_padded(0, 0, shared_rows, d.e));
+        let mut cold = mk(&arena);
+        let want = cold.prefill(&x.block_padded(0, 0, prompt_rows, d.e));
+
+        let mut adopter = mk(&arena);
+        adopter.adopt_prefix(&donor.share_prefix(shared_rows), shared_rows);
+        assert_eq!(adopter.len(), shared_rows);
+        let suffix = x.block_padded(shared_rows, 0, prompt_rows - shared_rows, d.e);
+        adopter.reserve_for(prompt_rows).unwrap();
+        assert_eq!(arena.cow_forks(), d.h, "one tail fork per head");
+        let got = adopter.prefill_chunk(&suffix);
+        for (j, r) in (shared_rows..prompt_rows).enumerate() {
+            assert_eq!(got.row(j), want.out.row(r), "suffix output row {r}");
+        }
+        // Decode steps from the adopted engine equal the cold engine's.
+        for r in prompt_rows..d.s {
+            assert_eq!(adopter.step(x.row(r)), cold.step(x.row(r)), "step at row {r}");
+        }
+        // The donor was never perturbed: its own continuation matches a
+        // fresh replay of the same sequence.
+        let mut donor_oracle = mk(&arena);
+        donor_oracle.prefill(&x.block_padded(0, 0, shared_rows, d.e));
+        let y = gen_input(7, &d);
+        for r in 0..4 {
+            assert_eq!(donor.step(y.row(r)), donor_oracle.step(y.row(r)), "donor step {r}");
+        }
+
+        drop(donor);
+        drop(donor_oracle);
+        drop(adopter);
+        drop(cold);
+        assert_eq!(arena.blocks_in_use(), 0, "refcounts balanced at quiesce");
+    }
+
+    #[test]
+    fn zero_row_adoption_is_a_cold_start() {
+        // prefix length 0: adopt nothing, everything prefills locally.
+        let d = dims();
+        let mut a = DecodeEngine::new(ItaConfig::tiny(), d, 5);
+        let b = DecodeEngine::new(ItaConfig::tiny(), d, 5);
+        a.adopt_prefix(&b.share_prefix(0), 0);
+        assert!(a.is_empty());
+        let x = gen_input(9, &d);
+        let mut cold = DecodeEngine::new(ItaConfig::tiny(), d, 5);
+        assert_eq!(a.prefill(&x).out, cold.prefill(&x).out);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! max_waiting_ticks = 4
 //! stream_buffer = 32
 //! prefill_chunk_rows = 8
+//! prefix_cache_entries = 8
 //! ```
 
 pub mod toml;
@@ -112,6 +113,13 @@ pub struct ServerConfig {
     /// `usize::MAX` (the default) prefills whole prompts in one chunk;
     /// 0 is rejected by [`SystemConfig::validate`].
     pub prefill_chunk_rows: usize,
+    /// Router prefix-cache capacity (entries). Each completed prefill
+    /// publishes its prompt's KV blocks (refcount bumps, no copies);
+    /// later admissions sharing a prompt prefix adopt those blocks and
+    /// prefill only the divergent suffix. LRU beyond this many entries;
+    /// refcount-1 entries are also evicted under pool pressure, ahead
+    /// of preemption. 0 disables prefix sharing entirely.
+    pub prefix_cache_entries: usize,
 }
 
 impl Default for ServerConfig {
@@ -129,6 +137,7 @@ impl Default for ServerConfig {
             kv_block_size: 0,
             kv_pool_blocks: 0,
             prefill_chunk_rows: usize::MAX,
+            prefix_cache_entries: 8,
         }
     }
 }
@@ -283,6 +292,12 @@ impl SystemConfig {
                 "server",
                 "prefill_chunk_rows",
                 def.server.prefill_chunk_rows,
+            )?,
+            prefix_cache_entries: get_usize(
+                &doc,
+                "server",
+                "prefix_cache_entries",
+                def.server.prefix_cache_entries,
             )?,
         };
 
@@ -451,6 +466,14 @@ mod tests {
         assert_eq!(cfg.server.prefill_chunk_rows, 8);
         // Default: unchunked (whole-prompt prefill in one tick member).
         assert_eq!(SystemConfig::default().server.prefill_chunk_rows, usize::MAX);
+    }
+
+    #[test]
+    fn parse_prefix_cache_knob() {
+        let cfg = SystemConfig::from_toml("[server]\nprefix_cache_entries = 0\n").unwrap();
+        assert_eq!(cfg.server.prefix_cache_entries, 0, "0 disables prefix sharing");
+        // Default: a small cache is on (common system prompts share).
+        assert_eq!(SystemConfig::default().server.prefix_cache_entries, 8);
     }
 
     #[test]

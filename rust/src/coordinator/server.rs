@@ -20,7 +20,7 @@ use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
 use crate::metrics::ServerMetrics;
-use crate::util::blocks::BlockArena;
+use crate::util::blocks::{Block, BlockArena};
 use crate::util::failpoint;
 use crate::util::mat::MatI8;
 use crate::util::oneshot;
@@ -636,6 +636,153 @@ fn release_busy(sessions: &SessionTable, session: SessionId) {
     }
 }
 
+/// One published prompt prefix (§Prefix-sharing): the exact prompt
+/// rows it matches, shared handles to the KV blocks that already hold
+/// them, and the weight-set identity those bytes were projected under.
+/// Prompts are compared byte-exact (no hashing — a collision would
+/// silently corrupt a stream), and an entry only ever matches engines
+/// built on the SAME [`PackedWeights`] set: identical prompt bytes
+/// under different weights project to different KV rows.
+struct PrefixEntry {
+    /// Flat prompt rows (`rows` × E, row-major).
+    prompt: Vec<i8>,
+    rows: usize,
+    /// Per-head shared block handles covering positions `0..rows`.
+    blocks: Vec<Vec<Block>>,
+    /// `Arc::as_ptr` identity of the donor engine's weight set.
+    model: usize,
+    last_used: u64,
+}
+
+/// The router's prefix cache: completed prefills publish their
+/// prompt's KV blocks (refcount bumps, zero copies) and later
+/// admissions adopt the longest cached block-aligned prefix, paying
+/// prefill compute only for the divergent suffix. Bounded LRU;
+/// entries no live session shares are additionally released under
+/// pool pressure, ahead of preemption (an eviction frees physical
+/// blocks without costing any session its progress).
+struct PrefixCache {
+    entries: Vec<PrefixEntry>,
+    capacity: usize,
+    clock: u64,
+}
+
+impl PrefixCache {
+    fn new(capacity: usize) -> Self {
+        Self { entries: Vec::new(), capacity, clock: 0 }
+    }
+
+    /// Longest usable cached prefix of `prompt` (flat, `e_cols`-column
+    /// rows) under weight set `model`: returns `(entry index, rows to
+    /// adopt)`. At least one prompt row always prefills locally (its
+    /// output row seeds the feedback loop), so a full-prompt hit
+    /// adopts `rows - 1`. A match shorter than its entry is rounded
+    /// DOWN to a block multiple — adopting a partial tail block that
+    /// holds foreign rows beyond the match would fork immediately for
+    /// no saved prefill; a full-entry match keeps its unaligned tail
+    /// (the fork there is paid once and saves `rows % bs` more rows).
+    fn best_match(
+        &self,
+        prompt: &[i8],
+        e_cols: usize,
+        model: usize,
+        block_size: usize,
+    ) -> Option<(usize, usize)> {
+        let rows = prompt.len() / e_cols;
+        if rows == 0 {
+            return None;
+        }
+        let mut best: Option<(usize, usize)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.model != model {
+                continue;
+            }
+            let lim = e.rows.min(rows) * e_cols;
+            let common_bytes = prompt[..lim]
+                .iter()
+                .zip(&e.prompt[..lim])
+                .take_while(|(a, b)| a == b)
+                .count();
+            let common = common_bytes / e_cols;
+            let mut m = common.min(rows - 1);
+            if m < e.rows {
+                m -= m % block_size;
+            }
+            if m > 0 && best.map_or(true, |(_, bm)| m > bm) {
+                best = Some((i, m));
+            }
+        }
+        best
+    }
+
+    fn touch(&mut self, idx: usize) {
+        self.clock += 1;
+        self.entries[idx].last_used = self.clock;
+    }
+
+    /// Publish a completed prefill's blocks. An entry with the exact
+    /// same prompt under the same weights is refreshed, not
+    /// duplicated (the redundant handles drop, refcounts release).
+    /// Returns how many LRU entries were displaced to make room.
+    fn insert(
+        &mut self,
+        model: usize,
+        prompt: &[i8],
+        rows: usize,
+        blocks: Vec<Vec<Block>>,
+    ) -> usize {
+        if self.capacity == 0 || rows == 0 {
+            return 0;
+        }
+        self.clock += 1;
+        if let Some(e) =
+            self.entries.iter_mut().find(|e| e.model == model && e.prompt == prompt)
+        {
+            e.last_used = self.clock;
+            return 0;
+        }
+        let mut displaced = 0;
+        while self.entries.len() >= self.capacity {
+            let lru = (0..self.entries.len())
+                .min_by_key(|&i| self.entries[i].last_used)
+                .expect("non-empty over-capacity cache");
+            self.entries.swap_remove(lru);
+            displaced += 1;
+        }
+        self.entries.push(PrefixEntry {
+            prompt: prompt.to_vec(),
+            rows,
+            blocks,
+            model,
+            last_used: self.clock,
+        });
+        displaced
+    }
+
+    /// Pool-pressure relief: drop the least-recently-used entry whose
+    /// blocks no live session shares (every handle refcount 1 — only
+    /// the cache keeps them alive, so the drop returns physical blocks
+    /// to the pool). Entries a session still shares are kept: evicting
+    /// them would free nothing. Returns whether an entry was released.
+    fn evict_one_unshared(&mut self) -> bool {
+        let mut lru: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.blocks.iter().flatten().all(|b| !b.is_shared())
+                && lru.map_or(true, |j| e.last_used < self.entries[j].last_used)
+            {
+                lru = Some(i);
+            }
+        }
+        match lru {
+            Some(i) => {
+                self.entries.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
 /// One generation live inside the router's running batch: the
 /// session's engine (taken from the table for the whole generation,
 /// under the same [`BusyGuard`] discipline as the worker path), the
@@ -765,6 +912,17 @@ fn run_router(
     let mut batch = FusedStepBatch::new();
     let mut ticks_since_admission: u64 = 0;
     let mut disconnected = false;
+    // §Prefix-sharing: completed prefills publish their KV blocks here;
+    // admission adopts matches (capacity 0 disables the whole path).
+    let mut prefix = PrefixCache::new(config.server.prefix_cache_entries);
+    // Admission-retry watermark: when the pool's free count RISES
+    // between admission gates (session close, TTL eviction on the
+    // dispatcher thread, preemption, prefix eviction), a deferred job
+    // must retry immediately — not wait out the escape-hatch timer.
+    let mut last_free_seen = arena.blocks_free();
+    // The arena tallies CoW forks process-wide; the router folds the
+    // per-pass delta into the metrics counter.
+    let mut last_forks_seen = arena.cow_forks();
 
     loop {
         // ---- Ingest --------------------------------------------------
@@ -876,28 +1034,49 @@ fn run_router(
         // ---- Admission (waiting/served-ratio policy) ------------------
         // Admit when the batch is empty (nothing to pause), when the
         // waiting queue is large relative to the running batch (the
-        // prefill pause amortizes over many admissions), or when the
-        // escape hatch fires (bounded time-to-first-token).
+        // prefill pause amortizes over many admissions), when the
+        // escape hatch fires (bounded time-to-first-token), or when
+        // blocks came FREE since the last gate — a session close, TTL
+        // eviction, preemption or prefix eviction may be exactly what
+        // a memory-deferred job was waiting for, and making it sit out
+        // the escape-hatch timer would stall it behind an idle pool.
         let slots = max_running.saturating_sub(running.len());
+        let free_now = arena.blocks_free();
+        let blocks_freed = free_now > last_free_seen;
+        last_free_seen = free_now;
         let due = !waiting.is_empty()
             && slots > 0
             && (running.is_empty()
                 || (waiting.len() as u64) * 100 >= (running.len() as u64) * ratio_pct
-                || ticks_since_admission >= max_waiting_ticks);
+                || ticks_since_admission >= max_waiting_ticks
+                || blocks_freed);
         if due {
             let n = waiting.len().min(slots);
             let admitted: Vec<GenerateJob> = waiting.drain(..n).collect();
-            let (newly, deferred) = admit_generations(config, admitted, sessions, metrics);
+            let (newly, deferred) =
+                admit_generations(config, admitted, sessions, metrics, arena, &mut prefix);
             metrics.router_admissions.add(newly.len() as u64);
+            let any_admitted = !newly.is_empty();
             running.extend(newly);
             // Jobs the pool could not cover go back to the FRONT of
             // the waiting queue in order (busy flag still held): they
-            // re-try as completions and closes free blocks, and the
-            // deadline shed above still bounds their wait.
+            // re-try as blocks free up (the watermark above), and the
+            // deadline shed above still bounds their wait. A fully-
+            // deferred gate does NOT reset the escape-hatch timer —
+            // nothing was served, so the clock keeps running.
+            let any_deferred = !deferred.is_empty();
             for job in deferred.into_iter().rev() {
                 waiting.push_front(job);
             }
-            ticks_since_admission = 0;
+            if any_deferred && prefix.evict_one_unshared() {
+                // Pool pressure at admission: release an unshared
+                // prefix entry ahead of (and often instead of) the
+                // tick-side preemption path.
+                metrics.prefix_evictions.inc();
+            }
+            if any_admitted {
+                ticks_since_admission = 0;
+            }
         }
 
         // ---- Deliver held-back tokens; reap finished & cancelled ------
@@ -1053,6 +1232,21 @@ fn run_router(
                             metrics.prefills_completed.inc();
                             g.next.clear();
                             g.next.extend_from_slice(batch.out_row(k));
+                            // §Prefix-sharing: publish this prompt's
+                            // KV blocks (refcount bumps, no copies).
+                            // Future admissions with a matching
+                            // prompt prefix adopt them and prefill
+                            // only their divergent suffix.
+                            if prefix.capacity > 0 {
+                                let model = Arc::as_ptr(&g.engine.weights) as usize;
+                                let displaced = prefix.insert(
+                                    model,
+                                    &g.history[..g.prompt_rows * e_cols],
+                                    g.prompt_rows,
+                                    g.engine.share_prefix(g.prompt_rows),
+                                );
+                                metrics.prefix_evictions.add(displaced as u64);
+                            }
                         }
                         continue;
                     }
@@ -1082,23 +1276,32 @@ fn run_router(
                     }
                 }
                 if !report.exhausted.is_empty() {
-                    // Memory-pressure preemption: park ONE victim —
-                    // the youngest unfinished generation (FCFS: older
-                    // admissions keep their progress; the youngest
-                    // recomputes the least). Its blocks return to the
-                    // pool so the starved sessions' reservations
-                    // succeed next tick; the victim restores later,
-                    // bit-exactly, via the recompute pass above. The
-                    // victim may be an exhausted session itself — then
-                    // parking it IS the resolution.
-                    // A mid-prefill victim loses its chunk progress
-                    // with its blocks (`len()` → 0) and re-chunks
-                    // from the start after restore — bit-identical.
-                    if let Some(victim) = running
+                    // Memory pressure, cheapest relief first: drop an
+                    // unshared prefix-cache entry (§Prefix-sharing) —
+                    // that frees physical blocks without costing ANY
+                    // session progress, so preemption is skipped this
+                    // pass and the starved sessions simply retry.
+                    if prefix.evict_one_unshared() {
+                        metrics.prefix_evictions.inc();
+                    } else if let Some(victim) = running
                         .iter_mut()
                         .rev()
                         .find(|g| !g.parked && (!g.prefill_done || g.emitted < g.max_new_tokens))
                     {
+                        // Preemption: park ONE victim — the youngest
+                        // unfinished generation (FCFS: older
+                        // admissions keep their progress; the
+                        // youngest recomputes the least). Its blocks
+                        // return to the pool so the starved sessions'
+                        // reservations succeed next tick; the victim
+                        // restores later, bit-exactly, via the
+                        // recompute pass above. The victim may be an
+                        // exhausted session itself — then parking it
+                        // IS the resolution.
+                        // A mid-prefill victim loses its chunk
+                        // progress with its blocks (`len()` → 0) and
+                        // re-chunks from the start after restore —
+                        // bit-identical.
                         victim.engine.release_blocks();
                         victim.parked = true;
                         metrics.preemptions.inc();
@@ -1122,6 +1325,9 @@ fn run_router(
         metrics.running_sessions.set(running.len() as u64);
         metrics.kv_blocks_in_use.set(arena.blocks_in_use() as u64);
         metrics.kv_blocks_peak.set(arena.blocks_peak() as u64);
+        let forks_now = arena.cow_forks();
+        metrics.cow_forks.add((forks_now - last_forks_seen) as u64);
+        last_forks_seen = forks_now;
     }
 }
 
@@ -1131,18 +1337,31 @@ fn run_router(
 /// prefill compute runs here (§Chunked-prefill): every admitted
 /// prompt — however long — joins the running set immediately and the
 /// unified tick advances it chunk-by-chunk alongside the live
-/// decoders, so admission never pauses anyone. Returns the
-/// generations that joined plus the jobs **deferred on memory** (the
-/// pool could not cover even their first chunk — engines back in the
-/// table with the busy flag still held, and the caller requeues
-/// them); failures answer on their streams and never join.
+/// decoders, so admission never pauses anyone.
+///
+/// §Prefix-sharing: before reserving, each job is matched against the
+/// router's prefix cache; the longest cached block-aligned prefix is
+/// ADOPTED (refcount bumps — zero copies, zero prefill compute) and
+/// only the divergent suffix rides the chunked path. The adopting
+/// reservation also performs any copy-on-write fork an unaligned tail
+/// needs, so a failure there releases the adopted handles (refcounts
+/// restored exactly) and defers like the cold path.
+///
+/// Returns the generations that joined plus the jobs **deferred on
+/// memory** (the pool could not cover even their first chunk —
+/// engines back in the table with the busy flag still held, and the
+/// caller requeues them); failures answer on their streams and never
+/// join.
 fn admit_generations<'a>(
     config: &SystemConfig,
     jobs: Vec<GenerateJob>,
     sessions: &'a SessionTable,
     metrics: &'a ServerMetrics,
+    arena: &Arc<BlockArena>,
+    prefix: &mut PrefixCache,
 ) -> (Vec<RunningGen<'a>>, Vec<GenerateJob>) {
     let chunk_rows = config.server.prefill_chunk_rows.max(1);
+    let heads = config.model.dims.h;
     let mut newly: Vec<RunningGen<'a>> = Vec::with_capacity(jobs.len());
     let mut deferred: Vec<GenerateJob> = Vec::new();
     let mut table = lock_table(sessions);
@@ -1153,39 +1372,77 @@ fn admit_generations<'a>(
             }
             Some(slot) => match slot.engine.take() {
                 Some(mut engine) => {
+                    // Seed the recompute-restore history with the
+                    // prompt rows — the chunk loop reads its input
+                    // slices from these (starting at the adopted
+                    // cursor), prefix matching compares against them,
+                    // and each decode tick appends its consumed
+                    // feedback row.
+                    let prompt_rows = job.prompt.rows();
+                    let e_cols = job.prompt.cols();
+                    let mut history = Vec::with_capacity(
+                        (prompt_rows + job.max_new_tokens) * e_cols,
+                    );
+                    for r in 0..prompt_rows {
+                        history.extend_from_slice(job.prompt.row(r));
+                    }
+                    // §Prefix-sharing: adopt the longest cached
+                    // block-aligned prefix published under this
+                    // engine's weight set. The engine's fill level is
+                    // the chunk cursor, so adoption alone fast-
+                    // forwards the chunked prefill past the shared
+                    // rows.
+                    // Tag the engine FIRST, so an injected fault can
+                    // target one session out of a fused tick — and so
+                    // the admission-time CoW fork below already
+                    // carries this session's `kv.cow.fork` ctx.
+                    engine.fail_tag = job.session;
+                    let model = Arc::as_ptr(&engine.weights) as usize;
+                    let matched = prefix.best_match(
+                        &history[..prompt_rows * e_cols],
+                        e_cols,
+                        model,
+                        arena.block_size(),
+                    );
+                    if let Some((idx, m)) = matched {
+                        let per = arena.blocks_for(m);
+                        let adopted: Vec<Vec<Block>> = prefix.entries[idx]
+                            .blocks
+                            .iter()
+                            .map(|hb| hb[..per].iter().map(|b| b.share()).collect())
+                            .collect();
+                        engine.adopt_prefix(&adopted, m);
+                    }
                     // Memory gate (§Paged-KV): reserve the first
-                    // chunk's blocks FALLIBLY before committing —
-                    // later chunks reserve per-tick inside the fused
-                    // tick, where exhaustion surfaces as a
-                    // recoverable `TickReport::exhausted` verdict. A
-                    // job the pool cannot cover at all is deferred —
-                    // engine back in the slot untouched (the failed
+                    // (divergent) chunk's blocks FALLIBLY before
+                    // committing — later chunks reserve per-tick
+                    // inside the fused tick, where exhaustion
+                    // surfaces as a recoverable
+                    // `TickReport::exhausted` verdict. This reserve
+                    // also CoW-forks a shared unaligned tail block.
+                    // A job the pool cannot cover at all is deferred —
+                    // engine back in the slot EMPTY (adopted handles
+                    // released, refcounts restored; the failed
                     // reserve rolled its draws back), busy flag still
                     // held, no stream verdict: the caller just waits.
-                    let prompt_rows = job.prompt.rows();
-                    if engine.reserve_for(prompt_rows.min(chunk_rows)).is_err() {
+                    let cursor = engine.len();
+                    let first = cursor.saturating_add(chunk_rows).min(prompt_rows);
+                    if engine.reserve_for(first).is_err() {
+                        engine.release_blocks();
                         slot.engine = Some(engine);
                         metrics.admissions_deferred_on_memory.inc();
                         deferred.push(job);
                         continue;
                     }
-                    // Tag the engine so an injected fault can
-                    // target one session out of a fused tick.
-                    engine.fail_tag = job.session;
-                    if prompt_rows > chunk_rows {
+                    if let Some((idx, m)) = matched {
+                        prefix.touch(idx);
+                        metrics.prefix_match_rows.add(m as u64);
+                        metrics.prefix_shared_blocks.add((arena.blocks_for(m) * heads) as u64);
+                    }
+                    if prompt_rows - cursor > chunk_rows {
                         metrics.chunked_prefill_sessions.inc();
                     }
                     let guard = BusyGuard::new(sessions, metrics, job.session);
-                    // Seed the recompute-restore history with the
-                    // prompt rows — the chunk loop reads its input
-                    // slices from these; each decode tick then
-                    // appends its consumed feedback row.
-                    let mut history = Vec::with_capacity(
-                        (prompt_rows + job.max_new_tokens) * job.prompt.cols(),
-                    );
-                    for r in 0..prompt_rows {
-                        history.extend_from_slice(job.prompt.row(r));
-                    }
                     newly.push(RunningGen {
                         session: job.session,
                         tx: job.tx,

@@ -633,6 +633,11 @@ impl TileEngine {
     /// reads one contiguous block-local slice — same kernels, same
     /// order, same [`Activity`]: bit-identical to the contiguous
     /// variant over the same cached bytes.
+    ///
+    /// [`Block`] is a refcounted handle (§Prefix-sharing): a table
+    /// entry other sessions share reads identically through `Deref` —
+    /// shared and owned walks are the same bytes, so the attend tail
+    /// needs no ownership awareness (writes, not reads, fork).
     pub fn logits_row_paged(
         &mut self,
         q: &[i8],

@@ -219,6 +219,20 @@ pub struct ServerMetrics {
     /// prefill chunk never stalls it — so under an ample pool this
     /// stays 0 even while a long prompt chunks through the batch.
     pub max_step_stall_ticks: Gauge,
+    /// Prompt rows adopted from the router's prefix cache instead of
+    /// being prefilled (summed over prefix-match admissions — the
+    /// prefill compute the cache saved, in rows).
+    pub prefix_match_rows: Counter,
+    /// KV blocks adopted by refcount bump at admission (physical
+    /// blocks shared, not copied — the memory the cache saved).
+    pub prefix_shared_blocks: Counter,
+    /// Copy-on-write block forks performed by sessions diverging from
+    /// a shared prefix (each fork = one block allocation + row copy).
+    pub cow_forks: Counter,
+    /// Prefix-cache entries evicted — LRU beyond capacity, or
+    /// refcount-1 entries released under pool pressure ahead of
+    /// preemption.
+    pub prefix_evictions: Counter,
 }
 
 impl ServerMetrics {
@@ -251,6 +265,7 @@ impl ServerMetrics {
              router: admissions={} streams_done={} tokens={} occupancy={:.2} backpressure={}\n\
              chunked: prefill_chunks={} sessions={} max_step_stall_ticks={}\n\
              kv: blocks_in_use={} peak={} preemptions={} restores={} deferred={}\n\
+             prefix: match_rows={} shared_blocks={} cow_forks={} evictions={}\n\
              faults: deadline_expired={} cancelled={} dropped={} poisoned={} evicted={}\n\
              ticks: mean={:.1}us slow={}\n\
              sim: cycles={} energy={:.3}uJ",
@@ -282,6 +297,10 @@ impl ServerMetrics {
             self.preemptions.get(),
             self.restores.get(),
             self.admissions_deferred_on_memory.get(),
+            self.prefix_match_rows.get(),
+            self.prefix_shared_blocks.get(),
+            self.cow_forks.get(),
+            self.prefix_evictions.get(),
             self.deadlines_expired.get(),
             self.requests_cancelled.get(),
             self.ingress_dropped.get(),
@@ -403,6 +422,20 @@ mod tests {
         let r = m.report();
         assert!(
             r.contains("kv: blocks_in_use=12 peak=20 preemptions=3 restores=2 deferred=5"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn server_metrics_report_prefix_line() {
+        let m = ServerMetrics::default();
+        m.prefix_match_rows.add(64);
+        m.prefix_shared_blocks.add(8);
+        m.cow_forks.add(3);
+        m.prefix_evictions.inc();
+        let r = m.report();
+        assert!(
+            r.contains("prefix: match_rows=64 shared_blocks=8 cow_forks=3 evictions=1"),
             "{r}"
         );
     }

@@ -2,32 +2,51 @@
 //! shared, bounded [`BlockArena`] (the block-table scheme of
 //! vLLM/TGI-style servers, specialized to ITA's decode layout).
 //!
-//! A [`Block`] holds `block_size` cached positions for one head: keys
-//! row-major (`block_size`×P, the Q·Kᵀ-ready layout) and values packed
-//! transposed (P×`block_size`, the A·V-ready layout) — the same two
-//! layouts the contiguous cache used, just chunked, so the O(S) decode
-//! tail walks blocks with contiguous slice reads and bit-identical
-//! integer dots (i32 partial sums over block prefixes are associative;
-//! at ITA's int8 ranges a full-capacity row sums to ≪ `i32::MAX`).
+//! A [`Block`] is a **refcounted handle** to `block_size` cached
+//! positions for one head: keys row-major (`block_size`×P, the
+//! Q·Kᵀ-ready layout) and values packed transposed (P×`block_size`,
+//! the A·V-ready layout) — the same two layouts the contiguous cache
+//! used, just chunked, so the O(S) decode tail walks blocks with
+//! contiguous slice reads and bit-identical integer dots (i32 partial
+//! sums over block prefixes are associative; at ITA's int8 ranges a
+//! full-capacity row sums to ≪ `i32::MAX`).
 //!
-//! The arena is a pre-allocated free list with **ownership transfer**:
-//! `try_alloc` moves a block out, `reclaim` moves it back. A session's
-//! cache owns its blocks outright, so the fused tick's parallel
-//! per-session fan-out needs no block locking and no unsafe aliasing —
-//! the mutex guards only the free-list pop/push, which happens at most
-//! once per `block_size` appended positions per head. Steady-state
-//! operation performs no heap allocation: every block is allocated at
-//! arena construction and the free list never grows past its initial
-//! capacity.
+//! **Prefix sharing:** [`Block::share`] clones the handle, bumping the
+//! refcount — N sessions whose prompts agree on a block-aligned prefix
+//! all point their block tables at the SAME physical storage. Handles
+//! deref to the read-only [`BlockStorage`], so the decode tail walks
+//! shared and owned entries identically; writes go through
+//! [`Block::storage_mut`], which insists on exclusivity — the cache
+//! copy-on-write-forks any shared block before appending into it.
+//! Dropping a handle returns the physical block to the free list only
+//! at refcount zero, so the occupancy gauges (`blocks_in_use`,
+//! `blocks_peak`) count **physical** blocks, never shared views.
+//!
+//! The arena is a pre-allocated free list with ownership transfer:
+//! `try_alloc` moves a storage Arc out, the last handle's drop moves it
+//! back. A session's cache owns its *handles* outright, so the fused
+//! tick's parallel per-session fan-out needs no block locking — the
+//! mutex guards only the free-list pop/push plus the retire-time
+//! refcount check. The release decision (`strong_count == 1`) is made
+//! UNDER the free-list mutex: every handle drop funnels through
+//! [`BlockArena`] retire, and a new reference can only be minted from a
+//! live handle, so a sole-survivor count observed inside the lock
+//! cannot be raced by a concurrent `share`. Steady-state operation
+//! performs no heap allocation: every storage Arc is allocated at
+//! arena construction, and alloc/share/retire only move or
+//! refcount-bump those Arcs.
 //!
 //! Memory-pressure containment starts here: `try_alloc` is **fallible**
 //! ([`BlockPoolExhausted`]) instead of panicking, and the
 //! `kv.block.alloc` failpoint (ctx = the arena's `fail_tag`) forces an
 //! exhaustion at a chosen moment so the chaos suite can drive the
-//! preempt/restore path deterministically.
+//! preempt/restore path deterministically. Copy-on-write forks draw
+//! from the same fallible path (plus their own `kv.cow.fork` point in
+//! the cache layer) and are tallied in [`BlockArena::cow_forks`].
 
 use crate::util::failpoint;
 use crate::util::mat::MatI8;
+use std::mem::ManuallyDrop;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -37,15 +56,81 @@ use std::sync::{Arc, Mutex};
 /// that the free-list mutex is touched rarely.
 pub const DEFAULT_KV_BLOCK: usize = 16;
 
-/// One head-cache block: `block_size` positions of K (row-major) and
-/// Vᵀ (transposed pack). Storage only — validity (`len`) lives in the
-/// owning cache's block table.
+/// One head-cache block's physical storage: `block_size` positions of
+/// K (row-major) and Vᵀ (transposed pack). Storage only — validity
+/// (`len`) lives in the owning cache's block table, and sharing state
+/// lives in the [`Block`] handles wrapping this.
 #[derive(Debug)]
-pub struct Block {
+pub struct BlockStorage {
     /// Keys: `block_size`×P row-major.
     pub k: MatI8,
     /// Values packed transposed: P×`block_size`.
     pub vt: MatI8,
+}
+
+/// Refcounted handle to one [`BlockStorage`]. Derefs to the storage
+/// for reads; [`Block::storage_mut`] grants writes only while the
+/// handle is exclusive. Dropping the last handle returns the physical
+/// block to its home arena's free list.
+#[derive(Debug)]
+pub struct Block {
+    // ManuallyDrop so `Drop` can move both Arcs into the arena's
+    // retire path (the release decision must happen under the
+    // free-list mutex, not in Arc's own drop).
+    inner: ManuallyDrop<Arc<BlockStorage>>,
+    home: ManuallyDrop<Arc<BlockArena>>,
+}
+
+impl std::ops::Deref for Block {
+    type Target = BlockStorage;
+    #[inline]
+    fn deref(&self) -> &BlockStorage {
+        &self.inner
+    }
+}
+
+impl Block {
+    /// Clone the handle: both handles now reference the same physical
+    /// storage (one `blocks_in_use` unit between them). Costs two
+    /// atomic increments — no heap allocation, no lock.
+    #[inline]
+    pub fn share(&self) -> Block {
+        Block {
+            inner: ManuallyDrop::new(Arc::clone(&self.inner)),
+            home: ManuallyDrop::new(Arc::clone(&self.home)),
+        }
+    }
+
+    /// Whether any other handle references this storage. A shared
+    /// block is read-only; the cache must CoW-fork before appending.
+    #[inline]
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.inner) > 1
+    }
+
+    /// Live handle count for this physical block (this one included).
+    #[inline]
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+
+    /// Mutable access to the storage. Panics if the block is shared —
+    /// every write path must have forked first, so a violation here is
+    /// a caller bug, not a recoverable condition.
+    #[inline]
+    pub fn storage_mut(&mut self) -> &mut BlockStorage {
+        Arc::get_mut(&mut self.inner).expect("write to a shared KV block (CoW fork missing)")
+    }
+}
+
+impl Drop for Block {
+    fn drop(&mut self) {
+        // SAFETY: both fields are taken exactly once, here, and never
+        // touched again (Drop runs once).
+        let inner = unsafe { ManuallyDrop::take(&mut self.inner) };
+        let home = unsafe { ManuallyDrop::take(&mut self.home) };
+        home.retire(inner);
+    }
 }
 
 /// `try_alloc` found the free list empty (or an armed `kv.block.alloc`
@@ -69,12 +154,13 @@ impl std::error::Error for BlockPoolExhausted {}
 /// (`block_size` positions × `p` projection lanes).
 #[derive(Debug)]
 pub struct BlockArena {
-    free: Mutex<Vec<Block>>,
+    free: Mutex<Vec<Arc<BlockStorage>>>,
     block_size: usize,
     p: usize,
     total: usize,
     in_use: AtomicUsize,
     peak: AtomicUsize,
+    cow_forks: AtomicUsize,
     /// Fault-injection targeting tag: the `kv.block.alloc` failpoint
     /// fires only for hits carrying this ctx, so a chaos test can arm
     /// the *server's* arena without tripping the private arenas of its
@@ -95,7 +181,10 @@ impl BlockArena {
         assert!(p >= 1, "projection width must be at least one lane");
         let mut free = Vec::with_capacity(total);
         for _ in 0..total {
-            free.push(Block { k: MatI8::zeros(block_size, p), vt: MatI8::zeros(p, block_size) });
+            free.push(Arc::new(BlockStorage {
+                k: MatI8::zeros(block_size, p),
+                vt: MatI8::zeros(p, block_size),
+            }));
         }
         Arc::new(Self {
             free: Mutex::new(free),
@@ -104,6 +193,7 @@ impl BlockArena {
             total,
             in_use: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
+            cow_forks: AtomicUsize::new(0),
             fail_tag,
         })
     }
@@ -126,7 +216,8 @@ impl BlockArena {
         self.total
     }
 
-    /// Blocks currently handed out.
+    /// Physical blocks currently handed out. Shared views do not
+    /// inflate this: N handles to one storage count once.
     #[inline]
     pub fn blocks_in_use(&self) -> usize {
         self.in_use.load(Ordering::Relaxed)
@@ -136,6 +227,20 @@ impl BlockArena {
     #[inline]
     pub fn blocks_peak(&self) -> usize {
         self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Copy-on-write forks performed against this arena's blocks over
+    /// its lifetime (tallied by the cache layer via
+    /// [`BlockArena::note_cow_fork`]).
+    #[inline]
+    pub fn cow_forks(&self) -> usize {
+        self.cow_forks.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed copy-on-write fork.
+    #[inline]
+    pub fn note_cow_fork(&self) {
+        self.cow_forks.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Blocks currently free. Advisory under concurrency — admission
@@ -159,25 +264,41 @@ impl BlockArena {
         }
         let popped = self.free.lock().unwrap_or_else(|e| e.into_inner()).pop();
         match popped {
-            Some(b) => {
+            Some(storage) => {
                 let now = self.in_use.fetch_add(1, Ordering::Relaxed) + 1;
                 self.peak.fetch_max(now, Ordering::Relaxed);
-                Ok(b)
+                Ok(Block {
+                    inner: ManuallyDrop::new(storage),
+                    home: ManuallyDrop::new(Arc::clone(self)),
+                })
             }
             None => Err(BlockPoolExhausted { total_blocks: self.total }),
         }
     }
 
-    /// Return a block to the pool. Contents are left as-is — a cache
-    /// only ever reads positions it has written, so scrubbing would be
-    /// pure overhead.
+    /// Drop one handle. When it was the last reference, the physical
+    /// block returns to the free list; otherwise only the view dies.
+    /// (Plain `drop(block)` does the same — this form keeps the
+    /// geometry assertions at explicit call sites.)
     pub fn reclaim(self: &Arc<Self>, block: Block) {
         assert_eq!(block.k.rows(), self.block_size, "foreign block (size)");
         assert_eq!(block.k.cols(), self.p, "foreign block (width)");
-        self.in_use.fetch_sub(1, Ordering::Relaxed);
+        drop(block);
+    }
+
+    /// Handle-drop funnel: decide release-vs-view-death UNDER the
+    /// free-list mutex. A `strong_count` of 1 observed here is final —
+    /// new references are only minted from live handles, and this was
+    /// the last one.
+    fn retire(&self, storage: Arc<BlockStorage>) {
         let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
-        debug_assert!(free.len() < self.total, "reclaim beyond pool size");
-        free.push(block);
+        if Arc::strong_count(&storage) == 1 {
+            self.in_use.fetch_sub(1, Ordering::Relaxed);
+            debug_assert!(free.len() < self.total, "reclaim beyond pool size");
+            free.push(storage);
+        }
+        // else: another handle survives; dropping our Arc here (inside
+        // the lock) just decrements the count.
     }
 }
 
@@ -231,6 +352,64 @@ mod tests {
         assert_eq!(b.k.shape(), (3, 5), "K block is block_size x P row-major");
         assert_eq!(b.vt.shape(), (5, 3), "V block is the P x block_size transposed pack");
         a.reclaim(b);
+    }
+
+    #[test]
+    fn shared_handles_count_one_physical_block_until_last_drop() {
+        let a = BlockArena::new(2, 2, 2);
+        let mut b = a.try_alloc().unwrap();
+        assert!(!b.is_shared());
+        assert_eq!(b.refcount(), 1);
+        b.storage_mut().k.row_mut(0).fill(7);
+
+        let view = b.share();
+        assert!(b.is_shared() && view.is_shared());
+        assert_eq!((b.refcount(), view.refcount()), (2, 2));
+        // Sharing is a view, not an allocation: one physical block.
+        assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.blocks_free(), 1);
+        // Both handles read the same bytes.
+        assert_eq!(view.k.row(0), b.k.row(0));
+
+        drop(b);
+        // A surviving handle keeps the physical block out of the pool.
+        assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.blocks_free(), 1);
+        assert!(!view.is_shared(), "sole survivor is exclusive again");
+        drop(view);
+        assert_eq!(a.blocks_in_use(), 0);
+        assert_eq!(a.blocks_free(), 2);
+    }
+
+    #[test]
+    fn exclusivity_returns_after_sharers_leave() {
+        let a = BlockArena::new(2, 2, 1);
+        let mut b = a.try_alloc().unwrap();
+        let view = b.share();
+        drop(view);
+        // Writable again without any reallocation.
+        b.storage_mut().vt.row_mut(0).fill(-3);
+        assert_eq!(b.vt.row(0), &[-3, -3]);
+        drop(b);
+        assert_eq!(a.blocks_in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "CoW fork missing")]
+    fn shared_block_refuses_mutable_access() {
+        let a = BlockArena::new(2, 2, 1);
+        let mut b = a.try_alloc().unwrap();
+        let _view = b.share();
+        let _ = b.storage_mut();
+    }
+
+    #[test]
+    fn cow_fork_tally_is_monotone() {
+        let a = BlockArena::new(2, 2, 1);
+        assert_eq!(a.cow_forks(), 0);
+        a.note_cow_fork();
+        a.note_cow_fork();
+        assert_eq!(a.cow_forks(), 2);
     }
 
     #[cfg(feature = "failpoints")]

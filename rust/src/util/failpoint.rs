@@ -24,6 +24,7 @@
 //! | `server.worker.slow`  | 0                    | worker loop, delays a batch |
 //! | `kv.block.alloc`      | arena `fail_tag`     | `BlockArena::try_alloc`, forces exhaustion |
 //! | `prefill.chunk`       | engine `fail_tag`    | stage-2 prefill chunk (once per chunk) |
+//! | `kv.cow.fork`         | cache `fail_tag` (session) | `KvCache::cow_fork`, forces exhaustion before the fork allocates |
 
 #[cfg(feature = "failpoints")]
 pub use enabled::*;

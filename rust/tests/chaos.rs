@@ -40,6 +40,11 @@ fn config(workers: usize, max_batch: usize, max_wait_us: u64) -> SystemConfig {
             max_batch,
             max_wait_us,
             queue_depth: 128,
+            // Sharing off: these scenarios pin the NO-sharing fault
+            // paths (deliberate cache retention would keep blocks
+            // alive past session close). The prefix/CoW chaos tests
+            // below opt in per-test.
+            prefix_cache_entries: 0,
             ..ServerConfig::default()
         },
     }
@@ -638,4 +643,154 @@ fn injected_mid_chunk_exhaustion_parks_partial_prefill_then_rechunks_bit_exact()
     assert!(server.close_session(sid));
     assert_eq!(server.kv_arena().blocks_in_use(), 0, "blocks leaked past session close");
     server.shutdown();
+}
+
+/// Prefix-sharing chaos config: cache ON (the base helper's scenarios
+/// pin it off), small blocks so a 6-row prompt has an unaligned shared
+/// tail, and an explicit generous pool — these tests INJECT their
+/// exhaustion; real pool pressure would blur the containment under
+/// test.
+fn sharing_config() -> SystemConfig {
+    let mut cfg = config(1, 4, 300);
+    cfg.server.prefix_cache_entries = 8;
+    cfg.server.kv_block_size = 4;
+    cfg.server.kv_pool_blocks = 32;
+    cfg
+}
+
+/// Injected `BlockPoolExhausted` at the ADMISSION-time CoW fork
+/// (`kv.cow.fork`, ctx = the adopter's session): the adopting
+/// admission defers — adopted handles released, refcounts restored,
+/// no preemption — and the retry re-matches the entry, forks for
+/// real, and streams bit-identical to a cold solo oracle. The failed
+/// fork is NOT tallied; at quiesce the only retained blocks are the
+/// two deliberate cache entries', and shutdown drains them to zero.
+#[test]
+fn injected_cow_fork_exhaustion_defers_adoption_then_recovers() {
+    let _g = serial();
+    let cfg = sharing_config();
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(91, &d);
+    let pa = x.block_padded(0, 0, 6, d.e); // 6 % 4 != 0: unaligned shared tail
+    let pb = x.block_padded(0, 0, 8, d.e); // same first 6 rows + divergence
+    let golden_a = golden_generation(&cfg, &pa, 2);
+    let golden_b = golden_generation(&cfg, &pb, 3);
+
+    // Donor completes (session stays open): its prefill publishes the
+    // entry, and its own post-publish append CoW-forks the shared tail.
+    let sa = server.open_session().unwrap();
+    assert_eq!(server.generate(sa, pa, 2).unwrap(), golden_a);
+    assert_eq!(server.metrics.cow_forks.get(), d.h as u64, "donor's post-publish fork");
+
+    // The adopter's first admission hits the injected exhaustion at its
+    // tail fork and must defer; the one-shot point disarms and the
+    // retry adopts for real.
+    let sb = server.open_session().unwrap();
+    failpoint::cfg_for("kv.cow.fork", sb, 1, FailAction::Trigger);
+    assert_eq!(server.generate(sb, pb, 3).unwrap(), golden_b, "adopter != solo oracle");
+    assert!(server.metrics.admissions_deferred_on_memory.get() >= 1, "fork miss must defer");
+    assert_eq!(server.metrics.preemptions.get(), 0, "injected fork miss must not preempt");
+    assert_eq!(server.metrics.prefix_match_rows.get(), 6, "retry re-matched the full entry");
+    assert_eq!(
+        server.metrics.cow_forks.get(),
+        2 * d.h as u64,
+        "donor fork + retry fork; the INJECTED miss must not be tallied"
+    );
+    assert_eq!(server.metrics.prefix_evictions.get(), 0, "shared entries are not evictable");
+
+    // Refcounts balanced at quiesce: both sessions close, only the two
+    // cache entries' physical blocks remain, shutdown drains to zero.
+    assert!(server.close_session(sa));
+    assert!(server.close_session(sb));
+    assert_eq!(server.kv_arena().blocks_in_use(), 6, "retained = the two entries, exactly");
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "entries must drain at shutdown");
+}
+
+/// Injected `BlockPoolExhausted` at a MID-STREAM CoW fork: the session
+/// publishes its prefix at prefill completion, then its FIRST step's
+/// reserve forks the now-shared tail and starves. The tick reports
+/// `exhausted`; the entry is session-shared (not evictable), so the
+/// router rides the preempt path — park, recompute-restore — and
+/// every token still arrives bit-identical. The failed fork is not
+/// tallied and no block leaks.
+#[test]
+fn injected_cow_fork_exhaustion_mid_stream_preempts_and_restores_bit_exact() {
+    let _g = serial();
+    let cfg = sharing_config();
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let prompt = gen_input(93, &d).block_padded(0, 0, 6, d.e);
+    let golden = golden_generation(&cfg, &prompt, 4);
+    let sid = server.open_session().unwrap();
+
+    // Armed before submit: admission reserves into an EMPTY cache (no
+    // fork — the point stays cold through prefill), so the one shot
+    // fires on the first step tick's shared-tail fork.
+    failpoint::cfg_for("kv.cow.fork", sid, 1, FailAction::Trigger);
+    assert_eq!(server.generate(sid, prompt, 4).unwrap(), golden, "preempted != solo oracle");
+    assert_eq!(server.metrics.preemptions.get(), 1, "starved fork must park the session");
+    assert_eq!(server.metrics.restores.get(), 1, "one recompute-restore");
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0, "exhaustion is not a fault");
+    // The restored cache owns fresh blocks (the entry kept the old
+    // ones), so the re-run append forks nothing — and the injected
+    // miss was never tallied.
+    assert_eq!(server.metrics.cow_forks.get(), 0, "no completed fork anywhere in this run");
+
+    assert!(server.close_session(sid));
+    assert_eq!(server.kv_arena().blocks_in_use(), d.h * 2, "retained = the one entry");
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0);
+}
+
+/// PANIC mid-fork (`kv.cow.fork`, `FailAction::Panic`): the
+/// reserve-phase quarantine scopes the blast to the forking session
+/// alone — its stream dies before its first token with a
+/// `SessionPoisoned` verdict — while the published entry's bytes stay
+/// intact: a later session adopts the same prefix and streams
+/// bit-identical to its cold solo oracle.
+#[test]
+fn injected_cow_fork_panic_quarantines_forker_sharers_bit_exact() {
+    let _g = serial();
+    let mut cfg = sharing_config();
+    cfg.server.stream_buffer = 4;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let x = gen_input(95, &d);
+    let pv = x.block_padded(0, 0, 6, d.e);
+    let pb = x.block_padded(0, 0, 8, d.e);
+    let golden_b = golden_generation(&cfg, &pb, 3);
+
+    // The victim publishes its prefix at prefill completion; its first
+    // step tick then panics INSIDE the CoW fork of the shared tail.
+    let victim = server.open_session().unwrap();
+    failpoint::cfg_for("kv.cow.fork", victim, 1, FailAction::Panic);
+    let mut stream_v = server.submit_generate(victim, pv.clone(), gen_opts(4)).unwrap();
+    let mut verdict = None;
+    let mut v_tokens = 0usize;
+    while let Some(item) = stream_v.recv() {
+        match item {
+            Ok(_) => v_tokens += 1,
+            Err(e) => verdict = Some(e),
+        }
+    }
+    assert_eq!(v_tokens, 0, "the forker must die before its first token");
+    if let Some(e) = verdict {
+        assert_eq!(e, SubmitError::SessionPoisoned);
+    }
+    assert_eq!(server.metrics.sessions_poisoned.get(), 1);
+    assert_eq!(server.metrics.preemptions.get(), 0, "a fork panic is a fault, not pressure");
+
+    // The sharer: the entry survived the panic un-mutated (the fork
+    // unwound before touching any storage), so adoption works and the
+    // continuation is bit-exact.
+    let sb = server.open_session().unwrap();
+    assert_eq!(server.generate(sb, pb, 3).unwrap(), golden_b, "sharer != solo oracle");
+    assert_eq!(server.metrics.prefix_match_rows.get(), 6, "sharer adopted the full entry");
+
+    assert!(server.close_session(victim), "poisoned session must stay closable");
+    assert!(server.close_session(sb));
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "panic mid-fork leaked blocks");
 }

@@ -6,7 +6,10 @@
 //! full batch path: a pooled `AttentionExecutor::run` allocates only
 //! its returned outputs plus a constant amount of fan-out plumbing,
 //! the same count on every steady-state call (no per-call growth, no
-//! thread-spawn allocations).
+//! thread-spawn allocations). Sessions holding **adopted shared
+//! prefix blocks** (§Prefix-sharing) keep the fused-tick zero-alloc
+//! contract too — including the divergence tick, whose CoW forks draw
+//! pre-allocated pool blocks rather than the heap.
 //!
 //! This file holds exactly ONE test on purpose: the counting global
 //! allocator is process-wide, and a sibling test allocating
@@ -14,8 +17,9 @@
 //! sequentially inside the single test below.
 
 use ita::attention::decode::DecodeEngine;
-use ita::attention::{gen_input, ModelDims};
+use ita::attention::{gen_input, ModelDims, PackedWeights};
 use ita::ita::ItaConfig;
+use ita::util::blocks::BlockArena;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -217,4 +221,89 @@ fn decode_steps_do_not_allocate_after_warmup() {
         check.step_into(row, &mut want);
     }
     assert_eq!(batch.out_row(1), &want[..], "session 1 final fused output row");
+
+    // ---- Shared-prefix fused ticks (§Prefix-sharing) ----------------
+    // Sessions whose caches hold ADOPTED (refcount-shared) prefix
+    // blocks must not degrade the tick contract. The divergence tick —
+    // where every session's first append CoW-forks the shared tail
+    // block — is allowed to allocate per the contract, but the arena's
+    // free list holds pre-allocated storage and the fork is pop +
+    // memcpy + handle swap, so even it measures ZERO. Every tick after
+    // divergence appends into owned blocks (block 0 stays shared with
+    // the donor the whole time) and must be zero-alloc outright.
+    let arena = BlockArena::new(4, d.p, 64);
+    let packed = PackedWeights::shared(d, 3);
+    let mk = || {
+        DecodeEngine::from_shared_arena(
+            ItaConfig::tiny(),
+            d,
+            packed.weights.clone(),
+            packed.weights_t.clone(),
+            packed.requants,
+            arena.clone(),
+        )
+    };
+    let mut donor = mk();
+    donor.prefill(&x.block_padded(0, 0, 8, d.e));
+    let shared_rows = 6; // 6 % 4 != 0: the adopted tail block is partial
+    let mut sharers: Vec<DecodeEngine> = (0..3)
+        .map(|_| {
+            let mut a = mk();
+            // Warm this engine's prefill/step scratch BEFORE adoption
+            // (an engine must be empty to adopt), then hand the blocks
+            // back; adoption itself allocates nothing.
+            a.prefill(&x.block_padded(0, 0, shared_rows, d.e));
+            a.step_into(x.row(shared_rows), &mut out);
+            a.release_blocks();
+            a.adopt_prefix(&donor.share_prefix(shared_rows), shared_rows);
+            a
+        })
+        .collect();
+    let mut refs: Vec<&mut DecodeEngine> = sharers.iter_mut().collect();
+    let forks_before = arena.cow_forks();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    {
+        let rows = [x.row(shared_rows); 3];
+        assert!(batch.tick(&mut refs, &rows).ok());
+    }
+    let mid = ALLOCS.load(Ordering::SeqCst);
+    for r in shared_rows + 1..shared_rows + 9 {
+        let rows = [x.row(r); 3];
+        assert!(batch.tick(&mut refs, &rows).ok());
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        arena.cow_forks() - forks_before,
+        3 * d.h,
+        "each sharer's first append must fork the partial shared tail, once per head"
+    );
+    assert_eq!(
+        mid - before,
+        0,
+        "divergence tick allocated {} time(s) — CoW forks must draw pre-allocated \
+         blocks, never the heap",
+        mid - before
+    );
+    assert_eq!(
+        after - mid,
+        0,
+        "post-divergence fused ticks over shared-prefix sessions allocated {} time(s)",
+        after - mid
+    );
+    // Real work, bit-exact work: every sharer's final row matches an
+    // independent engine fed identically, and block 0 stayed shared.
+    drop(refs);
+    let mut check = DecodeEngine::new(ItaConfig::tiny(), d, 3);
+    check.prefill(&x.block_padded(0, 0, shared_rows, d.e));
+    let mut want = Vec::new();
+    for r in shared_rows..shared_rows + 9 {
+        check.step_into(x.row(r), &mut want);
+    }
+    for i in 0..3 {
+        assert_eq!(batch.out_row(i), &want[..], "sharer {i} final fused output row");
+        assert_eq!(sharers[i].len(), shared_rows + 9, "sharer {i} cache fill");
+    }
+    drop(sharers);
+    drop(donor);
+    assert_eq!(arena.blocks_in_use(), 0, "shared-prefix teardown leaked blocks");
 }

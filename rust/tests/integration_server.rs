@@ -27,6 +27,10 @@ fn config(workers: usize, max_batch: usize) -> SystemConfig {
             max_batch,
             max_wait_us: 300,
             queue_depth: 128,
+            // Sharing off by default here: most scenarios pin exact
+            // chunk counts and empty-arena hygiene. The prefix-
+            // sharing integration test builds its own config.
+            prefix_cache_entries: 0,
             ..ServerConfig::default()
         },
     }

@@ -4,7 +4,10 @@
 //! to never having been preempted, across **every kernel path this
 //! host can execute** and prompt lengths straddling every block-
 //! boundary residue (S % block_size ∈ {0, 1, block_size−1}); truncate
-//! rollback replays bit-identically on retained blocks.
+//! rollback replays bit-identically on retained blocks; and the
+//! refcount roundtrip (§Prefix-sharing) — N sessions adopt a shared
+//! prefix, M diverge through CoW forks, all close — returns the arena
+//! to exactly zero blocks in use on the same path × residue grid.
 //!
 //! Server level: real pool pressure (explicit `kv_pool_blocks`) drives
 //! the router's containment path — mid-generation exhaustion preempts
@@ -119,6 +122,70 @@ fn preempt_restore_roundtrip_bit_identical_across_paths_and_block_boundaries() {
             paged.release_blocks();
             assert_eq!(arena.blocks_in_use(), 0, "roundtrip leaked blocks");
         }
+
+        // Refcount roundtrip (§Prefix-sharing), same path/residue grid:
+        // N sessions adopt one donor's prefix (physical block count
+        // must not move — adoption is refcount-only), M of them
+        // diverge (each unaligned divergence forks exactly one tail
+        // block per head), then everything closes in mixed order and
+        // the arena MUST read zero — shared, forked, and owned blocks
+        // all accounted.
+        for &plen in &[BS, BS + 1, BS - 1] {
+            let seed = 0x5EED ^ plen as u64;
+            let arena = BlockArena::new(BS, d.p, 4 * d.h * d.s.div_ceil(BS));
+            let mut donor = paged_engine(cfg, d, seed, &arena);
+            let mut rng = SplitMix64::new(seed ^ 0x9a6e);
+            donor.prefill(&MatI8::from_vec(plen, d.e, rng.vec_i8(plen * d.e)));
+            let physical = arena.blocks_in_use();
+            assert_eq!(physical, d.h * plen.div_ceil(BS));
+
+            const N: usize = 4; // adopters
+            const M: usize = 2; // of which diverge by appending
+            let mut adopters: Vec<DecodeEngine> = (0..N)
+                .map(|_| {
+                    let mut a = paged_engine(cfg, d, seed, &arena);
+                    a.adopt_prefix(&donor.share_prefix(plen), plen);
+                    a
+                })
+                .collect();
+            assert_eq!(
+                arena.blocks_in_use(),
+                physical,
+                "adoption must be refcount-only (plen={plen} [{}])",
+                path.name()
+            );
+            let forks_before = arena.cow_forks();
+            for a in adopters.iter_mut().take(M) {
+                a.step(&rng.vec_i8(d.e));
+            }
+            // An append lands inside the shared tail block only when
+            // plen is unaligned; aligned prefixes start a fresh block.
+            let expected = if plen % BS == 0 { 0 } else { M * d.h };
+            assert_eq!(
+                arena.cow_forks() - forks_before,
+                expected,
+                "divergence fork count (plen={plen} [{}])",
+                path.name()
+            );
+            // Mixed-order teardown: a diverged adopter, the donor, the
+            // remaining adopters, then the last diverged one.
+            drop(adopters.remove(0));
+            drop(donor);
+            while adopters.len() > 1 {
+                drop(adopters.remove(1));
+            }
+            assert!(
+                arena.blocks_in_use() > 0,
+                "last survivor must still pin the shared prefix (plen={plen})"
+            );
+            drop(adopters);
+            assert_eq!(
+                arena.blocks_in_use(),
+                0,
+                "refcount roundtrip leaked blocks (plen={plen} [{}])",
+                path.name()
+            );
+        }
     }
     set_kernel_path(None);
 }
@@ -162,6 +229,10 @@ fn server_config(pool_blocks: usize) -> SystemConfig {
             stream_buffer: 64,
             kv_block_size: BS,
             kv_pool_blocks: pool_blocks,
+            // Sharing off: the hygiene assertions here demand an
+            // EMPTY arena after close — deliberate prefix-cache
+            // retention is exercised by tests/prefix_sharing.rs.
+            prefix_cache_entries: 0,
             ..ServerConfig::default()
         },
     }
@@ -292,5 +363,83 @@ fn session_churn_waves_recycle_blocks_without_leaks() {
             "tiny pool: 3 concurrent generations must force preemption"
         );
     }
+    server.shutdown();
+}
+
+#[test]
+fn deferred_admission_retries_when_a_session_close_frees_blocks() {
+    // Regression for the admission-gate bugfix: a memory-deferred job
+    // must be retried when a session close (or TTL eviction) frees
+    // blocks, even while the running batch keeps the ratio gate cold.
+    // Setup neutralizes every OTHER path to a retry — the served
+    // ratio is unreachable (10_000%) and the escape hatch is pushed
+    // out to a million ticks — so the ONLY way B gets admitted is the
+    // free-blocks watermark. Pre-fix, this test hangs at B's collect.
+    let mut cfg = server_config(12);
+    cfg.server.waiting_served_pct = 10_000;
+    cfg.server.max_waiting_ticks = 1_000_000;
+    // Tiny stream buffer: C stalls after two undrained tokens and
+    // PINS the running batch non-empty (so `running.is_empty()` never
+    // reopens the gate for B) without holding a worker hostage.
+    cfg.server.stream_buffer = 2;
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+
+    // A fills 8 of the 12 blocks (4 prompt rows + 12 tokens = 16 rows
+    // = 4 blocks x 2 heads) and its session stays open, pinning them.
+    let pa = gen_input(701, &d).block_padded(0, 0, 4, d.e);
+    let golden_a = golden_generation(&cfg, &pa, 12);
+    let sa = server.open_session().unwrap();
+    assert_eq!(server.generate(sa, pa, 12).unwrap(), golden_a);
+    assert_eq!(server.kv_arena().blocks_free(), 4, "A must pin 8 of 12 blocks");
+
+    // B's monolithic admission needs 9 rows = 3 blocks x 2 heads = 6:
+    // more than the 4 free. It defers on memory.
+    let pb = gen_input(702, &d).block_padded(0, 0, 9, d.e);
+    let golden_b = golden_generation(&cfg, &pb, 2);
+    let sb = server.open_session().unwrap();
+    let stream_b = server.submit_generate(sb, pb, gen_opts(2)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.admissions_deferred_on_memory.get() == 0 {
+        assert!(Instant::now() < deadline, "B's admission was never deferred on memory");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // C (4 rows + 3 tokens = 2 blocks x 2 heads peak) fits in the
+    // remaining 4 blocks, admits past the deferred B, emits into its
+    // 2-deep buffer, and stalls undrained — batch non-empty, no
+    // blocks freeing, ratio and escape hatch both unreachable.
+    let pc = gen_input(703, &d).block_padded(0, 0, 4, d.e);
+    let golden_c = golden_generation(&cfg, &pc, 3);
+    let sc = server.open_session().unwrap();
+    let stream_c = server.submit_generate(sc, pc, gen_opts(3)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.router_admissions.get() < 2 {
+        assert!(Instant::now() < deadline, "C was never admitted past the deferred B");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // B must STAY deferred while nothing frees: no admission beyond
+    // A's and C's shows up across a settle window.
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(
+        server.metrics.router_admissions.get(),
+        2,
+        "B must not be admitted while A's blocks stay pinned"
+    );
+
+    // Closing A frees its 8 blocks: the watermark (free_now rising
+    // past the last gate's level) must reopen the gate and admit B —
+    // bit-exactly, with no preemption anywhere.
+    assert!(server.close_session(sa));
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b, "retried stream != solo oracle");
+    assert!(server.metrics.admissions_deferred_on_memory.get() >= 1);
+    assert_eq!(server.metrics.preemptions.get(), 0, "deferral must never preempt");
+    assert_eq!(server.metrics.sessions_poisoned.get(), 0);
+
+    // C was only parked on its full stream buffer: drain it now.
+    assert_eq!(stream_c.collect_rows().unwrap(), golden_c, "stalled stream != solo oracle");
+    assert!(server.close_session(sb));
+    assert!(server.close_session(sc));
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "leaked blocks after closes");
     server.shutdown();
 }

@@ -1,0 +1,307 @@
+//! Copy-on-write KV prefix sharing — the §Prefix-sharing oracle.
+//!
+//! Library level: a session admitted by adopting a donor's prefix
+//! blocks (refcount bumps, zero copies) and prefilling only the
+//! divergent suffix produces outputs bit-identical to a cold solo
+//! engine prefilling the full prompt — across **every kernel path
+//! this host can execute**, prefix lengths covering zero, exact-
+//! block-multiple, and mid-block divergence, and with mid-stream
+//! copy-on-write forks on both sides of the share.
+//!
+//! Server level: the router's prefix cache turns a shared system
+//! prompt into an adoption (counters asserted exactly), retains
+//! only deliberate entries (physical blocks accounted to the block),
+//! evicts by LRU at capacity, and disables cleanly at capacity 0.
+//!
+//! Path forcing note: `set_kernel_path` is process-global, so the
+//! path-iterating property lives in a single #[test] and restores
+//! auto-detection before returning (the `tests/paged_kv.rs`
+//! discipline).
+
+use ita::attention::decode::DecodeEngine;
+use ita::attention::{gen_input, ModelDims, PackedWeights};
+use ita::config::{ModelConfig, ServerConfig, SystemConfig};
+use ita::coordinator::{GenerateOptions, Server};
+use ita::ita::ItaConfig;
+use ita::util::blocks::BlockArena;
+use ita::util::gemm::{available_kernel_paths, set_kernel_path};
+use ita::util::mat::MatI8;
+
+const BS: usize = 4;
+
+fn dims() -> ModelDims {
+    ModelDims { s: 16, e: 16, p: 8, h: 2 }
+}
+
+fn paged_engine(
+    cfg: ItaConfig,
+    d: ModelDims,
+    seed: u64,
+    arena: &std::sync::Arc<BlockArena>,
+) -> DecodeEngine {
+    let packed = PackedWeights::shared(d, seed);
+    DecodeEngine::from_shared_arena(
+        cfg,
+        d,
+        packed.weights.clone(),
+        packed.weights_t.clone(),
+        packed.requants,
+        arena.clone(),
+    )
+}
+
+#[test]
+fn adopted_prefix_bit_exact_across_paths_and_divergence_points() {
+    // Donor holds the first 8 prompt rows; the adopter adopts m of
+    // them (m = 0, BS = exact block multiple, BS+1 and 2·BS−1 =
+    // mid-block divergence, both forcing a CoW fork at reservation),
+    // chunk-prefills the divergent suffix and decodes closed-loop.
+    // Everything must match a cold solo engine on the full prompt.
+    // A retained share (the prefix-cache stand-in) then forces the
+    // DONOR's own first append to fork mid-stream — its continuation
+    // must stay bit-exact too, and the arena must drain to zero.
+    let d = dims();
+    let cfg = ItaConfig::tiny();
+    let prompt_rows = 2 * BS + 2; // 10 of 16: 6 closed-loop steps left
+    let donor_rows = 2 * BS; // 8: covers every m below
+    for path in available_kernel_paths() {
+        set_kernel_path(Some(path));
+        for &m in &[0usize, BS, BS + 1, 2 * BS - 1] {
+            let seed = 0xC0F ^ m as u64;
+            let arena = BlockArena::new(BS, d.p, 4 * d.h * d.s.div_ceil(BS));
+            let x = gen_input(seed, &d);
+            let prompt = x.block_padded(0, 0, prompt_rows, d.e);
+
+            let mut golden = DecodeEngine::new(cfg, d, seed);
+            let want = golden.prefill(&prompt);
+
+            let mut donor = paged_engine(cfg, d, seed, &arena);
+            donor.prefill(&x.block_padded(0, 0, donor_rows, d.e));
+
+            let mut adopter = paged_engine(cfg, d, seed, &arena);
+            adopter.adopt_prefix(&donor.share_prefix(m), m);
+            assert_eq!(adopter.len(), m, "adoption fast-forwards the chunk cursor");
+            let forks_before = arena.cow_forks();
+            adopter.reserve_for(prompt_rows).expect("generous pool");
+            let expected_forks = if m % BS == 0 { 0 } else { d.h };
+            assert_eq!(
+                arena.cow_forks() - forks_before,
+                expected_forks,
+                "mid-block divergence forks exactly one tail block per head (m={m})"
+            );
+            let got = adopter.prefill_chunk(&x.block_padded(m, 0, prompt_rows - m, d.e));
+            for j in 0..(prompt_rows - m) {
+                assert_eq!(
+                    got.row(j),
+                    want.out.row(m + j),
+                    "suffix row {} diverged (m={m} [{}])",
+                    m + j,
+                    path.name()
+                );
+            }
+            // Closed-loop decode: adopter vs cold oracle, feedback row
+            // for feedback row.
+            let mut next = want.out.row(prompt_rows - 1).to_vec();
+            for t in 0..(d.s - prompt_rows) {
+                let out = adopter.step(&next);
+                assert_eq!(out, golden.step(&next), "step {t} diverged (m={m} [{}])", path.name());
+                next = out;
+            }
+
+            // Mid-stream donor-side fork: a retained share (what a
+            // cache entry holds) keeps the donor's tail shared, so its
+            // first append must fork — and stay bit-exact against a
+            // fresh replay that never shared anything.
+            let held = donor.share_prefix(donor_rows);
+            let mut replay = DecodeEngine::new(cfg, d, seed);
+            replay.prefill(&x.block_padded(0, 0, donor_rows, d.e));
+            let forks_before = arena.cow_forks();
+            let mut dnext = x.row(donor_rows).to_vec();
+            for t in 0..3 {
+                let out = donor.step(&dnext);
+                assert_eq!(out, replay.step(&dnext), "donor step {t} diverged (m={m})");
+                dnext = out;
+            }
+            // donor_rows is a block multiple: the held share covers
+            // whole blocks only, so the donor's appends start a fresh
+            // owned block and fork nothing. The share itself is what
+            // pins the refcounts.
+            assert_eq!(arena.cow_forks() - forks_before, 0);
+            drop(held);
+
+            drop(donor);
+            drop(adopter);
+            assert_eq!(arena.blocks_in_use(), 0, "quiesce leaked blocks (m={m})");
+        }
+    }
+    set_kernel_path(None);
+}
+
+#[test]
+fn unaligned_retained_share_forks_donor_append() {
+    // The donor-side CoW case the serving layer hits: a cache entry
+    // retains an UNALIGNED prefix (partial tail block), so the donor's
+    // own next append lands in a shared block and must fork — with the
+    // retained entry's bytes staying frozen.
+    let d = dims();
+    let cfg = ItaConfig::tiny();
+    let seed = 0xD0C;
+    let arena = BlockArena::new(BS, d.p, 4 * d.h * d.s.div_ceil(BS));
+    let x = gen_input(seed, &d);
+    let rows = BS + 2; // partial tail: rows 4..6 of block 1
+    let mut donor = paged_engine(cfg, d, seed, &arena);
+    donor.prefill(&x.block_padded(0, 0, rows, d.e));
+    let held = donor.share_prefix(rows);
+    let mut replay = DecodeEngine::new(cfg, d, seed);
+    replay.prefill(&x.block_padded(0, 0, rows, d.e));
+
+    let forks_before = arena.cow_forks();
+    let held_tail_k: Vec<i8> = held[0][1].k.row(1).to_vec(); // position 5, head 0
+    let mut next = x.row(rows).to_vec();
+    for t in 0..3 {
+        let out = donor.step(&next);
+        assert_eq!(out, replay.step(&next), "donor step {t} diverged past the fork");
+        next = out;
+    }
+    assert_eq!(arena.cow_forks() - forks_before, d.h, "first append forks the shared tail");
+    assert_eq!(held[0][1].k.row(1), &held_tail_k[..], "retained entry bytes stay frozen");
+    drop(held);
+    drop(donor);
+    drop(replay);
+    assert_eq!(arena.blocks_in_use(), 0);
+}
+
+fn server_config(prefix_cache_entries: usize) -> SystemConfig {
+    SystemConfig {
+        accelerator: ItaConfig::tiny(),
+        model: ModelConfig { dims: dims(), ffn: 32, layers: 1, seed: 42 },
+        server: ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait_us: 300,
+            queue_depth: 16,
+            stream_buffer: 64,
+            kv_block_size: BS,
+            prefix_cache_entries,
+            ..ServerConfig::default()
+        },
+    }
+}
+
+/// Solo oracle for a closed-loop generation (identical to the one in
+/// `tests/paged_kv.rs`).
+fn golden_generation(cfg: &SystemConfig, prompt: &MatI8, max_new_tokens: usize) -> Vec<Vec<i8>> {
+    let mut eng = DecodeEngine::new(cfg.accelerator, cfg.model.dims, cfg.model.seed);
+    let pre = eng.prefill(prompt);
+    let mut next = pre.out.row(prompt.rows() - 1).to_vec();
+    let mut rows = Vec::new();
+    for _ in 0..max_new_tokens {
+        let out = eng.step(&next);
+        rows.push(out.clone());
+        next = out;
+    }
+    rows
+}
+
+fn gen_opts(max_new_tokens: usize) -> GenerateOptions {
+    GenerateOptions { max_new_tokens, ..GenerateOptions::default() }
+}
+
+#[test]
+fn router_prefix_match_streams_bit_exact_with_exact_counters() {
+    // Session A's 6-row prompt (unaligned: 6 % 4 != 0) is published at
+    // prefill completion; session B's 8-row prompt shares A's prompt
+    // as its prefix. B must adopt all 6 rows (full-entry match keeps
+    // the unaligned tail), prefill only rows 6..8, and stream
+    // bit-identically to its cold solo oracle. Counters are asserted
+    // EXACTLY: 6 matched rows, 2 blocks/head × 2 heads shared, 2
+    // forks for A's own post-publish append + 2 for B's divergent
+    // suffix, zero evictions. After both sessions close, the arena
+    // holds exactly the two deliberately retained cache entries'
+    // physical blocks; shutdown drains it to zero.
+    let cfg = server_config(8);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let sys_rows = 6usize;
+    let x = gen_input(901, &d);
+    let pa = x.block_padded(0, 0, sys_rows, d.e);
+    let pb = x.block_padded(0, 0, sys_rows + 2, d.e); // same prefix + 2 rows
+    let golden_a = golden_generation(&cfg, &pa, 4);
+    let golden_b = golden_generation(&cfg, &pb, 4);
+
+    let sa = server.open_session().unwrap();
+    let stream_a = server.submit_generate(sa, pa, gen_opts(4)).unwrap();
+    assert_eq!(stream_a.collect_rows().unwrap(), golden_a, "donor rows != solo oracle");
+
+    let sb = server.open_session().unwrap();
+    let stream_b = server.submit_generate(sb, pb, gen_opts(4)).unwrap();
+    assert_eq!(stream_b.collect_rows().unwrap(), golden_b, "adopter rows != solo oracle");
+
+    assert_eq!(server.metrics.prefix_match_rows.get(), sys_rows as u64, "adopted rows");
+    assert_eq!(server.metrics.prefix_shared_blocks.get(), 4, "2 blocks/head x 2 heads");
+    assert_eq!(
+        server.metrics.cow_forks.get(),
+        4,
+        "A's post-publish append forks per head, B's divergence forks per head"
+    );
+    assert_eq!(server.metrics.prefix_evictions.get(), 0);
+    assert_eq!(server.metrics.preemptions.get(), 0, "generous pool: sharing, not pressure");
+
+    assert!(server.close_session(sa));
+    assert!(server.close_session(sb));
+    // Deliberately retained: entry A holds blocks {b0, b1} per head,
+    // entry B holds {b0 (shared with A's entry), b1'} per head —
+    // 3 physical blocks x 2 heads.
+    assert_eq!(
+        server.kv_arena().blocks_in_use(),
+        6,
+        "only the two cache entries' physical blocks may remain"
+    );
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "shutdown must drain the prefix cache");
+}
+
+#[test]
+fn disabled_prefix_cache_retains_nothing_and_matches_nothing() {
+    // Capacity 0: identical back-to-back prompts get no match, every
+    // row prefills, and session close returns the arena to empty.
+    let cfg = server_config(0);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let p = gen_input(902, &d).block_padded(0, 0, 6, d.e);
+    let golden = golden_generation(&cfg, &p, 3);
+    for _ in 0..2 {
+        let sid = server.open_session().unwrap();
+        let stream = server.submit_generate(sid, p.clone(), gen_opts(3)).unwrap();
+        assert_eq!(stream.collect_rows().unwrap(), golden);
+        assert!(server.close_session(sid));
+    }
+    assert_eq!(server.metrics.prefix_match_rows.get(), 0, "capacity 0 must never match");
+    assert_eq!(server.metrics.prefix_shared_blocks.get(), 0);
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "nothing may be retained");
+    server.shutdown();
+}
+
+#[test]
+fn lru_capacity_displacement_is_counted_and_frees_blocks() {
+    // Capacity 1: publishing a second distinct prompt displaces the
+    // first entry (counted as an eviction); the displaced entry's
+    // blocks return to the pool once no session shares them.
+    let cfg = server_config(1);
+    let server = Server::start(cfg);
+    let d = cfg.model.dims;
+    let p1 = gen_input(903, &d).block_padded(0, 0, 4, d.e);
+    let p2 = gen_input(904, &d).block_padded(0, 0, 8, d.e);
+    for (p, toks) in [(&p1, 3usize), (&p2, 3)] {
+        let golden = golden_generation(&cfg, p, toks);
+        let sid = server.open_session().unwrap();
+        let stream = server.submit_generate(sid, p.clone(), gen_opts(toks)).unwrap();
+        assert_eq!(stream.collect_rows().unwrap(), golden);
+        assert!(server.close_session(sid));
+    }
+    assert_eq!(server.metrics.prefix_evictions.get(), 1, "capacity-1 LRU displacement");
+    // Only p2's entry survives: 8 rows = 2 blocks/head x 2 heads.
+    assert_eq!(server.kv_arena().blocks_in_use(), 4);
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0);
+}

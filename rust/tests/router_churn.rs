@@ -18,6 +18,11 @@
 //! the numerics too — every completed stream bit-identical to its solo
 //! oracle — and chunk accounting is exact.
 //!
+//! A third scenario family covers §Prefix-sharing: sessions that share
+//! a block-aligned system prompt adopt it from the router's prefix
+//! cache and churn concurrently — bit-identical to cold solo oracles,
+//! with exact match/fork/retention accounting.
+//!
 //! Path forcing note: `set_kernel_path` is process-global, so the
 //! path-iterating property lives in a single #[test] and restores
 //! auto-detection before returning — the same discipline
@@ -51,6 +56,10 @@ fn config() -> SystemConfig {
             stream_buffer: 2,
             max_waiting_ticks: 1,
             queue_depth: 128,
+            // Sharing off: the churn scenarios pin exact chunk
+            // counts; the shared-system-prompt scenario below builds
+            // its own cache-enabled config.
+            prefix_cache_entries: 0,
             ..ServerConfig::default()
         },
     }
@@ -243,6 +252,127 @@ fn run_mixed_scenario(seed: u64, chunk_rows: usize, label: &str) {
     server.shutdown();
 }
 
+/// Shared-system-prompt scenario (§Prefix-sharing): one session
+/// completes with a block-aligned 8-row system prompt plus its own
+/// suffix, publishing the prefix; three more sessions — same system
+/// prompt, distinct suffixes and budgets — then churn concurrently
+/// through the tiny stream buffer, each adopting the cached prefix at
+/// admission. Sharing must be invisible in the numerics (every stream
+/// bit-identical to a cold solo oracle) and EXACT in the accounting:
+/// each adopter matches the full system prompt, adoption forks
+/// nothing (the boundary is aligned), and each session CoW-forks its
+/// own unaligned tail exactly once after publishing its entry.
+fn run_shared_prompt_scenario(seed: u64, label: &str) {
+    const SYS_ROWS: usize = 8; // 2 full blocks at BS=4: aligned boundary
+    const BS: usize = 4;
+    const SUFFIX: [usize; 4] = [2, 1, 2, 3];
+    const NTOK: [usize; 4] = [3, 4, 2, 3];
+    let mut cfg = config();
+    cfg.server.prefix_cache_entries = 8;
+    cfg.server.kv_block_size = BS;
+    // Explicit generous pool: this scenario pins exact fork/match
+    // counts, which pool-pressure preemption would perturb.
+    cfg.server.kv_pool_blocks = 64;
+    let d = cfg.model.dims;
+    let mut rng = SplitMix64::new(seed);
+
+    // Prompts = shared system rows + per-session suffix. The first
+    // suffix byte is forced distinct per session so every cross-
+    // session common prefix ends EXACTLY at the system boundary.
+    let sys = rng.vec_i8(SYS_ROWS * d.e);
+    let prompts: Vec<MatI8> = (0..4)
+        .map(|i| {
+            let mut data = sys.clone();
+            let mut suffix = rng.vec_i8(SUFFIX[i] * d.e);
+            suffix[0] = 100 + i as i8;
+            data.extend_from_slice(&suffix);
+            MatI8::from_vec(SYS_ROWS + SUFFIX[i], d.e, data)
+        })
+        .collect();
+    let goldens: Vec<Vec<Vec<i8>>> =
+        (0..4).map(|i| golden_generation(&cfg, &prompts[i], NTOK[i])).collect();
+
+    let server = Server::start(cfg);
+    let sids: Vec<_> = (0..4).map(|_| server.open_session().unwrap()).collect();
+
+    // The publisher runs solo to completion: its prefill (10 rows, no
+    // cache to match) publishes the entry, and its first append CoW-
+    // forks the entry-shared unaligned tail — h forks, nothing else.
+    assert_eq!(
+        server.generate(sids[0], prompts[0].clone(), NTOK[0]).unwrap(),
+        goldens[0],
+        "[{label}] publisher diverged from its solo oracle"
+    );
+    assert_eq!(server.metrics.prefix_match_rows.get(), 0, "[{label}] publisher matched nothing");
+    assert_eq!(server.metrics.cow_forks.get(), d.h as u64, "[{label}] publisher's tail fork");
+
+    // Three adopters churn concurrently: round-robin drain against the
+    // 2-deep stream buffer keeps them pausing/resuming mid-batch while
+    // each adopts the aligned system prefix at admission.
+    let mut streams: Vec<TokenStream> = (1..4)
+        .map(|i| {
+            server
+                .submit_generate(
+                    sids[i],
+                    prompts[i].clone(),
+                    GenerateOptions { max_new_tokens: NTOK[i], ..GenerateOptions::default() },
+                )
+                .expect("accepted")
+        })
+        .collect();
+    let mut got: Vec<Vec<Vec<i8>>> = (0..3).map(|_| Vec::new()).collect();
+    let mut open = [true; 3];
+    while open.iter().any(|&o| o) {
+        for i in 0..3 {
+            if open[i] {
+                match streams[i].recv() {
+                    Some(item) => got[i].push(item.expect("token").row),
+                    None => open[i] = false,
+                }
+            }
+        }
+    }
+    for i in 0..3 {
+        assert_eq!(
+            got[i],
+            goldens[i + 1],
+            "[{label}] adopter {i} (suffix {} rows) diverged from its solo oracle",
+            SUFFIX[i + 1]
+        );
+    }
+
+    // Exact accounting. Matches: 3 adopters x the full 8-row system
+    // prompt (aligned, so adoption rounds nothing away and forks
+    // nothing). Forks: every session's prompt length is unaligned and
+    // every session appends after publishing its own entry, so each
+    // forks its tail once — 4 x h total, the publisher's included.
+    let m = server.metrics.prefix_match_rows.get();
+    assert_eq!(m, (3 * SYS_ROWS) as u64, "[{label}] adopted rows");
+    assert_eq!(
+        server.metrics.prefix_shared_blocks.get(),
+        (3 * (SYS_ROWS / BS) * d.h) as u64,
+        "[{label}] adopted block handles"
+    );
+    assert_eq!(server.metrics.cow_forks.get(), (4 * d.h) as u64, "[{label}] one tail fork each");
+    assert_eq!(server.metrics.prefix_evictions.get(), 0, "[{label}]");
+    assert_eq!(server.metrics.preemptions.get(), 0, "[{label}] sharing must not add pressure");
+
+    // Retention hygiene: after every session closes, the arena holds
+    // exactly the four entries' physical blocks — the 2 shared system
+    // blocks plus each entry's private tail, per head — and shutdown
+    // (which drops the router's cache) drains it to empty.
+    for sid in sids {
+        assert!(server.close_session(sid), "[{label}] session must close");
+    }
+    assert_eq!(
+        server.kv_arena().blocks_in_use(),
+        (SYS_ROWS / BS + 4) * d.h,
+        "[{label}] retained = shared system blocks + 4 private tails, per head"
+    );
+    server.shutdown();
+    assert_eq!(server.kv_arena().blocks_in_use(), 0, "[{label}] entries must drain at shutdown");
+}
+
 #[test]
 fn router_churn_bit_exact_across_kernel_paths() {
     for (p, path) in available_kernel_paths().into_iter().enumerate() {
@@ -260,6 +390,10 @@ fn router_churn_bit_exact_across_kernel_paths() {
                 &format!("{} chunk_rows {chunk_rows}", path.name()),
             );
         }
+        run_shared_prompt_scenario(
+            0x5aa4e ^ ((p as u64) << 32),
+            &format!("{} shared prompt", path.name()),
+        );
     }
     set_kernel_path(None);
 }
