@@ -15,7 +15,7 @@ use super::request::{
     TokenResult, TokenStream,
 };
 use crate::attention::decode::{fused_prefill, DecodeEngine, FusedStepBatch};
-use crate::attention::{AttentionExecutor, PackedWeights};
+use crate::attention::{AttentionExecutor, AttentionWeights, PackedWeights};
 use crate::config::SystemConfig;
 use crate::ita::energy::EnergyBreakdown;
 use crate::ita::Activity;
@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -649,8 +649,11 @@ struct PrefixEntry {
     rows: usize,
     /// Per-head shared block handles covering positions `0..rows`.
     blocks: Vec<Vec<Block>>,
-    /// `Arc::as_ptr` identity of the donor engine's weight set.
-    model: usize,
+    /// Identity of the donor engine's weight set. Held as a `Weak`
+    /// rather than a raw pointer: the weak count pins the allocation,
+    /// so the address can never be reused by a later weight set (no
+    /// ABA) — pointer equality against a live `Arc` is exact.
+    model: Weak<AttentionWeights>,
     last_used: u64,
 }
 
@@ -685,7 +688,7 @@ impl PrefixCache {
         &self,
         prompt: &[i8],
         e_cols: usize,
-        model: usize,
+        model: &Arc<AttentionWeights>,
         block_size: usize,
     ) -> Option<(usize, usize)> {
         let rows = prompt.len() / e_cols;
@@ -694,7 +697,7 @@ impl PrefixCache {
         }
         let mut best: Option<(usize, usize)> = None;
         for (i, e) in self.entries.iter().enumerate() {
-            if e.model != model {
+            if !std::ptr::eq(e.model.as_ptr(), Arc::as_ptr(model)) {
                 continue;
             }
             let lim = e.rows.min(rows) * e_cols;
@@ -726,7 +729,7 @@ impl PrefixCache {
     /// Returns how many LRU entries were displaced to make room.
     fn insert(
         &mut self,
-        model: usize,
+        model: &Arc<AttentionWeights>,
         prompt: &[i8],
         rows: usize,
         blocks: Vec<Vec<Block>>,
@@ -735,9 +738,9 @@ impl PrefixCache {
             return 0;
         }
         self.clock += 1;
-        if let Some(e) =
-            self.entries.iter_mut().find(|e| e.model == model && e.prompt == prompt)
-        {
+        if let Some(e) = self.entries.iter_mut().find(|e| {
+            std::ptr::eq(e.model.as_ptr(), Arc::as_ptr(model)) && e.prompt == prompt
+        }) {
             e.last_used = self.clock;
             return 0;
         }
@@ -753,7 +756,7 @@ impl PrefixCache {
             prompt: prompt.to_vec(),
             rows,
             blocks,
-            model,
+            model: Arc::downgrade(model),
             last_used: self.clock,
         });
         displaced
@@ -1238,9 +1241,8 @@ fn run_router(
                             // prompt prefix adopt them and prefill
                             // only their divergent suffix.
                             if prefix.capacity > 0 {
-                                let model = Arc::as_ptr(&g.engine.weights) as usize;
                                 let displaced = prefix.insert(
-                                    model,
+                                    &g.engine.weights,
                                     &g.history[..g.prompt_rows * e_cols],
                                     g.prompt_rows,
                                     g.engine.share_prefix(g.prompt_rows),
@@ -1397,11 +1399,10 @@ fn admit_generations<'a>(
                     // the admission-time CoW fork below already
                     // carries this session's `kv.cow.fork` ctx.
                     engine.fail_tag = job.session;
-                    let model = Arc::as_ptr(&engine.weights) as usize;
                     let matched = prefix.best_match(
                         &history[..prompt_rows * e_cols],
                         e_cols,
-                        model,
+                        &engine.weights,
                         arena.block_size(),
                     );
                     if let Some((idx, m)) = matched {

@@ -296,9 +296,15 @@ impl BlockArena {
             self.in_use.fetch_sub(1, Ordering::Relaxed);
             debug_assert!(free.len() < self.total, "reclaim beyond pool size");
             free.push(storage);
+        } else {
+            // Another handle survives: decrement our Arc explicitly
+            // while the lock is still held. (Function parameters drop
+            // AFTER body locals — letting `storage` fall out of scope
+            // would decrement after the guard releases, and two racing
+            // last-handle drops could then both observe count 2 and
+            // both skip the push, leaking the block from the pool.)
+            drop(storage);
         }
-        // else: another handle survives; dropping our Arc here (inside
-        // the lock) just decrements the count.
     }
 }
 
@@ -332,6 +338,26 @@ mod tests {
         assert!(err.to_string().contains("exhausted"), "{err}");
         a.reclaim(b);
         assert!(a.try_alloc().is_ok(), "reclaimed block is allocatable again");
+    }
+
+    #[test]
+    fn concurrent_last_handle_drops_always_release() {
+        // Regression: two threads dropping the last two handles to one
+        // shared block must make the release decision serially under
+        // the free-list mutex. Letting the parameter Arc fall out of
+        // scope decremented it AFTER the guard released, so both drops
+        // could observe strong_count == 2, both skip the push, and the
+        // block leaked from the pool (in_use pinned above zero).
+        let a = BlockArena::new(2, 2, 1);
+        for _ in 0..500 {
+            let b1 = a.try_alloc().unwrap();
+            let b2 = b1.share();
+            let t = std::thread::spawn(move || drop(b1));
+            drop(b2);
+            t.join().unwrap();
+            assert_eq!(a.blocks_in_use(), 0, "leaked physical block");
+            assert_eq!(a.blocks_free(), 1, "block did not return to the free list");
+        }
     }
 
     #[test]
